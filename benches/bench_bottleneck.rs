@@ -1,0 +1,37 @@
+//! §5.5 reproduction bench: bottleneck identification via tuning —
+//! the backend improves a lot alone, the composed stack stays pinned.
+
+use acts::experiment::{bottleneck, Lab};
+
+fn main() {
+    let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
+    let b = bottleneck::run(&lab, 80, 1).expect("bottleneck experiment");
+    println!("{}", b.report().markdown());
+
+    assert!(
+        b.frontend_is_bottleneck(),
+        "bottleneck not identified: backend {:+.1}%, composed best {:.0} vs untuned {:.0}",
+        b.backend_alone.improvement * 100.0,
+        b.composed.best.throughput,
+        b.backend_untuned
+    );
+    // paper regime: DB alone gains tens of percent; composed pinned near
+    // the untuned backend level
+    assert!(
+        (0.3..2.5).contains(&b.backend_alone.improvement),
+        "backend gain out of regime: {:+.1}%",
+        b.backend_alone.improvement * 100.0
+    );
+
+    println!("seed sweep (verdict stability):");
+    for seed in [2u64, 3, 4] {
+        let b = bottleneck::run(&lab, 80, seed).expect("bottleneck");
+        println!(
+            "  seed {}: backend {:+.1}%, composed {:+.1}%, verdict {}",
+            seed,
+            b.backend_alone.improvement * 100.0,
+            b.composed.improvement * 100.0,
+            b.frontend_is_bottleneck()
+        );
+    }
+}

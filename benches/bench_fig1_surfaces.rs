@@ -1,0 +1,56 @@
+//! Figure 1 reproduction bench: regenerates all six performance-surface
+//! panels, prints their shape metrics against the paper's claims, and
+//! times the sweep machinery (the atlas workload is a runtime hot path).
+
+use acts::benchkit::{black_box, Bench, BenchConfig};
+use acts::experiment::{fig1, Lab};
+
+fn main() {
+    let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
+    let side = 16; // matches executor.cores cardinality; larger sides over-snap int knobs
+
+    let fig = fig1::run(&lab, side).expect("fig1 sweeps");
+    let s = fig.shapes();
+
+    println!("### Figure 1 — diverging performance surfaces (shape metrics)\n");
+    println!("| panel | paper claim | metric | measured |");
+    println!("|---|---|---|---|");
+    println!(
+        "| 1a MySQL uniform-read | two lines split by query_cache_type | between/within dominance | {:.1} |",
+        s.a_dominance
+    );
+    println!(
+        "| 1d MySQL zipfian-rw | split disappears | dominance (must be << 1a) | {:.1} |",
+        s.d_dominance
+    );
+    println!("| 1b Tomcat | irregularly bumpy | interior extrema | {} |", s.b_extrema);
+    println!(
+        "| 1b vs 1c | bumpy vs smooth | roughness ratio | {:.0}x |",
+        s.b_vs_c_roughness
+    );
+    println!("| 1c Spark standalone | smooth | roughness | {:.5} |", s.c_roughness);
+    println!(
+        "| 1e Tomcat + JVM TargetSurvivorRatio | optimum relocates | argmax manhattan shift | {} cells |",
+        s.e_optimum_shift
+    );
+    println!(
+        "| 1f Spark cluster | sharp rise at executor.cores=4 | max jump (cell, norm.) | ({}, {:.3}) |",
+        s.f_jump.0, s.f_jump.1
+    );
+    println!(
+        "| 1f vs 1c | cluster rougher | roughness ratio | {:.0}x |\n",
+        s.f_vs_c_roughness
+    );
+
+    // shape sanity (mirrors rust/tests/surfaces.rs)
+    assert!(s.a_dominance > 2.5 * s.d_dominance);
+    assert!(s.b_extrema >= 2);
+    assert!(s.f_vs_c_roughness > 2.0, "cluster roughness ratio {}", s.f_vs_c_roughness);
+
+    // timing: the sweep machinery itself
+    let mut b = Bench::with_config("fig1 sweep machinery", BenchConfig::quick());
+    b.bench_units("full fig1 atlas (6 panels, side=12)", Some(6.0 * 144.0), || {
+        black_box(fig1::run(&lab, 12).unwrap());
+    });
+    b.report();
+}

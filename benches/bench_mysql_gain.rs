@@ -1,0 +1,43 @@
+//! §5.1 reproduction bench: MySQL default vs BestConfig (paper: 9815 ->
+//! 118184 ops/s, 12.04x). Prints the paper-vs-measured table and the
+//! convergence curve, and times one staged test.
+
+use acts::benchkit::{black_box, Bench, BenchConfig};
+use acts::experiment::{mysql_gain, Lab};
+use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
+use acts::sut;
+use acts::workload::{DeploymentEnv, WorkloadSpec};
+
+fn main() {
+    let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
+
+    let budget = 200;
+    let out = mysql_gain::run(&lab, budget, 1).expect("tuning session");
+    println!("{}", mysql_gain::report(&out).markdown());
+
+    println!("convergence (best-so-far every 20 tests):");
+    for (i, v) in out.best_curve().iter().enumerate() {
+        if i % 20 == 0 || i + 1 == out.records.len() {
+            println!("  test {:>3}: {:>10.0} ops/s", i + 1, v);
+        }
+    }
+
+    assert!(out.speedup() > 7.0, "headline gain regressed: {:.2}x", out.speedup());
+
+    // timing: one staged test through the full manipulator path
+    let mut sut = lab.deploy(
+        Target::Single(sut::mysql()),
+        WorkloadSpec::zipfian_read_write(),
+        DeploymentEnv::standalone(),
+        SimulationOpts::default(),
+        2,
+    );
+    let mut b = Bench::with_config("§5.1 staged-test path", BenchConfig::quick());
+    b.bench("staged test (set+restart+run, B=1)", || {
+        let u: Vec<f64> = sut.current_unit().to_vec();
+        sut.set_config(&u).unwrap();
+        sut.restart().unwrap();
+        black_box(sut.run_test().unwrap());
+    });
+    b.report();
+}

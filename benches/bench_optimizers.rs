@@ -1,0 +1,115 @@
+//! Optimizer comparison + the Figure-3 architecture ablation.
+//!
+//! Part 1 (§4.3): RRS (the paper's choice) vs the related-work baselines
+//! at equal staged-test budgets on the simulated MySQL — who wins, and
+//! by how much, per budget.
+//!
+//! Part 2 (Fig. 3 ablation): the "deployment-irrelevant architecture"
+//! assumption — reusing the best configuration found on one deployment
+//! for a different deployment — versus tuning in-place, quantifying why
+//! the flexible architecture refuses to reuse samples across
+//! deployments (§4.2, difference 2).
+
+use acts::experiment::Lab;
+use acts::manipulator::{SimulationOpts, Target};
+use acts::optimizer::OPTIMIZER_NAMES;
+use acts::sut;
+use acts::tuner::{self, TuningConfig};
+use acts::workload::{DeploymentEnv, WorkloadSpec};
+
+fn main() {
+    let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
+
+    // --- part 1: optimizer comparison --------------------------------
+    println!("### Optimizer comparison on simulated MySQL (zipfian-rw), best ops/s\n");
+    print!("| budget |");
+    for name in OPTIMIZER_NAMES {
+        print!(" {name} |");
+    }
+    println!();
+    print!("|---|");
+    for _ in OPTIMIZER_NAMES {
+        print!("---|");
+    }
+    println!();
+
+    let seeds = [1u64, 2, 3];
+    let mut rrs_at_200 = 0.0;
+    let mut random_at_200 = 0.0;
+    for &budget in &[25u64, 50, 100, 200] {
+        print!("| {budget} |");
+        for name in OPTIMIZER_NAMES {
+            let mut acc = 0.0;
+            for &seed in &seeds {
+                let mut sut = lab.deploy(
+                    Target::Single(sut::mysql()),
+                    WorkloadSpec::zipfian_read_write(),
+                    DeploymentEnv::standalone(),
+                    SimulationOpts::default(),
+                    seed,
+                );
+                let cfg = TuningConfig {
+                    budget_tests: budget,
+                    optimizer: name.to_string(),
+                    seed,
+                    ..Default::default()
+                };
+                acc += tuner::tune(&mut sut, &cfg).unwrap().best.throughput;
+            }
+            let mean = acc / seeds.len() as f64;
+            if budget == 200 && *name == "rrs" {
+                rrs_at_200 = mean;
+            }
+            if budget == 200 && *name == "random" {
+                random_at_200 = mean;
+            }
+            print!(" {mean:.0} |");
+        }
+        println!();
+    }
+    assert!(
+        rrs_at_200 >= 0.95 * random_at_200,
+        "RRS ({rrs_at_200}) should not lose clearly to random ({random_at_200})"
+    );
+
+    // --- part 2: Fig. 3 ablation — sample reuse across deployments ---
+    println!("\n### Fig. 3 ablation: reuse best config across deployments vs tune in place\n");
+    let tune_on = |deployment: DeploymentEnv, seed: u64| {
+        let mut sut = lab.deploy(
+            Target::Single(sut::spark()),
+            WorkloadSpec::batch_analytics(),
+            deployment,
+            SimulationOpts::default(),
+            seed,
+        );
+        let cfg = TuningConfig { budget_tests: 80, seed, ..Default::default() };
+        let out = tuner::tune(&mut sut, &cfg).unwrap();
+        (out.best_unit.clone(), out.best.throughput)
+    };
+    let eval_on = |unit: &[f64], deployment: DeploymentEnv| {
+        let sut = lab.deploy(
+            Target::Single(sut::spark()),
+            WorkloadSpec::batch_analytics(),
+            deployment,
+            SimulationOpts::ideal(),
+            0,
+        );
+        sut.evaluate_batch(std::slice::from_ref(&unit.to_vec())).unwrap()[0].throughput
+    };
+
+    let (unit_standalone, best_standalone) = tune_on(DeploymentEnv::standalone(), 1);
+    let (_, best_cluster_inplace) = tune_on(DeploymentEnv::cluster(8), 2);
+    let reused_on_cluster = eval_on(&unit_standalone, DeploymentEnv::cluster(8));
+
+    println!("| strategy | spark cluster-8 throughput |");
+    println!("|---|---|");
+    println!("| tune in place (flexible architecture) | {best_cluster_inplace:.1} |");
+    println!("| reuse standalone-tuned config (Fig. 3c assumption) | {reused_on_cluster:.1} |");
+    println!("| (standalone best, for reference) | {best_standalone:.1} |");
+    let penalty = 1.0 - reused_on_cluster / best_cluster_inplace;
+    println!("\nreuse penalty: {:.1}% of in-place performance lost", penalty * 100.0);
+    assert!(
+        reused_on_cluster < best_cluster_inplace,
+        "reuse should underperform in-place tuning"
+    );
+}

@@ -1,0 +1,75 @@
+//! Runtime hot-path bench: the PJRT engine's batched config evaluation —
+//! the path every staged test and every atlas point funnels through.
+//! This is the §Perf target workload (see EXPERIMENTS.md §Perf).
+
+use acts::benchkit::{black_box, Bench, BenchConfig};
+use acts::runtime::{golden, Engine, BUCKETS};
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::load(&dir).expect("artifacts missing — run `make artifacts`");
+    println!("platform: {}", engine.platform());
+
+    let mut b = Bench::with_config("runtime hot path", BenchConfig::quick());
+
+    // per-bucket evaluate throughput (configs/second):
+    // unprepared = upload all constant blocks every call (§Perf "before")
+    // prepared   = device-resident constants (§Perf "after")
+    for &bucket in BUCKETS.iter() {
+        let (configs, w, e, params) = golden::pattern_call(bucket);
+        b.bench_units(
+            format!("evaluate B={bucket} (unprepared)"),
+            Some(bucket as f64),
+            || {
+                black_box(engine.evaluate(&params, &w, &e, &configs).unwrap());
+            },
+        );
+        let prepared = engine.prepare(&params, &w, &e).unwrap();
+        b.bench_units(
+            format!("evaluate B={bucket} (prepared)"),
+            Some(bucket as f64),
+            || {
+                black_box(engine.evaluate_prepared(&prepared, &configs).unwrap());
+            },
+        );
+    }
+
+    // odd batch: padding overhead (B=40 -> bucket 256)
+    {
+        let (c16, w, e, params) = golden::pattern_call(16);
+        let mut odd: Vec<Vec<f32>> = Vec::new();
+        while odd.len() < 40 {
+            odd.extend(c16.iter().cloned());
+        }
+        odd.truncate(40);
+        b.bench_units("evaluate B=40 (padded to 256)", Some(40.0), || {
+            black_box(engine.evaluate(&params, &w, &e, &odd).unwrap());
+        });
+    }
+
+    // chunked: B=4096 across two max buckets
+    {
+        let (c2048, w, e, params) = golden::pattern_call(16);
+        let mut big: Vec<Vec<f32>> = Vec::new();
+        while big.len() < 4096 {
+            big.extend(c2048.iter().cloned());
+        }
+        big.truncate(4096);
+        b.bench_units("evaluate B=4096 (2 chunks)", Some(4096.0), || {
+            black_box(engine.evaluate(&params, &w, &e, &big).unwrap());
+        });
+    }
+
+    b.report();
+
+    let (calls, rows) = engine.stats();
+    println!("engine totals: {calls} execute calls, {rows} config rows");
+
+    // §Perf target: >= 1e5 config evals/s at the largest bucket
+    let best = b
+        .results()
+        .iter()
+        .filter_map(|r| r.units_per_sec())
+        .fold(0.0f64, f64::max);
+    println!("peak eval throughput: {:.0} configs/s (target 1e5)", best);
+}

@@ -1,0 +1,38 @@
+//! §4.3 sampling-condition bench: coverage of LHS vs baselines at
+//! several budgets, plus the scaling property (more samples -> wider
+//! coverage) and sampler wall-clock cost.
+
+use acts::benchkit::{black_box, Bench, BenchConfig};
+use acts::experiment::coverage;
+use acts::sampling::{self, Sampler};
+use acts::util::rng::Rng64;
+
+fn main() {
+    let dim = 20;
+    let pts = coverage::run(dim, &[16, 64, 256], 5, 42).expect("coverage sweep");
+    println!("{}", coverage::report(&pts).markdown());
+
+    // condition 1: at every budget, LHS occupancy is perfect and beats
+    // iid random
+    for &m in &[16usize, 64, 256] {
+        let occ = |name: &str| {
+            pts.iter().find(|p| p.sampler == name && p.m == m).unwrap().occupancy
+        };
+        assert!(occ("lhs") > 0.999, "LHS occupancy at m={m}: {}", occ("lhs"));
+        assert!(occ("lhs") > occ("random"), "LHS must beat random at m={m}");
+    }
+    // condition 3: dispersion shrinks as m grows (LHS)
+    let disp = |m: usize| pts.iter().find(|p| p.sampler == "lhs" && p.m == m).unwrap().dispersion;
+    assert!(disp(256) < disp(64) && disp(64) < disp(16), "coverage must widen with m");
+
+    // sampler cost (they must be negligible next to staged tests)
+    let mut b = Bench::with_config("sampler wall-clock", BenchConfig::quick());
+    for name in sampling::SAMPLER_NAMES {
+        let s = sampling::by_name(name).unwrap();
+        let mut rng = Rng64::new(7);
+        b.bench_units(format!("{name} m=256 dim=20"), Some(256.0), || {
+            black_box(s.sample(256, dim, &mut rng));
+        });
+    }
+    b.report();
+}

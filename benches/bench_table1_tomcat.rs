@@ -1,0 +1,37 @@
+//! Table 1 + §5.2 reproduction bench: fully-utilised Tomcat on the ARM
+//! VM. Prints the paper's table with measured columns and the VM-
+//! elimination arithmetic.
+
+use acts::experiment::{table1, Lab};
+
+fn main() {
+    let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
+    let t1 = table1::run(&lab, 60, 1).expect("table1 experiment");
+    println!("{}", t1.report().markdown());
+    println!(
+        "§5.2: improvement {:+.2}% -> eliminate 1 VM in every {} (paper: +4.07% -> 1 in 26)\n",
+        t1.txn_improvement() * 100.0,
+        t1.vm_elimination_denominator()
+    );
+
+    // paper-shape assertions: small positive gain, reliability improves
+    let imp = t1.txn_improvement();
+    assert!((0.005..0.25).contains(&imp), "gain out of regime: {imp}");
+    assert!(
+        t1.tuned.failed_txns <= t1.default.failed_txns,
+        "tuned config must not fail more txns"
+    );
+
+    // seed sweep: the gain regime must be stable, not a lucky seed
+    println!("seed sweep (gain stability):");
+    for seed in [2, 3, 4] {
+        let t = table1::run(&lab, 60, seed).expect("table1");
+        println!(
+            "  seed {}: txns {:+.2}%, failed {} -> {}",
+            seed,
+            t.txn_improvement() * 100.0,
+            t.default.failed_txns,
+            t.tuned.failed_txns
+        );
+    }
+}

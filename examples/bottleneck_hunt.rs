@@ -1,0 +1,19 @@
+//! §5.5 — "Identifying System Bottlenecks". Tune the database alone,
+//! then tune it behind the front-end caching/LB tier: the composed
+//! performance stays pinned at the untuned-database level, locating the
+//! bottleneck in the front-end.
+
+use acts::experiment::{bottleneck, Lab};
+
+fn main() -> acts::Result<()> {
+    let lab = Lab::new()?;
+    let b = bottleneck::run(&lab, 80, 1)?;
+    println!("{}", b.report().markdown());
+    if b.frontend_is_bottleneck() {
+        println!(
+            "=> without ACTS we could not tell whether the limit was configuration or \
+             the systems themselves; objective tuning of each target isolates it."
+        );
+    }
+    Ok(())
+}

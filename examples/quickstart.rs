@@ -1,0 +1,44 @@
+//! Quickstart: tune a simulated Tomcat deployment in ~30 staged tests.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use acts::experiment::Lab;
+use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
+use acts::sut;
+use acts::tuner::{self, TuningConfig};
+use acts::workload::{DeploymentEnv, WorkloadSpec};
+
+fn main() -> acts::Result<()> {
+    // 1. load the compiled surface artifacts (built once by `make artifacts`)
+    let lab = Lab::new()?;
+
+    // 2. deploy the SUT in the simulated staging environment, bound to a
+    //    workload and a deployment environment (Fig. 2's three components)
+    let mut sut = lab.deploy(
+        Target::Single(sut::tomcat()),
+        WorkloadSpec::page_mix(),
+        DeploymentEnv::standalone(),
+        SimulationOpts::default(),
+        42,
+    );
+
+    // 3. run a resource-limited tuning session: LHS + RRS, 30 tests
+    let cfg = TuningConfig { budget_tests: 30, optimizer: "rrs".into(), seed: 42, ..Default::default() };
+    let out = tuner::tune(&mut sut, &cfg)?;
+
+    // 4. read the results
+    println!(
+        "baseline {:.0} hits/s -> best {:.0} hits/s ({:+.1}%) in {} staged tests ({} of staging time)",
+        out.baseline.throughput,
+        out.best.throughput,
+        out.improvement * 100.0,
+        out.tests_used,
+        acts::report::fmt_duration(out.sim_seconds),
+    );
+    println!("\nbest configuration found:");
+    let space = sut.space();
+    println!("{}", space.render(&space.decode(&out.best_unit)));
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Figure 1 — regenerate the six diverging performance surfaces and
+//! write them as CSV files (out/fig1_*.csv) for plotting, plus the
+//! shape-metric summary.
+
+use acts::experiment::{fig1, Lab};
+use std::fs;
+
+fn main() -> acts::Result<()> {
+    let lab = Lab::new()?;
+    let fig = fig1::run(&lab, 24)?;
+
+    fs::create_dir_all("out").map_err(|e| acts::ActsError::io("out", e))?;
+    let write = |name: &str, data: String| {
+        fs::write(format!("out/{name}"), data).map_err(|e| acts::ActsError::io(name, e))
+    };
+
+    // line panels (a, d)
+    for (panel, lines) in [("a", &fig.a_lines), ("d", &fig.d_lines)] {
+        let mut csv = String::from("query_cache_type,point,throughput\n");
+        for (label, ys) in lines.iter() {
+            for (i, y) in ys.iter().enumerate() {
+                csv.push_str(&format!("{label},{i},{y:.3}\n"));
+            }
+        }
+        write(&format!("fig1{panel}_mysql_lines.csv"), csv)?;
+    }
+    // grid panels
+    write("fig1b_tomcat.csv", fig.b.csv())?;
+    write("fig1c_spark_standalone.csv", fig.c.csv())?;
+    write("fig1e_tomcat_jvm_tsr20.csv", fig.e_low.csv())?;
+    write("fig1e_tomcat_jvm_tsr80.csv", fig.e_high.csv())?;
+    write("fig1f_spark_cluster.csv", fig.f.csv())?;
+
+    println!("wrote out/fig1*.csv");
+    println!("{:#?}", fig.shapes());
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Table 1 + §5.2 — "Improving System Utilization: Eliminating 1 from
+//! every 26". Tunes the fully-utilised ARM-VM Tomcat and derives the
+//! fleet-consolidation arithmetic from the throughput gain.
+
+use acts::experiment::{table1, Lab};
+
+fn main() -> acts::Result<()> {
+    let lab = Lab::new()?;
+    let t1 = table1::run(&lab, 60, 1)?;
+    println!("{}", t1.report().markdown());
+    let denom = t1.vm_elimination_denominator();
+    println!(
+        "throughput gain {:+.2}% => a fleet of {denom} VMs serves the same load with {} \
+         (paper: +4.07% => 1 in 26)",
+        t1.txn_improvement() * 100.0,
+        denom - 1
+    );
+    Ok(())
+}

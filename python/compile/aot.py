@@ -1,0 +1,148 @@
+# AOT compile path: lower the L2 surface model to HLO *text* artifacts.
+#
+# HLO text — NOT HloModuleProto.serialize() — is the interchange format:
+# jax >= 0.5 emits protos with 64-bit instruction ids which the rust xla
+# crate's xla_extension 0.5.1 rejects (proto.id() <= INT_MAX). The text
+# parser reassigns ids and round-trips cleanly (/opt/xla-example/README).
+#
+# Emits, into --outdir:
+#   surface_b{B}.hlo.txt   for B in BATCH_BUCKETS (static PJRT shapes)
+#   golden_surface.txt     patterned-input golden vectors for the rust
+#                          runtime integration test (see golden_inputs)
+#   shapes.txt             the artifact dimension table (sanity check)
+#
+# Run once by `make artifacts`; python never runs on the tuning path.
+import argparse
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as m
+from .kernels import D, E, FOUR_D, G, J, N_CONSTS, R, RG, W  # noqa: F401
+
+# Static batch buckets the rust runtime can execute. The runtime rounds a
+# request up to the next bucket and pads (runtime/batcher.rs).
+BATCH_BUCKETS = [1, 16, 256, 2048]
+
+GOLDEN_BATCHES = [1, 16]  # keep the golden file small but multi-shape
+
+
+def input_specs(b: int):
+    """ShapeDtypeStructs for one batch bucket, in artifact input order."""
+    specs = []
+    for name, shape in m.INPUT_SPEC:
+        shape = tuple(b if s == "B" else s for s in shape)
+        specs.append(jax.ShapeDtypeStruct(shape, jnp.float32))
+    return specs
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(b: int) -> str:
+    lowered = jax.jit(m.surface_model).lower(*input_specs(b))
+    return to_hlo_text(lowered)
+
+
+# --- golden vectors ------------------------------------------------------
+# Deterministic patterned inputs that rust regenerates bit-for-bit from the
+# same formula (rust/tests/runtime_golden.rs). All math in f64, cast to f32.
+#
+#   raw(i, k)   = sin(0.1 * k + 0.7 * i)          i = input index, k = flat
+#   u           = 0.5 + 0.5 * raw                 in [0, 1]
+#   inv_rho2    = 2 * |raw| + 0.1                 positive
+#   *_kappa     = 5 * raw                         steep but bounded
+#   consts      = [50 + 40*raw, 1+|raw|, 10*|raw|+1, 100*|raw|+10]
+#   otherwise   = 0.5 * raw
+
+POSITIVE = {"inv_rho2"}
+KAPPA = {"cliff_kappa", "gate_kappa", "step_s"}
+
+
+def golden_inputs(b: int):
+    arrays = []
+    for i, (name, shape) in enumerate(m.INPUT_SPEC):
+        shape = tuple(b if s == "B" else s for s in shape)
+        n = int(np.prod(shape))
+        k = np.arange(n, dtype=np.float64)
+        raw = np.sin(0.1 * k + 0.7 * i)
+        if name == "u":
+            vals = 0.5 + 0.5 * raw
+        elif name in POSITIVE:
+            vals = 2.0 * np.abs(raw) + 0.1
+        elif name in KAPPA:
+            vals = 5.0 * raw
+        elif name == "consts":
+            vals = np.stack(
+                [
+                    50.0 + 40.0 * raw[0],
+                    1.0 + abs(raw[1]),
+                    10.0 * abs(raw[2]) + 1.0,
+                    100.0 * abs(raw[3]) + 10.0,
+                ]
+            )
+        else:
+            vals = 0.5 * raw
+        arrays.append(vals.astype(np.float32).reshape(shape))
+    return arrays
+
+
+def write_golden(path: str) -> None:
+    with open(path, "w") as f:
+        f.write("# golden surface vectors: patterned inputs -> model outputs\n")
+        f.write("# format: `case B` / `insum name value` / `thr ...` / `lat ...`\n")
+        for b in GOLDEN_BATCHES:
+            inputs = golden_inputs(b)
+            thr, lat = m.surface_model_ref(*inputs)
+            thr_k, lat_k = m.surface_model(*inputs)
+            np.testing.assert_allclose(thr, thr_k, rtol=2e-5, atol=1e-5)
+            np.testing.assert_allclose(lat, lat_k, rtol=2e-5, atol=1e-5)
+            f.write(f"case {b}\n")
+            for (name, _), arr in zip(m.INPUT_SPEC, inputs):
+                f.write(f"insum {name} {float(np.float64(arr.sum())):.9e}\n")
+            f.write("thr " + " ".join(f"{v:.9e}" for v in np.asarray(thr)) + "\n")
+            f.write("lat " + " ".join(f"{v:.9e}" for v in np.asarray(lat)) + "\n")
+
+
+def write_shapes(path: str) -> None:
+    with open(path, "w") as f:
+        f.write(f"D {D}\nJ {J}\nR {R}\nG {G}\nW {W}\nE {E}\nNCONSTS {N_CONSTS}\n")
+        f.write("buckets " + " ".join(str(b) for b in BATCH_BUCKETS) + "\n")
+        for name, shape in m.INPUT_SPEC:
+            dims = " ".join(str(s) for s in shape)
+            f.write(f"input {name} {dims}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    for b in BATCH_BUCKETS:
+        text = lower_bucket(b)
+        path = os.path.join(args.outdir, f"surface_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    golden = os.path.join(args.outdir, "golden_surface.txt")
+    write_golden(golden)
+    print(f"wrote {golden}")
+
+    shapes = os.path.join(args.outdir, "shapes.txt")
+    write_shapes(shapes)
+    print(f"wrote {shapes}")
+
+
+if __name__ == "__main__":
+    main()

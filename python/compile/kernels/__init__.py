@@ -1,0 +1,22 @@
+"""L1 Pallas kernels for the ACTS simulated-SUT surface evaluator.
+
+`surface` holds the Pallas kernel (the batched config-scoring core), and
+`ref` the pure-jnp oracle used by pytest to validate it. Both operate on
+*premixed* parameter blocks: the L2 model (python/compile/model.py) folds
+the workload vector into the parameter blocks before invoking the kernel,
+so the kernel body is pure batched compute over configs.
+"""
+
+# Fixed artifact dimensions (see DESIGN.md §3). Rust mirrors these in
+# rust/src/runtime/shapes.rs — keep in sync.
+D = 64        # padded knob dimension
+FOUR_D = 256  # basis features per config (4 per knob)
+J = 32        # RBF bump count
+R = 8         # cliff terms
+G = 4         # dominance gates
+RG = 12       # stacked direction rows (R cliffs + G gates)
+W = 8         # workload feature dimension
+E = 4         # deployment feature dimension
+N_CONSTS = 4  # [t_scale, lat0, lat1, t_sat]
+
+from . import ref, surface  # noqa: E402,F401

@@ -1,0 +1,69 @@
+# Pure-jnp correctness oracle for the surface-core kernel.
+#
+# This is the mathematical ground truth for the batched config-scoring
+# core (DESIGN.md §3). The Pallas kernel in surface.py must match this to
+# float32 tolerance on every shape hypothesis sweeps throw at it.
+import jax.numpy as jnp
+
+
+def sigmoid(x):
+    """One shared literal sigmoid formula for both kernel paths."""
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def surface_core_ref(
+    u,            # (B, D)   configs in [0, 1]
+    basis_w,      # (4, D)   weights for the 4 basis components per knob
+    step_s,       # (D,)     step-basis slope
+    step_t,       # (D,)     step-basis threshold
+    q,            # (D, D)   workload-premixed interaction matrix
+    centers,      # (J, D)   RBF bump centers
+    inv_rho2,     # (J,)     1/rho^2 bump inverse widths
+    amps,         # (J,)     workload-premixed bump amplitudes
+    dirs,         # (R+G, D) stacked cliff + gate directions
+    cliff_tau,    # (R,)
+    cliff_kappa,  # (R,)
+    cliff_gain,   # (R,)     workload+deployment premixed gains
+    gate_tau,     # (G,)
+    gate_kappa,   # (G,)
+    gate_floor,   # (G,)     in (0, 1]; 1 disables the gate
+):
+    """Return (score, gate), both (B,) float32.
+
+    score = base + inter + bumps + cliffs
+      base  : per-knob basis response  phi(u) . w
+              phi components per knob: [u, u^2, sin(pi u), sigmoid(s(u-t))]
+      inter : pairwise interactions    diag(u q u^T)
+      bumps : RBF bumpiness            sum_j a_j exp(-|u-c_j|^2 / rho_j^2)
+      cliffs: sharp deployment rises   sum_r g_r sigmoid(k_r(u.d_r - tau_r))
+    gate  = prod_g [ floor_g + (1-floor_g) sigmoid(k_g(u.d_g - tau_g)) ]
+    """
+    r = cliff_tau.shape[0]
+
+    base = (
+        u @ basis_w[0]
+        + (u * u) @ basis_w[1]
+        + jnp.sin(jnp.pi * u) @ basis_w[2]
+        + sigmoid(step_s * (u - step_t)) @ basis_w[3]
+    )
+
+    inter = jnp.sum((u @ q) * u, axis=1)
+
+    d2 = (
+        jnp.sum(u * u, axis=1, keepdims=True)
+        + jnp.sum(centers * centers, axis=1)[None, :]
+        - 2.0 * (u @ centers.T)
+    )
+    bumps = jnp.exp(-d2 * inv_rho2[None, :]) @ amps
+
+    proj = u @ dirs.T                      # (B, R+G)
+    pc, pg = proj[:, :r], proj[:, r:]
+    cliffs = sigmoid(cliff_kappa[None, :] * (pc - cliff_tau[None, :])) @ cliff_gain
+
+    gfac = gate_floor[None, :] + (1.0 - gate_floor[None, :]) * sigmoid(
+        gate_kappa[None, :] * (pg - gate_tau[None, :])
+    )
+    gate = jnp.prod(gfac, axis=1)
+
+    score = base + inter + bumps + cliffs
+    return score, gate

@@ -1,0 +1,150 @@
+# L1: the batched config-scoring core as a Pallas kernel.
+#
+# The hot spot of the whole reproduction: every staged "test" the rust
+# tuner runs, and every point of the Figure-1 atlas, evaluates this core.
+# Shapes are fixed per artifact (DESIGN.md §3): D=64 knobs (padded),
+# J=32 bumps, R=8 cliffs, G=4 gates.
+#
+# TPU thinking (DESIGN.md §Hardware-Adaptation):
+#   * the three per-tile contractions — u@q (Bt,64)x(64,64), u@centers^T
+#     (Bt,64)x(64,32), u@dirs^T (Bt,64)x(64,12) — are MXU-shaped matmuls
+#     in fp32 over a 64-wide inner dimension;
+#   * the basis/exp/sigmoid heads are VPU elementwise work;
+#   * the grid walks the batch dimension; each step owns one (Bt, 64)
+#     config tile in VMEM while the parameter blocks (~40 KiB total) stay
+#     resident across steps (their index_map is constant), so HBM traffic
+#     per step is just the config tile + two (Bt,) outputs;
+#   * VMEM plan at Bt=256: tile 64 KiB + params 40 KiB + intermediates
+#     (u@q 64 KiB, bump/dir projections ~44 KiB) ≈ 0.2 MiB — far under
+#     the ~16 MiB budget, leaving room for double buffering.
+#
+# interpret=True ALWAYS: the CPU PJRT plugin cannot execute Mosaic
+# custom-calls; interpret mode lowers to plain HLO so the rust runtime
+# can run the artifact (see /opt/xla-example/README.md).
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import sigmoid
+
+# Max batch-tile height. Tiles taller than this are split by the grid;
+# batches smaller than this become a single tile.
+MAX_TILE = 256
+
+
+def _surface_kernel(
+    u_ref, basis_w_ref, step_s_ref, step_t_ref, q_ref, centers_ref,
+    inv_rho2_ref, amps_ref, dirs_ref, cliff_tau_ref, cliff_kappa_ref,
+    cliff_gain_ref, gate_tau_ref, gate_kappa_ref, gate_floor_ref,
+    score_ref, gate_ref,
+):
+    """One batch tile: (Bt, D) configs -> (Bt,) score and gate."""
+    u = u_ref[...]
+    basis_w = basis_w_ref[...]
+
+    # --- base: per-knob basis response (VPU + matvec) -------------------
+    base = (
+        u @ basis_w[0]
+        + (u * u) @ basis_w[1]
+        + jnp.sin(jnp.pi * u) @ basis_w[2]
+        + sigmoid(step_s_ref[...] * (u - step_t_ref[...])) @ basis_w[3]
+    )
+
+    # --- inter: diag(u q u^T) via one MXU matmul ------------------------
+    inter = jnp.sum((u @ q_ref[...]) * u, axis=1)
+
+    # --- bumps: |u-c|^2 expanded so the cross term is an MXU matmul -----
+    centers = centers_ref[...]
+    d2 = (
+        jnp.sum(u * u, axis=1, keepdims=True)
+        + jnp.sum(centers * centers, axis=1)[None, :]
+        - 2.0 * (u @ centers.T)
+    )
+    bumps = jnp.exp(-d2 * inv_rho2_ref[...][None, :]) @ amps_ref[...]
+
+    # --- cliffs + gates share one stacked direction matmul --------------
+    proj = u @ dirs_ref[...].T                     # (Bt, R+G)
+    r = cliff_tau_ref.shape[0]
+    pc = proj[:, :r]
+    pg = proj[:, r:]
+
+    cliff_tau = cliff_tau_ref[...]
+    cliff_kappa = cliff_kappa_ref[...]
+    cliffs = sigmoid(cliff_kappa[None, :] * (pc - cliff_tau[None, :])) @ cliff_gain_ref[...]
+
+    floor = gate_floor_ref[...]
+    gfac = floor[None, :] + (1.0 - floor[None, :]) * sigmoid(
+        gate_kappa_ref[...][None, :] * (pg - gate_tau_ref[...][None, :])
+    )
+
+    score_ref[...] = base + inter + bumps + cliffs
+    gate_ref[...] = jnp.prod(gfac, axis=1)
+
+
+def _pick_tile(b: int) -> int:
+    if b <= MAX_TILE:
+        return b
+    if b % MAX_TILE != 0:
+        raise ValueError(f"batch {b} > {MAX_TILE} must be a multiple of {MAX_TILE}")
+    return MAX_TILE
+
+
+@functools.partial(jax.named_call, name="surface_core_pallas")
+def surface_core(
+    u, basis_w, step_s, step_t, q, centers, inv_rho2, amps, dirs,
+    cliff_tau, cliff_kappa, cliff_gain, gate_tau, gate_kappa, gate_floor,
+):
+    """Pallas implementation of kernels.ref.surface_core_ref.
+
+    Same signature and semantics as the oracle; tiles the batch dimension
+    across a 1-D grid. All inputs float32.
+    """
+    b, d = u.shape
+    j = centers.shape[0]
+    rg = dirs.shape[0]
+    r = cliff_tau.shape[0]
+    g = gate_tau.shape[0]
+    if rg != r + g:
+        raise ValueError(f"dirs rows {rg} != cliffs {r} + gates {g}")
+    bt = _pick_tile(b)
+    grid = (b // bt,)
+
+    def tile0(*shape):
+        """A parameter block: same (whole-array) block every grid step."""
+        return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    return pl.pallas_call(
+        _surface_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),   # u: walk the batch
+            tile0(4, d),        # basis_w
+            tile0(d),           # step_s
+            tile0(d),           # step_t
+            tile0(d, d),        # q
+            tile0(j, d),        # centers
+            tile0(j),           # inv_rho2
+            tile0(j),           # amps
+            tile0(rg, d),       # dirs
+            tile0(r),           # cliff_tau
+            tile0(r),           # cliff_kappa
+            tile0(r),           # cliff_gain
+            tile0(g),           # gate_tau
+            tile0(g),           # gate_kappa
+            tile0(g),           # gate_floor
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(
+        u, basis_w, step_s, step_t, q, centers, inv_rho2, amps, dirs,
+        cliff_tau, cliff_kappa, cliff_gain, gate_tau, gate_kappa, gate_floor,
+    )

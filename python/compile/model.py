@@ -1,0 +1,92 @@
+# L2: the full simulated-SUT performance model (jax, build-time only).
+#
+# Wraps the L1 surface core with the workload/deployment premix and the
+# throughput/latency heads (DESIGN.md §3):
+#
+#   premix:  fold the workload vector w into the parameter blocks
+#            (basis weights, interaction matrix, bump amplitudes, cliff
+#            gains, gate floors) so the kernel sees pure per-config work
+#   heads:   T   = t_scale * softplus(score) * gate * dep(e)
+#            lat = lat0 + lat1 / (1 + T / t_sat)
+#
+# The model is a pure function: measurement noise, restarts and failure
+# injection are L3 (rust) concerns. One lowered artifact serves every SUT
+# because the per-SUT surface parameters are *inputs*, not constants.
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels import surface as ksurf
+
+# Artifact input order — rust/src/runtime/shapes.rs mirrors this exactly.
+# (name, shape) with D=64, J=32, R=8, G=4, W=8, E=4.
+INPUT_SPEC = [
+    ("u", ("B", 64)),           # configs, normalised to [0,1]
+    ("w", (8,)),                # workload feature vector
+    ("e", (4,)),                # deployment feature vector
+    ("m", (4, 64, 8)),          # basis weights per workload feature
+    ("step_s", (64,)),          # step-basis slopes
+    ("step_t", (64,)),          # step-basis thresholds
+    ("qs", (8, 64, 64)),        # interaction matrices per workload feature
+    ("centers", (32, 64)),      # RBF centers
+    ("inv_rho2", (32,)),        # RBF inverse widths
+    ("amps_w", (32, 8)),        # bump amplitudes per workload feature
+    ("dirs", (12, 64)),         # stacked cliff (8) + gate (4) directions
+    ("cliff_tau", (8,)),
+    ("cliff_kappa", (8,)),
+    ("cliff_gain_w", (8, 8)),   # cliff gains per workload feature
+    ("cliff_gain_e", (8, 4)),   # cliff gains per deployment feature
+    ("gate_tau", (4,)),
+    ("gate_kappa", (4,)),
+    ("gate_floor_w", (4, 8)),   # pre-sigmoid gate floors per workload feat
+    ("dep_w", (4,)),            # deployment scale weights
+    ("consts", (4,)),           # [t_scale, lat0, lat1, t_sat]
+]
+
+
+def softplus(x):
+    """Overflow-safe softplus, same formula the rust docs quote."""
+    return jnp.logaddexp(x, 0.0)
+
+
+def premix(w, e, m, amps_w, qs, cliff_gain_w, cliff_gain_e, gate_floor_w):
+    """Fold workload + deployment vectors into kernel parameter blocks."""
+    basis_w = jnp.tensordot(m, w, axes=([2], [0]))        # (4, D)
+    q = jnp.tensordot(w, qs, axes=([0], [0]))             # (D, D)
+    amps = amps_w @ w                                     # (J,)
+    cliff_gain = cliff_gain_w @ w + cliff_gain_e @ e      # (R,)
+    gate_floor = 1.0 / (1.0 + jnp.exp(-(gate_floor_w @ w)))  # (G,) in (0,1)
+    return basis_w, q, amps, cliff_gain, gate_floor
+
+
+def surface_model(
+    u, w, e, m, step_s, step_t, qs, centers, inv_rho2, amps_w, dirs,
+    cliff_tau, cliff_kappa, cliff_gain_w, cliff_gain_e, gate_tau,
+    gate_kappa, gate_floor_w, dep_w, consts, *, core=None,
+):
+    """Full model: configs (B, D) -> (throughput (B,), latency (B,)).
+
+    `core` selects the scoring implementation: the Pallas kernel by
+    default, or kernels.ref.surface_core_ref when validating.
+    """
+    if core is None:
+        core = ksurf.surface_core
+
+    basis_w, q, amps, cliff_gain, gate_floor = premix(
+        w, e, m, amps_w, qs, cliff_gain_w, cliff_gain_e, gate_floor_w
+    )
+    score, gate = core(
+        u, basis_w, step_s, step_t, q, centers, inv_rho2, amps, dirs,
+        cliff_tau, cliff_kappa, cliff_gain, gate_tau, gate_kappa, gate_floor,
+    )
+
+    t_scale, lat0, lat1, t_sat = consts[0], consts[1], consts[2], consts[3]
+    # dep(e): multiplicative deployment headroom in (0, 2)
+    dep = 2.0 / (1.0 + jnp.exp(-(e @ dep_w)))
+    thr = t_scale * softplus(score) * gate * dep
+    lat = lat0 + lat1 / (1.0 + thr / t_sat)
+    return thr, lat
+
+
+def surface_model_ref(*args, **kwargs):
+    """The model with the pure-jnp oracle core (pytest ground truth)."""
+    return surface_model(*args, core=kref.surface_core_ref, **kwargs)

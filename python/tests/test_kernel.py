@@ -1,0 +1,163 @@
+# pytest: Pallas surface kernel vs pure-jnp oracle — the CORE correctness
+# signal for L1. Hypothesis sweeps batch shapes and parameter regimes.
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import D, G, J, R, RG
+from compile.kernels.ref import surface_core_ref
+from compile.kernels.surface import MAX_TILE, surface_core
+
+
+def make_params(rng: np.random.Generator, scale: float = 1.0):
+    """Random premixed parameter blocks in a sane numeric regime."""
+    f32 = np.float32
+    return dict(
+        basis_w=rng.normal(0, scale, (4, D)).astype(f32),
+        step_s=rng.normal(0, 5 * scale, (D,)).astype(f32),
+        step_t=rng.uniform(0, 1, (D,)).astype(f32),
+        q=rng.normal(0, scale / np.sqrt(D), (D, D)).astype(f32),
+        centers=rng.uniform(0, 1, (J, D)).astype(f32),
+        inv_rho2=rng.uniform(0.05, 2.0, (J,)).astype(f32),
+        amps=rng.normal(0, scale, (J,)).astype(f32),
+        dirs=rng.normal(0, 1, (RG, D)).astype(f32),
+        cliff_tau=rng.normal(0, 1, (R,)).astype(f32),
+        cliff_kappa=rng.normal(0, 8 * scale, (R,)).astype(f32),
+        cliff_gain=rng.normal(0, scale, (R,)).astype(f32),
+        gate_tau=rng.normal(0, 1, (G,)).astype(f32),
+        gate_kappa=rng.normal(0, 8 * scale, (G,)).astype(f32),
+        gate_floor=rng.uniform(0.05, 1.0, (G,)).astype(f32),
+    )
+
+
+def call_both(u, p):
+    args = (
+        u, p["basis_w"], p["step_s"], p["step_t"], p["q"], p["centers"],
+        p["inv_rho2"], p["amps"], p["dirs"], p["cliff_tau"],
+        p["cliff_kappa"], p["cliff_gain"], p["gate_tau"], p["gate_kappa"],
+        p["gate_floor"],
+    )
+    s_ref, g_ref = surface_core_ref(*args)
+    s_krn, g_krn = surface_core(*args)
+    return map(np.asarray, (s_ref, g_ref, s_krn, g_krn))
+
+
+def assert_match(u, p, rtol=3e-5, atol=3e-5):
+    s_ref, g_ref, s_krn, g_krn = call_both(u, p)
+    np.testing.assert_allclose(s_krn, s_ref, rtol=rtol, atol=atol)
+    np.testing.assert_allclose(g_krn, g_ref, rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("b", [1, 2, 7, 16, 64, 255, 256, 512, 1024])
+def test_kernel_matches_ref_across_batches(b):
+    rng = np.random.default_rng(b)
+    if b > MAX_TILE and b % MAX_TILE:
+        pytest.skip("unsupported non-multiple above MAX_TILE")
+    u = rng.uniform(0, 1, (b, D)).astype(np.float32)
+    assert_match(u, make_params(rng))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.sampled_from([1, 3, 16, 33, 128, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 3.0),
+)
+def test_kernel_matches_ref_hypothesis(b, seed, scale):
+    rng = np.random.default_rng(seed)
+    u = rng.uniform(0, 1, (b, D)).astype(np.float32)
+    assert_match(u, make_params(rng, scale), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_at_domain_corners():
+    """u exactly at 0 and 1 — step/sigmoid boundaries must still agree."""
+    rng = np.random.default_rng(7)
+    p = make_params(rng)
+    u = np.zeros((4, D), dtype=np.float32)
+    u[1] = 1.0
+    u[2, ::2] = 1.0
+    u[3, : D // 2] = 1.0
+    assert_match(u, p)
+
+def test_kernel_zero_params_gives_zero_score_unit_gate():
+    """All-zero premix: score==0 everywhere; gate==prod(floor + (1-floor)/2)."""
+    rng = np.random.default_rng(11)
+    p = {k: np.zeros_like(v) for k, v in make_params(rng).items()}
+    p["gate_floor"] = np.full((G,), 0.5, np.float32)
+    u = rng.uniform(0, 1, (8, D)).astype(np.float32)
+    s_ref, g_ref, s_krn, g_krn = call_both(u, p)
+    np.testing.assert_allclose(s_krn, 0.0, atol=1e-6)
+    np.testing.assert_allclose(g_krn, 0.75**G, rtol=1e-6)
+    np.testing.assert_allclose(s_ref, s_krn, atol=1e-6)
+    np.testing.assert_allclose(g_ref, g_krn, rtol=1e-6)
+
+
+def test_kernel_extreme_kappa_saturates_not_nan():
+    """Very steep cliffs/gates must saturate to {0,1}, never NaN/inf."""
+    rng = np.random.default_rng(13)
+    p = make_params(rng)
+    p["cliff_kappa"] = np.full((R,), 1e4, np.float32)
+    p["gate_kappa"] = np.full((G,), -1e4, np.float32)
+    u = rng.uniform(0, 1, (16, D)).astype(np.float32)
+    s_ref, g_ref, s_krn, g_krn = call_both(u, p)
+    assert np.isfinite(s_krn).all() and np.isfinite(g_krn).all()
+    np.testing.assert_allclose(s_krn, s_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g_krn, g_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_gate_bounds():
+    """gate is a product of factors in (0, 1] — must stay in (0, 1]."""
+    rng = np.random.default_rng(17)
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        p = make_params(rng)
+        u = rng.uniform(0, 1, (32, D)).astype(np.float32)
+        _, _, _, g = call_both(u, p)
+        assert (g > 0).all() and (g <= 1 + 1e-6).all()
+
+
+def test_kernel_tile_split_invariance():
+    """B=512 (two tiles) must equal two stacked B=256 calls (one tile)."""
+    rng = np.random.default_rng(19)
+    p = make_params(rng)
+    u = rng.uniform(0, 1, (512, D)).astype(np.float32)
+    args = lambda uu: (
+        uu, p["basis_w"], p["step_s"], p["step_t"], p["q"], p["centers"],
+        p["inv_rho2"], p["amps"], p["dirs"], p["cliff_tau"],
+        p["cliff_kappa"], p["cliff_gain"], p["gate_tau"], p["gate_kappa"],
+        p["gate_floor"],
+    )
+    s512, g512 = surface_core(*args(u))
+    sa, ga = surface_core(*args(u[:256]))
+    sb, gb = surface_core(*args(u[256:]))
+    np.testing.assert_allclose(
+        np.asarray(s512), np.concatenate([sa, sb]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(g512), np.concatenate([ga, gb]), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_rejects_bad_batch():
+    rng = np.random.default_rng(23)
+    p = make_params(rng)
+    u = rng.uniform(0, 1, (300, D)).astype(np.float32)  # >256, not multiple
+    with pytest.raises(ValueError):
+        surface_core(
+            u, p["basis_w"], p["step_s"], p["step_t"], p["q"], p["centers"],
+            p["inv_rho2"], p["amps"], p["dirs"], p["cliff_tau"],
+            p["cliff_kappa"], p["cliff_gain"], p["gate_tau"],
+            p["gate_kappa"], p["gate_floor"],
+        )
+
+
+def test_kernel_rejects_dir_row_mismatch():
+    rng = np.random.default_rng(29)
+    p = make_params(rng)
+    u = rng.uniform(0, 1, (4, D)).astype(np.float32)
+    with pytest.raises(ValueError):
+        surface_core(
+            u, p["basis_w"], p["step_s"], p["step_t"], p["q"], p["centers"],
+            p["inv_rho2"], p["amps"], p["dirs"][:-1], p["cliff_tau"],
+            p["cliff_kappa"], p["cliff_gain"], p["gate_tau"],
+            p["gate_kappa"], p["gate_floor"],
+        )

@@ -1,0 +1,144 @@
+# pytest: L2 model — premix algebra, output heads, physical invariants.
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model as m
+from compile.aot import golden_inputs, input_specs
+from compile.kernels import D, E, G, J, R, W
+
+
+def random_inputs(rng: np.random.Generator, b: int):
+    """Random full-model inputs in a physically sane regime."""
+    out = []
+    for name, shape in m.INPUT_SPEC:
+        shape = tuple(b if s == "B" else s for s in shape)
+        if name == "u":
+            a = rng.uniform(0, 1, shape)
+        elif name == "w":
+            a = rng.dirichlet(np.ones(W))  # workload mixes sum to 1
+        elif name == "e":
+            a = rng.uniform(0, 1, shape)
+        elif name == "inv_rho2":
+            a = rng.uniform(0.05, 2.0, shape)
+        elif name in ("step_s", "cliff_kappa", "gate_kappa"):
+            a = rng.normal(0, 6, shape)
+        elif name == "consts":
+            a = np.array([rng.uniform(10, 100), rng.uniform(0.5, 3),
+                          rng.uniform(5, 50), rng.uniform(50, 500)])
+        else:
+            a = rng.normal(0, 0.5, shape)
+        out.append(np.asarray(a, dtype=np.float32).reshape(shape))
+    return out
+
+
+def test_premix_matches_manual_algebra():
+    rng = np.random.default_rng(0)
+    ins = dict(zip([n for n, _ in m.INPUT_SPEC], random_inputs(rng, 1)))
+    basis_w, q, amps, cliff_gain, gate_floor = map(
+        np.asarray,
+        m.premix(ins["w"], ins["e"], ins["m"], ins["amps_w"], ins["qs"],
+                 ins["cliff_gain_w"], ins["cliff_gain_e"], ins["gate_floor_w"]),
+    )
+    w, e = ins["w"].astype(np.float64), ins["e"].astype(np.float64)
+    np.testing.assert_allclose(
+        basis_w, np.einsum("bdw,w->bd", ins["m"].astype(np.float64), w),
+        rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        q, np.einsum("w,wij->ij", w, ins["qs"].astype(np.float64)),
+        rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        amps, ins["amps_w"].astype(np.float64) @ w, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        cliff_gain,
+        ins["cliff_gain_w"].astype(np.float64) @ w
+        + ins["cliff_gain_e"].astype(np.float64) @ e,
+        rtol=1e-5, atol=1e-6)
+    manual_floor = 1.0 / (1.0 + np.exp(-(ins["gate_floor_w"].astype(np.float64) @ w)))
+    np.testing.assert_allclose(gate_floor, manual_floor, rtol=1e-5)
+    assert ((gate_floor > 0) & (gate_floor < 1)).all()
+
+
+@pytest.mark.parametrize("b", [1, 16, 256])
+def test_model_shapes_and_finiteness(b):
+    rng = np.random.default_rng(b)
+    thr, lat = m.surface_model(*random_inputs(rng, b))
+    thr, lat = np.asarray(thr), np.asarray(lat)
+    assert thr.shape == (b,) and lat.shape == (b,)
+    assert np.isfinite(thr).all() and np.isfinite(lat).all()
+    assert (thr >= 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_model_kernel_vs_ref_full(seed):
+    rng = np.random.default_rng(seed)
+    ins = random_inputs(rng, 16)
+    thr_k, lat_k = map(np.asarray, m.surface_model(*ins))
+    thr_r, lat_r = map(np.asarray, m.surface_model_ref(*ins))
+    np.testing.assert_allclose(thr_k, thr_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(lat_k, lat_r, rtol=1e-4, atol=1e-4)
+
+
+def test_latency_head_monotone_in_throughput():
+    """lat = lat0 + lat1/(1 + T/t_sat): higher-T config => lower latency."""
+    rng = np.random.default_rng(42)
+    ins = random_inputs(rng, 256)
+    thr, lat = map(np.asarray, m.surface_model(*ins))
+    order = np.argsort(thr)
+    assert (np.diff(lat[order]) <= 1e-6).all()
+
+
+def test_latency_bounded_by_head_constants():
+    rng = np.random.default_rng(43)
+    ins = random_inputs(rng, 64)
+    consts = ins[-1]
+    _, lat = m.surface_model(*ins)
+    lat = np.asarray(lat)
+    lat0, lat1 = float(consts[1]), float(consts[2])
+    assert (lat >= lat0 - 1e-5).all()
+    assert (lat <= lat0 + lat1 + 1e-4).all()
+
+
+def test_deployment_scale_bounds():
+    """dep(e) in (0,2): zeroing dep_w gives exactly 1.0 multiplier."""
+    rng = np.random.default_rng(44)
+    ins = random_inputs(rng, 8)
+    names = [n for n, _ in m.INPUT_SPEC]
+    dep_idx = names.index("dep_w")
+    thr_base, _ = m.surface_model(*ins)
+    ins2 = list(ins)
+    ins2[dep_idx] = np.zeros_like(ins[dep_idx])
+    thr_nodep, _ = m.surface_model(*ins2)
+    # with dep_w = 0 the multiplier is exactly 2*sigmoid(0) = 1
+    ratio = np.asarray(thr_base) / np.asarray(thr_nodep)
+    assert (ratio > 0).all() and (ratio < 2.0 + 1e-5).all()
+
+
+def test_workload_changes_surface():
+    """Different workload vectors must yield different performance orderings
+    (the §2.2 'different workloads, different models' property)."""
+    rng = np.random.default_rng(45)
+    ins = random_inputs(rng, 256)
+    names = [n for n, _ in m.INPUT_SPEC]
+    w_idx = names.index("w")
+    thr_a, _ = m.surface_model(*ins)
+    ins_b = list(ins)
+    w2 = np.zeros(W, np.float32)
+    w2[W - 1] = 1.0
+    ins_b[w_idx] = w2
+    thr_b, _ = m.surface_model(*ins_b)
+    ra = np.argsort(np.asarray(thr_a))
+    rb = np.argsort(np.asarray(thr_b))
+    assert not np.array_equal(ra, rb)
+
+
+def test_input_spec_matches_golden_shapes():
+    for b in (1, 16):
+        specs = input_specs(b)
+        ins = golden_inputs(b)
+        assert len(specs) == len(ins) == len(m.INPUT_SPEC)
+        for s, a in zip(specs, ins):
+            assert tuple(s.shape) == a.shape
+            assert a.dtype == np.float32

@@ -1,0 +1,275 @@
+//! Criterion-style micro/macro benchmark harness (criterion itself is not
+//! in the offline vendor set). Used by every `benches/bench_*.rs` target.
+//!
+//! Features: warm-up, timed iterations with outlier-robust statistics,
+//! throughput reporting, and markdown/CSV emission so each paper
+//! table/figure bench can print the rows the paper reports.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+/// One benchmark's configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Wall-clock spent warming up before measurement.
+    pub warmup: Duration,
+    /// Number of measured samples.
+    pub samples: usize,
+    /// Minimum iterations batched inside one sample.
+    pub min_iters_per_sample: u64,
+    /// Target wall-clock for the whole measurement phase.
+    pub measure_target: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            samples: 30,
+            min_iters_per_sample: 1,
+            measure_target: Duration::from_secs(2),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(100),
+            samples: 10,
+            min_iters_per_sample: 1,
+            measure_target: Duration::from_millis(800),
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration time statistics, seconds.
+    pub secs: Summary,
+    /// Iterations per sample used.
+    pub iters_per_sample: u64,
+    /// Optional units-per-iteration for throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Mean iterations/second.
+    pub fn iters_per_sec(&self) -> f64 {
+        1.0 / self.secs.mean
+    }
+
+    /// Units/second if a unit count was declared.
+    pub fn units_per_sec(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.secs.mean)
+    }
+
+    fn fmt_time(s: f64) -> String {
+        if s < 1e-6 {
+            format!("{:.1} ns", s * 1e9)
+        } else if s < 1e-3 {
+            format!("{:.2} µs", s * 1e6)
+        } else if s < 1.0 {
+            format!("{:.2} ms", s * 1e3)
+        } else {
+            format!("{:.3} s", s)
+        }
+    }
+
+    /// One human-readable line.
+    pub fn line(&self) -> String {
+        let tput = match self.units_per_sec() {
+            Some(u) if u >= 1e6 => format!("  [{:.2} M units/s]", u / 1e6),
+            Some(u) if u >= 1e3 => format!("  [{:.2} K units/s]", u / 1e3),
+            Some(u) => format!("  [{u:.2} units/s]"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} ± {:>10} (p50 {:>10}, n={}){}",
+            self.name,
+            Self::fmt_time(self.secs.mean),
+            Self::fmt_time(self.secs.std),
+            Self::fmt_time(self.secs.p50),
+            self.secs.n,
+            tput
+        )
+    }
+}
+
+/// Benchmark group: runs closures, collects results, renders reports.
+pub struct Bench {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Bench {
+    /// New group with default config.
+    pub fn new(group: impl Into<String>) -> Self {
+        Bench { config: BenchConfig::default(), results: Vec::new(), group: group.into() }
+    }
+
+    /// New group with explicit config.
+    pub fn with_config(group: impl Into<String>, config: BenchConfig) -> Self {
+        Bench { config, results: Vec::new(), group: group.into() }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_units(name, None, move || f())
+    }
+
+    /// Benchmark with a throughput unit count per iteration.
+    pub fn bench_units(
+        &mut self,
+        name: impl Into<String>,
+        units_per_iter: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        let name = name.into();
+        // warm-up, also estimates per-iter cost
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.config.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let est = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+
+        // pick iters/sample so measurement fits the target
+        let per_sample_target =
+            self.config.measure_target.as_secs_f64() / self.config.samples as f64;
+        let iters = ((per_sample_target / est.max(1e-9)) as u64)
+            .max(self.config.min_iters_per_sample)
+            .min(1_000_000_000);
+
+        let mut samples = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+
+        let result = BenchResult {
+            name,
+            secs: Summary::of(&samples),
+            iters_per_sample: iters,
+            units_per_iter,
+        };
+        eprintln!("{}", result.line());
+        self.results.push(result);
+        self.results.last().expect("just pushed")
+    }
+
+    /// All collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render a markdown table of the group's results.
+    pub fn markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.group);
+        out.push_str("| benchmark | mean | std | p50 | throughput |\n");
+        out.push_str("|---|---:|---:|---:|---:|\n");
+        for r in &self.results {
+            let tput = r
+                .units_per_sec()
+                .map(|u| format!("{u:.0} units/s"))
+                .unwrap_or_else(|| "—".into());
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} |\n",
+                r.name,
+                BenchResult::fmt_time(r.secs.mean),
+                BenchResult::fmt_time(r.secs.std),
+                BenchResult::fmt_time(r.secs.p50),
+                tput
+            ));
+        }
+        out
+    }
+
+    /// Print the final report to stdout (benches call this at exit).
+    pub fn report(&self) {
+        println!("\n{}", self.markdown());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_config() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(5),
+            samples: 5,
+            min_iters_per_sample: 1,
+            measure_target: Duration::from_millis(20),
+        }
+    }
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let mut b = Bench::with_config("test", fast_config());
+        let r = b.bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.secs.mean > 0.0);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bench::with_config("test", fast_config());
+        let r = b
+            .bench_units("units", Some(1000.0), || {
+                black_box((0..1000).sum::<u64>());
+            })
+            .clone();
+        let ups = r.units_per_sec().unwrap();
+        assert!(ups > 0.0);
+    }
+
+    #[test]
+    fn markdown_contains_rows() {
+        let mut b = Bench::with_config("grp", fast_config());
+        b.bench("alpha", || {
+            black_box(1 + 1);
+        });
+        let md = b.markdown();
+        assert!(md.contains("### grp"));
+        assert!(md.contains("| alpha |"));
+    }
+
+    #[test]
+    fn slower_code_measures_slower() {
+        let mut b = Bench::with_config("cmp", fast_config());
+        let fast = b
+            .bench("fast", || {
+                black_box((0..10u64).sum::<u64>());
+            })
+            .secs
+            .mean;
+        let slow = b
+            .bench("slow", || {
+                // black_box the range bound so release builds cannot
+                // const-fold the whole loop away
+                let n = black_box(10_000u64);
+                black_box((0..n).map(|x| x.wrapping_mul(2654435761)).sum::<u64>());
+            })
+            .secs
+            .mean;
+        assert!(slow > fast, "slow {slow} vs fast {fast}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal CLI argument parser (no clap in the offline vendor set).
+//!
+//! Grammar: `acts <command> [--flag value]... [--switch]...`
+//!
+//! A `--name` followed by a non-`--` token is a flag with that value;
+//! otherwise it is a boolean switch — so put switches last or before
+//! another `--` token.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand (first positional).
+    pub command: String,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                out.command = it.next().expect("peeked");
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().expect("peeked");
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String flag with default.
+    pub fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn get_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// u64 flag with default (panics with a clear message on garbage).
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        match self.flags.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    /// usize flag with default.
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get_u64(name, default as u64) as usize
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn full_grammar() {
+        let a = parse("tune --sut mysql --budget 100 extra --verbose");
+        assert_eq!(a.command, "tune");
+        assert_eq!(a.get("sut", "x"), "mysql");
+        assert_eq!(a.get_u64("budget", 1), 100);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn switch_followed_by_positional_greedily_binds() {
+        // documented grammar: `--verbose extra` is flag verbose=extra
+        let a = parse("tune --verbose extra");
+        assert_eq!(a.get("verbose", ""), "extra");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("list");
+        assert_eq!(a.get("sut", "tomcat"), "tomcat");
+        assert_eq!(a.get_u64("budget", 50), 50);
+        assert!(!a.has("verbose"));
+        assert!(a.get_opt("sut").is_none());
+    }
+
+    #[test]
+    fn empty_is_empty_command() {
+        let a = parse("");
+        assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("bench --quick");
+        assert!(a.has("quick"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics_clearly() {
+        parse("tune --budget nope").get_u64("budget", 1);
+    }
+}

@@ -1,0 +1,84 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the ACTS framework.
+#[derive(Error, Debug)]
+pub enum ActsError {
+    /// A knob value fell outside its declared domain.
+    #[error("knob `{knob}`: {reason}")]
+    KnobDomain { knob: String, reason: String },
+
+    /// A configuration referenced a knob the space does not declare.
+    #[error("unknown knob `{0}`")]
+    UnknownKnob(String),
+
+    /// Config space exceeded the artifact's padded dimension.
+    #[error("config space has {got} knobs, artifact supports at most {max}")]
+    TooManyKnobs { got: usize, max: usize },
+
+    /// The tuning budget was exhausted before the operation could run.
+    #[error("resource limit exhausted: {spent}/{limit} tests used")]
+    BudgetExhausted { spent: u64, limit: u64 },
+
+    /// The runtime could not locate or parse an AOT artifact.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// A staged test failed (simulated SUT crash / timeout).
+    #[error("staged test failed: {0}")]
+    TestFailed(String),
+
+    /// PJRT / XLA-level failure.
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Input validation failure anywhere in the API.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// IO error with path context.
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl From<xla::Error> for ActsError {
+    fn from(e: xla::Error) -> Self {
+        ActsError::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, ActsError>;
+
+impl ActsError {
+    /// Wrap an IO error with the offending path.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        ActsError::Io { path: path.into(), source }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_informative() {
+        let e = ActsError::KnobDomain { knob: "buffer_pool".into(), reason: "negative".into() };
+        assert!(e.to_string().contains("buffer_pool"));
+        let e = ActsError::BudgetExhausted { spent: 100, limit: 100 };
+        assert!(e.to_string().contains("100/100"));
+        let e = ActsError::TooManyKnobs { got: 70, max: 64 };
+        assert!(e.to_string().contains("70"));
+    }
+
+    #[test]
+    fn io_helper_preserves_path() {
+        let e = ActsError::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.to_string().contains("/tmp/x"));
+    }
+}

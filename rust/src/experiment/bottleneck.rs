@@ -1,0 +1,155 @@
+//! §5.5 reproduction: identifying system bottlenecks.
+//!
+//! The paper's procedure: (1) the ops team's database deployment is
+//! tuned by itself — +63%; (2) the same workload applied through a
+//! front-end caching/load-balancing tier is tuned "for a long time" —
+//! and the composed performance stays at the *untuned* database's
+//! level, locating the bottleneck in the front-end tier.
+
+use super::Lab;
+use crate::error::Result;
+use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
+use crate::space::KnobValue;
+use crate::sut::{self, Composed};
+use crate::tuner::{self, TuningConfig, TuningOutcome};
+use crate::workload::{DeploymentEnv, WorkloadSpec};
+
+/// Paper's backend-alone tuning gain.
+pub const PAPER_BACKEND_GAIN: f64 = 0.63;
+
+/// Both tuning runs plus the derived bottleneck verdict.
+#[derive(Clone, Debug)]
+pub struct Bottleneck {
+    /// Backend (MySQL) tuned alone, starting from the ops team's config.
+    pub backend_alone: TuningOutcome,
+    /// frontend+MySQL stack tuned together.
+    pub composed: TuningOutcome,
+    /// The stock-default backend's throughput (the "untuned level" the
+    /// composed system stays pinned at).
+    pub backend_untuned: f64,
+}
+
+impl Bottleneck {
+    /// The §5.5 verdict: the backend alone improves a lot, while the
+    /// composed system stays near the untuned backend's level.
+    pub fn frontend_is_bottleneck(&self) -> bool {
+        self.backend_alone.improvement > 0.3
+            && self.composed.best.throughput < 1.35 * self.backend_untuned
+            && self.composed.best.throughput < 0.5 * self.backend_alone.best.throughput
+    }
+
+    /// Render the comparison.
+    pub fn report(&self) -> crate::report::Table {
+        let mut t = crate::report::Table::new(
+            "§5.5 Bottleneck identification (paper: DB alone +63%, composed pinned at untuned level)",
+            &["target", "baseline ops/s", "tuned ops/s", "gain"],
+        );
+        t.row(&[
+            "mysql stock default".into(),
+            format!("{:.0}", self.backend_untuned),
+            "-".into(),
+            "-".into(),
+        ]);
+        t.row(&[
+            "mysql alone (from ops config)".into(),
+            format!("{:.0}", self.backend_alone.baseline.throughput),
+            format!("{:.0}", self.backend_alone.best.throughput),
+            format!("{:+.1}%", self.backend_alone.improvement * 100.0),
+        ]);
+        t.row(&[
+            "frontend+mysql".into(),
+            format!("{:.0}", self.composed.baseline.throughput),
+            format!("{:.0}", self.composed.best.throughput),
+            format!("{:+.1}%", self.composed.improvement * 100.0),
+        ]);
+        t.row(&[
+            "verdict".into(),
+            "-".into(),
+            "-".into(),
+            if self.frontend_is_bottleneck() {
+                "front-end is the bottleneck".into()
+            } else {
+                "inconclusive".into()
+            },
+        ]);
+        t
+    }
+}
+
+/// The ops team's partly-tuned MySQL config (§5.5's starting point: a
+/// deployment that has already had obvious wins applied).
+pub fn ops_config_unit(space: &crate::space::ConfigSpace) -> Result<Vec<f64>> {
+    let gb: i64 = 1 << 30;
+    let cfg = space.config_with(&[
+        ("innodb_buffer_pool_size", KnobValue::Int(4 * gb)),
+        ("innodb_flush_method", KnobValue::Enum(2)), // O_DIRECT
+        ("thread_cache_size", KnobValue::Int(64)),
+    ])?;
+    Ok(space.encode(&cfg))
+}
+
+/// Run both §5.5 tuning sessions.
+pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Bottleneck> {
+    let workload = WorkloadSpec::zipfian_read_write();
+    let deployment = DeploymentEnv::standalone();
+
+    // reference: the stock default's throughput (the "untuned level")
+    let backend_untuned = {
+        let mut sut = lab.deploy(
+            Target::Single(sut::mysql()),
+            workload.clone(),
+            deployment.clone(),
+            SimulationOpts { noise_sigma: 0.004, ..SimulationOpts::default() },
+            seed ^ 0xDEF0,
+        );
+        sut.run_test()?.throughput
+    };
+
+    // (1) backend alone, from the ops config, with a quick ops-style
+    // budget (the paper's +63% run was a quick standalone pass, not the
+    // exhaustive §5.1 sweep)
+    let mut backend = lab.deploy(
+        Target::Single(sut::mysql()),
+        workload.clone(),
+        deployment.clone(),
+        SimulationOpts::default(),
+        seed,
+    );
+    let ops_unit = ops_config_unit(backend.space())?;
+    backend.set_config(&ops_unit)?;
+    backend.restart()?;
+    let backend_cfg = TuningConfig {
+        budget_tests: (budget / 8).clamp(6, 16),
+        optimizer: "lhs-screen".into(),
+        seed,
+        ..Default::default()
+    };
+    let backend_alone = tuner::tune(&mut backend, &backend_cfg)?;
+
+    // (2) the co-deployed stack, tuned hard with the full budget
+    let stack = Composed::new(vec![sut::frontend(), sut::mysql()]);
+    let mut composed_sut = lab.deploy(
+        Target::Stack(stack),
+        workload,
+        deployment,
+        SimulationOpts::default(),
+        seed ^ 0xB0771,
+    );
+    // the stack starts with the same ops-tuned backend behind the stock
+    // front-end
+    {
+        let space = composed_sut.space().clone();
+        let mut unit = space.encode(&space.default_config());
+        let backend_space = sut::mysql().space;
+        let ops = ops_config_unit(&backend_space)?;
+        let off = sut::frontend().space.dim();
+        unit[off..off + ops.len()].copy_from_slice(&ops);
+        composed_sut.set_config(&unit)?;
+        composed_sut.restart()?;
+    }
+    let composed_cfg =
+        TuningConfig { budget_tests: budget, optimizer: "rrs".into(), seed, ..Default::default() };
+    let composed = tuner::tune(&mut composed_sut, &composed_cfg)?;
+
+    Ok(Bottleneck { backend_alone, composed, backend_untuned })
+}

@@ -1,0 +1,148 @@
+//! §2.2 validation: co-deployed systems "must be tuned together".
+//!
+//! On the combined tomcat+JVM SUT (whose surface has cross-system
+//! interactions and JVM coordinates inside the bump geometry — Fig. 1e)
+//! we compare, at equal budget:
+//!   * **frozen**: tune only Tomcat's knobs, JVM pinned at defaults
+//!     (what a team tuning one system at a time does);
+//!   * **joint**: tune the full combined space.
+//! Joint tuning must win: part of the optimum lives in the cross terms.
+
+use super::Lab;
+use crate::error::Result;
+use crate::manipulator::{SimulationOpts, Target};
+use crate::optimizer::{Observation, Optimizer, Rrs, RrsParams};
+use crate::sut;
+use crate::tuner::{self, TuningConfig, TuningOutcome};
+use crate::util::rng::Rng64;
+use crate::workload::{DeploymentEnv, WorkloadSpec};
+
+/// Wraps an optimizer to freeze a suffix of the unit vector at fixed
+/// values: the inner optimizer sees only the free prefix.
+pub struct FrozenSuffix<O: Optimizer> {
+    inner: O,
+    frozen: Vec<f64>,
+    best: Option<Observation>,
+}
+
+impl<O: Optimizer> FrozenSuffix<O> {
+    /// Freeze `frozen` as the trailing dimensions.
+    pub fn new(inner: O, frozen: Vec<f64>) -> Self {
+        FrozenSuffix { inner, frozen, best: None }
+    }
+}
+
+impl<O: Optimizer> Optimizer for FrozenSuffix<O> {
+    fn name(&self) -> &'static str {
+        "frozen-suffix"
+    }
+
+    fn ask(&mut self, rng: &mut Rng64) -> Vec<f64> {
+        let mut u = self.inner.ask(rng);
+        u.extend_from_slice(&self.frozen);
+        u
+    }
+
+    fn tell(&mut self, unit: &[f64], value: f64) {
+        let free = unit.len() - self.frozen.len();
+        self.inner.tell(&unit[..free], value);
+        let better = self.best.as_ref().map(|b| value > b.value).unwrap_or(true);
+        if better {
+            self.best = Some(Observation { unit: unit.to_vec(), value });
+        }
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.best.as_ref()
+    }
+}
+
+/// The comparison's outcome.
+#[derive(Clone, Debug)]
+pub struct CoTuning {
+    /// Tomcat knobs only, JVM pinned.
+    pub frozen: TuningOutcome,
+    /// Full combined space.
+    pub joint: TuningOutcome,
+}
+
+impl CoTuning {
+    /// Joint-over-frozen advantage.
+    pub fn joint_advantage(&self) -> f64 {
+        self.joint.best.throughput / self.frozen.best.throughput - 1.0
+    }
+
+    /// Render.
+    pub fn report(&self) -> crate::report::Table {
+        let mut t = crate::report::Table::new(
+            "§2.2 Co-deployed systems must be tuned together (tomcat+JVM)",
+            &["strategy", "best hits/s", "gain over default"],
+        );
+        t.row(&[
+            "tomcat knobs only (JVM pinned)".into(),
+            format!("{:.0}", self.frozen.best.throughput),
+            format!("{:+.1}%", self.frozen.improvement * 100.0),
+        ]);
+        t.row(&[
+            "joint tomcat+JVM tuning".into(),
+            format!("{:.0}", self.joint.best.throughput),
+            format!("{:+.1}%", self.joint.improvement * 100.0),
+        ]);
+        t.row(&[
+            "joint advantage".into(),
+            format!("{:+.1}%", self.joint_advantage() * 100.0),
+            String::new(),
+        ]);
+        t
+    }
+}
+
+/// Run both strategies at equal budget.
+pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<CoTuning> {
+    let spec = sut::tomcat_with_jvm();
+    let tomcat_dims = sut::tomcat().space.dim();
+    let jvm_defaults: Vec<f64> = {
+        let full = spec.space.encode(&spec.space.default_config());
+        full[tomcat_dims..].to_vec()
+    };
+    let deploy = |seed| {
+        lab.deploy(
+            Target::Single(spec.clone()),
+            WorkloadSpec::page_mix(),
+            DeploymentEnv::standalone(),
+            SimulationOpts::default(),
+            seed,
+        )
+    };
+    let cfg = TuningConfig { budget_tests: budget, seed, ..Default::default() };
+
+    let mut frozen_sut = deploy(seed);
+    let mut frozen_opt =
+        FrozenSuffix::new(Rrs::new(tomcat_dims, RrsParams::default()), jvm_defaults);
+    let frozen = tuner::tune_with(&mut frozen_sut, &mut frozen_opt, &cfg)?;
+
+    let mut joint_sut = deploy(seed);
+    let mut joint_opt = Rrs::new(spec.space.dim(), RrsParams::default());
+    let joint = tuner::tune_with(&mut joint_sut, &mut joint_opt, &cfg)?;
+
+    Ok(CoTuning { frozen, joint })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frozen_suffix_pins_trailing_dims() {
+        let mut rng = Rng64::new(1);
+        let mut opt = FrozenSuffix::new(Rrs::new(2, RrsParams::default()), vec![0.25, 0.75]);
+        for _ in 0..20 {
+            let u = opt.ask(&mut rng);
+            assert_eq!(u.len(), 4);
+            assert_eq!(&u[2..], &[0.25, 0.75]);
+            opt.tell(&u, u[0]);
+        }
+        let b = opt.best().unwrap();
+        assert_eq!(&b.unit[2..], &[0.25, 0.75]);
+    }
+}

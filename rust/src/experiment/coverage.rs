@@ -1,0 +1,67 @@
+//! §4.3 scalability-condition validation for the sampling subproblem:
+//! coverage at a given budget m, and coverage growth as m grows —
+//! across all registered samplers (LHS must win).
+
+use crate::error::Result;
+use crate::sampling::{self, coverage};
+use crate::util::rng::Rng64;
+
+/// One (sampler, m) coverage measurement.
+#[derive(Clone, Debug)]
+pub struct CoveragePoint {
+    /// Sampler name.
+    pub sampler: String,
+    /// Sample budget.
+    pub m: usize,
+    /// Min pairwise distance (higher = better spread).
+    pub min_dist: f64,
+    /// Per-dimension stratum occupancy in [0,1] (1 = perfect LHS).
+    pub occupancy: f64,
+    /// Largest empty-ball radius found by probing (lower = better).
+    pub dispersion: f64,
+}
+
+/// Sweep coverage metrics for every sampler over the given budgets,
+/// averaging `reps` draws, in `dim` dimensions.
+pub fn run(dim: usize, budgets: &[usize], reps: usize, seed: u64) -> Result<Vec<CoveragePoint>> {
+    let mut out = Vec::new();
+    for name in sampling::SAMPLER_NAMES {
+        let sampler = sampling::by_name(name).expect("registered");
+        for &m in budgets {
+            let mut rng = Rng64::new(seed ^ m as u64);
+            let (mut md, mut occ, mut disp) = (0.0, 0.0, 0.0);
+            for _ in 0..reps {
+                let pts = sampler.sample(m, dim, &mut rng);
+                md += coverage::min_pairwise_distance(&pts);
+                occ += coverage::stratification_occupancy(&pts);
+                disp += coverage::dispersion(&pts, dim, 400);
+            }
+            out.push(CoveragePoint {
+                sampler: name.to_string(),
+                m,
+                min_dist: md / reps as f64,
+                occupancy: occ / reps as f64,
+                dispersion: disp / reps as f64,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Render the sweep.
+pub fn report(points: &[CoveragePoint]) -> crate::report::Table {
+    let mut t = crate::report::Table::new(
+        "§4.3 Sampling coverage: LHS vs baselines (higher occupancy/min-dist, lower dispersion)",
+        &["sampler", "m", "min-dist", "occupancy", "dispersion"],
+    );
+    for p in points {
+        t.row(&[
+            p.sampler.clone(),
+            format!("{}", p.m),
+            format!("{:.4}", p.min_dist),
+            format!("{:.3}", p.occupancy),
+            format!("{:.3}", p.dispersion),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,197 @@
+//! Figure 1 reproduction: the six diverging performance surfaces.
+//!
+//! Each subfigure is a 2-knob grid sweep whose *shape* is the claim:
+//! (a) MySQL uniform-read splits into two lines by `query_cache_type`;
+//! (b) Tomcat is irregularly bumpy; (c) Spark standalone is smooth;
+//! (d) MySQL zipfian-rw loses the query-cache dominance; (e) changing
+//! the JVM's `TargetSurvivorRatio` relocates Tomcat's optimum;
+//! (f) Spark-cluster rises sharply at `executor.cores` = 4.
+
+use super::{grid_sweep, GridSweep, Lab};
+use crate::error::Result;
+use crate::manipulator::{SimulationOpts, Target};
+use crate::space::KnobValue;
+use crate::sut;
+use crate::workload::{DeploymentEnv, WorkloadSpec};
+
+/// All six subfigures' sweeps plus the shape metrics the paper shows.
+#[derive(Clone, Debug)]
+pub struct Fig1 {
+    /// (a) MySQL uniform-read: throughput vs `query_cache_size` for each
+    /// `query_cache_type` level (the two-line projection).
+    pub a_lines: Vec<(String, Vec<f64>)>,
+    /// (b) Tomcat page-mix grid.
+    pub b: GridSweep,
+    /// (c) Spark standalone grid.
+    pub c: GridSweep,
+    /// (d) MySQL zipfian-rw lines (same projection as (a)).
+    pub d_lines: Vec<(String, Vec<f64>)>,
+    /// (e) Tomcat grids at two JVM `TargetSurvivorRatio` settings.
+    pub e_low: GridSweep,
+    /// See [`Fig1::e_low`].
+    pub e_high: GridSweep,
+    /// (f) Spark cluster grid.
+    pub f: GridSweep,
+}
+
+/// Throughput vs `query_cache_size` (sweep), one series per
+/// `query_cache_type` level — the Fig. 1a/1d projection.
+fn mysql_lines(lab: &Lab, workload: WorkloadSpec, points: usize) -> Result<Vec<(String, Vec<f64>)>> {
+    let sut = lab.deploy(
+        Target::Single(sut::mysql()),
+        workload,
+        DeploymentEnv::standalone(),
+        SimulationOpts::ideal(),
+        1,
+    );
+    let space = sut.target().space();
+    let qct = space.index_of("query_cache_type")?;
+    let qcs = space.index_of("query_cache_size")?;
+    let base = space.encode(&space.default_config());
+    let mut out = Vec::new();
+    for (level, label) in [(0usize, "OFF"), (1, "ON"), (2, "DEMAND")] {
+        let mut units = Vec::with_capacity(points);
+        for k in 0..points {
+            let mut u = base.clone();
+            u[qct] = space.knobs()[qct].encode(&KnobValue::Enum(level));
+            u[qcs] = (k as f64 + 0.5) / points as f64;
+            units.push(u);
+        }
+        let perfs = sut.evaluate_batch(&units)?;
+        out.push((label.to_string(), perfs.iter().map(|p| p.throughput).collect()));
+    }
+    Ok(out)
+}
+
+/// Tomcat-with-JVM grid at a given `TargetSurvivorRatio` value.
+fn tomcat_jvm_grid(lab: &Lab, tsr: i64, side: usize) -> Result<GridSweep> {
+    let spec = sut::tomcat_with_jvm();
+    let space = spec.space.clone();
+    let sut = lab.deploy(
+        Target::Single(spec),
+        WorkloadSpec::page_mix(),
+        DeploymentEnv::standalone(),
+        SimulationOpts::ideal(),
+        1,
+    );
+    // sweep tomcat knobs with the JVM knob pinned
+    let tsr_idx = space.index_of("jvm.TargetSurvivorRatio")?;
+    let ix = space.index_of("maxThreads")?;
+    let iy = space.index_of("cacheMaxSize_kb")?;
+    let mut base = space.encode(&space.default_config());
+    base[tsr_idx] = space.knobs()[tsr_idx].encode(&KnobValue::Int(tsr));
+    let axis: Vec<f64> = (0..side).map(|k| (k as f64 + 0.5) / side as f64).collect();
+    let mut units = Vec::new();
+    for &x in &axis {
+        for &y in &axis {
+            let mut u = base.clone();
+            u[ix] = x;
+            u[iy] = y;
+            units.push(u);
+        }
+    }
+    let perfs = sut.evaluate_batch(&units)?;
+    Ok(GridSweep {
+        knobs: ("maxThreads".into(), "cacheMaxSize_kb".into()),
+        side,
+        axis,
+        z: perfs.iter().map(|p| p.throughput).collect(),
+    })
+}
+
+/// Run the full Figure-1 sweep set.
+pub fn run(lab: &Lab, side: usize) -> Result<Fig1> {
+    let a_lines = mysql_lines(lab, WorkloadSpec::uniform_read(), side * side / 4)?;
+    let d_lines = mysql_lines(lab, WorkloadSpec::zipfian_read_write(), side * side / 4)?;
+
+    let tomcat = lab.deploy(
+        Target::Single(sut::tomcat()),
+        WorkloadSpec::page_mix(),
+        DeploymentEnv::standalone(),
+        SimulationOpts::ideal(),
+        1,
+    );
+    let b = grid_sweep(&tomcat, "maxThreads", "acceptCount", side)?;
+
+    let spark_sa = lab.deploy(
+        Target::Single(sut::spark()),
+        WorkloadSpec::batch_analytics(),
+        DeploymentEnv::standalone(),
+        SimulationOpts::ideal(),
+        1,
+    );
+    let c = grid_sweep(&spark_sa, "executor.cores", "executor.memory_mb", side)?;
+
+    let e_low = tomcat_jvm_grid(lab, 20, side)?;
+    let e_high = tomcat_jvm_grid(lab, 80, side)?;
+
+    let spark_cl = lab.deploy(
+        Target::Single(sut::spark()),
+        WorkloadSpec::batch_analytics(),
+        DeploymentEnv::cluster(8),
+        SimulationOpts::ideal(),
+        1,
+    );
+    let f = grid_sweep(&spark_cl, "executor.cores", "executor.memory_mb", side)?;
+
+    Ok(Fig1 { a_lines, b, c, d_lines, e_low, e_high, f })
+}
+
+/// Shape metrics summarising the six panels (what the benches assert
+/// and EXPERIMENTS.md records).
+#[derive(Clone, Debug)]
+pub struct Fig1Shapes {
+    /// (a): between-group/within-group throughput spread of the
+    /// query-cache split under uniform read (large = dominance).
+    pub a_dominance: f64,
+    /// (d): same statistic under zipfian-rw (should collapse).
+    pub d_dominance: f64,
+    /// (b): interior local maxima + minima (multimodality).
+    pub b_extrema: usize,
+    /// (b)-vs-(c): tomcat roughness / spark roughness (bumpy vs smooth).
+    pub b_vs_c_roughness: f64,
+    /// (c): roughness of spark standalone (small = smooth).
+    pub c_roughness: f64,
+    /// (e): manhattan distance between the two grids' argmax cells.
+    pub e_optimum_shift: usize,
+    /// (f): largest normalised jump along executor.cores and its index.
+    pub f_jump: (usize, f64),
+    /// (f)-vs-(c): cluster roughness / standalone roughness.
+    pub f_vs_c_roughness: f64,
+}
+
+/// Dominance statistic for the line plots: spread *between* the series
+/// means divided by mean spread *within* each series.
+pub fn dominance(lines: &[(String, Vec<f64>)]) -> f64 {
+    let means: Vec<f64> =
+        lines.iter().map(|(_, v)| v.iter().sum::<f64>() / v.len() as f64).collect();
+    let grand = means.iter().sum::<f64>() / means.len() as f64;
+    let between =
+        (means.iter().map(|m| (m - grand) * (m - grand)).sum::<f64>() / means.len() as f64).sqrt();
+    let within = lines
+        .iter()
+        .map(|(_, v)| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        })
+        .sum::<f64>()
+        / lines.len() as f64;
+    between / within.max(1e-9)
+}
+
+impl Fig1 {
+    /// Compute the shape metrics.
+    pub fn shapes(&self) -> Fig1Shapes {
+        let (ea, eb) = (self.e_low.argmax(), self.e_high.argmax());
+        Fig1Shapes {
+            a_dominance: dominance(&self.a_lines),
+            d_dominance: dominance(&self.d_lines),
+            b_extrema: self.b.local_maxima() + self.b.local_minima(),
+            b_vs_c_roughness: self.b.roughness() / self.c.roughness().max(1e-12),
+            c_roughness: self.c.roughness(),
+            e_optimum_shift: ea.0.abs_diff(eb.0) + ea.1.abs_diff(eb.1),
+            f_jump: self.f.max_jump_x(),
+            f_vs_c_roughness: self.f.roughness() / self.c.roughness().max(1e-9),
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! §5.3 reproduction: "Saving Labor Costs: Machine-Days vs Man-Months".
+//!
+//! The paper: five junior employees spent ~half a year finding a good
+//! MySQL setting; ACTS beat it in two days of machine time. We model
+//! the manual process as what it operationally is — one-knob-at-a-time
+//! heuristic search with slow human iteration (each manual test needs a
+//! human in the loop: reconfigure, rerun, read) — and compare against
+//! ACTS (LHS+RRS, automated staging tests) on *simulated wall-clock*.
+
+use super::Lab;
+use crate::error::Result;
+use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
+use crate::sut;
+use crate::tuner::{self, TuningConfig};
+use crate::workload::{DeploymentEnv, WorkloadSpec};
+
+/// Human overhead per manual tuning iteration, seconds (reconfigure,
+/// rerun, analyse, coordinate — conservatively 2h of engineer attention,
+/// and manual tuning only proceeds during working hours: a ~4x calendar
+/// multiplier on top).
+pub const MANUAL_OVERHEAD_S: f64 = 2.0 * 3600.0;
+/// Calendar stretch: 8h workdays of a 24h day.
+pub const CALENDAR_FACTOR: f64 = 3.0;
+
+/// One tuning policy's cost/quality outcome.
+#[derive(Clone, Debug)]
+pub struct PolicyOutcome {
+    /// Policy name.
+    pub policy: String,
+    /// Best throughput reached.
+    pub best: f64,
+    /// Staged tests consumed.
+    pub tests: u64,
+    /// Simulated calendar seconds to finish the run.
+    pub calendar_s: f64,
+    /// Calendar seconds until the run first reached `threshold`
+    /// (None = never).
+    pub time_to_threshold_s: Option<f64>,
+}
+
+/// The §5.3 comparison: manual policy vs ACTS on the same SUT/workload.
+#[derive(Clone, Debug)]
+pub struct Labor {
+    /// All policies.
+    pub outcomes: Vec<PolicyOutcome>,
+    /// The quality bar both raced to (throughput).
+    pub threshold: f64,
+}
+
+impl Labor {
+    /// Render the comparison table.
+    pub fn report(&self) -> crate::report::Table {
+        let mut t = crate::report::Table::new(
+            "§5.3 Labor: manual heuristics vs ACTS (paper: man-months -> machine-days)",
+            &["policy", "best ops/s", "tests", "total time", "time to threshold"],
+        );
+        for o in &self.outcomes {
+            t.row(&[
+                o.policy.clone(),
+                format!("{:.0}", o.best),
+                format!("{}", o.tests),
+                crate::report::fmt_duration(o.calendar_s),
+                o.time_to_threshold_s
+                    .map(crate::report::fmt_duration)
+                    .unwrap_or_else(|| "never".into()),
+            ]);
+        }
+        t
+    }
+}
+
+fn run_policy(
+    lab: &Lab,
+    optimizer: &str,
+    policy_name: &str,
+    budget: u64,
+    per_test_overhead_s: f64,
+    calendar_factor: f64,
+    threshold: f64,
+    seed: u64,
+) -> Result<PolicyOutcome> {
+    let mut sut = lab.deploy(
+        Target::Single(sut::mysql()),
+        WorkloadSpec::zipfian_read_write(),
+        DeploymentEnv::standalone(),
+        SimulationOpts::default(),
+        seed,
+    );
+    let cfg = TuningConfig {
+        budget_tests: budget,
+        optimizer: optimizer.into(),
+        seed,
+        ..Default::default()
+    };
+    let out = tuner::tune(&mut sut, &cfg)?;
+    let per_test_machine = out.sim_seconds / out.tests_used.max(1) as f64;
+    let per_test_total = (per_test_machine + per_test_overhead_s) * calendar_factor;
+    let calendar_s = per_test_total * out.tests_used as f64;
+    let time_to_threshold_s = out
+        .records
+        .iter()
+        .find(|r| r.best_so_far >= threshold)
+        .map(|r| r.test_no as f64 * per_test_total);
+    Ok(PolicyOutcome {
+        policy: policy_name.into(),
+        best: out.best.throughput,
+        tests: out.tests_used,
+        calendar_s,
+        time_to_threshold_s,
+    })
+}
+
+/// Run the labor comparison. `budget` bounds the automated policies;
+/// the manual policy gets the same test count but pays human overhead.
+pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Labor> {
+    // the quality bar: what the junior team eventually reached — a
+    // partial gain over default (2.5x), well short of the machine's best
+    let baseline = {
+        let mut sut = lab.deploy(
+            Target::Single(sut::mysql()),
+            WorkloadSpec::zipfian_read_write(),
+            DeploymentEnv::standalone(),
+            SimulationOpts::default(),
+            seed,
+        );
+        sut.run_test()?.throughput
+    };
+    let threshold = baseline * 8.0;
+
+    let outcomes = vec![
+        // manual: one-knob-at-a-time with human overhead + office hours
+        run_policy(
+            lab, "coord", "manual (1-knob-at-a-time, human loop)", budget,
+            MANUAL_OVERHEAD_S, CALENDAR_FACTOR, threshold, seed,
+        )?,
+        // manual but following random "best practice" guesses
+        run_policy(
+            lab, "random", "manual (web heuristics, human loop)", budget,
+            MANUAL_OVERHEAD_S, CALENDAR_FACTOR, threshold, seed ^ 1,
+        )?,
+        // ACTS: automated staging tests, machine only
+        run_policy(lab, "rrs", "ACTS (LHS+RRS, automated)", budget, 0.0, 1.0, threshold, seed ^ 2)?,
+    ];
+    Ok(Labor { outcomes, threshold })
+}

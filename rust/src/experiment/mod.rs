@@ -1,0 +1,284 @@
+//! Experiment drivers: one module per paper table/figure/claim, shared
+//! by the benches, the examples and the CLI (DESIGN.md §5 maps each to
+//! its bench target).
+
+pub mod bottleneck;
+pub mod cotuning;
+pub mod coverage;
+pub mod fairness;
+pub mod fig1;
+pub mod labor;
+pub mod mysql_gain;
+pub mod table1;
+
+use crate::error::Result;
+use crate::manipulator::{SimulatedSut, SimulationOpts, Target};
+use crate::runtime::Engine;
+use crate::workload::{DeploymentEnv, WorkloadSpec};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Shared experiment context: the compiled engine plus SUT factory.
+pub struct Lab {
+    /// The PJRT engine (compile-once).
+    pub engine: Arc<Engine>,
+}
+
+impl Lab {
+    /// Load the engine from `ACTS_ARTIFACTS` (default `artifacts/`,
+    /// resolved against the crate root so tests work from anywhere).
+    pub fn new() -> Result<Lab> {
+        let dir = std::env::var("ACTS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            manifest.join("artifacts")
+        });
+        Ok(Lab { engine: Arc::new(Engine::load(dir)?) })
+    }
+
+    /// Deploy a target in the simulated staging environment.
+    pub fn deploy(
+        &self,
+        target: Target,
+        workload: WorkloadSpec,
+        deployment: DeploymentEnv,
+        opts: SimulationOpts,
+        seed: u64,
+    ) -> SimulatedSut {
+        SimulatedSut::new(self.engine.clone(), target, workload, deployment, opts, seed)
+    }
+
+    /// Deploy with default simulation options.
+    pub fn deploy_default(
+        &self,
+        target: Target,
+        workload: WorkloadSpec,
+        deployment: DeploymentEnv,
+        seed: u64,
+    ) -> SimulatedSut {
+        self.deploy(target, workload, deployment, SimulationOpts::default(), seed)
+    }
+}
+
+/// A 2-knob grid sweep result (the raw material of Figure 1).
+#[derive(Clone, Debug)]
+pub struct GridSweep {
+    /// Knob names (x, y).
+    pub knobs: (String, String),
+    /// Grid side.
+    pub side: usize,
+    /// Unit positions along each axis (cell centers).
+    pub axis: Vec<f64>,
+    /// Throughput at (i, j) = z[i * side + j] (i indexes x).
+    pub z: Vec<f64>,
+}
+
+impl GridSweep {
+    /// Max over the grid.
+    pub fn max(&self) -> f64 {
+        self.z.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Min over the grid.
+    pub fn min(&self) -> f64 {
+        self.z.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Grid argmax as (i, j).
+    pub fn argmax(&self) -> (usize, usize) {
+        let (mut bi, mut bj, mut bv) = (0, 0, f64::NEG_INFINITY);
+        for i in 0..self.side {
+            for j in 0..self.side {
+                let v = self.z[i * self.side + j];
+                if v > bv {
+                    bv = v;
+                    bi = i;
+                    bj = j;
+                }
+            }
+        }
+        (bi, bj)
+    }
+
+    /// Count strict interior local minima (pits count toward bumpiness
+    /// too — the Fig. 1b surface is "irregular", not "many peaks").
+    pub fn local_minima(&self) -> usize {
+        self.extrema(false)
+    }
+
+    /// Count strict interior local maxima (bumpiness measure, Fig. 1b).
+    pub fn local_maxima(&self) -> usize {
+        self.extrema(true)
+    }
+
+    fn extrema(&self, maxima: bool) -> usize {
+        let s = self.side;
+        let mut count = 0;
+        for i in 1..s - 1 {
+            for j in 1..s - 1 {
+                let v = self.z[i * s + j];
+                let neigh = [
+                    self.z[(i - 1) * s + j],
+                    self.z[(i + 1) * s + j],
+                    self.z[i * s + j - 1],
+                    self.z[i * s + j + 1],
+                    self.z[(i - 1) * s + j - 1],
+                    self.z[(i - 1) * s + j + 1],
+                    self.z[(i + 1) * s + j - 1],
+                    self.z[(i + 1) * s + j + 1],
+                ];
+                let is_ext = if maxima {
+                    neigh.iter().all(|&n| v > n)
+                } else {
+                    neigh.iter().all(|&n| v < n)
+                };
+                if is_ext {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    /// Mean absolute second difference along x, normalised by the grid's
+    /// dynamic range (smoothness measure: small = smooth, Fig. 1c).
+    pub fn roughness(&self) -> f64 {
+        let s = self.side;
+        let range = (self.max() - self.min()).max(1e-9);
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for i in 1..s - 1 {
+            for j in 0..s {
+                let d2 = self.z[(i + 1) * s + j] - 2.0 * self.z[i * s + j]
+                    + self.z[(i - 1) * s + j];
+                acc += d2.abs();
+                n += 1;
+            }
+        }
+        acc / (n as f64 * range)
+    }
+
+    /// Largest jump between adjacent cells along x at each i boundary,
+    /// normalised by range (cliff detection, Fig. 1f).
+    pub fn max_jump_x(&self) -> (usize, f64) {
+        let s = self.side;
+        let range = (self.max() - self.min()).max(1e-9);
+        let (mut at, mut best) = (0usize, 0.0f64);
+        for i in 0..s - 1 {
+            let mut jump = 0.0;
+            for j in 0..s {
+                jump += (self.z[(i + 1) * s + j] - self.z[i * s + j]).abs();
+            }
+            jump /= s as f64 * range;
+            if jump > best {
+                best = jump;
+                at = i;
+            }
+        }
+        (at, best)
+    }
+
+    /// CSV rows (x_unit, y_unit, throughput).
+    pub fn csv(&self) -> String {
+        let mut out = format!("{},{},throughput\n", self.knobs.0, self.knobs.1);
+        for i in 0..self.side {
+            for j in 0..self.side {
+                out.push_str(&format!(
+                    "{:.4},{:.4},{:.3}\n",
+                    self.axis[i],
+                    self.axis[j],
+                    self.z[i * self.side + j]
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Sweep two knobs of a deployed SUT over a `side x side` unit grid,
+/// holding every other knob at the SUT's default.
+pub fn grid_sweep(
+    sut: &SimulatedSut,
+    knob_x: &str,
+    knob_y: &str,
+    side: usize,
+) -> Result<GridSweep> {
+    let space = sut.target().space();
+    let ix = space.index_of(knob_x)?;
+    let iy = space.index_of(knob_y)?;
+    let base = space.encode(&space.default_config());
+    let axis: Vec<f64> = (0..side).map(|k| (k as f64 + 0.5) / side as f64).collect();
+    let mut units = Vec::with_capacity(side * side);
+    for &x in &axis {
+        for &y in &axis {
+            let mut u = base.clone();
+            u[ix] = x;
+            u[iy] = y;
+            units.push(u);
+        }
+    }
+    let perfs = sut.evaluate_batch(&units)?;
+    Ok(GridSweep {
+        knobs: (knob_x.into(), knob_y.into()),
+        side,
+        axis,
+        z: perfs.iter().map(|p| p.throughput).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sweep_from(z: Vec<f64>, side: usize) -> GridSweep {
+        GridSweep {
+            knobs: ("x".into(), "y".into()),
+            side,
+            axis: (0..side).map(|k| (k as f64 + 0.5) / side as f64).collect(),
+            z,
+        }
+    }
+
+    #[test]
+    fn grid_metrics_on_synthetic_surfaces() {
+        // single peak at center: exactly one local max, low roughness
+        let side = 9;
+        let peak = |i: usize, j: usize| {
+            let x = i as f64 / 8.0 - 0.5;
+            let y = j as f64 / 8.0 - 0.5;
+            (-8.0 * (x * x + y * y)).exp()
+        };
+        let mut z = Vec::new();
+        for i in 0..side {
+            for j in 0..side {
+                z.push(peak(i, j));
+            }
+        }
+        let g = sweep_from(z, side);
+        assert_eq!(g.local_maxima(), 1);
+        assert_eq!(g.argmax(), (4, 4));
+        assert!(g.roughness() < 0.2, "{}", g.roughness());
+    }
+
+    #[test]
+    fn cliff_detected_by_max_jump() {
+        let side = 8;
+        let mut z = Vec::new();
+        for i in 0..side {
+            for _j in 0..side {
+                z.push(if i >= 4 { 10.0 } else { 1.0 });
+            }
+        }
+        let g = sweep_from(z, side);
+        let (at, jump) = g.max_jump_x();
+        assert_eq!(at, 3);
+        assert!(jump > 0.9);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let g = sweep_from(vec![1.0, 2.0, 3.0, 4.0], 2);
+        let csv = g.csv();
+        assert!(csv.starts_with("x,y,throughput"));
+        assert_eq!(csv.lines().count(), 5);
+    }
+}

@@ -1,0 +1,49 @@
+//! §5.1 reproduction: "Improving System Performance: 11 Times Better".
+//!
+//! The paper tunes a MySQL deployment under its cloud application
+//! workload (zipfian read-write) and reports 9,815 ops/s (default) ->
+//! 118,184 ops/s (BestConfig), a 12.04x peak. Here: LHS+RRS over the
+//! 40-knob simulated MySQL within a staged-test budget.
+
+use super::Lab;
+use crate::error::Result;
+use crate::manipulator::{SimulationOpts, Target};
+use crate::sut;
+use crate::tuner::{self, TuningConfig, TuningOutcome};
+use crate::workload::{DeploymentEnv, WorkloadSpec};
+
+/// Paper numbers for EXPERIMENTS.md comparison.
+pub const PAPER_DEFAULT_OPS: f64 = 9_815.0;
+/// Paper's tuned throughput.
+pub const PAPER_BEST_OPS: f64 = 118_184.0;
+
+/// Run the §5.1 experiment with `budget` staged tests.
+pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<TuningOutcome> {
+    let mut sut = lab.deploy(
+        Target::Single(sut::mysql()),
+        WorkloadSpec::zipfian_read_write(),
+        DeploymentEnv::standalone(),
+        SimulationOpts::default(),
+        seed,
+    );
+    let cfg = TuningConfig { budget_tests: budget, optimizer: "rrs".into(), seed, ..Default::default() };
+    tuner::tune(&mut sut, &cfg)
+}
+
+/// Render the §5.1 comparison table.
+pub fn report(out: &TuningOutcome) -> crate::report::Table {
+    let mut t = crate::report::Table::new(
+        "§5.1 MySQL: default vs BestConfig (paper: 9815 -> 118184 ops/s, 12.0x)",
+        &["metric", "paper", "measured"],
+    );
+    t.row(&["default ops/s".into(), format!("{PAPER_DEFAULT_OPS:.0}"),
+            format!("{:.0}", out.baseline.throughput)]);
+    t.row(&["best ops/s".into(), format!("{PAPER_BEST_OPS:.0}"),
+            format!("{:.0}", out.best.throughput)]);
+    t.row(&["speedup".into(), format!("{:.2}x", PAPER_BEST_OPS / PAPER_DEFAULT_OPS),
+            format!("{:.2}x", out.speedup())]);
+    t.row(&["staged tests".into(), "-".into(), format!("{}", out.tests_used)]);
+    t.row(&["staging time".into(), "-".into(),
+            crate::report::fmt_duration(out.sim_seconds)]);
+    t
+}

@@ -1,0 +1,45 @@
+//! # ACTS — Automatic Configuration Tuning with Scalability guarantees
+//!
+//! A reproduction of Zhu et al., *ACTS in Need: Automatic Configuration
+//! Tuning with Scalability Guarantees* (APSys '17), as a three-layer
+//! Rust + JAX + Pallas stack. This crate is Layer 3: the tuning framework
+//! itself — the paper's flexible architecture of a **tuner** (sampling +
+//! optimization), a **system manipulator** and a **workload generator** —
+//! plus every substrate the evaluation needs, most importantly the
+//! simulated SUTs (MySQL / Tomcat / Spark / JVM / front-end) whose
+//! performance surfaces are compiled XLA artifacts authored in JAX/Pallas
+//! and executed via PJRT (`runtime`). Python never runs on the tuning
+//! path.
+//!
+//! Layout (see DESIGN.md for the full inventory and experiment index):
+//!
+//! * [`space`] — configuration parameters (knobs) and config spaces
+//! * [`sampling`] — scalable samplers: LHS (the paper's choice) & friends
+//! * [`optimizer`] — RRS (the paper's choice) and baseline optimizers
+//! * [`workload`] — workload specs, zipfian/uniform op-stream generation
+//! * [`sut`] — the simulated systems-under-tune and their co-deployment
+//! * [`runtime`] — PJRT loader/executor for the AOT surface artifacts
+//! * [`manipulator`] — the system-manipulator abstraction + simulation
+//! * [`tuner`] — resource-limited tuning sessions (the ACTS loop)
+//! * [`experiment`] — drivers regenerating each paper table and figure
+//! * [`util`], [`testkit`], [`benchkit`], [`report`] — in-repo substrates
+//!   (PRNG, stats, property tests, benchmarking, reporting) that the
+//!   offline crate set does not provide
+
+pub mod benchkit;
+pub mod cli;
+pub mod error;
+pub mod experiment;
+pub mod manipulator;
+pub mod optimizer;
+pub mod report;
+pub mod runtime;
+pub mod sampling;
+pub mod space;
+pub mod sut;
+pub mod testkit;
+pub mod tuner;
+pub mod util;
+pub mod workload;
+
+pub use error::{ActsError, Result};

@@ -1,0 +1,234 @@
+//! `acts` — the ACTS tuning framework CLI (Layer-3 leader binary).
+//!
+//! Commands:
+//!   list                              show registered SUTs/workloads/optimizers
+//!   tune   --sut S --workload W ...   run one tuning session
+//!   surface --sut S --x K --y K ...   dump a 2-knob grid sweep as CSV
+//!   experiment <fig1|mysql|table1|bottleneck|labor|fairness|coverage>
+//!   help
+
+use acts::cli::Args;
+use acts::experiment::{self, Lab};
+use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
+use acts::optimizer::OPTIMIZER_NAMES;
+use acts::report::fmt_duration;
+use acts::sut::{self, SUT_NAMES};
+use acts::tuner::{self, TuningConfig};
+use acts::workload::{DeploymentEnv, WorkloadSpec};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("acts: error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn deployment_by_name(name: &str) -> Option<DeploymentEnv> {
+    match name {
+        "standalone" => Some(DeploymentEnv::standalone()),
+        "arm-vm" => Some(DeploymentEnv::arm_vm()),
+        s if s.starts_with("cluster-") => {
+            s["cluster-".len()..].parse().ok().map(DeploymentEnv::cluster)
+        }
+        _ => None,
+    }
+}
+
+fn run(args: &Args) -> acts::Result<()> {
+    match args.command.as_str() {
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        "list" => {
+            println!("SUTs:        {}", SUT_NAMES.join(", "));
+            println!("             frontend+mysql (stack via --sut frontend+mysql)");
+            println!("workloads:   {}", WorkloadSpec::NAMES.join(", "));
+            println!("deployments: standalone, arm-vm, cluster-<n>");
+            println!("optimizers:  {}", OPTIMIZER_NAMES.join(", "));
+            println!("samplers:    {}", acts::sampling::SAMPLER_NAMES.join(", "));
+            Ok(())
+        }
+        "tune" => cmd_tune(args),
+        "surface" => cmd_surface(args),
+        "experiment" => cmd_experiment(args),
+        other => {
+            eprintln!("unknown command `{other}`; see `acts help`");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn resolve_target(name: &str) -> acts::Result<Target> {
+    if let Some(spec) = sut::by_name(name) {
+        return Ok(Target::Single(spec));
+    }
+    if name.contains('+') {
+        let members: Option<Vec<_>> = name.split('+').map(sut::by_name).collect();
+        if let Some(members) = members {
+            return Ok(Target::Stack(sut::Composed::new(members)));
+        }
+    }
+    Err(acts::ActsError::InvalidArg(format!("unknown SUT `{name}`")))
+}
+
+fn cmd_tune(args: &Args) -> acts::Result<()> {
+    let lab = Lab::new()?;
+    let target = resolve_target(&args.get("sut", "mysql"))?;
+    let workload = WorkloadSpec::by_name(&args.get("workload", "zipfian-rw"))
+        .ok_or_else(|| acts::ActsError::InvalidArg("unknown workload".into()))?;
+    let deployment = deployment_by_name(&args.get("deployment", "standalone"))
+        .ok_or_else(|| acts::ActsError::InvalidArg("unknown deployment".into()))?;
+    let seed = args.get_u64("seed", 1);
+    let budget = args.get_u64("budget", 100);
+    let name = target.name().to_string();
+
+    let mut sut = lab.deploy(target, workload.clone(), deployment, SimulationOpts::default(), seed);
+    let cfg = TuningConfig {
+        budget_tests: budget,
+        optimizer: args.get("optimizer", "rrs"),
+        seed,
+        ..Default::default()
+    };
+    let out = tuner::tune(&mut sut, &cfg)?;
+    println!(
+        "tuned {} under {} | baseline {:.0} ops/s -> best {:.0} ops/s ({:+.1}%, {:.2}x)",
+        name,
+        workload.name,
+        out.baseline.throughput,
+        out.best.throughput,
+        out.improvement * 100.0,
+        out.speedup()
+    );
+    println!(
+        "budget: {} tests ({} failed), staging time {}",
+        out.tests_used,
+        out.failures,
+        fmt_duration(out.sim_seconds)
+    );
+    if args.has("curve") {
+        for r in &out.records {
+            println!("{:>4}  {:>12.1}  {:>12.1}", r.test_no, r.measurement.throughput, r.best_so_far);
+        }
+    }
+    if args.has("config") {
+        let space = sut.space();
+        println!("{}", space.render(&space.decode(&out.best_unit)));
+    }
+    Ok(())
+}
+
+fn cmd_surface(args: &Args) -> acts::Result<()> {
+    let lab = Lab::new()?;
+    let target = resolve_target(&args.get("sut", "tomcat"))?;
+    let workload = WorkloadSpec::by_name(&args.get("workload", "page-mix"))
+        .ok_or_else(|| acts::ActsError::InvalidArg("unknown workload".into()))?;
+    let deployment = deployment_by_name(&args.get("deployment", "standalone"))
+        .ok_or_else(|| acts::ActsError::InvalidArg("unknown deployment".into()))?;
+    let sut = lab.deploy(target, workload, deployment, SimulationOpts::ideal(), 1);
+    let sweep = experiment::grid_sweep(
+        &sut,
+        &args.get("x", "maxThreads"),
+        &args.get("y", "acceptCount"),
+        args.get_usize("side", 24),
+    )?;
+    print!("{}", sweep.csv());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> acts::Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let budget = args.get_u64("budget", 100);
+    let seed = args.get_u64("seed", 1);
+    let lab = Lab::new()?;
+    let run_one = |id: &str, lab: &Lab| -> acts::Result<()> {
+        match id {
+            "fig1" => {
+                let fig = experiment::fig1::run(lab, args.get_usize("side", 20))?;
+                let s = fig.shapes();
+                println!("fig1 shapes: {s:#?}");
+            }
+            "mysql" => {
+                let out = experiment::mysql_gain::run(lab, budget, seed)?;
+                print!("{}", experiment::mysql_gain::report(&out).markdown());
+            }
+            "table1" => {
+                let t1 = experiment::table1::run(lab, budget, seed)?;
+                print!("{}", t1.report().markdown());
+                println!(
+                    "§5.2: eliminate 1 VM in every {} (paper: 26)",
+                    t1.vm_elimination_denominator()
+                );
+            }
+            "bottleneck" => {
+                let b = experiment::bottleneck::run(lab, budget, seed)?;
+                print!("{}", b.report().markdown());
+            }
+            "labor" => {
+                let l = experiment::labor::run(lab, budget, seed)?;
+                print!("{}", l.report().markdown());
+            }
+            "fairness" => {
+                let f = experiment::fairness::run(lab, budget, seed)?;
+                print!("{}", f.report().markdown());
+            }
+            "cotuning" => {
+                let c = experiment::cotuning::run(lab, budget, seed)?;
+                print!("{}", c.report().markdown());
+            }
+            "coverage" => {
+                let pts = experiment::coverage::run(
+                    args.get_usize("dim", 20),
+                    &[16, 64, 256],
+                    5,
+                    seed,
+                )?;
+                print!("{}", experiment::coverage::report(&pts).markdown());
+            }
+            other => {
+                return Err(acts::ActsError::InvalidArg(format!("unknown experiment `{other}`")))
+            }
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for id in
+            ["fig1", "mysql", "table1", "bottleneck", "labor", "fairness", "cotuning", "coverage"]
+        {
+            println!("=== experiment {id} ===");
+            run_one(id, &lab)?;
+        }
+        Ok(())
+    } else {
+        run_one(which, &lab)
+    }
+}
+
+const HELP: &str = "\
+acts — Automatic Configuration Tuning with Scalability guarantees (APSys'17)
+
+USAGE:
+    acts <command> [flags]
+
+COMMANDS:
+    list         show registered SUTs, workloads, deployments, optimizers
+    tune         run a tuning session
+                   --sut <name|a+b>   (mysql)        --workload <name> (zipfian-rw)
+                   --deployment <d>   (standalone)   --optimizer <o>   (rrs)
+                   --budget <n>       (100)          --seed <n>        (1)
+                   --curve            print per-test progress
+                   --config           print the best configuration found
+    surface      dump a 2-knob grid sweep as CSV
+                   --sut --workload --deployment --x <knob> --y <knob> --side <n>
+    experiment   run a paper experiment:
+                   fig1 | mysql | table1 | bottleneck | labor | fairness | cotuning | coverage | all
+                   --budget <n> --seed <n>
+    help         this text
+
+Artifacts are loaded from ./artifacts (override: ACTS_ARTIFACTS).
+";

@@ -1,0 +1,96 @@
+//! The system manipulator — the second component of the paper's
+//! flexible architecture (Fig. 2). It decouples the tuner from the SUT:
+//! the tuner only ever calls `set_config` / `restart` / `run_test`,
+//! which is what gives the architecture its SUT- and deployment-
+//! scalability (§4.2). [`SimulatedSut`] is the staging-environment
+//! implementation used throughout; a live deployment would implement
+//! the same trait with ssh/config-file plumbing.
+
+pub mod simulated;
+
+pub use simulated::{SimulatedSut, SimulationOpts};
+
+use crate::error::Result;
+use crate::space::ConfigSpace;
+use crate::sut::{Composed, SutSpec};
+
+/// What a staged test measured (Table 1's row set).
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Primary metric: request throughput, ops/sec (hits/s for Tomcat).
+    pub throughput: f64,
+    /// Mean latency, ms.
+    pub latency_ms: f64,
+    /// p99 latency, ms.
+    pub p99_ms: f64,
+    /// Transactions per second (throughput / hits_per_txn).
+    pub txns_per_s: f64,
+    /// Hits per second (= throughput).
+    pub hits_per_s: f64,
+    /// Transactions that completed in the test window.
+    pub passed_txns: u64,
+    /// Transactions that failed.
+    pub failed_txns: u64,
+    /// Server errors observed.
+    pub errors: u64,
+    /// Test window, simulated seconds.
+    pub duration_s: f64,
+}
+
+/// The tuning target: one SUT or a co-deployed stack.
+#[derive(Clone, Debug)]
+pub enum Target {
+    /// A single system.
+    Single(SutSpec),
+    /// A co-deployed stack (bottleneck-coupled).
+    Stack(Composed),
+}
+
+impl Target {
+    /// The (combined) configuration space.
+    pub fn space(&self) -> &ConfigSpace {
+        match self {
+            Target::Single(s) => &s.space,
+            Target::Stack(c) => c.space(),
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &str {
+        match self {
+            Target::Single(s) => &s.name,
+            Target::Stack(c) => &c.name,
+        }
+    }
+}
+
+/// The system-manipulator abstraction the tuner drives (Fig. 2): set a
+/// configuration, restart the SUT so it takes effect, run the workload,
+/// read the measurement. Implementations own a simulated (or real)
+/// clock so resource accounting in *time* works as well as in tests.
+pub trait SystemManipulator {
+    /// The configuration space being manipulated.
+    fn space(&self) -> &ConfigSpace;
+
+    /// Stage a configuration (unit-space vector; snapped internally to
+    /// representable settings). Does not take effect until [`restart`].
+    ///
+    /// [`restart`]: SystemManipulator::restart
+    fn set_config(&mut self, unit: &[f64]) -> Result<()>;
+
+    /// Restart the SUT so the staged configuration takes effect. Costs
+    /// simulated time; may fail (crash loops on bad configs).
+    fn restart(&mut self) -> Result<()>;
+
+    /// Run the bound workload against the running SUT and measure.
+    fn run_test(&mut self) -> Result<Measurement>;
+
+    /// Total simulated seconds consumed so far (restarts + tests).
+    fn sim_seconds(&self) -> f64;
+
+    /// Number of completed tests.
+    fn tests_run(&self) -> u64;
+
+    /// The unit vector the SUT is currently running (post-snap).
+    fn current_unit(&self) -> &[f64];
+}

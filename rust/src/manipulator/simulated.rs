@@ -1,0 +1,306 @@
+//! The simulated staging environment (§4.2): a [`SystemManipulator`]
+//! whose SUT is the compiled surface artifact plus a measurement model.
+//!
+//! What is simulated *outside* the artifact (the artifact is a pure
+//! function; everything operational lives here):
+//! * restart latency and configuration settle time (staged tests are
+//!   expensive — §2.3 — and the labor-cost bench counts these seconds);
+//! * multiplicative lognormal measurement noise;
+//! * failure injection: a configurable fraction of restarts crash-loop
+//!   (bad configs) and tests time out — the tuner must survive both;
+//! * Table-1-style secondary metrics (txns, failed txns, errors) via a
+//!   Poisson error model where error rates fall as latency improves.
+
+use super::{Measurement, SystemManipulator, Target};
+use crate::error::{ActsError, Result};
+use crate::runtime::engine::{Engine, Perf, PreparedCall};
+use crate::runtime::shapes::D_PAD;
+use crate::space::{unit_to_padded, ConfigSpace};
+use crate::util::rng::Rng64;
+use crate::workload::{DeploymentEnv, WorkloadSpec};
+use std::cell::OnceCell;
+use std::sync::Arc;
+
+/// Operational knobs of the simulation itself (not of the SUT).
+#[derive(Clone, Debug)]
+pub struct SimulationOpts {
+    /// Seconds one SUT restart takes.
+    pub restart_s: f64,
+    /// Warm-up seconds after restart before measurement is valid.
+    pub settle_s: f64,
+    /// Lognormal sigma of measurement noise (0 disables).
+    pub noise_sigma: f64,
+    /// Probability a restart crash-loops (ActsError::TestFailed).
+    pub restart_failure_p: f64,
+    /// Probability a test run fails (timeout / workload error).
+    pub test_failure_p: f64,
+    /// Baseline per-transaction failure probability at ideal latency.
+    pub base_error_rate: f64,
+}
+
+impl Default for SimulationOpts {
+    fn default() -> Self {
+        SimulationOpts {
+            restart_s: 12.0,
+            settle_s: 30.0,
+            noise_sigma: 0.02,
+            restart_failure_p: 0.0,
+            test_failure_p: 0.0,
+            base_error_rate: 2.0e-5,
+        }
+    }
+}
+
+impl SimulationOpts {
+    /// Noise-free, instant variant for deterministic experiments.
+    pub fn ideal() -> Self {
+        SimulationOpts {
+            restart_s: 0.0,
+            settle_s: 0.0,
+            noise_sigma: 0.0,
+            restart_failure_p: 0.0,
+            test_failure_p: 0.0,
+            base_error_rate: 0.0,
+        }
+    }
+}
+
+/// The simulated staging deployment of one [`Target`].
+pub struct SimulatedSut {
+    engine: Arc<Engine>,
+    target: Target,
+    workload: WorkloadSpec,
+    deployment: DeploymentEnv,
+    opts: SimulationOpts,
+    rng: Rng64,
+    /// Staged (set but not yet restarted-into) unit vector.
+    staged: Option<Vec<f64>>,
+    /// Currently running unit vector (post-snap).
+    current: Vec<f64>,
+    sim_seconds: f64,
+    tests_run: u64,
+    /// Device-resident constant inputs, one per target member — built
+    /// lazily on the first evaluation (§Perf: uploading the ~150 KiB of
+    /// parameter blocks per staged test dominated small-batch latency).
+    prepared: OnceCell<Vec<PreparedCall>>,
+}
+
+impl SimulatedSut {
+    /// Deploy `target` in the simulated staging environment, bound to a
+    /// workload and deployment. Starts at the shipped default config.
+    pub fn new(
+        engine: Arc<Engine>,
+        target: Target,
+        workload: WorkloadSpec,
+        deployment: DeploymentEnv,
+        opts: SimulationOpts,
+        seed: u64,
+    ) -> SimulatedSut {
+        let current = {
+            let space = target.space();
+            space.encode(&space.default_config())
+        };
+        SimulatedSut {
+            engine,
+            target,
+            workload,
+            deployment,
+            opts,
+            rng: Rng64::new(seed),
+            staged: None,
+            current,
+            sim_seconds: 0.0,
+            tests_run: 0,
+            prepared: OnceCell::new(),
+        }
+    }
+
+    /// The deployment feature vector each member actually experiences
+    /// (stacks add co-deployment interference, §2.2).
+    fn effective_e(&self) -> [f32; 4] {
+        let mut e = *self.deployment.features();
+        if let Target::Stack(stack) = &self.target {
+            e[crate::workload::dep::INTERFERENCE] =
+                (e[crate::workload::dep::INTERFERENCE] + stack.interference()).min(1.0);
+        }
+        e
+    }
+
+    fn prepared(&self) -> Result<&Vec<PreparedCall>> {
+        if let Some(p) = self.prepared.get() {
+            return Ok(p);
+        }
+        let w = *self.workload.features();
+        let e = self.effective_e();
+        let mut calls = Vec::new();
+        match &self.target {
+            Target::Single(sut) => calls.push(self.engine.prepare(&sut.params, &w, &e)?),
+            Target::Stack(stack) => {
+                for member in &stack.members {
+                    calls.push(self.engine.prepare(&member.params, &w, &e)?);
+                }
+            }
+        }
+        let _ = self.prepared.set(calls);
+        Ok(self.prepared.get().expect("just set"))
+    }
+
+    /// The bound workload.
+    pub fn workload(&self) -> &WorkloadSpec {
+        &self.workload
+    }
+
+    /// The bound deployment environment.
+    pub fn deployment(&self) -> &DeploymentEnv {
+        &self.deployment
+    }
+
+    /// The tuning target.
+    pub fn target(&self) -> &Target {
+        &self.target
+    }
+
+    /// Noise-free surface evaluation of arbitrary unit points — the bulk
+    /// path used by the Figure-1 atlas and the benches ("parallel
+    /// staging environments"). Does not consume simulated time.
+    pub fn evaluate_batch(&self, units: &[Vec<f64>]) -> Result<Vec<Perf>> {
+        let prepared = self.prepared()?;
+        match &self.target {
+            Target::Single(sut) => {
+                let configs: Vec<Vec<f32>> = units
+                    .iter()
+                    .map(|u| unit_to_padded(&sut.space.snap(u), D_PAD))
+                    .collect();
+                self.engine.evaluate_prepared(&prepared[0], &configs)
+            }
+            Target::Stack(stack) => {
+                let mut combined: Vec<Perf> = Vec::new();
+                for (i, member) in stack.members.iter().enumerate() {
+                    let configs: Vec<Vec<f32>> = units
+                        .iter()
+                        .map(|u| {
+                            let parts = stack.split_unit(u);
+                            unit_to_padded(&member.space.snap(parts[i]), D_PAD)
+                        })
+                        .collect();
+                    let perfs = self.engine.evaluate_prepared(&prepared[i], &configs)?;
+                    if combined.is_empty() {
+                        combined = perfs;
+                    } else {
+                        for (acc, p) in combined.iter_mut().zip(&perfs) {
+                            *acc = crate::sut::Composed::combine(&[*acc, *p]);
+                        }
+                    }
+                }
+                Ok(combined)
+            }
+        }
+    }
+
+    fn measure(&mut self, perf: Perf) -> Measurement {
+        let noisy = |rng: &mut Rng64, v: f64, sigma: f64| {
+            if sigma > 0.0 {
+                v * (rng.normal() * sigma).exp()
+            } else {
+                v
+            }
+        };
+        let throughput = noisy(&mut self.rng, perf.throughput, self.opts.noise_sigma);
+        let latency_ms = noisy(&mut self.rng, perf.latency, self.opts.noise_sigma * 1.5);
+        let p99_ms = latency_ms * (2.2 + 0.6 * self.rng.f64());
+
+        let duration = self.workload.duration_s;
+        let txns_per_s = throughput / self.workload.hits_per_txn;
+        let total_txns = (txns_per_s * duration).max(0.0);
+        // error model: failure probability rises steeply with latency
+        // relative to the SUT's mid-curve latency, so a tuned config
+        // (higher throughput => lower latency) sees *fewer* failed txns
+        // even while pushing more of them — Table 1's -12.7% failed row
+        let lat_mid = self.target_latency_mid();
+        let stress = (latency_ms / lat_mid).max(0.25);
+        let err_rate = (self.opts.base_error_rate * stress.powi(8)).min(0.05);
+        let failed = self.rng.poisson(total_txns * err_rate);
+        let errors = self.rng.poisson(total_txns * err_rate * 0.22);
+
+        Measurement {
+            throughput,
+            latency_ms,
+            p99_ms,
+            txns_per_s,
+            hits_per_s: throughput,
+            passed_txns: (total_txns as u64).saturating_sub(failed),
+            failed_txns: failed,
+            errors,
+            duration_s: duration,
+        }
+    }
+
+    /// Mid-curve latency (lat0 + lat1/2) for stress normalisation.
+    fn target_latency_mid(&self) -> f64 {
+        let mid = |c: &[f32; 4]| c[1] as f64 + c[2] as f64 * 0.5;
+        let c = match &self.target {
+            Target::Single(s) => mid(&s.params.consts),
+            Target::Stack(stack) => stack.members.iter().map(|m| mid(&m.params.consts)).sum(),
+        };
+        c.max(1e-3)
+    }
+}
+
+impl SystemManipulator for SimulatedSut {
+    fn space(&self) -> &ConfigSpace {
+        self.target.space()
+    }
+
+    fn set_config(&mut self, unit: &[f64]) -> Result<()> {
+        let space = self.target.space();
+        if unit.len() != space.dim() {
+            return Err(ActsError::InvalidArg(format!(
+                "config has {} dims, space has {}",
+                unit.len(),
+                space.dim()
+            )));
+        }
+        if unit.iter().any(|x| !x.is_finite()) {
+            return Err(ActsError::InvalidArg("non-finite unit value".into()));
+        }
+        self.staged = Some(space.snap(unit));
+        Ok(())
+    }
+
+    fn restart(&mut self) -> Result<()> {
+        self.sim_seconds += self.opts.restart_s;
+        if self.rng.bool(self.opts.restart_failure_p) {
+            // crash loop: config rejected, SUT back on previous config
+            self.staged = None;
+            return Err(ActsError::TestFailed("SUT crash-looped on restart".into()));
+        }
+        if let Some(staged) = self.staged.take() {
+            self.current = staged;
+        }
+        self.sim_seconds += self.opts.settle_s;
+        Ok(())
+    }
+
+    fn run_test(&mut self) -> Result<Measurement> {
+        self.sim_seconds += self.workload.duration_s;
+        if self.rng.bool(self.opts.test_failure_p) {
+            return Err(ActsError::TestFailed("workload run timed out".into()));
+        }
+        let unit = self.current.clone();
+        let perf = self.evaluate_batch(std::slice::from_ref(&unit))?[0];
+        self.tests_run += 1;
+        Ok(self.measure(perf))
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.sim_seconds
+    }
+
+    fn tests_run(&self) -> u64 {
+        self.tests_run
+    }
+
+    fn current_unit(&self) -> &[f64] {
+        &self.current
+    }
+}

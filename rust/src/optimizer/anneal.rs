@@ -1,0 +1,126 @@
+//! Simulated annealing — a classic escape-capable baseline.
+//!
+//! Metropolis acceptance over the unit hypercube with a geometric
+//! cooling schedule; proposal width tied to the current temperature so
+//! moves localize as the system cools.
+
+use super::{BestTracker, Observation, Optimizer};
+use crate::util::rng::Rng64;
+
+/// Metropolis simulated annealing.
+pub struct SimulatedAnnealing {
+    dim: usize,
+    current: Option<(Vec<f64>, f64)>,
+    temp: f64,
+    cool: f64,
+    min_temp: f64,
+    /// Typical objective scale; adapted online from observed spread.
+    scale: f64,
+    best: BestTracker,
+}
+
+impl SimulatedAnnealing {
+    /// New annealer over `dim` dimensions.
+    pub fn new(dim: usize) -> Self {
+        SimulatedAnnealing {
+            dim,
+            current: None,
+            temp: 1.0,
+            cool: 0.97,
+            min_temp: 1e-3,
+            scale: 1.0,
+            best: BestTracker::default(),
+        }
+    }
+}
+
+impl Optimizer for SimulatedAnnealing {
+    fn name(&self) -> &'static str {
+        "anneal"
+    }
+
+    fn ask(&mut self, rng: &mut Rng64) -> Vec<f64> {
+        match &self.current {
+            None => (0..self.dim).map(|_| rng.f64()).collect(),
+            Some((c, _)) => {
+                let width = 0.02 + 0.3 * self.temp;
+                c.iter().map(|&x| (x + rng.normal() * width).clamp(0.0, 1.0)).collect()
+            }
+        }
+    }
+
+    fn tell(&mut self, unit: &[f64], value: f64) {
+        self.best.update(unit, value);
+        let accept = match &self.current {
+            None => true,
+            Some((_, cur_v)) => {
+                if value >= *cur_v {
+                    true
+                } else {
+                    // Metropolis: accept worse with p = exp(-dE / (scale*T))
+                    let d = (cur_v - value) / self.scale.max(1e-12);
+                    let p = (-d / self.temp.max(self.min_temp)).exp();
+                    // deterministic-ish acceptance from value bits to stay
+                    // reproducible without a second rng stream: use fract
+                    // of a hash of the proposal
+                    let h = unit
+                        .iter()
+                        .fold(0u64, |acc, &x| acc.wrapping_mul(31).wrapping_add(x.to_bits()));
+                    let urand = (h >> 11) as f64 / (1u64 << 53) as f64;
+                    urand < p
+                }
+            }
+        };
+        if accept {
+            // adapt scale to observed objective magnitude
+            if let Some((_, cur_v)) = &self.current {
+                let d = (value - cur_v).abs();
+                if d > 0.0 {
+                    self.scale = 0.9 * self.scale + 0.1 * d;
+                }
+            }
+            self.current = Some((unit.to_vec(), value));
+        }
+        self.temp = (self.temp * self.cool).max(self.min_temp);
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.best.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bumpy(u: &[f64]) -> f64 {
+        let d1: f64 = u.iter().map(|x| (x - 0.15) * (x - 0.15)).sum();
+        let d2: f64 = u.iter().map(|x| (x - 0.85) * (x - 0.85)).sum();
+        0.5 * (-d1 * 40.0).exp() + (-d2 * 40.0).exp()
+    }
+
+    #[test]
+    fn finds_good_region_on_bumpy_surface() {
+        let mut rng = Rng64::new(10);
+        let mut sa = SimulatedAnnealing::new(2);
+        for _ in 0..400 {
+            let u = sa.ask(&mut rng);
+            let v = bumpy(&u);
+            sa.tell(&u, v);
+        }
+        assert!(sa.best().unwrap().value > 0.6, "{}", sa.best().unwrap().value);
+    }
+
+    #[test]
+    fn temperature_cools_monotonically() {
+        let mut rng = Rng64::new(11);
+        let mut sa = SimulatedAnnealing::new(2);
+        let mut prev = sa.temp;
+        for _ in 0..50 {
+            let u = sa.ask(&mut rng);
+            sa.tell(&u, 0.0);
+            assert!(sa.temp <= prev);
+            prev = sa.temp;
+        }
+    }
+}

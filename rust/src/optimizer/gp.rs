@@ -1,0 +1,335 @@
+//! Gaussian-process surrogate optimization (iTuned-style, Duan et al.
+//! VLDB'09) — the *model-based* family the paper contrasts with
+//! search-based methods (§4.1). Included as a baseline: it shines at
+//! tiny budgets but costs O(n^3) per proposal and degrades as the
+//! sample set grows misspecified — exactly the trade-off that led the
+//! paper to RRS.
+//!
+//! Implementation: zero-mean GP with an RBF kernel, hyperparameters set
+//! by simple heuristics (lengthscale ~ 0.4*sqrt(dim)-scaled, signal
+//! variance from the observed spread), Cholesky factorisation for the
+//! posterior, and Expected Improvement maximised over an LHS candidate
+//! set plus local perturbations of the incumbent.
+
+use super::{BestTracker, Observation, Optimizer};
+use crate::sampling::{LhsSampler, Sampler};
+use crate::util::rng::Rng64;
+
+/// GP + Expected Improvement optimizer.
+pub struct GpSurrogate {
+    dim: usize,
+    xs: Vec<Vec<f64>>,
+    ys: Vec<f64>,
+    /// Initial space-filling design still to play.
+    init_queue: Vec<Vec<f64>>,
+    init_n: usize,
+    /// Candidate pool size per proposal.
+    candidates: usize,
+    /// Cap on the training set (sliding window keeps the best + recent).
+    max_train: usize,
+    best: BestTracker,
+}
+
+impl GpSurrogate {
+    /// New GP optimizer over `dim` dimensions.
+    pub fn new(dim: usize) -> GpSurrogate {
+        GpSurrogate {
+            dim,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            init_queue: Vec::new(),
+            init_n: (2 * dim).clamp(8, 24),
+            candidates: 128,
+            max_train: 160,
+            best: BestTracker::default(),
+        }
+    }
+
+    fn kernel(&self, a: &[f64], b: &[f64], ls2: f64, sf2: f64) -> f64 {
+        let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        sf2 * (-0.5 * d2 / ls2).exp()
+    }
+
+    /// Posterior (mean, std) at `q` given the Cholesky factor and the
+    /// precomputed alpha = K^-1 y.
+    fn posterior(
+        &self,
+        q: &[f64],
+        chol: &Cholesky,
+        alpha: &[f64],
+        ls2: f64,
+        sf2: f64,
+        y_mean: f64,
+    ) -> (f64, f64) {
+        let n = self.train_len();
+        let mut k_star = Vec::with_capacity(n);
+        for x in self.train_xs() {
+            k_star.push(self.kernel(q, x, ls2, sf2));
+        }
+        let mean = y_mean + k_star.iter().zip(alpha).map(|(k, a)| k * a).sum::<f64>();
+        let v = chol.solve_lower(&k_star);
+        let var = (sf2 - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (mean, var.sqrt())
+    }
+
+    fn train_len(&self) -> usize {
+        self.xs.len().min(self.max_train)
+    }
+
+    fn train_xs(&self) -> &[Vec<f64>] {
+        let n = self.train_len();
+        &self.xs[self.xs.len() - n..]
+    }
+
+    fn train_ys(&self) -> &[f64] {
+        let n = self.train_len();
+        &self.ys[self.ys.len() - n..]
+    }
+}
+
+/// Lower-triangular Cholesky factor with solves.
+struct Cholesky {
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix (row-major), adding
+    /// jitter to the diagonal until it succeeds.
+    fn factor(mut a: Vec<f64>, n: usize) -> Cholesky {
+        let mut jitter = 1e-8 * (1.0 + a.iter().fold(0.0f64, |m, &x| m.max(x.abs())));
+        loop {
+            let mut l = a.clone();
+            if Self::try_factor(&mut l, n) {
+                return Cholesky { l, n };
+            }
+            for i in 0..n {
+                a[i * n + i] += jitter;
+            }
+            jitter *= 10.0;
+            assert!(jitter < 1e6, "cholesky cannot stabilise");
+        }
+    }
+
+    fn try_factor(l: &mut [f64], n: usize) -> bool {
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = l[i * n + j];
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return false;
+                    }
+                    l[i * n + i] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+            for j in (i + 1)..n {
+                l[i * n + j] = 0.0;
+            }
+        }
+        true
+    }
+
+    /// Solve L z = b.
+    fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut z = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l[i * n + k] * z[k];
+            }
+            z[i] = s / self.l[i * n + i];
+        }
+        z
+    }
+
+    /// Solve (L L^T) x = b.
+    fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut z = self.solve_lower(b);
+        // back-substitute L^T x = z
+        for i in (0..n).rev() {
+            let mut s = z[i];
+            for k in (i + 1)..n {
+                s -= self.l[k * n + i] * z[k];
+            }
+            z[i] = s / self.l[i * n + i];
+        }
+        z
+    }
+}
+
+/// Standard normal pdf.
+fn phi(x: f64) -> f64 {
+    (-(x * x) / 2.0).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal cdf via Abramowitz–Stegun 7.1.26 erf approximation.
+fn big_phi(x: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.2316419 * x.abs());
+    let poly = t
+        * (0.319381530
+            + t * (-0.356563782 + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
+    let tail = phi(x.abs()) * poly;
+    if x >= 0.0 {
+        1.0 - tail
+    } else {
+        tail
+    }
+}
+
+/// Expected improvement of mean/std over incumbent f_best (maximizing).
+fn expected_improvement(mean: f64, std: f64, f_best: f64) -> f64 {
+    if std <= 1e-12 {
+        return (mean - f_best).max(0.0);
+    }
+    let z = (mean - f_best) / std;
+    (mean - f_best) * big_phi(z) + std * phi(z)
+}
+
+impl Optimizer for GpSurrogate {
+    fn name(&self) -> &'static str {
+        "gp"
+    }
+
+    fn ask(&mut self, rng: &mut Rng64) -> Vec<f64> {
+        // initial space-filling design
+        if self.xs.len() < self.init_n {
+            if self.init_queue.is_empty() {
+                self.init_queue = LhsSampler.sample(self.init_n, self.dim, rng);
+            }
+            if let Some(p) = self.init_queue.pop() {
+                return p;
+            }
+        }
+
+        // fit the GP on (windowed) training data
+        let n = self.train_len();
+        let ys = self.train_ys();
+        let y_mean = ys.iter().sum::<f64>() / n as f64;
+        let y_var = ys.iter().map(|y| (y - y_mean) * (y - y_mean)).sum::<f64>() / n as f64;
+        let sf2 = y_var.max(1e-12);
+        let ls = 0.4 * (self.dim as f64).sqrt() / 2.0;
+        let ls2 = ls * ls;
+        let noise = 1e-4 * sf2 + 1e-10;
+
+        let train: Vec<Vec<f64>> = self.train_xs().to_vec();
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel(&train[i], &train[j], ls2, sf2);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += noise;
+        }
+        let chol = Cholesky::factor(k, n);
+        let resid: Vec<f64> = ys.iter().map(|y| y - y_mean).collect();
+        let alpha = chol.solve(&resid);
+
+        // candidate pool: LHS + local perturbations of the incumbent
+        let mut cands = LhsSampler.sample(self.candidates, self.dim, rng);
+        if let Some(b) = self.best.get() {
+            for _ in 0..self.candidates / 4 {
+                cands.push(
+                    b.unit
+                        .iter()
+                        .map(|&c| (c + rng.normal() * 0.08).clamp(0.0, 1.0))
+                        .collect(),
+                );
+            }
+        }
+        let f_best = self.best.get().map(|b| b.value).unwrap_or(f64::NEG_INFINITY);
+        let mut best_cand = cands[0].clone();
+        let mut best_ei = f64::NEG_INFINITY;
+        for c in cands {
+            let (m, s) = self.posterior(&c, &chol, &alpha, ls2, sf2, y_mean);
+            let ei = expected_improvement(m, s, f_best);
+            if ei > best_ei {
+                best_ei = ei;
+                best_cand = c;
+            }
+        }
+        best_cand
+    }
+
+    fn tell(&mut self, unit: &[f64], value: f64) {
+        self.best.update(unit, value);
+        self.xs.push(unit.to_vec());
+        self.ys.push(value);
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.best.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solves_known_system() {
+        // A = [[4,2],[2,3]], b = [2, 1] -> x = [0.5, 0]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let c = Cholesky::factor(a, 2);
+        let x = c.solve(&[2.0, 1.0]);
+        assert!((x[0] - 0.5).abs() < 1e-10, "{x:?}");
+        assert!(x[1].abs() < 1e-10, "{x:?}");
+    }
+
+    #[test]
+    fn cholesky_jitters_semidefinite() {
+        // rank-1 matrix: needs jitter
+        let a = vec![1.0, 1.0, 1.0, 1.0];
+        let c = Cholesky::factor(a, 2);
+        let x = c.solve(&[1.0, 1.0]);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn normal_cdf_reference_values() {
+        assert!((big_phi(0.0) - 0.5).abs() < 1e-6);
+        assert!((big_phi(1.96) - 0.975).abs() < 1e-3);
+        assert!((big_phi(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ei_is_positive_when_uncertain() {
+        assert!(expected_improvement(0.0, 1.0, 0.5) > 0.0);
+        assert_eq!(expected_improvement(0.4, 0.0, 0.5), 0.0);
+        assert!((expected_improvement(1.0, 0.0, 0.5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gp_finds_smooth_optimum_with_tiny_budget() {
+        let f = |u: &[f64]| 1.0 - u.iter().map(|x| (x - 0.6) * (x - 0.6)).sum::<f64>();
+        let mut rng = Rng64::new(3);
+        let mut gp = GpSurrogate::new(3);
+        for _ in 0..40 {
+            let u = gp.ask(&mut rng);
+            assert!(u.iter().all(|x| (0.0..=1.0).contains(x)));
+            let v = f(&u);
+            gp.tell(&u, v);
+        }
+        assert!(gp.best().unwrap().value > 0.97, "{}", gp.best().unwrap().value);
+    }
+
+    #[test]
+    fn gp_training_window_bounds_cost() {
+        let mut gp = GpSurrogate::new(2);
+        gp.max_train = 20;
+        let mut rng = Rng64::new(4);
+        for _ in 0..60 {
+            let u = gp.ask(&mut rng);
+            gp.tell(&u, u[0]);
+        }
+        assert_eq!(gp.train_len(), 20);
+        assert_eq!(gp.xs.len(), 60);
+    }
+}

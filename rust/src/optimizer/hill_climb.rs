@@ -1,0 +1,137 @@
+//! Smart hill-climbing in the spirit of Xi et al., WWW 2004 ("A smart
+//! hill-climbing algorithm for application server configuration") — the
+//! search-based related work the paper cites.
+//!
+//! Global phase: an LHS batch picks a well-spread start. Local phase:
+//! Gaussian steps around the incumbent with an adaptive step size —
+//! grow on success (be bolder), shrink on failure (home in). Restarts
+//! from a fresh LHS batch when the step collapses, so long budgets are
+//! not wasted at a converged point.
+
+use super::{BestTracker, Observation, Optimizer};
+use crate::sampling::{LhsSampler, Sampler};
+use crate::util::rng::Rng64;
+
+/// Adaptive-step stochastic hill climbing with LHS restarts.
+pub struct SmartHillClimbing {
+    dim: usize,
+    /// Points of the current global (LHS) batch still to try.
+    global_queue: Vec<Vec<f64>>,
+    /// Remaining global draws before switching to local search.
+    global_left: usize,
+    incumbent: Option<(Vec<f64>, f64)>,
+    step: f64,
+    best: BestTracker,
+    // constants
+    global_n: usize,
+    init_step: f64,
+    grow: f64,
+    shrink: f64,
+    min_step: f64,
+}
+
+impl SmartHillClimbing {
+    /// New climber over `dim` dimensions.
+    pub fn new(dim: usize) -> Self {
+        SmartHillClimbing {
+            dim,
+            global_queue: Vec::new(),
+            global_left: 8,
+            incumbent: None,
+            step: 0.15,
+            best: BestTracker::default(),
+            global_n: 8,
+            init_step: 0.15,
+            grow: 1.3,
+            shrink: 0.6,
+            min_step: 0.005,
+        }
+    }
+
+    fn restart(&mut self) {
+        self.global_left = self.global_n;
+        self.incumbent = None;
+        self.step = self.init_step;
+    }
+}
+
+impl Optimizer for SmartHillClimbing {
+    fn name(&self) -> &'static str {
+        "shc"
+    }
+
+    fn ask(&mut self, rng: &mut Rng64) -> Vec<f64> {
+        if self.global_left > 0 {
+            if self.global_queue.is_empty() {
+                self.global_queue = LhsSampler.sample(self.global_n, self.dim, rng);
+            }
+            return self.global_queue.pop().expect("refilled");
+        }
+        let (center, _) = self.incumbent.as_ref().expect("incumbent set after global phase");
+        center
+            .iter()
+            .map(|&c| (c + rng.normal() * self.step).clamp(0.0, 1.0))
+            .collect()
+    }
+
+    fn tell(&mut self, unit: &[f64], value: f64) {
+        self.best.update(unit, value);
+        if self.global_left > 0 {
+            self.global_left -= 1;
+            let better = self.incumbent.as_ref().map(|(_, v)| value > *v).unwrap_or(true);
+            if better {
+                self.incumbent = Some((unit.to_vec(), value));
+            }
+            return;
+        }
+        let (_, inc_v) = self.incumbent.as_ref().expect("incumbent");
+        if value > *inc_v {
+            self.incumbent = Some((unit.to_vec(), value));
+            self.step = (self.step * self.grow).min(0.5);
+        } else {
+            self.step *= self.shrink;
+            if self.step < self.min_step {
+                self.restart();
+            }
+        }
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.best.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sphere(u: &[f64]) -> f64 {
+        1.0 - u.iter().map(|x| (x - 0.6) * (x - 0.6)).sum::<f64>()
+    }
+
+    #[test]
+    fn climbs_a_smooth_hill() {
+        let mut rng = Rng64::new(8);
+        let mut shc = SmartHillClimbing::new(4);
+        for _ in 0..200 {
+            let u = shc.ask(&mut rng);
+            let v = sphere(&u);
+            shc.tell(&u, v);
+        }
+        assert!(shc.best().unwrap().value > 0.98, "{}", shc.best().unwrap().value);
+    }
+
+    #[test]
+    fn restarts_when_step_collapses() {
+        let mut rng = Rng64::new(9);
+        let mut shc = SmartHillClimbing::new(2);
+        // constant surface: every local step fails, step shrinks, restart
+        for _ in 0..100 {
+            let u = shc.ask(&mut rng);
+            shc.tell(&u, 0.0);
+        }
+        // after restarts we must be back in (or have refilled) a global phase
+        // at least once; step must have been reset at some point
+        assert!(shc.step >= shc.min_step);
+    }
+}

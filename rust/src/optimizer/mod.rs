@@ -1,0 +1,195 @@
+//! Scalable optimization algorithms (§4.1 subproblem 2, §4.3).
+//!
+//! The paper requires optimizers that (1) output an answer from any
+//! sample budget, (2) improve given a larger budget, and (3) escape
+//! local sub-optima. Its choice is Recursive Random Search ([`rrs`],
+//! Ye & Kalyanaraman 2003) seeded by LHS exploration batches. Baselines
+//! from the related work are provided for the comparison benches:
+//! random search, smart hill-climbing (Xi et al. 2004), simulated
+//! annealing, coordinate descent, and pure LHS screening.
+//!
+//! All optimizers speak the *ask/tell* protocol over the unit hypercube
+//! and maximize the observed value (throughput). The tuner owns the
+//! budget; optimizers just propose points and absorb results.
+
+mod anneal;
+mod coord_descent;
+mod gp;
+mod hill_climb;
+mod lhs_best;
+mod random_search;
+mod rrs;
+
+pub use anneal::SimulatedAnnealing;
+pub use coord_descent::CoordinateDescent;
+pub use gp::GpSurrogate;
+pub use hill_climb::SmartHillClimbing;
+pub use lhs_best::LhsScreening;
+pub use random_search::RandomSearch;
+pub use rrs::{Rrs, RrsParams};
+
+use crate::util::rng::Rng64;
+
+/// One completed staged test: a unit-space point and its measured value.
+#[derive(Clone, Debug)]
+pub struct Observation {
+    /// Position in `[0,1]^dim` (snapped to representable settings).
+    pub unit: Vec<f64>,
+    /// Measured performance (higher is better).
+    pub value: f64,
+}
+
+/// Ask/tell optimizer over the unit hypercube, maximizing.
+pub trait Optimizer: Send {
+    /// Name for reports and the CLI registry.
+    fn name(&self) -> &'static str;
+
+    /// Propose the next point to test.
+    fn ask(&mut self, rng: &mut Rng64) -> Vec<f64>;
+
+    /// Report the measured value for a previously asked point.
+    fn tell(&mut self, unit: &[f64], value: f64);
+
+    /// Best observation so far.
+    fn best(&self) -> Option<&Observation>;
+}
+
+/// Track-the-best helper shared by the implementations.
+#[derive(Clone, Debug, Default)]
+pub struct BestTracker {
+    best: Option<Observation>,
+}
+
+impl BestTracker {
+    /// Fold in an observation; returns true if it became the new best.
+    pub fn update(&mut self, unit: &[f64], value: f64) -> bool {
+        let better = self.best.as_ref().map(|b| value > b.value).unwrap_or(true);
+        if better {
+            self.best = Some(Observation { unit: unit.to_vec(), value });
+        }
+        better
+    }
+
+    /// Current best.
+    pub fn get(&self) -> Option<&Observation> {
+        self.best.as_ref()
+    }
+}
+
+/// Instantiate an optimizer by registry name for `dim` dimensions.
+pub fn by_name(name: &str, dim: usize) -> Option<Box<dyn Optimizer>> {
+    match name {
+        "rrs" => Some(Box::new(Rrs::new(dim, RrsParams::default()))),
+        "random" => Some(Box::new(RandomSearch::new(dim))),
+        "shc" => Some(Box::new(SmartHillClimbing::new(dim))),
+        "anneal" => Some(Box::new(SimulatedAnnealing::new(dim))),
+        "coord" => Some(Box::new(CoordinateDescent::new(dim))),
+        "lhs-screen" => Some(Box::new(LhsScreening::new(dim))),
+        "gp" => Some(Box::new(GpSurrogate::new(dim))),
+        _ => None,
+    }
+}
+
+/// All registered optimizer names.
+pub const OPTIMIZER_NAMES: &[&str] =
+    &["rrs", "random", "shc", "anneal", "coord", "lhs-screen", "gp"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop;
+
+    /// A bumpy 2-peak test function on [0,1]^dim (max ~= 1 at x=0.8..).
+    pub fn two_peaks(u: &[f64]) -> f64 {
+        let d0: f64 = u.iter().map(|x| (x - 0.2) * (x - 0.2)).sum();
+        let d1: f64 = u.iter().map(|x| (x - 0.8) * (x - 0.8)).sum();
+        0.6 * (-d0 * 30.0).exp() + 1.0 * (-d1 * 30.0).exp()
+    }
+
+    #[test]
+    fn registry_resolves_all() {
+        for name in OPTIMIZER_NAMES {
+            let o = by_name(name, 4).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(&o.name(), name);
+        }
+        assert!(by_name("nope", 4).is_none());
+    }
+
+    #[test]
+    fn all_optimizers_ask_in_bounds_and_track_best() {
+        prop::check(12, 0x0907, |g| {
+            let dim = g.usize_in(2..10);
+            let name = *g.choose(OPTIMIZER_NAMES);
+            let mut opt = by_name(name, dim).unwrap();
+            let mut best_seen = f64::NEG_INFINITY;
+            for _ in 0..60 {
+                let u = opt.ask(g.rng());
+                if u.len() != dim {
+                    return Err(format!("{name}: wrong dim"));
+                }
+                if !u.iter().all(|x| (0.0..=1.0).contains(x)) {
+                    return Err(format!("{name}: out of bounds {u:?}"));
+                }
+                let v = two_peaks(&u);
+                best_seen = best_seen.max(v);
+                opt.tell(&u, v);
+                let tracked = opt.best().ok_or("no best after tell")?.value;
+                if !prop::close(tracked, best_seen, 1e-9) && tracked < best_seen {
+                    return Err(format!("{name}: best lost: {tracked} < {best_seen}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn best_tracker_monotone() {
+        let mut t = BestTracker::default();
+        assert!(t.update(&[0.1], 1.0));
+        assert!(!t.update(&[0.2], 0.5));
+        assert!(t.update(&[0.3], 2.0));
+        assert_eq!(t.get().unwrap().value, 2.0);
+        assert_eq!(t.get().unwrap().unit, vec![0.3]);
+    }
+
+    /// Budget-scaling property (§4.3 condition 2): a larger budget never
+    /// yields a worse best (same seed).
+    #[test]
+    fn more_budget_never_worse() {
+        for name in OPTIMIZER_NAMES {
+            for &(small, large) in &[(20u32, 80u32)] {
+                let run = |budget: u32| {
+                    let mut rng = Rng64::new(1234);
+                    let mut opt = by_name(name, 4).unwrap();
+                    for _ in 0..budget {
+                        let u = opt.ask(&mut rng);
+                        let v = two_peaks(&u);
+                        opt.tell(&u, v);
+                    }
+                    opt.best().unwrap().value
+                };
+                let (a, b) = (run(small), run(large));
+                assert!(
+                    b >= a - 1e-12,
+                    "{name}: budget {large} worse than {small}: {b} < {a}"
+                );
+            }
+        }
+    }
+
+    /// Escape property (§4.3 condition 3): with enough budget, RRS must
+    /// find the global peak even when a local peak is closer to start.
+    #[test]
+    fn rrs_escapes_local_optimum() {
+        let mut rng = Rng64::new(7);
+        let mut opt = by_name("rrs", 3).unwrap();
+        for _ in 0..400 {
+            let u = opt.ask(&mut rng);
+            let v = two_peaks(&u);
+            opt.tell(&u, v);
+        }
+        let best = opt.best().unwrap();
+        // global peak is at 0.8^3 with value ~1.0; local is 0.6
+        assert!(best.value > 0.9, "stuck at {}", best.value);
+    }
+}

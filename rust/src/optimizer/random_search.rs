@@ -1,0 +1,54 @@
+//! Pure random search — the weakest sensible baseline.
+
+use super::{BestTracker, Observation, Optimizer};
+use crate::util::rng::Rng64;
+
+/// Uniform random proposals, best-so-far answer.
+pub struct RandomSearch {
+    dim: usize,
+    best: BestTracker,
+}
+
+impl RandomSearch {
+    /// New random search over `dim` dimensions.
+    pub fn new(dim: usize) -> Self {
+        RandomSearch { dim, best: BestTracker::default() }
+    }
+}
+
+impl Optimizer for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn ask(&mut self, rng: &mut Rng64) -> Vec<f64> {
+        (0..self.dim).map(|_| rng.f64()).collect()
+    }
+
+    fn tell(&mut self, unit: &[f64], value: f64) {
+        self.best.update(unit, value);
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.best.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_best() {
+        let mut rng = Rng64::new(1);
+        let mut rs = RandomSearch::new(3);
+        let mut best = f64::NEG_INFINITY;
+        for _ in 0..50 {
+            let u = rs.ask(&mut rng);
+            let v = u.iter().sum::<f64>();
+            best = best.max(v);
+            rs.tell(&u, v);
+        }
+        assert_eq!(rs.best().unwrap().value, best);
+    }
+}

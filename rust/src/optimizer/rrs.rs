@@ -1,0 +1,293 @@
+//! Recursive Random Search (Ye & Kalyanaraman, SIGMETRICS 2003) — the
+//! paper's optimizer (§4.3), with LHS exploration batches (the paper's
+//! "LHS + RRS" pairing).
+//!
+//! Structure:
+//! * **exploration** — draw points from an LHS batch over the whole
+//!   space. Each exploration window of `explore_n` draws estimates the
+//!   promising-region threshold; the window's best point is the
+//!   "promising" sample: enter exploitation around it. The window is
+//!   re-estimated *fresh* on every return to exploration (never reusing
+//!   the global best — that would re-exploit the same optimum forever).
+//! * **exploitation** — sample uniformly inside an axis-aligned box of
+//!   half-width `rho` centred on the promising point. On improvement,
+//!   **re-align** (re-centre the box on the improver). After
+//!   `max_fail` consecutive non-improvements, **shrink** the box by
+//!   `shrink`. When `rho < rho_min`, the local search has converged:
+//!   return to exploration (restarting its threshold estimate).
+//!
+//! The recursion of shrinking boxes gives RRS the paper's three
+//! scalability conditions: any budget yields an answer (every ask is a
+//! valid sample), more budget digs deeper (smaller rho / more restarts),
+//! and the exploration stage always eventually escapes local optima.
+
+use super::{BestTracker, Observation, Optimizer};
+use crate::sampling::{LhsSampler, Sampler};
+use crate::util::rng::Rng64;
+
+/// RRS tuning constants.
+#[derive(Clone, Debug)]
+pub struct RrsParams {
+    /// Exploration draws used to (re-)estimate the promising threshold.
+    /// The original paper derives n = ln(1-p)/ln(1-r) for confidence p of
+    /// landing in the top-r fraction; p=0.99, r=0.1 gives n = 44. We
+    /// default lower (budgets here are hundreds, not thousands).
+    pub explore_n: usize,
+    /// Initial exploitation box half-width.
+    pub init_rho: f64,
+    /// Box shrink factor on stall.
+    pub shrink: f64,
+    /// Consecutive failures before shrinking.
+    pub max_fail: usize,
+    /// Box half-width at which exploitation converges.
+    pub rho_min: f64,
+    /// LHS batch size for exploration draws.
+    pub lhs_batch: usize,
+}
+
+impl Default for RrsParams {
+    fn default() -> Self {
+        RrsParams {
+            explore_n: 10,
+            init_rho: 0.25,
+            shrink: 0.5,
+            max_fail: 3,
+            rho_min: 0.01,
+            lhs_batch: 16,
+        }
+    }
+}
+
+enum Phase {
+    /// Estimating threshold / waiting for a promising point.
+    Explore,
+    /// Local search around `center` with half-width `rho`.
+    Exploit { center: Vec<f64>, center_value: f64, rho: f64, fails: usize },
+}
+
+/// Recursive Random Search with LHS exploration.
+pub struct Rrs {
+    dim: usize,
+    params: RrsParams,
+    phase: Phase,
+    /// Queue of LHS exploration points.
+    explore_queue: Vec<Vec<f64>>,
+    /// Observations in the current threshold-estimation window:
+    /// (count, best value, best point). Restarted on each return to
+    /// exploration — the original RRS re-estimates its threshold from a
+    /// *fresh* window, never from the global best, otherwise the search
+    /// re-exploits the same local optimum forever.
+    window_n: usize,
+    window_best: Option<(f64, Vec<f64>)>,
+    threshold: f64,
+    /// The point we last asked (ask/tell correlation).
+    pending: Option<Vec<f64>>,
+    best: BestTracker,
+}
+
+impl Rrs {
+    /// New RRS over `dim` dimensions.
+    pub fn new(dim: usize, params: RrsParams) -> Rrs {
+        Rrs {
+            dim,
+            params,
+            phase: Phase::Explore,
+            explore_queue: Vec::new(),
+            window_n: 0,
+            window_best: None,
+            threshold: f64::NEG_INFINITY,
+            pending: None,
+            best: BestTracker::default(),
+        }
+    }
+
+    /// Current exploitation half-width (None while exploring) — for tests.
+    pub fn rho(&self) -> Option<f64> {
+        match &self.phase {
+            Phase::Exploit { rho, .. } => Some(*rho),
+            Phase::Explore => None,
+        }
+    }
+
+    fn next_explore_point(&mut self, rng: &mut Rng64) -> Vec<f64> {
+        if self.explore_queue.is_empty() {
+            self.explore_queue = LhsSampler.sample(self.params.lhs_batch, self.dim, rng);
+        }
+        self.explore_queue.pop().expect("batch refilled")
+    }
+
+    fn sample_box(center: &[f64], rho: f64, rng: &mut Rng64) -> Vec<f64> {
+        center
+            .iter()
+            .map(|&c| {
+                let lo = (c - rho).max(0.0);
+                let hi = (c + rho).min(1.0);
+                rng.range_f64(lo, hi)
+            })
+            .collect()
+    }
+}
+
+impl Optimizer for Rrs {
+    fn name(&self) -> &'static str {
+        "rrs"
+    }
+
+    fn ask(&mut self, rng: &mut Rng64) -> Vec<f64> {
+        let point = match &self.phase {
+            Phase::Explore => self.next_explore_point(rng),
+            Phase::Exploit { center, rho, .. } => Self::sample_box(center, *rho, rng),
+        };
+        self.pending = Some(point.clone());
+        point
+    }
+
+    fn tell(&mut self, unit: &[f64], value: f64) {
+        self.best.update(unit, value);
+        self.pending = None;
+
+        match &mut self.phase {
+            Phase::Explore => {
+                self.window_n += 1;
+                let window_better =
+                    self.window_best.as_ref().map(|(v, _)| value > *v).unwrap_or(true);
+                if window_better {
+                    self.window_best = Some((value, unit.to_vec()));
+                }
+                if self.window_n >= self.params.explore_n {
+                    // threshold estimated: the window's best is the
+                    // promising point — exploit around it
+                    let (v, p) = self.window_best.take().expect("non-empty window");
+                    self.threshold = v;
+                    self.phase = Phase::Exploit {
+                        center: p,
+                        center_value: v,
+                        rho: self.params.init_rho,
+                        fails: 0,
+                    };
+                    self.window_n = 0;
+                }
+            }
+            Phase::Exploit { center, center_value, rho, fails } => {
+                if value > *center_value {
+                    // re-align on the improver
+                    *center = unit.to_vec();
+                    *center_value = value;
+                    *fails = 0;
+                } else {
+                    *fails += 1;
+                    if *fails >= self.params.max_fail {
+                        *rho *= self.params.shrink;
+                        *fails = 0;
+                        if *rho < self.params.rho_min {
+                            // converged locally: restart exploration with a
+                            // fresh threshold window
+                            self.phase = Phase::Explore;
+                            self.window_n = 0;
+                            self.window_best = None;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn best(&self) -> Option<&Observation> {
+        self.best.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sphere(u: &[f64]) -> f64 {
+        // max 1.0 at the center
+        1.0 - u.iter().map(|x| (x - 0.5) * (x - 0.5)).sum::<f64>()
+    }
+
+    #[test]
+    fn enters_exploitation_after_window() {
+        let mut rng = Rng64::new(1);
+        let p = RrsParams { explore_n: 5, ..Default::default() };
+        let mut rrs = Rrs::new(3, p);
+        for i in 0..5 {
+            let u = rrs.ask(&mut rng);
+            rrs.tell(&u, sphere(&u));
+            if i < 4 {
+                assert!(rrs.rho().is_none(), "exploiting too early at {i}");
+            }
+        }
+        assert!(rrs.rho().is_some(), "did not enter exploitation");
+    }
+
+    #[test]
+    fn shrinks_on_stall_and_restarts_exploration() {
+        let mut rng = Rng64::new(2);
+        let p = RrsParams {
+            explore_n: 3,
+            max_fail: 2,
+            init_rho: 0.2,
+            rho_min: 0.05,
+            ..Default::default()
+        };
+        let mut rrs = Rrs::new(2, p);
+        // constant function: every exploit sample is a non-improvement
+        let mut saw_exploit = false;
+        let mut returned_to_explore = false;
+        for _ in 0..40 {
+            let u = rrs.ask(&mut rng);
+            rrs.tell(&u, 0.0);
+            match rrs.rho() {
+                Some(_) => saw_exploit = true,
+                None if saw_exploit => {
+                    returned_to_explore = true;
+                    break;
+                }
+                None => {}
+            }
+        }
+        assert!(saw_exploit && returned_to_explore);
+    }
+
+    #[test]
+    fn exploit_box_stays_in_bounds_near_corner() {
+        let mut rng = Rng64::new(3);
+        let c = vec![0.01, 0.99];
+        for _ in 0..100 {
+            let u = Rrs::sample_box(&c, 0.3, &mut rng);
+            assert!(u.iter().all(|x| (0.0..=1.0).contains(x)), "{u:?}");
+        }
+    }
+
+    #[test]
+    fn converges_on_smooth_sphere() {
+        let mut rng = Rng64::new(4);
+        let mut rrs = Rrs::new(4, RrsParams::default());
+        for _ in 0..300 {
+            let u = rrs.ask(&mut rng);
+            rrs.tell(&u, sphere(&u));
+        }
+        let b = rrs.best().unwrap();
+        assert!(b.value > 0.99, "best {}", b.value);
+    }
+
+    #[test]
+    fn realigns_center_on_improvement() {
+        let mut rng = Rng64::new(5);
+        let p = RrsParams { explore_n: 1, ..Default::default() };
+        let mut rrs = Rrs::new(2, p);
+        let u = rrs.ask(&mut rng);
+        rrs.tell(&u, 0.5); // window done -> exploit around u
+        // improvement: center must move to the new point
+        let v = rrs.ask(&mut rng);
+        rrs.tell(&v, 1.0);
+        match &rrs.phase {
+            Phase::Exploit { center, center_value, .. } => {
+                assert_eq!(center, &v);
+                assert_eq!(*center_value, 1.0);
+            }
+            _ => panic!("should be exploiting"),
+        }
+    }
+}

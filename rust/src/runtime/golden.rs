@@ -1,0 +1,195 @@
+//! Golden-vector support: regenerate the patterned inputs that
+//! `python/compile/aot.py::golden_inputs` produced, and parse the
+//! expected outputs it wrote to `artifacts/golden_surface.txt`.
+//!
+//! The pattern is the cross-language contract (keep in sync with aot.py):
+//!
+//! ```text
+//! raw(i, k) = sin(0.1 k + 0.7 i)        i = input index, k = flat index
+//! u         = 0.5 + 0.5 raw
+//! inv_rho2  = 2 |raw| + 0.1
+//! step_s, cliff_kappa, gate_kappa = 5 raw
+//! consts    = [50+40 raw0, 1+|raw1|, 10|raw2|+1, 100|raw3|+10]
+//! otherwise = 0.5 raw
+//! ```
+//! All math in f64, cast to f32 at the end — both sides.
+
+use super::engine::SurfaceParams;
+use super::shapes::{self, D_PAD, E_DIM, W_DIM};
+use crate::error::{ActsError, Result};
+use std::path::Path;
+
+/// Generate the patterned array for input `idx` at batch `b`.
+pub fn pattern_input(idx: usize, b: usize) -> Vec<f32> {
+    let (name, _) = shapes::INPUT_SPEC[idx];
+    let n = shapes::len_for(idx, b);
+    let raw = |k: usize| ((0.1 * k as f64) + 0.7 * idx as f64).sin();
+    (0..n)
+        .map(|k| {
+            let r = raw(k);
+            let v = match name {
+                "u" => 0.5 + 0.5 * r,
+                "inv_rho2" => 2.0 * r.abs() + 0.1,
+                "step_s" | "cliff_kappa" | "gate_kappa" => 5.0 * r,
+                "consts" => match k {
+                    0 => 50.0 + 40.0 * r,
+                    1 => 1.0 + r.abs(),
+                    2 => 10.0 * r.abs() + 1.0,
+                    _ => 100.0 * r.abs() + 10.0,
+                },
+                _ => 0.5 * r,
+            };
+            v as f32
+        })
+        .collect()
+}
+
+/// The full patterned call: (configs, w, e, params) for batch `b`.
+pub fn pattern_call(b: usize) -> (Vec<Vec<f32>>, Vec<f32>, Vec<f32>, SurfaceParams) {
+    let u_flat = pattern_input(0, b);
+    let configs: Vec<Vec<f32>> = u_flat.chunks(D_PAD).map(|c| c.to_vec()).collect();
+    let w = pattern_input(1, b);
+    let e = pattern_input(2, b);
+    debug_assert_eq!(w.len(), W_DIM);
+    debug_assert_eq!(e.len(), E_DIM);
+    let mut p = SurfaceParams::zeros();
+    {
+        let consts = pattern_input(19, b);
+        p.consts.copy_from_slice(&consts);
+    }
+    p.m = pattern_input(3, b);
+    p.step_s = pattern_input(4, b);
+    p.step_t = pattern_input(5, b);
+    p.qs = pattern_input(6, b);
+    p.centers = pattern_input(7, b);
+    p.inv_rho2 = pattern_input(8, b);
+    p.amps_w = pattern_input(9, b);
+    p.dirs = pattern_input(10, b);
+    p.cliff_tau = pattern_input(11, b);
+    p.cliff_kappa = pattern_input(12, b);
+    p.cliff_gain_w = pattern_input(13, b);
+    p.cliff_gain_e = pattern_input(14, b);
+    p.gate_tau = pattern_input(15, b);
+    p.gate_kappa = pattern_input(16, b);
+    p.gate_floor_w = pattern_input(17, b);
+    p.dep_w = pattern_input(18, b);
+    (configs, w, e, p)
+}
+
+/// One golden case parsed from `golden_surface.txt`.
+#[derive(Clone, Debug)]
+pub struct GoldenCase {
+    /// Batch size.
+    pub b: usize,
+    /// (input name, sum of all elements) — input-generation checksums.
+    pub insums: Vec<(String, f64)>,
+    /// Expected throughputs.
+    pub thr: Vec<f64>,
+    /// Expected latencies.
+    pub lat: Vec<f64>,
+}
+
+/// Parse every case from a golden file.
+pub fn parse_golden(path: impl AsRef<Path>) -> Result<Vec<GoldenCase>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ActsError::io(path.display().to_string(), e))?;
+    let mut cases: Vec<GoldenCase> = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let tag = it.next().expect("non-empty line");
+        let bad = |what: &str| {
+            ActsError::Artifact(format!("golden {}:{}: {what}", path.display(), ln + 1))
+        };
+        match tag {
+            "case" => {
+                let b: usize =
+                    it.next().ok_or_else(|| bad("missing batch"))?.parse().map_err(|_| bad("bad batch"))?;
+                cases.push(GoldenCase { b, insums: Vec::new(), thr: Vec::new(), lat: Vec::new() });
+            }
+            "insum" => {
+                let case = cases.last_mut().ok_or_else(|| bad("insum before case"))?;
+                let name = it.next().ok_or_else(|| bad("missing name"))?.to_string();
+                let val: f64 =
+                    it.next().ok_or_else(|| bad("missing value"))?.parse().map_err(|_| bad("bad value"))?;
+                case.insums.push((name, val));
+            }
+            "thr" | "lat" => {
+                let case = cases.last_mut().ok_or_else(|| bad("values before case"))?;
+                let vals: std::result::Result<Vec<f64>, _> = it.map(|v| v.parse()).collect();
+                let vals = vals.map_err(|_| bad("bad float"))?;
+                if tag == "thr" {
+                    case.thr = vals;
+                } else {
+                    case.lat = vals;
+                }
+            }
+            other => return Err(bad(&format!("unknown tag {other}"))),
+        }
+    }
+    Ok(cases)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_is_deterministic_and_sized() {
+        for idx in 0..shapes::INPUT_SPEC.len() {
+            let a = pattern_input(idx, 16);
+            let b = pattern_input(idx, 16);
+            assert_eq!(a, b);
+            assert_eq!(a.len(), shapes::len_for(idx, 16));
+        }
+    }
+
+    #[test]
+    fn pattern_u_in_unit_range() {
+        let u = pattern_input(0, 16);
+        assert!(u.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn pattern_inv_rho2_positive() {
+        let v = pattern_input(8, 1);
+        assert!(v.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn pattern_call_shapes() {
+        let (configs, w, e, p) = pattern_call(16);
+        assert_eq!(configs.len(), 16);
+        assert!(configs.iter().all(|c| c.len() == D_PAD));
+        assert_eq!(w.len(), W_DIM);
+        assert_eq!(e.len(), E_DIM);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_golden_roundtrip_synthetic() {
+        let dir = std::env::temp_dir().join("acts_golden_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        std::fs::write(&path, "# c\ncase 2\ninsum u 1.5\nthr 1.0 2.0\nlat 3.0 4.0\n").unwrap();
+        let cases = parse_golden(&path).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].b, 2);
+        assert_eq!(cases[0].insums, vec![("u".to_string(), 1.5)]);
+        assert_eq!(cases[0].thr, vec![1.0, 2.0]);
+        assert_eq!(cases[0].lat, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn parse_golden_rejects_garbage() {
+        let dir = std::env::temp_dir().join("acts_golden_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.txt");
+        std::fs::write(&path, "wat 1 2\n").unwrap();
+        assert!(parse_golden(&path).is_err());
+    }
+}

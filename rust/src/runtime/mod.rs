@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT-compiled surface artifacts and executes
+//! them from the tuning hot path. Python never runs here — the artifacts
+//! under `artifacts/*.hlo.txt` were lowered once by `make artifacts`
+//! (python/compile/aot.py) and this module is pure rust + XLA.
+//!
+//! * [`shapes`] — the artifact input table, mirroring
+//!   `python/compile/model.py::INPUT_SPEC` (kept in sync by the golden
+//!   integration test).
+//! * [`engine`] — PJRT CPU client, per-bucket compiled executables, and
+//!   the batched `evaluate` entry point with bucket padding/chunking.
+//! * [`golden`] — the patterned-input golden vectors shared with
+//!   python/compile/aot.py, proving the rust<->python round trip.
+
+pub mod engine;
+pub mod golden;
+pub mod shapes;
+
+pub use engine::{Engine, SurfaceParams};
+pub use shapes::{BUCKETS, D_PAD, E_DIM, G, J, R, RG, W_DIM};

@@ -1,0 +1,103 @@
+//! Artifact dimension table — the rust mirror of
+//! `python/compile/model.py::INPUT_SPEC` and `kernels/__init__.py` dims.
+//! The `runtime_golden` integration test cross-checks this table against
+//! `artifacts/shapes.txt` emitted by the AOT step, so drift fails CI.
+
+/// Padded knob dimension.
+pub const D_PAD: usize = 64;
+/// RBF bump count.
+pub const J: usize = 32;
+/// Cliff terms.
+pub const R: usize = 8;
+/// Dominance gates.
+pub const G: usize = 4;
+/// Stacked direction rows (cliffs + gates).
+pub const RG: usize = R + G;
+/// Workload feature dimension.
+pub const W_DIM: usize = 8;
+/// Deployment feature dimension.
+pub const E_DIM: usize = 4;
+/// Head constants: [t_scale, lat0, lat1, t_sat].
+pub const N_CONSTS: usize = 4;
+
+/// Static batch buckets with a compiled executable each.
+pub const BUCKETS: [usize; 4] = [1, 16, 256, 2048];
+
+/// Artifact input table: (name, dims) with 0 standing for the batch dim.
+pub const INPUT_SPEC: &[(&str, &[usize])] = &[
+    ("u", &[0, D_PAD]),
+    ("w", &[W_DIM]),
+    ("e", &[E_DIM]),
+    ("m", &[4, D_PAD, W_DIM]),
+    ("step_s", &[D_PAD]),
+    ("step_t", &[D_PAD]),
+    ("qs", &[W_DIM, D_PAD, D_PAD]),
+    ("centers", &[J, D_PAD]),
+    ("inv_rho2", &[J]),
+    ("amps_w", &[J, W_DIM]),
+    ("dirs", &[RG, D_PAD]),
+    ("cliff_tau", &[R]),
+    ("cliff_kappa", &[R]),
+    ("cliff_gain_w", &[R, W_DIM]),
+    ("cliff_gain_e", &[R, E_DIM]),
+    ("gate_tau", &[G]),
+    ("gate_kappa", &[G]),
+    ("gate_floor_w", &[G, W_DIM]),
+    ("dep_w", &[E_DIM]),
+    ("consts", &[N_CONSTS]),
+];
+
+/// Concrete dims of input `idx` for batch size `b`.
+pub fn dims_for(idx: usize, b: usize) -> Vec<usize> {
+    INPUT_SPEC[idx].1.iter().map(|&d| if d == 0 { b } else { d }).collect()
+}
+
+/// Element count of input `idx` for batch size `b`.
+pub fn len_for(idx: usize, b: usize) -> usize {
+    dims_for(idx, b).iter().product()
+}
+
+/// Smallest bucket that fits `b` requested rows, if any.
+pub fn bucket_for(b: usize) -> Option<usize> {
+    BUCKETS.iter().copied().find(|&cap| cap >= b)
+}
+
+/// Artifact file name for a bucket.
+pub fn artifact_name(bucket: usize) -> String {
+    format!("surface_b{bucket}.hlo.txt")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_count_matches_python() {
+        assert_eq!(INPUT_SPEC.len(), 20);
+    }
+
+    #[test]
+    fn dims_substitute_batch() {
+        assert_eq!(dims_for(0, 256), vec![256, 64]);
+        assert_eq!(dims_for(6, 256), vec![8, 64, 64]); // qs has no batch dim
+        assert_eq!(len_for(0, 16), 16 * 64);
+        assert_eq!(len_for(19, 1), 4);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(1), Some(1));
+        assert_eq!(bucket_for(2), Some(16));
+        assert_eq!(bucket_for(16), Some(16));
+        assert_eq!(bucket_for(17), Some(256));
+        assert_eq!(bucket_for(2048), Some(2048));
+        assert_eq!(bucket_for(2049), None);
+    }
+
+    #[test]
+    fn buckets_are_sorted_ascending() {
+        let mut s = BUCKETS.to_vec();
+        s.sort_unstable();
+        assert_eq!(s, BUCKETS.to_vec());
+    }
+}

@@ -1,0 +1,113 @@
+//! Coverage metrics quantifying the paper's sampling conditions (§4.3):
+//! wide coverage at a given m, and widening coverage as m grows.
+
+/// Minimum pairwise Euclidean distance of a design (maximin criterion).
+/// Higher is better. 0 for fewer than 2 points.
+pub fn min_pairwise_distance(pts: &[Vec<f64>]) -> f64 {
+    let mut min = f64::INFINITY;
+    for i in 0..pts.len() {
+        for j in (i + 1)..pts.len() {
+            let d: f64 = pts[i]
+                .iter()
+                .zip(&pts[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            min = min.min(d);
+        }
+    }
+    if min.is_finite() {
+        min.sqrt()
+    } else {
+        0.0
+    }
+}
+
+/// Fraction of per-dimension strata (m strata per dim) occupied by at
+/// least one point. 1.0 for a perfect Latin design; < 1 when strata are
+/// duplicated/missed. This is exactly the paper's "every interval of each
+/// parameter used" coverage notion.
+pub fn stratification_occupancy(pts: &[Vec<f64>]) -> f64 {
+    let m = pts.len();
+    if m == 0 {
+        return 0.0;
+    }
+    let dim = pts[0].len();
+    if dim == 0 {
+        return 0.0;
+    }
+    let mut occupied = 0usize;
+    for d in 0..dim {
+        let mut seen = vec![false; m];
+        for p in pts {
+            let s = ((p[d] * m as f64) as usize).min(m - 1);
+            seen[s] = true;
+        }
+        occupied += seen.iter().filter(|&&s| s).count();
+    }
+    occupied as f64 / (m * dim) as f64
+}
+
+/// Dispersion: the largest empty-ball radius found by probing `probes`
+/// quasi-random points and taking the max distance to the nearest design
+/// point. Lower is better (no big holes).
+pub fn dispersion(pts: &[Vec<f64>], dim: usize, probes: usize) -> f64 {
+    if pts.is_empty() {
+        return f64::INFINITY;
+    }
+    let mut worst: f64 = 0.0;
+    for i in 0..probes {
+        // deterministic low-discrepancy probe: golden-ratio lattice
+        let probe: Vec<f64> = (0..dim)
+            .map(|d| {
+                let g = 0.618033988749895_f64 * (d as f64 + 1.0);
+                ((i as f64 + 0.5) * g).fract()
+            })
+            .collect();
+        let nearest = pts
+            .iter()
+            .map(|p| {
+                p.iter()
+                    .zip(&probe)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+            })
+            .fold(f64::INFINITY, f64::min);
+        worst = worst.max(nearest.sqrt());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{LhsSampler, RandomSampler, Sampler};
+    use crate::util::rng::Rng64;
+
+    #[test]
+    fn lhs_occupancy_is_perfect_random_is_not() {
+        let mut rng = Rng64::new(31);
+        let lhs = LhsSampler.sample(64, 8, &mut rng);
+        let rnd = RandomSampler.sample(64, 8, &mut rng);
+        assert!((stratification_occupancy(&lhs) - 1.0).abs() < 1e-12);
+        assert!(stratification_occupancy(&rnd) < 0.9);
+    }
+
+    #[test]
+    fn dispersion_shrinks_with_more_samples() {
+        // paper condition 3: more samples => wider coverage
+        let mut rng = Rng64::new(32);
+        let small = LhsSampler.sample(8, 4, &mut rng);
+        let large = LhsSampler.sample(256, 4, &mut rng);
+        let d_small = dispersion(&small, 4, 500);
+        let d_large = dispersion(&large, 4, 500);
+        assert!(d_large < d_small, "dispersion {d_large} !< {d_small}");
+    }
+
+    #[test]
+    fn min_distance_degenerate_cases() {
+        assert_eq!(min_pairwise_distance(&[]), 0.0);
+        assert_eq!(min_pairwise_distance(&[vec![0.5, 0.5]]), 0.0);
+        let two = vec![vec![0.0, 0.0], vec![3.0, 4.0]];
+        assert!((min_pairwise_distance(&two) - 5.0).abs() < 1e-12);
+    }
+}

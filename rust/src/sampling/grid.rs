@@ -1,0 +1,69 @@
+//! Grid sampling — the classical design LHS improves on.
+//!
+//! Builds the densest full-factorial grid with at most `m` points
+//! (side = floor(m^(1/dim))), then fills the remainder with uniform
+//! random points so the contract "return exactly m points" holds. In
+//! high dimension the side collapses to 1 and the grid degenerates to
+//! center-point + random fill — exactly the scalability failure (§2.1)
+//! the paper's LHS choice avoids; `bench_sampler_coverage` shows it.
+
+use super::Sampler;
+use crate::util::rng::Rng64;
+
+/// Full-factorial grid with random remainder fill.
+pub struct GridSampler;
+
+impl Sampler for GridSampler {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn sample(&self, m: usize, dim: usize, rng: &mut Rng64) -> Vec<Vec<f64>> {
+        if m == 0 || dim == 0 {
+            return vec![vec![]; m];
+        }
+        let side = (m as f64).powf(1.0 / dim as f64).floor().max(1.0) as usize;
+        let total = side.pow(dim as u32).min(m);
+        let mut pts = Vec::with_capacity(m);
+        for mut idx in 0..total {
+            let mut p = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                let level = idx % side;
+                idx /= side;
+                // cell centers: (level + 0.5) / side
+                p.push((level as f64 + 0.5) / side as f64);
+            }
+            pts.push(p);
+        }
+        while pts.len() < m {
+            pts.push((0..dim).map(|_| rng.f64()).collect());
+        }
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_square_grid() {
+        let mut rng = Rng64::new(1);
+        let pts = GridSampler.sample(9, 2, &mut rng);
+        assert_eq!(pts.len(), 9);
+        // 3x3 grid at cell centers
+        let mut xs: Vec<f64> = pts.iter().map(|p| p[0]).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        assert_eq!(xs.len(), 3);
+    }
+
+    #[test]
+    fn high_dim_degenerates_but_fills() {
+        let mut rng = Rng64::new(2);
+        // side = floor(20^(1/10)) = 1 -> 1 grid point + 19 random
+        let pts = GridSampler.sample(20, 10, &mut rng);
+        assert_eq!(pts.len(), 20);
+        assert!(pts[0].iter().all(|&x| (x - 0.5).abs() < 1e-12));
+    }
+}

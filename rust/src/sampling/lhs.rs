@@ -1,0 +1,179 @@
+//! Latin Hypercube Sampling — the paper's sampler (§4.3).
+//!
+//! LHS divides each parameter's range into `m` intervals and picks one
+//! point per interval such that every interval of every parameter is
+//! used exactly once: per dimension, a random permutation of the `m`
+//! strata, with a uniform jitter inside each stratum. This yields the
+//! paper's three scalability conditions: wide coverage (every stratum is
+//! hit), any `m` (the stratification is defined by `m`), and widening
+//! coverage as `m` grows.
+
+use super::Sampler;
+use crate::util::rng::Rng64;
+
+/// Plain Latin Hypercube Sampling.
+pub struct LhsSampler;
+
+impl Sampler for LhsSampler {
+    fn name(&self) -> &'static str {
+        "lhs"
+    }
+
+    fn sample(&self, m: usize, dim: usize, rng: &mut Rng64) -> Vec<Vec<f64>> {
+        lhs(m, dim, rng)
+    }
+}
+
+/// One LHS draw.
+pub fn lhs(m: usize, dim: usize, rng: &mut Rng64) -> Vec<Vec<f64>> {
+    if m == 0 {
+        return Vec::new();
+    }
+    let mut pts = vec![vec![0.0; dim]; m];
+    for d in 0..dim {
+        let perm = rng.permutation(m);
+        for (i, point) in pts.iter_mut().enumerate() {
+            // stratum perm[i], jittered uniformly inside
+            point[d] = (perm[i] as f64 + rng.f64()) / m as f64;
+        }
+    }
+    pts
+}
+
+/// Maximin-improved LHS: draw `restarts` independent LHS designs and keep
+/// the one maximising the minimum pairwise distance. A cheap, classic
+/// space-filling refinement (an "extension" beyond the paper's plain LHS,
+/// used by the ablation benches).
+pub struct MaximinLhsSampler {
+    /// Number of candidate designs to draw.
+    pub restarts: usize,
+}
+
+impl Default for MaximinLhsSampler {
+    fn default() -> Self {
+        MaximinLhsSampler { restarts: 8 }
+    }
+}
+
+impl Sampler for MaximinLhsSampler {
+    fn name(&self) -> &'static str {
+        "maximin-lhs"
+    }
+
+    fn sample(&self, m: usize, dim: usize, rng: &mut Rng64) -> Vec<Vec<f64>> {
+        if m == 0 {
+            return Vec::new();
+        }
+        let mut best: Option<(f64, Vec<Vec<f64>>)> = None;
+        for _ in 0..self.restarts.max(1) {
+            let cand = lhs(m, dim, rng);
+            let score = min_pairwise_sq(&cand);
+            if best.as_ref().map(|(s, _)| score > *s).unwrap_or(true) {
+                best = Some((score, cand));
+            }
+        }
+        best.expect("restarts >= 1").1
+    }
+}
+
+fn min_pairwise_sq(pts: &[Vec<f64>]) -> f64 {
+    let mut min = f64::INFINITY;
+    for i in 0..pts.len() {
+        for j in (i + 1)..pts.len() {
+            let d: f64 = pts[i]
+                .iter()
+                .zip(&pts[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            if d < min {
+                min = d;
+            }
+        }
+    }
+    if min.is_finite() {
+        min
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop;
+
+    /// The defining LHS invariant: per dimension, each of the m strata
+    /// contains exactly one sample.
+    fn is_latin(pts: &[Vec<f64>]) -> bool {
+        let m = pts.len();
+        if m == 0 {
+            return true;
+        }
+        let dim = pts[0].len();
+        for d in 0..dim {
+            let mut seen = vec![false; m];
+            for p in pts {
+                let stratum = ((p[d] * m as f64) as usize).min(m - 1);
+                if seen[stratum] {
+                    return false;
+                }
+                seen[stratum] = true;
+            }
+            if !seen.iter().all(|&s| s) {
+                return false;
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn lhs_stratification_invariant_prop() {
+        prop::check(100, 0x1A5, |g| {
+            let m = g.usize_in(1..80);
+            let dim = g.usize_in(1..30);
+            let pts = lhs(m, dim, g.rng());
+            prop::assert_prop(is_latin(&pts), format!("not latin at m={m} dim={dim}"))
+        });
+    }
+
+    #[test]
+    fn maximin_is_still_latin() {
+        prop::check(30, 0x1A6, |g| {
+            let m = g.usize_in(2..40);
+            let dim = g.usize_in(1..10);
+            let s = MaximinLhsSampler::default();
+            let pts = s.sample(m, dim, g.rng());
+            prop::assert_prop(is_latin(&pts), "maximin broke stratification")
+        });
+    }
+
+    #[test]
+    fn maximin_spreads_at_least_as_well_on_average() {
+        let mut rng = Rng64::new(9);
+        let (mut plain_sum, mut maximin_sum) = (0.0, 0.0);
+        for _ in 0..20 {
+            plain_sum += min_pairwise_sq(&lhs(16, 4, &mut rng));
+            maximin_sum +=
+                min_pairwise_sq(&MaximinLhsSampler::default().sample(16, 4, &mut rng));
+        }
+        assert!(
+            maximin_sum >= plain_sum,
+            "maximin {maximin_sum} < plain {plain_sum}"
+        );
+    }
+
+    #[test]
+    fn m_equals_one_is_single_interior_point() {
+        let mut rng = Rng64::new(4);
+        let pts = lhs(1, 5, &mut rng);
+        assert_eq!(pts.len(), 1);
+        assert!(pts[0].iter().all(|x| (0.0..1.0).contains(x)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = lhs(10, 3, &mut Rng64::new(11));
+        let b = lhs(10, 3, &mut Rng64::new(11));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,85 @@
+//! Scalable sampling methods (§4.1 subproblem 1, §4.3).
+//!
+//! The paper requires sample sets that (1) cover the high-dimensional
+//! space widely, (2) fit the resource limit, and (3) widen coverage as
+//! the limit grows. Latin Hypercube Sampling satisfies all three and is
+//! the paper's choice; random, grid and Halton samplers are provided as
+//! comparison baselines, and [`coverage`] quantifies condition (1)/(3)
+//! for the `bench_sampler_coverage` reproduction of §4.3's claims.
+
+mod grid;
+mod halton;
+mod lhs;
+mod random;
+
+pub mod coverage;
+
+pub use grid::GridSampler;
+pub use halton::HaltonSampler;
+pub use lhs::{LhsSampler, MaximinLhsSampler};
+pub use random::RandomSampler;
+
+use crate::util::rng::Rng64;
+
+/// A batch sampler over the unit hypercube `[0,1]^dim`.
+pub trait Sampler: Send + Sync {
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Draw `m` points in `[0,1]^dim`.
+    fn sample(&self, m: usize, dim: usize, rng: &mut Rng64) -> Vec<Vec<f64>>;
+}
+
+/// The samplers the CLI and benches know by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Sampler>> {
+    match name {
+        "lhs" => Some(Box::new(LhsSampler)),
+        "maximin-lhs" => Some(Box::new(MaximinLhsSampler::default())),
+        "random" => Some(Box::new(RandomSampler)),
+        "grid" => Some(Box::new(GridSampler)),
+        "halton" => Some(Box::new(HaltonSampler)),
+        _ => None,
+    }
+}
+
+/// All registered sampler names.
+pub const SAMPLER_NAMES: &[&str] = &["lhs", "maximin-lhs", "random", "grid", "halton"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for name in SAMPLER_NAMES {
+            let s = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(&s.name(), name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn all_samplers_emit_m_points_in_bounds() {
+        let mut rng = Rng64::new(1);
+        for name in SAMPLER_NAMES {
+            let s = by_name(name).unwrap();
+            for &(m, d) in &[(1usize, 1usize), (7, 3), (32, 12), (100, 40)] {
+                let pts = s.sample(m, d, &mut rng);
+                assert_eq!(pts.len(), m, "{name} m={m}");
+                for p in &pts {
+                    assert_eq!(p.len(), d);
+                    assert!(p.iter().all(|x| (0.0..=1.0).contains(x)), "{name} out of bounds");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_samples_is_empty() {
+        let mut rng = Rng64::new(2);
+        for name in SAMPLER_NAMES {
+            let s = by_name(name).unwrap();
+            assert!(s.sample(0, 5, &mut rng).is_empty());
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! IID uniform sampling — the baseline LHS is compared against.
+
+use super::Sampler;
+use crate::util::rng::Rng64;
+
+/// Uniform independent sampling of the unit hypercube.
+pub struct RandomSampler;
+
+impl Sampler for RandomSampler {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn sample(&self, m: usize, dim: usize, rng: &mut Rng64) -> Vec<Vec<f64>> {
+        (0..m).map(|_| (0..dim).map(|_| rng.f64()).collect()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_are_uniform() {
+        let mut rng = Rng64::new(21);
+        let pts = RandomSampler.sample(20_000, 2, &mut rng);
+        let mean: f64 = pts.iter().map(|p| p[0]).sum::<f64>() / pts.len() as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+}

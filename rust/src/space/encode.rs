@@ -1,0 +1,160 @@
+//! Knob-value <-> unit-interval encoding, and padding to artifact width.
+//!
+//! Encoding rules (DESIGN.md §3):
+//! * bool       -> {0.0, 1.0}; decode threshold at 0.5
+//! * enum(k)    -> level / (k-1); decode rounds to nearest level
+//! * int        -> (x - lo) / (hi - lo), or log-ratio when log-scaled;
+//!                 decode rounds to the nearest integer setting
+//! * float      -> min-max or log-ratio; decode clamps only
+
+use super::{KnobDomain, KnobValue};
+
+/// Encode one (valid) knob value into [0, 1].
+pub fn encode_knob(domain: &KnobDomain, v: &KnobValue) -> f64 {
+    match (domain, v) {
+        (KnobDomain::Bool, KnobValue::Bool(b)) => {
+            if *b {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        (KnobDomain::Enum(levels), KnobValue::Enum(i)) => {
+            *i as f64 / (levels.len() - 1) as f64
+        }
+        (KnobDomain::Int { lo, hi, log }, KnobValue::Int(x)) => {
+            if *log {
+                log_ratio(*x as f64, *lo as f64, *hi as f64)
+            } else {
+                (*x - lo) as f64 / (*hi - lo) as f64
+            }
+        }
+        (KnobDomain::Float { lo, hi, log }, KnobValue::Float(x)) => {
+            if *log {
+                log_ratio(*x, *lo, *hi)
+            } else {
+                (*x - *lo) / (*hi - *lo)
+            }
+        }
+        _ => panic!("encode_knob: domain/value type mismatch (validate first)"),
+    }
+}
+
+/// Decode (snap) a unit value to the nearest representable setting.
+pub fn decode_knob(domain: &KnobDomain, u: f64) -> KnobValue {
+    let u = u.clamp(0.0, 1.0);
+    match domain {
+        KnobDomain::Bool => KnobValue::Bool(u >= 0.5),
+        KnobDomain::Enum(levels) => {
+            let k = levels.len() - 1;
+            KnobValue::Enum((u * k as f64).round() as usize)
+        }
+        KnobDomain::Int { lo, hi, log } => {
+            let x = if *log {
+                inv_log_ratio(u, *lo as f64, *hi as f64).round()
+            } else {
+                *lo as f64 + u * (*hi - *lo) as f64
+            };
+            KnobValue::Int((x.round() as i64).clamp(*lo, *hi))
+        }
+        KnobDomain::Float { lo, hi, log } => {
+            let x = if *log {
+                inv_log_ratio(u, *lo, *hi)
+            } else {
+                lo + u * (hi - lo)
+            };
+            KnobValue::Float(x.clamp(*lo, *hi))
+        }
+    }
+}
+
+#[inline]
+fn log_ratio(x: f64, lo: f64, hi: f64) -> f64 {
+    (x.ln() - lo.ln()) / (hi.ln() - lo.ln())
+}
+
+#[inline]
+fn inv_log_ratio(u: f64, lo: f64, hi: f64) -> f64 {
+    (lo.ln() + u * (hi.ln() - lo.ln())).exp()
+}
+
+/// Pad a unit vector to the artifact's fixed knob width `d_pad`,
+/// converting to f32. Padding lanes are zero; the per-SUT surface
+/// parameters carry zero weight there, so padded lanes cannot affect the
+/// computed performance.
+pub fn unit_to_padded(u: &[f64], d_pad: usize) -> Vec<f32> {
+    assert!(u.len() <= d_pad, "unit vector longer than padded width");
+    let mut out = vec![0.0f32; d_pad];
+    for (o, &x) in out.iter_mut().zip(u) {
+        *o = x as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bool_encode() {
+        assert_eq!(encode_knob(&KnobDomain::Bool, &KnobValue::Bool(false)), 0.0);
+        assert_eq!(encode_knob(&KnobDomain::Bool, &KnobValue::Bool(true)), 1.0);
+    }
+
+    #[test]
+    fn enum_positions_are_even() {
+        let d = KnobDomain::Enum(vec!["a".into(), "b".into(), "c".into(), "d".into(), "e".into()]);
+        for i in 0..5 {
+            let u = encode_knob(&d, &KnobValue::Enum(i));
+            assert!((u - i as f64 / 4.0).abs() < 1e-12);
+            assert_eq!(decode_knob(&d, u), KnobValue::Enum(i));
+        }
+    }
+
+    #[test]
+    fn linear_int_roundtrip_all() {
+        let d = KnobDomain::Int { lo: -5, hi: 20, log: false };
+        for x in -5..=20 {
+            let u = encode_knob(&d, &KnobValue::Int(x));
+            assert_eq!(decode_knob(&d, u), KnobValue::Int(x));
+        }
+    }
+
+    #[test]
+    fn log_int_roundtrip_decades() {
+        let d = KnobDomain::Int { lo: 1, hi: 1_000_000, log: true };
+        for &x in &[1i64, 10, 100, 1000, 10_000, 123_456, 1_000_000] {
+            let u = encode_knob(&d, &KnobValue::Int(x));
+            assert_eq!(decode_knob(&d, u), KnobValue::Int(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn log_scaling_spreads_decades_evenly() {
+        let d = KnobDomain::Int { lo: 1, hi: 10_000, log: true };
+        let u10 = encode_knob(&d, &KnobValue::Int(10));
+        let u100 = encode_knob(&d, &KnobValue::Int(100));
+        let u1000 = encode_knob(&d, &KnobValue::Int(1000));
+        assert!((u100 - u10 - 0.25).abs() < 1e-9);
+        assert!((u1000 - u100 - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn float_clamps_out_of_range_decode() {
+        let d = KnobDomain::Float { lo: 0.5, hi: 2.0, log: false };
+        assert_eq!(decode_knob(&d, -1.0), KnobValue::Float(0.5));
+        assert_eq!(decode_knob(&d, 2.0), KnobValue::Float(2.0));
+    }
+
+    #[test]
+    fn padding_zero_fills() {
+        let p = unit_to_padded(&[0.25, 0.75], 6);
+        assert_eq!(p, vec![0.25, 0.75, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "longer than padded")]
+    fn padding_rejects_overflow() {
+        unit_to_padded(&[0.0; 10], 4);
+    }
+}

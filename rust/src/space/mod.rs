@@ -1,0 +1,442 @@
+//! Configuration parameters (knobs) and configuration spaces.
+//!
+//! The paper's problem statement (§3): find, within a resource limit, a
+//! configuration setting optimizing a given SUT deployment under a given
+//! workload. A [`ConfigSpace`] declares the tunable knobs — boolean,
+//! enumeration and numeric (§4.1 requires handling all three) — and
+//! provides the bijection-up-to-quantisation between concrete settings
+//! ([`Config`]) and the normalised unit hypercube `[0,1]^D` in which the
+//! samplers and optimizers work.
+//!
+//! Quantisation is explicit: `decode(encode(c)) == c` exactly, while
+//! `encode(decode(u))` *snaps* `u` to the nearest representable setting.
+//! The manipulator always tests the snapped vector, so the tuner's
+//! history never contains configurations a real system couldn't run.
+
+mod encode;
+
+pub use encode::unit_to_padded;
+
+use crate::error::{ActsError, Result};
+use std::collections::HashMap;
+use std::fmt;
+
+/// Domain of one configuration parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KnobDomain {
+    /// On/off switch (e.g. MySQL `skip_name_resolve`).
+    Bool,
+    /// Enumerated choice (e.g. `innodb_flush_method`).
+    Enum(Vec<String>),
+    /// Integer range, inclusive. `log` scales encoding logarithmically —
+    /// right for byte-size knobs spanning decades (e.g. buffer sizes).
+    Int { lo: i64, hi: i64, log: bool },
+    /// Float range, inclusive-exclusive on encode granularity.
+    Float { lo: f64, hi: f64, log: bool },
+}
+
+/// A concrete knob value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KnobValue {
+    Bool(bool),
+    /// Enum level index.
+    Enum(usize),
+    Int(i64),
+    Float(f64),
+}
+
+impl fmt::Display for KnobValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KnobValue::Bool(b) => write!(f, "{b}"),
+            KnobValue::Enum(i) => write!(f, "#{i}"),
+            KnobValue::Int(i) => write!(f, "{i}"),
+            KnobValue::Float(x) => write!(f, "{x:.6}"),
+        }
+    }
+}
+
+/// One tunable configuration parameter.
+#[derive(Clone, Debug)]
+pub struct Knob {
+    /// The knob's name as the SUT spells it (e.g. `innodb_buffer_pool_size`).
+    pub name: String,
+    /// Value domain.
+    pub domain: KnobDomain,
+    /// The SUT's shipped default.
+    pub default: KnobValue,
+}
+
+impl Knob {
+    /// Boolean knob.
+    pub fn bool(name: &str, default: bool) -> Knob {
+        Knob { name: name.into(), domain: KnobDomain::Bool, default: KnobValue::Bool(default) }
+    }
+
+    /// Enumerated knob; `default` is a level index.
+    pub fn enumeration(name: &str, levels: &[&str], default: usize) -> Knob {
+        assert!(levels.len() >= 2, "enum knob needs >= 2 levels");
+        assert!(default < levels.len());
+        Knob {
+            name: name.into(),
+            domain: KnobDomain::Enum(levels.iter().map(|s| s.to_string()).collect()),
+            default: KnobValue::Enum(default),
+        }
+    }
+
+    /// Linear integer knob.
+    pub fn int(name: &str, lo: i64, hi: i64, default: i64) -> Knob {
+        assert!(lo < hi && (lo..=hi).contains(&default));
+        Knob {
+            name: name.into(),
+            domain: KnobDomain::Int { lo, hi, log: false },
+            default: KnobValue::Int(default),
+        }
+    }
+
+    /// Log-scaled integer knob (byte sizes, counts spanning decades).
+    pub fn log_int(name: &str, lo: i64, hi: i64, default: i64) -> Knob {
+        assert!(lo >= 1 && lo < hi && (lo..=hi).contains(&default));
+        Knob {
+            name: name.into(),
+            domain: KnobDomain::Int { lo, hi, log: true },
+            default: KnobValue::Int(default),
+        }
+    }
+
+    /// Linear float knob.
+    pub fn float(name: &str, lo: f64, hi: f64, default: f64) -> Knob {
+        assert!(lo < hi && (lo..=hi).contains(&default));
+        Knob {
+            name: name.into(),
+            domain: KnobDomain::Float { lo, hi, log: false },
+            default: KnobValue::Float(default),
+        }
+    }
+
+    /// Log-scaled float knob.
+    pub fn log_float(name: &str, lo: f64, hi: f64, default: f64) -> Knob {
+        assert!(lo > 0.0 && lo < hi && (lo..=hi).contains(&default));
+        Knob {
+            name: name.into(),
+            domain: KnobDomain::Float { lo, hi, log: true },
+            default: KnobValue::Float(default),
+        }
+    }
+
+    /// Validate a value against this knob's domain.
+    pub fn validate(&self, v: &KnobValue) -> Result<()> {
+        let bad = |reason: String| {
+            Err(ActsError::KnobDomain { knob: self.name.clone(), reason })
+        };
+        match (&self.domain, v) {
+            (KnobDomain::Bool, KnobValue::Bool(_)) => Ok(()),
+            (KnobDomain::Enum(levels), KnobValue::Enum(i)) => {
+                if *i < levels.len() {
+                    Ok(())
+                } else {
+                    bad(format!("enum level {i} out of {}", levels.len()))
+                }
+            }
+            (KnobDomain::Int { lo, hi, .. }, KnobValue::Int(x)) => {
+                if (lo..=hi).contains(&x) {
+                    Ok(())
+                } else {
+                    bad(format!("{x} outside [{lo}, {hi}]"))
+                }
+            }
+            (KnobDomain::Float { lo, hi, .. }, KnobValue::Float(x)) => {
+                if x.is_finite() && *x >= *lo && *x <= *hi {
+                    Ok(())
+                } else {
+                    bad(format!("{x} outside [{lo}, {hi}]"))
+                }
+            }
+            _ => bad("type mismatch".into()),
+        }
+    }
+
+    /// Encode a (valid) value into [0, 1].
+    pub fn encode(&self, v: &KnobValue) -> f64 {
+        encode::encode_knob(&self.domain, v)
+    }
+
+    /// Decode (snap) a unit value into the nearest representable setting.
+    pub fn decode(&self, u: f64) -> KnobValue {
+        encode::decode_knob(&self.domain, u)
+    }
+
+    /// Number of distinct representable settings (None for floats).
+    pub fn cardinality(&self) -> Option<u64> {
+        match &self.domain {
+            KnobDomain::Bool => Some(2),
+            KnobDomain::Enum(l) => Some(l.len() as u64),
+            KnobDomain::Int { lo, hi, .. } => Some((hi - lo + 1) as u64),
+            KnobDomain::Float { .. } => None,
+        }
+    }
+}
+
+/// A concrete configuration: values aligned with a space's knob order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    values: Vec<KnobValue>,
+}
+
+impl Config {
+    /// Values in knob order.
+    pub fn values(&self) -> &[KnobValue] {
+        &self.values
+    }
+}
+
+/// An ordered set of knobs plus name lookup.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigSpace {
+    knobs: Vec<Knob>,
+    by_name: HashMap<String, usize>,
+}
+
+impl ConfigSpace {
+    /// Build from a knob list. Panics on duplicate names (programmer error).
+    pub fn new(knobs: Vec<Knob>) -> ConfigSpace {
+        let mut by_name = HashMap::with_capacity(knobs.len());
+        for (i, k) in knobs.iter().enumerate() {
+            let prev = by_name.insert(k.name.clone(), i);
+            assert!(prev.is_none(), "duplicate knob name {}", k.name);
+        }
+        ConfigSpace { knobs, by_name }
+    }
+
+    /// Dimensionality (number of knobs).
+    pub fn dim(&self) -> usize {
+        self.knobs.len()
+    }
+
+    /// The knob list, in encoding order.
+    pub fn knobs(&self) -> &[Knob] {
+        &self.knobs
+    }
+
+    /// Index of a knob by name.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.by_name.get(name).copied().ok_or_else(|| ActsError::UnknownKnob(name.into()))
+    }
+
+    /// Knob by name.
+    pub fn knob(&self, name: &str) -> Result<&Knob> {
+        Ok(&self.knobs[self.index_of(name)?])
+    }
+
+    /// The shipped-default configuration.
+    pub fn default_config(&self) -> Config {
+        Config { values: self.knobs.iter().map(|k| k.default.clone()).collect() }
+    }
+
+    /// Build a config from (name, value) pairs over the default baseline.
+    pub fn config_with(&self, overrides: &[(&str, KnobValue)]) -> Result<Config> {
+        let mut cfg = self.default_config();
+        for (name, v) in overrides {
+            let i = self.index_of(name)?;
+            self.knobs[i].validate(v)?;
+            cfg.values[i] = v.clone();
+        }
+        Ok(cfg)
+    }
+
+    /// Validate every value of a config against its knob.
+    pub fn validate(&self, cfg: &Config) -> Result<()> {
+        if cfg.values.len() != self.dim() {
+            return Err(ActsError::InvalidArg(format!(
+                "config has {} values, space has {} knobs",
+                cfg.values.len(),
+                self.dim()
+            )));
+        }
+        for (k, v) in self.knobs.iter().zip(&cfg.values) {
+            k.validate(v)?;
+        }
+        Ok(())
+    }
+
+    /// Encode a config to the unit hypercube.
+    pub fn encode(&self, cfg: &Config) -> Vec<f64> {
+        self.knobs.iter().zip(&cfg.values).map(|(k, v)| k.encode(v)).collect()
+    }
+
+    /// Decode (snap) a unit vector to the nearest representable config.
+    pub fn decode(&self, u: &[f64]) -> Config {
+        assert_eq!(u.len(), self.dim(), "unit vector dim mismatch");
+        Config {
+            values: self.knobs.iter().zip(u).map(|(k, &x)| k.decode(x)).collect(),
+        }
+    }
+
+    /// Snap a unit vector onto representable settings:
+    /// `snap(u) = encode(decode(u))`. Idempotent.
+    pub fn snap(&self, u: &[f64]) -> Vec<f64> {
+        self.encode(&self.decode(u))
+    }
+
+    /// Uniformly random unit point (continuous, pre-snap).
+    pub fn random_unit(&self, rng: &mut crate::util::rng::Rng64) -> Vec<f64> {
+        (0..self.dim()).map(|_| rng.f64()).collect()
+    }
+
+    /// Pretty-print a config as `name=value` lines.
+    pub fn render(&self, cfg: &Config) -> String {
+        self.knobs
+            .iter()
+            .zip(cfg.values())
+            .map(|(k, v)| match (&k.domain, v) {
+                (KnobDomain::Enum(levels), KnobValue::Enum(i)) => {
+                    format!("{}={}", k.name, levels[*i])
+                }
+                _ => format!("{}={}", k.name, v),
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::prop;
+    use crate::util::rng::Rng64;
+
+    fn demo_space() -> ConfigSpace {
+        ConfigSpace::new(vec![
+            Knob::bool("flag", false),
+            Knob::enumeration("mode", &["off", "demand", "on"], 1),
+            Knob::int("threads", 1, 64, 8),
+            Knob::log_int("buffer_bytes", 1024, 1 << 30, 1 << 20),
+            Knob::float("ratio", 0.0, 1.0, 0.5),
+            Knob::log_float("timeout_s", 0.001, 100.0, 1.0),
+        ])
+    }
+
+    #[test]
+    fn default_config_is_valid_and_roundtrips() {
+        let s = demo_space();
+        let c = s.default_config();
+        s.validate(&c).unwrap();
+        let u = s.encode(&c);
+        assert_eq!(u.len(), s.dim());
+        assert!(u.iter().all(|x| (0.0..=1.0).contains(x)));
+        assert_eq!(s.decode(&u), c);
+    }
+
+    #[test]
+    fn config_with_overrides() {
+        let s = demo_space();
+        let c = s
+            .config_with(&[("threads", KnobValue::Int(32)), ("flag", KnobValue::Bool(true))])
+            .unwrap();
+        let i = s.index_of("threads").unwrap();
+        assert_eq!(c.values()[i], KnobValue::Int(32));
+        assert!(s.config_with(&[("nope", KnobValue::Int(1))]).is_err());
+        assert!(s.config_with(&[("threads", KnobValue::Int(1000))]).is_err());
+        assert!(s.config_with(&[("threads", KnobValue::Bool(true))]).is_err());
+    }
+
+    #[test]
+    fn snap_is_idempotent_prop() {
+        let s = demo_space();
+        prop::check(300, 0xACC5, |g| {
+            let u: Vec<f64> = (0..s.dim()).map(|_| g.f64(0.0, 1.0)).collect();
+            let s1 = s.snap(&u);
+            let s2 = s.snap(&s1);
+            for (a, b) in s1.iter().zip(&s2) {
+                if (a - b).abs() > 1e-12 {
+                    return Err(format!("snap not idempotent: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_prop() {
+        // decode(encode(c)) == c for every representable config
+        let s = demo_space();
+        prop::check(300, 0xBEEF, |g| {
+            let u: Vec<f64> = (0..s.dim()).map(|_| g.f64(0.0, 1.0)).collect();
+            let c = s.decode(&u);
+            s.validate(&c).map_err(|e| e.to_string())?;
+            let c2 = s.decode(&s.encode(&c));
+            prop::assert_prop(c == c2, format!("roundtrip mismatch: {c:?} vs {c2:?}"))
+        });
+    }
+
+    #[test]
+    fn log_knob_default_encodes_mid_decades() {
+        let k = Knob::log_int("b", 1024, 1 << 30, 1 << 20);
+        // 2^20 is mid-way between 2^10 and 2^30 in log space
+        let u = k.encode(&KnobValue::Int(1 << 20));
+        assert!((u - 0.5).abs() < 1e-9, "u = {u}");
+    }
+
+    #[test]
+    fn enum_decode_snaps_to_levels() {
+        let k = Knob::enumeration("m", &["a", "b", "c"], 0);
+        assert_eq!(k.decode(0.0), KnobValue::Enum(0));
+        assert_eq!(k.decode(0.49), KnobValue::Enum(1));
+        assert_eq!(k.decode(0.51), KnobValue::Enum(1));
+        assert_eq!(k.decode(1.0), KnobValue::Enum(2));
+    }
+
+    #[test]
+    fn bool_decode_threshold() {
+        let k = Knob::bool("f", false);
+        assert_eq!(k.decode(0.4999), KnobValue::Bool(false));
+        assert_eq!(k.decode(0.5), KnobValue::Bool(true));
+    }
+
+    #[test]
+    fn cardinality() {
+        let s = demo_space();
+        assert_eq!(s.knob("flag").unwrap().cardinality(), Some(2));
+        assert_eq!(s.knob("mode").unwrap().cardinality(), Some(3));
+        assert_eq!(s.knob("threads").unwrap().cardinality(), Some(64));
+        assert_eq!(s.knob("ratio").unwrap().cardinality(), None);
+    }
+
+    #[test]
+    fn validate_rejects_wrong_arity() {
+        let s = demo_space();
+        let c = Config { values: vec![KnobValue::Bool(true)] };
+        assert!(s.validate(&c).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate knob name")]
+    fn duplicate_names_panic() {
+        ConfigSpace::new(vec![Knob::bool("x", false), Knob::bool("x", true)]);
+    }
+
+    #[test]
+    fn render_names_enum_levels() {
+        let s = demo_space();
+        let text = s.render(&s.default_config());
+        assert!(text.contains("mode=demand"));
+        assert!(text.contains("threads=8"));
+    }
+
+    #[test]
+    fn random_unit_in_bounds() {
+        let s = demo_space();
+        let mut rng = Rng64::new(3);
+        for _ in 0..100 {
+            let u = s.random_unit(&mut rng);
+            assert!(u.iter().all(|x| (0.0..1.0).contains(x)));
+        }
+    }
+
+    #[test]
+    fn int_decode_covers_full_range_inclusive() {
+        let k = Knob::int("t", 1, 64, 8);
+        assert_eq!(k.decode(0.0), KnobValue::Int(1));
+        assert_eq!(k.decode(1.0), KnobValue::Int(64));
+    }
+}

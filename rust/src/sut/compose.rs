@@ -1,0 +1,128 @@
+//! Co-deployment composition (§2.2, §5.5): multiple SUTs tuned together
+//! as one configuration space, coupled through a bottleneck model.
+//!
+//! The combined space concatenates each member's knobs under a
+//! `member.` prefix. Evaluation (manipulator::simulated) runs each
+//! member's surface on its own knob slice and combines:
+//!
+//! * throughput = min over members (pipeline bottleneck — a request
+//!   passes through every tier);
+//! * latency = sum over members (tiers are serial);
+//! * each member sees extra deployment *interference* proportional to
+//!   the number of co-deployed systems (shared CPU/memory/network,
+//!   §2.2's "co-deployed software has intrinsic impacts").
+
+use super::SutSpec;
+use crate::space::ConfigSpace;
+
+/// A co-deployed stack of SUTs sharing one tuning session.
+#[derive(Clone, Debug)]
+pub struct Composed {
+    /// Stack name, e.g. `frontend+mysql`.
+    pub name: String,
+    /// Members in pipeline order (requests hit members[0] first).
+    pub members: Vec<SutSpec>,
+    /// Knob-index offset of each member in the combined space.
+    offsets: Vec<usize>,
+    space: ConfigSpace,
+}
+
+/// Interference added to each member's deployment per co-deployed peer.
+pub const INTERFERENCE_PER_PEER: f32 = 0.18;
+
+impl Composed {
+    /// Compose a stack. Panics on empty member list.
+    pub fn new(members: Vec<SutSpec>) -> Composed {
+        assert!(!members.is_empty(), "empty composition");
+        let name = members.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join("+");
+        let mut knobs = Vec::new();
+        let mut offsets = Vec::with_capacity(members.len());
+        for m in &members {
+            offsets.push(knobs.len());
+            knobs.extend(m.space.knobs().iter().cloned().map(|mut k| {
+                k.name = format!("{}.{}", m.name, k.name);
+                k
+            }));
+        }
+        let space = ConfigSpace::new(knobs);
+        Composed { name, members, offsets, space }
+    }
+
+    /// The combined configuration space.
+    pub fn space(&self) -> &ConfigSpace {
+        &self.space
+    }
+
+    /// Slice a combined unit vector into per-member unit vectors.
+    pub fn split_unit<'a>(&self, unit: &'a [f64]) -> Vec<&'a [f64]> {
+        assert_eq!(unit.len(), self.space.dim());
+        self.members
+            .iter()
+            .zip(&self.offsets)
+            .map(|(m, &off)| &unit[off..off + m.space.dim()])
+            .collect()
+    }
+
+    /// The interference level each member experiences from its peers.
+    pub fn interference(&self) -> f32 {
+        INTERFERENCE_PER_PEER * (self.members.len() as f32 - 1.0)
+    }
+
+    /// Combine member measurements into stack-level performance:
+    /// (throughput = min, latency = sum).
+    pub fn combine(perfs: &[crate::runtime::engine::Perf]) -> crate::runtime::engine::Perf {
+        assert!(!perfs.is_empty());
+        crate::runtime::engine::Perf {
+            throughput: perfs.iter().map(|p| p.throughput).fold(f64::INFINITY, f64::min),
+            latency: perfs.iter().map(|p| p.latency).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::engine::Perf;
+    use crate::sut::{frontend, mysql};
+
+    fn stack() -> Composed {
+        Composed::new(vec![frontend(), mysql()])
+    }
+
+    #[test]
+    fn combined_space_concatenates_with_prefixes() {
+        let c = stack();
+        assert_eq!(c.space().dim(), frontend().space.dim() + mysql().space.dim());
+        assert!(c.space().index_of("frontend.cache_size_mb").is_ok());
+        assert!(c.space().index_of("mysql.innodb_buffer_pool_size").is_ok());
+        assert_eq!(c.name, "frontend+mysql");
+    }
+
+    #[test]
+    fn split_unit_slices_align() {
+        let c = stack();
+        let unit: Vec<f64> = (0..c.space().dim()).map(|i| i as f64 / 100.0).collect();
+        let parts = c.split_unit(&unit);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].len(), frontend().space.dim());
+        assert_eq!(parts[1].len(), mysql().space.dim());
+        assert_eq!(parts[0][0], 0.0);
+        assert_eq!(parts[1][0], frontend().space.dim() as f64 / 100.0);
+    }
+
+    #[test]
+    fn combine_is_min_throughput_sum_latency() {
+        let p = Composed::combine(&[
+            Perf { throughput: 100.0, latency: 2.0 },
+            Perf { throughput: 70.0, latency: 3.0 },
+        ]);
+        assert_eq!(p.throughput, 70.0);
+        assert_eq!(p.latency, 5.0);
+    }
+
+    #[test]
+    fn interference_scales_with_peers() {
+        assert_eq!(Composed::new(vec![mysql()]).interference(), 0.0);
+        assert!(stack().interference() > 0.1);
+    }
+}

@@ -1,0 +1,69 @@
+//! Simulated JVM — the co-deployed software of §2.2 (tuning guides tell
+//! users to tune Hadoop *and* the JVM together; same story for Tomcat).
+//! Usable standalone (a 12-knob SUT) or composed into `tomcat-jvm`.
+
+use super::params::{basis, ParamsBuilder};
+use super::SutSpec;
+use crate::space::{ConfigSpace, Knob};
+use crate::workload::feat;
+
+/// The JVM knob list (shared with the composed tomcat-jvm space).
+pub fn jvm_knobs() -> Vec<Knob> {
+    vec![
+        Knob::log_int("Xmx_mb", 256, 65_536, 1024),
+        Knob::int("NewRatio", 1, 8, 2),
+        Knob::int("SurvivorRatio", 1, 16, 8),
+        Knob::int("TargetSurvivorRatio", 10, 90, 50),
+        Knob::log_int("MaxGCPauseMillis", 10, 2000, 200),
+        Knob::int("ParallelGCThreads", 1, 32, 8),
+        Knob::enumeration("gcCollector", &["SerialGC", "ParallelGC", "CMS", "G1GC"], 1),
+        Knob::bool("TieredCompilation", true),
+        Knob::log_int("ThreadStackSize_kb", 128, 8192, 512),
+        Knob::log_int("MetaspaceSize_mb", 16, 2048, 64),
+        Knob::log_int("CompileThreshold", 100, 100_000, 10_000),
+        Knob::int("InlineSmallCode_bytes", 500, 4000, 1000),
+    ]
+}
+
+/// Build the standalone JVM SUT.
+pub fn jvm() -> SutSpec {
+    let space = ConfigSpace::new(jvm_knobs());
+    let idx = |name: &str| space.index_of(name).expect("declared above");
+    let mut b = ParamsBuilder::new(space.dim(), 0x5EED_1A7A);
+
+    let heap = idx("Xmx_mb");
+    b.basis(heap, basis::LIN, feat::BIAS, 0.9).basis(heap, basis::QUAD, feat::BIAS, -0.35);
+    let nr = idx("NewRatio");
+    b.basis(nr, basis::HUMP, feat::BIAS, 0.3);
+    let tsr = idx("TargetSurvivorRatio");
+    b.basis(tsr, basis::HUMP, feat::BIAS, 0.35);
+    let gc = idx("gcCollector");
+    b.basis(gc, basis::LIN, feat::CONCURRENCY, 0.4);
+    let gct = idx("ParallelGCThreads");
+    b.basis(gct, basis::HUMP, feat::CONCURRENCY, 0.3);
+    let tc = idx("TieredCompilation");
+    b.basis(tc, basis::LIN, feat::BIAS, 0.2);
+    b.interaction(feat::BIAS, heap, nr, 0.2).interaction(feat::BIAS, tsr, nr, 0.15);
+    b.noise_fill(0.04, 0.01);
+    b.dep_weights([0.2, 0.4, 0.5, -0.6]);
+    b.consts(900.0, 1.0, 30.0, 2500.0);
+    SutSpec { name: "jvm".into(), space: space.clone(), params: b.build() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_knobs() {
+        assert_eq!(jvm().space.dim(), 12);
+    }
+
+    #[test]
+    fn heap_default_encodes_low() {
+        let s = jvm();
+        let u = s.space.encode(&s.space.default_config());
+        let h = s.space.index_of("Xmx_mb").unwrap();
+        assert!(u[h] < 0.35);
+    }
+}

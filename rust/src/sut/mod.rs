@@ -1,0 +1,127 @@
+//! The systems under tune.
+//!
+//! The paper evaluates on live MySQL, Tomcat and Spark deployments; here
+//! each SUT is a *simulated* deployment whose performance surface is the
+//! compiled XLA artifact parameterised by the blocks built in this
+//! module (see DESIGN.md §1 for why the substitution preserves the
+//! tuner-facing behaviour). Every structural claim of the paper's §2.2
+//! is engineered into the parameter blocks and asserted by tests:
+//!
+//! * MySQL (Fig. 1a/1d): `query_cache_type` dominates under uniform
+//!   read (a dominance *gate*), not under zipfian read-write; huge
+//!   dynamic range (§5.1's 12x) dominated by the buffer pool.
+//! * Tomcat (Fig. 1b/1e): irregularly bumpy surface (RBF bumps); the
+//!   co-deployed JVM's `TargetSurvivorRatio` shifts the optimum.
+//! * Spark (Fig. 1c/1f): smooth standalone, sharp cliff at
+//!   `executor.cores`=4 in cluster mode (deployment-gated cliff).
+//! * front-end cache/LB (§5.5): a capacity-capped tier for the
+//!   bottleneck-identification experiment.
+
+mod frontend;
+mod jvm;
+mod mysql;
+pub mod params;
+mod spark;
+mod tomcat;
+
+pub mod compose;
+
+pub use compose::Composed;
+pub use frontend::frontend;
+pub use jvm::jvm;
+pub use mysql::mysql;
+pub use spark::spark;
+pub use tomcat::{tomcat, tomcat_arm_vm, tomcat_with_jvm};
+
+use crate::runtime::engine::SurfaceParams;
+use crate::space::ConfigSpace;
+
+/// One simulated system-under-tune: its knob space plus the surface
+/// parameter blocks the artifact consumes.
+#[derive(Clone, Debug)]
+pub struct SutSpec {
+    /// Registry name (e.g. `mysql`).
+    pub name: String,
+    /// The tunable knobs, as the real system spells them.
+    pub space: ConfigSpace,
+    /// Surface parameter blocks (artifact inputs).
+    pub params: SurfaceParams,
+}
+
+/// Resolve a SUT by registry name.
+pub fn by_name(name: &str) -> Option<SutSpec> {
+    match name {
+        "mysql" => Some(mysql()),
+        "tomcat" => Some(tomcat()),
+        "tomcat-arm" => Some(tomcat_arm_vm()),
+        "tomcat-jvm" => Some(tomcat_with_jvm()),
+        "spark" => Some(spark()),
+        "jvm" => Some(jvm()),
+        "frontend" => Some(frontend()),
+        _ => None,
+    }
+}
+
+/// Registry names.
+pub const SUT_NAMES: &[&str] =
+    &["mysql", "tomcat", "tomcat-arm", "tomcat-jvm", "spark", "jvm", "frontend"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::shapes::D_PAD;
+
+    #[test]
+    fn registry_resolves_and_validates() {
+        for name in SUT_NAMES {
+            let sut = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(&sut.name, name);
+            assert!(sut.space.dim() >= 8, "{name} has too few knobs");
+            assert!(sut.space.dim() <= D_PAD, "{name} exceeds artifact width");
+            sut.params.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            // default config must encode and validate
+            let cfg = sut.space.default_config();
+            sut.space.validate(&cfg).unwrap();
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn knob_counts_match_paper_scale() {
+        // the paper tunes dozens of knobs per system
+        assert!(mysql().space.dim() >= 35);
+        assert!(tomcat().space.dim() >= 20);
+        assert!(spark().space.dim() >= 24);
+        assert!(jvm().space.dim() >= 10);
+        // composed tomcat+jvm is the §2.2 co-deployment case
+        assert_eq!(tomcat_with_jvm().space.dim(), tomcat().space.dim() + jvm().space.dim());
+    }
+
+    #[test]
+    fn padded_lanes_are_inert() {
+        // parameters must be zero beyond each SUT's active dims so the
+        // zero-padded config lanes cannot influence the surface
+        for name in SUT_NAMES {
+            let sut = by_name(name).unwrap();
+            let d = sut.space.dim();
+            let p = &sut.params;
+            for pad in d..D_PAD {
+                for c in 0..4 {
+                    for f in 0..8 {
+                        let v = p.m[c * (D_PAD * 8) + pad * 8 + f];
+                        assert_eq!(v, 0.0, "{name}: m active on padded lane {pad}");
+                    }
+                }
+                for w in 0..8 {
+                    for j in 0..D_PAD {
+                        assert_eq!(p.qs[w * D_PAD * D_PAD + pad * D_PAD + j], 0.0, "{name} qs");
+                        assert_eq!(p.qs[w * D_PAD * D_PAD + j * D_PAD + pad], 0.0, "{name} qs");
+                    }
+                }
+                for row in 0..12 {
+                    assert_eq!(p.dirs[row * D_PAD + pad], 0.0, "{name} dirs lane {pad}");
+                }
+            }
+        }
+    }
+}

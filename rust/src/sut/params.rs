@@ -1,0 +1,335 @@
+//! Builder for per-SUT surface parameter blocks.
+//!
+//! The artifact consumes flat row-major blocks (runtime::shapes); this
+//! builder exposes them knob-by-knob so the SUT definitions read like
+//! performance folklore ("buffer pool helps, more under skew; flush=1 is
+//! the slow-but-safe middle enum level") instead of index arithmetic.
+//!
+//! Basis components per knob (kernels/ref.py): 0 -> u (linear),
+//! 1 -> u^2 (convexity), 2 -> sin(pi u) (mid-range hump), 3 ->
+//! sigmoid(s(u - t)) (threshold/step).
+
+use crate::runtime::engine::SurfaceParams;
+use crate::runtime::shapes::{D_PAD, E_DIM, G, J, R, W_DIM};
+use crate::util::rng::Rng64;
+
+/// Basis component ids.
+pub mod basis {
+    /// Linear in the knob.
+    pub const LIN: usize = 0;
+    /// Quadratic.
+    pub const QUAD: usize = 1;
+    /// Mid-range hump (sin pi u): positive weight = optimum mid-range,
+    /// negative = mid-range is the *worst* setting.
+    pub const HUMP: usize = 2;
+    /// Threshold step (needs `step_shape` to set slope/threshold).
+    pub const STEP: usize = 3;
+}
+
+/// Incremental builder over `active` knob dimensions.
+pub struct ParamsBuilder {
+    active: usize,
+    p: SurfaceParams,
+    bumps_used: usize,
+    cliffs_used: usize,
+    gates_used: usize,
+    rng: Rng64,
+}
+
+impl ParamsBuilder {
+    /// New builder for a SUT with `active` knobs, seeded for the random
+    /// fill. All blocks start zero (inert surface).
+    pub fn new(active: usize, seed: u64) -> ParamsBuilder {
+        assert!(active <= D_PAD, "too many knobs for artifact");
+        ParamsBuilder {
+            active,
+            p: SurfaceParams::zeros(),
+            bumps_used: 0,
+            cliffs_used: 0,
+            gates_used: 0,
+            rng: Rng64::new(seed),
+        }
+    }
+
+    /// Add basis weight: knob `d`, component `c`, workload feature `f`.
+    pub fn basis(&mut self, d: usize, c: usize, f: usize, val: f32) -> &mut Self {
+        assert!(d < self.active && c < 4 && f < W_DIM);
+        self.p.m[c * (D_PAD * W_DIM) + d * W_DIM + f] += val;
+        self
+    }
+
+    /// Set the step-basis shape of knob `d`: slope and threshold.
+    pub fn step_shape(&mut self, d: usize, slope: f32, threshold: f32) -> &mut Self {
+        assert!(d < self.active);
+        self.p.step_s[d] = slope;
+        self.p.step_t[d] = threshold;
+        self
+    }
+
+    /// Pairwise interaction between knobs `i` and `j` under workload
+    /// feature `f` (symmetric; `u_i * u_j` contributes `2*val` at full).
+    pub fn interaction(&mut self, f: usize, i: usize, j: usize, val: f32) -> &mut Self {
+        assert!(i < self.active && j < self.active && f < W_DIM);
+        self.p.qs[f * D_PAD * D_PAD + i * D_PAD + j] += val;
+        self.p.qs[f * D_PAD * D_PAD + j * D_PAD + i] += val;
+        self
+    }
+
+    /// Add an RBF bump at `center` ((knob, position) pairs; unspecified
+    /// active knobs get the midpoint 0.5), with width `rho` and
+    /// amplitude per workload feature.
+    pub fn bump(&mut self, center: &[(usize, f32)], rho: f32, amps: &[(usize, f32)]) -> &mut Self {
+        assert!(self.bumps_used < J, "out of bump slots");
+        let j = self.bumps_used;
+        self.bumps_used += 1;
+        for d in 0..self.active {
+            self.p.centers[j * D_PAD + d] = 0.5;
+        }
+        for &(d, pos) in center {
+            assert!(d < self.active);
+            self.p.centers[j * D_PAD + d] = pos;
+        }
+        // NB: distance only accrues on active dims because padded config
+        // lanes are 0 and padded center lanes are 0 too.
+        self.p.inv_rho2[j] = 1.0 / (rho * rho);
+        for &(f, a) in amps {
+            assert!(f < W_DIM);
+            self.p.amps_w[j * W_DIM + f] = a;
+        }
+        self
+    }
+
+    /// Scatter `n` random bumps near a base point (surface texture —
+    /// Tomcat's Fig. 1b irregularity). Each bump's center is the base
+    /// point jittered a little per dim, then fully randomised along
+    /// `vary_dims` knobs drawn from `pool` (the knobs plots sweep) — so
+    /// low-dimensional slices *through the base point* (exactly what
+    /// Fig. 1 plots) actually cross several off-center bumps instead of
+    /// missing them in the 20+-dimensional ambient space. Amplitudes
+    /// alternate sign.
+    pub fn scatter_bumps(
+        &mut self,
+        base: &[f64],
+        pool: &[usize],
+        vary_dims: usize,
+        n: usize,
+        rho: f32,
+        amp: f32,
+        f: usize,
+    ) -> &mut Self {
+        assert_eq!(base.len(), self.active, "base point dim mismatch");
+        assert!(!pool.is_empty() && pool.iter().all(|&d| d < self.active));
+        for k in 0..n {
+            assert!(self.bumps_used < J, "out of bump slots");
+            let j = self.bumps_used;
+            self.bumps_used += 1;
+            for d in 0..self.active {
+                let jit = 0.1 * (self.rng.f32() - 0.5);
+                self.p.centers[j * D_PAD + d] = (base[d] as f32 + jit).clamp(0.0, 1.0);
+            }
+            for _ in 0..vary_dims {
+                let d = pool[self.rng.index(pool.len())];
+                self.p.centers[j * D_PAD + d] = self.rng.f32();
+            }
+            self.p.inv_rho2[j] = 1.0 / (rho * rho);
+            let sign = if k % 2 == 0 { 1.0 } else { -1.0 };
+            let jitter = 0.6 + 0.8 * self.rng.f32();
+            self.p.amps_w[j * W_DIM + f] = amp * sign * jitter;
+        }
+        self
+    }
+
+    /// Add a cliff along one knob: sigmoid(kappa (u_d - tau)) with gains
+    /// per workload feature and per deployment feature.
+    pub fn cliff(
+        &mut self,
+        d: usize,
+        tau: f32,
+        kappa: f32,
+        gains_w: &[(usize, f32)],
+        gains_e: &[(usize, f32)],
+    ) -> &mut Self {
+        assert!(self.cliffs_used < R, "out of cliff slots");
+        assert!(d < self.active);
+        let r = self.cliffs_used;
+        self.cliffs_used += 1;
+        self.p.dirs[r * D_PAD + d] = 1.0;
+        self.p.cliff_tau[r] = tau;
+        self.p.cliff_kappa[r] = kappa;
+        for &(f, g) in gains_w {
+            self.p.cliff_gain_w[r * W_DIM + f] = g;
+        }
+        for &(f, g) in gains_e {
+            assert!(f < E_DIM);
+            self.p.cliff_gain_e[r * E_DIM + f] = g;
+        }
+        self
+    }
+
+    /// Add a dominance gate on knob `d`: multiplies throughput by
+    /// `floor + (1-floor) * sigmoid(kappa (u_d - tau))`, where
+    /// `floor = sigmoid(sum_f floor_w[f] * w[f])`. Strongly negative
+    /// floor logits under a workload make the gate *dominant* there
+    /// (Fig. 1a's query cache); large positive logits disable it.
+    pub fn gate(
+        &mut self,
+        d: usize,
+        tau: f32,
+        kappa: f32,
+        floor_logits: &[(usize, f32)],
+    ) -> &mut Self {
+        assert!(self.gates_used < G, "out of gate slots");
+        assert!(d < self.active);
+        let g = self.gates_used;
+        self.gates_used += 1;
+        self.p.dirs[(R + g) * D_PAD + d] = 1.0;
+        self.p.gate_tau[g] = tau;
+        self.p.gate_kappa[g] = kappa;
+        for &(f, v) in floor_logits {
+            self.p.gate_floor_w[g * W_DIM + f] = v;
+        }
+        self
+    }
+
+    /// Add a constant score offset (uses one cliff slot with a zero
+    /// direction: sigmoid(0 * kappa) = 0.5, so gain = 2*val contributes
+    /// exactly `val` everywhere). Negative offsets push the default deep
+    /// into softplus's compressive region, widening the tuned/default
+    /// dynamic range — how the §5.1 12x spread is shaped.
+    pub fn offset(&mut self, val: f32) -> &mut Self {
+        assert!(self.cliffs_used < R, "out of cliff slots");
+        let r = self.cliffs_used;
+        self.cliffs_used += 1;
+        // dirs row stays zero
+        self.p.cliff_tau[r] = 0.0;
+        self.p.cliff_kappa[r] = 0.0;
+        self.p.cliff_gain_w[r * W_DIM + crate::workload::feat::BIAS] = 2.0 * val;
+        self
+    }
+
+    /// Deployment scale weights (throughput multiplier 2*sigmoid(e.dep_w)).
+    pub fn dep_weights(&mut self, w: [f32; E_DIM]) -> &mut Self {
+        self.p.dep_w = w.to_vec();
+        self
+    }
+
+    /// Head constants: throughput scale and the latency curve.
+    pub fn consts(&mut self, t_scale: f32, lat0: f32, lat1: f32, t_sat: f32) -> &mut Self {
+        self.p.consts = [t_scale, lat0, lat1, t_sat];
+        self
+    }
+
+    /// Low-amplitude random basis + interaction fill across all active
+    /// knobs: every knob matters a little (§2.1 — the combined impact of
+    /// many small knobs is why none can be dropped).
+    pub fn noise_fill(&mut self, basis_scale: f32, inter_scale: f32) -> &mut Self {
+        for d in 0..self.active {
+            for c in 0..2 {
+                let v = (self.rng.normal() as f32) * basis_scale;
+                self.basis(d, c, super::super::workload::feat::BIAS, v);
+            }
+        }
+        if inter_scale > 0.0 {
+            let pairs = self.active * 2;
+            for _ in 0..pairs {
+                let i = self.rng.index(self.active);
+                let j = self.rng.index(self.active);
+                if i != j {
+                    let v = (self.rng.normal() as f32) * inter_scale;
+                    self.interaction(crate::workload::feat::BIAS, i, j, v);
+                }
+            }
+        }
+        self
+    }
+
+    /// Neutralise unused gates: a gate with all-zero floor logits has
+    /// floor = sigmoid(0) = 0.5, which would halve throughput. Unused
+    /// slots get a hugely positive bias logit (floor ~= 1, no-op).
+    fn finish_gates(&mut self) {
+        for g in self.gates_used..G {
+            self.p.gate_floor_w[g * W_DIM + crate::workload::feat::BIAS] = 30.0;
+        }
+    }
+
+    /// Finalise.
+    pub fn build(mut self) -> SurfaceParams {
+        self.finish_gates();
+        self.p.validate().expect("builder produced valid params");
+        self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::feat;
+
+    #[test]
+    fn builder_produces_valid_params() {
+        let mut b = ParamsBuilder::new(10, 1);
+        b.basis(0, basis::LIN, feat::BIAS, 1.0)
+            .step_shape(1, 8.0, 0.3)
+            .basis(1, basis::STEP, feat::BIAS, 0.5)
+            .interaction(feat::BIAS, 0, 1, 0.25)
+            .bump(&[(2, 0.7)], 0.3, &[(feat::BIAS, 0.5)])
+            .cliff(3, 0.25, 20.0, &[(feat::BIAS, 0.5)], &[(0, 1.0)])
+            .gate(4, 0.25, 12.0, &[(feat::BIAS, -2.5), (feat::SKEW, 8.0)])
+            .dep_weights([0.5, 0.2, 0.2, -0.5])
+            .consts(100.0, 0.5, 40.0, 500.0)
+            .noise_fill(0.05, 0.02);
+        let p = b.build();
+        p.validate().unwrap();
+        assert_eq!(p.m[basis::LIN * (D_PAD * W_DIM) + 0 * W_DIM + feat::BIAS] > 0.9, true);
+        assert_eq!(p.consts[0], 100.0);
+    }
+
+    #[test]
+    fn unused_gates_are_neutral() {
+        let b = ParamsBuilder::new(4, 2);
+        let p = b.build();
+        for g in 0..G {
+            let logit = p.gate_floor_w[g * W_DIM + feat::BIAS];
+            assert!(logit >= 29.0, "gate {g} not neutralised: {logit}");
+        }
+    }
+
+    #[test]
+    fn interaction_is_symmetric() {
+        let mut b = ParamsBuilder::new(6, 3);
+        b.interaction(feat::BIAS, 1, 4, 0.7);
+        let p = b.build();
+        let f = feat::BIAS;
+        assert_eq!(
+            p.qs[f * D_PAD * D_PAD + 1 * D_PAD + 4],
+            p.qs[f * D_PAD * D_PAD + 4 * D_PAD + 1]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bump slots")]
+    fn bump_slots_bounded() {
+        let mut b = ParamsBuilder::new(4, 4);
+        for _ in 0..(J + 1) {
+            b.bump(&[(0, 0.5)], 0.3, &[(feat::BIAS, 0.1)]);
+        }
+    }
+
+    #[test]
+    fn scatter_bumps_fill_slots_with_alternating_signs() {
+        let mut b = ParamsBuilder::new(8, 5);
+        let base = vec![0.3; 8];
+        b.scatter_bumps(&base, &[0, 1, 2], 2, 6, 0.4, 0.5, feat::BIAS);
+        let p = b.build();
+        let signs: Vec<f32> =
+            (0..6).map(|j| p.amps_w[j * W_DIM + feat::BIAS].signum()).collect();
+        assert_eq!(signs, vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0]);
+        // non-pool dims stay near base (within the +-0.125 jitter)
+        for j in 0..6 {
+            for d in 3..8 {
+                let c = p.centers[j * D_PAD + d];
+                assert!((c - 0.3).abs() <= 0.13, "bump {j} dim {d} drifted to {c}");
+            }
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Simulated Spark deployment (Fig. 1c/1f).
+//!
+//! Standalone mode: a *smooth* surface — gentle linear/quadratic basis
+//! terms, no bumps. Cluster mode (deployment feature `CLUSTER` > 0)
+//! switches on deployment-gated cliffs: throughput rises sharply once
+//! `executor.cores` crosses 4 (the paper's observation) and again when
+//! shuffle partitions pass the cluster's parallelism, because
+//! `cliff_gain_e` puts the cliff gains on the cluster feature.
+
+use super::params::{basis, ParamsBuilder};
+use super::SutSpec;
+use crate::space::{ConfigSpace, Knob};
+use crate::workload::{dep, feat};
+
+
+/// Build the simulated Spark SUT.
+pub fn spark() -> SutSpec {
+    let space = ConfigSpace::new(vec![
+        Knob::int("executor.cores", 1, 16, 1),
+        Knob::log_int("executor.memory_mb", 512, 65_536, 1024),
+        Knob::int("executor.instances", 1, 64, 2),
+        Knob::log_int("driver.memory_mb", 512, 32_768, 1024),
+        Knob::int("default.parallelism", 8, 1000, 8),
+        Knob::int("sql.shuffle.partitions", 8, 2000, 200),
+        Knob::bool("shuffle.compress", true),
+        Knob::log_int("shuffle.file.buffer_kb", 8, 1024, 32),
+        Knob::log_int("reducer.maxSizeInFlight_mb", 8, 512, 48),
+        Knob::enumeration("serializer", &["java", "kryo"], 0),
+        Knob::log_int("kryoserializer.buffer_kb", 8, 8192, 64),
+        Knob::bool("rdd.compress", false),
+        Knob::float("memory.fraction", 0.1, 0.9, 0.6),
+        Knob::float("memory.storageFraction", 0.1, 0.9, 0.5),
+        Knob::log_int("broadcast.blockSize_mb", 1, 128, 4),
+        Knob::int("locality.wait_s", 0, 30, 3),
+        Knob::enumeration("scheduler.mode", &["FIFO", "FAIR"], 0),
+        Knob::bool("speculation", false),
+        Knob::enumeration("io.compression.codec", &["lz4", "lzf", "snappy", "zstd"], 0),
+        Knob::log_int("network.timeout_s", 30, 800, 120),
+        Knob::bool("dynamicAllocation", false),
+        Knob::int("task.cpus", 1, 4, 1),
+        Knob::log_int("files.maxPartitionBytes_mb", 16, 1024, 128),
+        Knob::int("shuffle.io.numConnectionsPerPeer", 1, 8, 1),
+        Knob::bool("shuffle.service.enabled", false),
+        Knob::log_int("storage.memoryMapThreshold_mb", 1, 64, 2),
+        Knob::float("memory.offHeap.fraction", 0.0, 0.5, 0.0),
+        Knob::int("broadcast.factor", 1, 10, 4),
+    ]);
+
+    let idx = |name: &str| space.index_of(name).expect("declared above");
+    let mut b = ParamsBuilder::new(space.dim(), 0x5EED_5A4C);
+
+    // smooth gains: memory, parallelism, serializer
+    let cores = idx("executor.cores");
+    let mem = idx("executor.memory_mb");
+    let inst = idx("executor.instances");
+    let par = idx("default.parallelism");
+    let shp = idx("sql.shuffle.partitions");
+    b.basis(cores, basis::LIN, feat::BIAS, 0.55)
+        .basis(mem, basis::LIN, feat::BIAS, 0.8)
+        .basis(mem, basis::QUAD, feat::BIAS, -0.25)
+        .basis(mem, basis::LIN, feat::COMPUTE, 0.4)
+        .basis(inst, basis::LIN, feat::BIAS, 0.5)
+        .basis(par, basis::HUMP, feat::COMPUTE, 0.45)
+        .basis(shp, basis::HUMP, feat::SCAN, 0.4);
+
+    let ser = idx("serializer");
+    b.basis(ser, basis::LIN, feat::BIAS, 0.5);
+    let mf = idx("memory.fraction");
+    b.basis(mf, basis::HUMP, feat::BIAS, 0.35);
+    let sc = idx("shuffle.compress");
+    b.basis(sc, basis::LIN, feat::SCAN, 0.25);
+    let lw = idx("locality.wait_s");
+    b.basis(lw, basis::LIN, feat::BIAS, -0.2);
+    let tc = idx("task.cpus");
+    b.basis(tc, basis::LIN, feat::BIAS, -0.3);
+
+    b.interaction(feat::BIAS, cores, inst, 0.25)
+        .interaction(feat::COMPUTE, mem, mf, 0.2)
+        .interaction(feat::SCAN, shp, par, 0.15);
+
+    // Fig. 1f: cluster-only cliffs. executor.cores encodes 4 at
+    // (4-1)/15 = 0.2; the surface rises sharply past it — but ONLY when
+    // the deployment's CLUSTER feature is set (gain lives on e, not w).
+    b.cliff(cores, 0.2, 25.0, &[], &[(dep::CLUSTER, 2.4)]);
+    // a second, smaller cliff: enough shuffle partitions to keep the
+    // cluster busy
+    b.cliff(shp, 0.45, 18.0, &[], &[(dep::CLUSTER, 0.7)]);
+
+    // NO scatter_bumps: spark's surface is the smooth one (Fig. 1c)
+    b.noise_fill(0.03, 0.008);
+
+    b.dep_weights([0.6, 0.3, 0.4, -0.5]);
+    b.consts(22.0, 200.0, 4000.0, 60.0); // throughput in jobs/hour scale
+    SutSpec { name: "spark".into(), space: space.clone(), params: b.build() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::shapes::{E_DIM, W_DIM};
+
+    #[test]
+    fn no_bumps_in_standalone_surface() {
+        let s = spark();
+        let active = s
+            .params
+            .amps_w
+            .chunks(W_DIM)
+            .filter(|c| c.iter().any(|&a| a != 0.0))
+            .count();
+        assert_eq!(active, 0, "spark must be smooth");
+    }
+
+    #[test]
+    fn cores_cliff_is_deployment_gated() {
+        let s = spark();
+        // first cliff row: gains on e only
+        let gw: f32 = s.params.cliff_gain_w[..W_DIM].iter().sum();
+        let ge = s.params.cliff_gain_e[dep::CLUSTER];
+        assert_eq!(gw, 0.0);
+        assert!(ge > 1.0);
+        let _ = E_DIM;
+    }
+
+    #[test]
+    fn cores_knob_encodes_4_at_cliff_tau() {
+        let s = spark();
+        let cores = s.space.knob("executor.cores").unwrap();
+        let u = cores.encode(&crate::space::KnobValue::Int(4));
+        assert!((u - s.params.cliff_tau[0] as f64).abs() < 0.01, "u(4)={u}");
+    }
+}

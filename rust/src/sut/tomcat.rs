@@ -1,0 +1,213 @@
+//! Simulated Tomcat deployment (Fig. 1b/1e, Table 1, §5.2).
+//!
+//! The signature property is the *irregularly bumpy* surface: many RBF
+//! bumps of alternating sign over the thread/connector knobs. On the
+//! fully-utilised ARM-VM deployment of Table 1 the headroom above the
+//! default is small (single-digit %), which the bench reproduces.
+//!
+//! `tomcat_with_jvm` is the §2.2 co-deployment: the combined space
+//! appends the JVM's knobs and adds cross-system interactions plus JVM
+//! coordinates in the bump centers — moving `TargetSurvivorRatio`
+//! *relocates the optimum* of the Tomcat projection exactly as Fig. 1e
+//! shows.
+
+use super::jvm::jvm_knobs;
+use super::params::{basis, ParamsBuilder};
+use super::SutSpec;
+use crate::space::{ConfigSpace, Knob};
+use crate::workload::feat;
+
+/// Tomcat's own knobs.
+fn tomcat_knobs() -> Vec<Knob> {
+    vec![
+        Knob::int("maxThreads", 25, 1000, 200),
+        Knob::int("minSpareThreads", 1, 100, 10),
+        Knob::int("acceptCount", 10, 1000, 100),
+        Knob::int("acceptorThreadCount", 1, 4, 1),
+        Knob::log_int("connectionTimeout_ms", 1000, 120_000, 20_000),
+        Knob::log_int("keepAliveTimeout_ms", 1000, 120_000, 20_000),
+        Knob::int("maxKeepAliveRequests", 1, 1000, 100),
+        Knob::log_int("maxConnections", 256, 65_536, 8192),
+        Knob::log_int("socketBuffer", 1024, 1 << 20, 9000),
+        Knob::enumeration("compression", &["off", "on", "force"], 0),
+        Knob::log_int("compressionMinSize", 256, 1 << 20, 2048),
+        Knob::int("processorCache", 0, 1000, 200),
+        Knob::bool("tcpNoDelay", true),
+        Knob::bool("enableLookups", false),
+        Knob::log_int("maxHttpHeaderSize", 2048, 65_536, 8192),
+        Knob::int("sessionTimeout_min", 1, 120, 30),
+        Knob::log_int("cacheMaxSize_kb", 1024, 1 << 20, 10_240),
+        Knob::int("cacheTtl_s", 1, 3600, 5),
+        Knob::int("dbPoolSize", 2, 200, 20),
+        Knob::bool("useSendfile", true),
+        Knob::int("utilityThreads", 1, 16, 2),
+        Knob::log_int("asyncTimeout_ms", 1000, 120_000, 30_000),
+        Knob::log_int("maxPostSize", 1 << 12, 1 << 26, 1 << 21),
+        Knob::int("bufferPoolSize", 10, 500, 100),
+    ]
+}
+
+fn build_tomcat_surface(
+    b: &mut ParamsBuilder,
+    idx: &dyn Fn(&str) -> usize,
+    base: &[f64],
+    bump_amp: f32,
+) {
+    // thread pool: the main hump — too few threads starves, too many
+    // thrashes the 4 application cores of the §5.2 VM.
+    let mt = idx("maxThreads");
+    b.basis(mt, basis::LIN, feat::BIAS, 0.5)
+        .basis(mt, basis::QUAD, feat::BIAS, -0.45)
+        .basis(mt, basis::HUMP, feat::CONCURRENCY, 0.5);
+
+    let ac = idx("acceptCount");
+    b.basis(ac, basis::HUMP, feat::CONCURRENCY, 0.3);
+    let mc = idx("maxConnections");
+    b.basis(mc, basis::LIN, feat::CONCURRENCY, 0.3).basis(mc, basis::QUAD, feat::BIAS, -0.15);
+
+    // keep-alive: helps sessionful page mixes up to a point
+    let ka = idx("maxKeepAliveRequests");
+    b.basis(ka, basis::HUMP, feat::READ, 0.3);
+
+    // compression: costs CPU (force is worst on a loaded box), saves
+    // bytes for large responses
+    let cp = idx("compression");
+    b.basis(cp, basis::LIN, feat::BIAS, -0.3).basis(cp, basis::LIN, feat::SIZE, 0.45);
+
+    // static cache: read-heavy gain
+    let cm = idx("cacheMaxSize_kb");
+    b.basis(cm, basis::LIN, feat::READ, 0.35);
+    let ct = idx("cacheTtl_s");
+    b.basis(ct, basis::LIN, feat::READ, 0.15);
+
+    // db pool: hump (pool too big overloads the backend DB)
+    let dbp = idx("dbPoolSize");
+    b.basis(dbp, basis::HUMP, feat::BIAS, 0.4);
+
+    // lookups cost a DNS round-trip per request
+    let el = idx("enableLookups");
+    b.basis(el, basis::LIN, feat::BIAS, -0.35);
+    let tnd = idx("tcpNoDelay");
+    b.basis(tnd, basis::LIN, feat::BIAS, 0.15);
+
+    // socket buffers: step at the NIC's sweet spot
+    let sb = idx("socketBuffer");
+    b.step_shape(sb, 8.0, 0.35).basis(sb, basis::STEP, feat::SIZE, 0.3);
+
+    // interactions: threads x connections, threads x dbPool
+    b.interaction(feat::CONCURRENCY, mt, mc, 0.2)
+        .interaction(feat::BIAS, mt, dbp, -0.15)
+        .interaction(feat::READ, cm, ct, 0.1);
+
+    // the Fig. 1b signature: irregular bumps concentrated near the
+    // default operating point, varying mostly along the hot knobs the
+    // plots sweep (threads/accept/cache/pool) so 2-knob slices cross them
+    // the paper plots the (maxThreads, acceptCount) projection; the
+    // bumps vary along exactly those knobs so that slice shows them at
+    // full strength (centers near defaults elsewhere)
+    let pool = [mt, ac];
+    b.scatter_bumps(base, &pool, 2, 20, 0.22, bump_amp, feat::BIAS);
+    let _ = (mc, cm, dbp, ka);
+    b.noise_fill(0.04, 0.012);
+}
+
+/// Build the simulated standalone Tomcat SUT.
+pub fn tomcat() -> SutSpec {
+    let space = ConfigSpace::new(tomcat_knobs());
+    let idx = |name: &str| space.index_of(name).expect("declared above");
+    let base = space.encode(&space.default_config());
+    let mut b = ParamsBuilder::new(space.dim(), 0x5EED_8080);
+    build_tomcat_surface(&mut b, &idx, &base, 0.8);
+    // interference-sensitive (shares the VM with the network stack)
+    b.dep_weights([0.2, 0.6, 0.3, -0.9]);
+    // calibrated so Table 1's deployment measures ~3.2 Khits/s default
+    b.consts(1350.0, 1.5, 60.0, 4000.0);
+    SutSpec { name: "tomcat".into(), space: space.clone(), params: b.build() }
+}
+
+/// Build the Table-1 variant: Tomcat on the fully-utilised ARM VM
+/// (§5.2). Same knob space and bump texture, but the deployment is
+/// saturated: a large constant score offset pushes the whole surface
+/// into softplus's linear region, compressing *relative* headroom to
+/// single-digit percent (the paper's +4.07% txns) while the error model
+/// still rewards the latency improvement (failed txns go down).
+pub fn tomcat_arm_vm() -> SutSpec {
+    let space = ConfigSpace::new(tomcat_knobs());
+    let idx = |name: &str| space.index_of(name).expect("declared above");
+    let base = space.encode(&space.default_config());
+    let mut b = ParamsBuilder::new(space.dim(), 0x5EED_8080);
+    // milder texture: the saturated VM flattens the bump landscape too
+    build_tomcat_surface(&mut b, &idx, &base, 0.3);
+    // saturation: the four application cores are pegged; config changes
+    // only trim overheads at the margin
+    b.offset(14.0);
+    b.dep_weights([0.2, 0.6, 0.3, -0.9]);
+    // calibrated: default on arm-vm(interference 0.55) ~= 3235 hits/s
+    // = 978 txns/s at 3.3 hits/txn (Table 1's default row)
+    b.consts(245.0, 1.5, 60.0, 4000.0);
+    SutSpec { name: "tomcat-arm".into(), space: space.clone(), params: b.build() }
+}
+
+/// Build the co-deployed Tomcat+JVM SUT (§2.2, Fig. 1e): one combined
+/// knob space, one surface with cross-system structure.
+pub fn tomcat_with_jvm() -> SutSpec {
+    let mut knobs = tomcat_knobs();
+    knobs.extend(jvm_knobs().into_iter().map(|mut k| {
+        k.name = format!("jvm.{}", k.name);
+        k
+    }));
+    let space = ConfigSpace::new(knobs);
+    let idx = |name: &str| space.index_of(name).expect("declared above");
+    let base = space.encode(&space.default_config());
+    let mut b = ParamsBuilder::new(space.dim(), 0x5EED_8080); // same tomcat texture
+    build_tomcat_surface(&mut b, &idx, &base, 0.8);
+
+    // JVM's own effects
+    let heap = idx("jvm.Xmx_mb");
+    b.basis(heap, basis::LIN, feat::BIAS, 0.5).basis(heap, basis::QUAD, feat::BIAS, -0.2);
+    let gct = idx("jvm.ParallelGCThreads");
+    b.basis(gct, basis::HUMP, feat::BIAS, 0.25);
+    let coll = idx("jvm.gcCollector");
+    b.basis(coll, basis::LIN, feat::CONCURRENCY, 0.3);
+
+    // the Fig. 1e mechanism: TargetSurvivorRatio participates in bump
+    // geometry and interacts with the thread pool, so changing it moves
+    // where the Tomcat-projection optimum sits.
+    let tsr = idx("jvm.TargetSurvivorRatio");
+    let mt = idx("maxThreads");
+    let cm = idx("cacheMaxSize_kb");
+    b.bump(&[(tsr, 0.25), (mt, 0.35)], 0.28, &[(feat::BIAS, 0.8)])
+        .bump(&[(tsr, 0.8), (mt, 0.7)], 0.28, &[(feat::BIAS, 0.75)])
+        .bump(&[(tsr, 0.5), (cm, 0.2)], 0.3, &[(feat::BIAS, -0.5)])
+        .interaction(feat::BIAS, tsr, mt, 0.35)
+        .interaction(feat::BIAS, tsr, cm, -0.25);
+
+    b.dep_weights([0.2, 0.6, 0.3, -0.9]);
+    b.consts(1350.0, 1.5, 60.0, 4000.0);
+    SutSpec { name: "tomcat-jvm".into(), space: space.clone(), params: b.build() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tomcat_has_bumps() {
+        let s = tomcat();
+        let active_bumps = s
+            .params
+            .amps_w
+            .chunks(crate::runtime::shapes::W_DIM)
+            .filter(|c| c.iter().any(|&a| a != 0.0))
+            .count();
+        assert!(active_bumps >= 10, "only {active_bumps} bumps");
+    }
+
+    #[test]
+    fn combined_space_prefixes_jvm_knobs() {
+        let s = tomcat_with_jvm();
+        assert!(s.space.index_of("jvm.TargetSurvivorRatio").is_ok());
+        assert!(s.space.index_of("maxThreads").is_ok());
+        assert!(s.space.index_of("TargetSurvivorRatio").is_err());
+    }
+}

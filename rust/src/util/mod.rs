@@ -1,0 +1,11 @@
+//! In-repo utility substrates: PRNG stack and statistics.
+//!
+//! The offline crate set ships only `rand_core`, so the generators
+//! themselves ([`rng`]) are implemented here; [`stats`] provides the
+//! streaming/percentile statistics the measurement pipeline needs.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng64;
+pub use stats::{percentile, Summary, Welford};

@@ -1,0 +1,188 @@
+//! Operation-stream generation and trace-derived workloads.
+//!
+//! Two uses:
+//! * the staged test in the simulated staging environment replays a
+//!   generated op stream (log replay, §4.2) to derive its per-request
+//!   latency distribution;
+//! * [`TraceWorkload`] closes the loop for real applications — given a
+//!   recorded trace it *measures* the op mix and key skew and produces
+//!   the `WorkloadSpec` feature vector, so a user can tune under "the
+//!   workload my production logs actually show".
+
+use super::zipf::Zipf;
+use super::{feat, WorkloadSpec, W_FEATURES};
+use crate::util::rng::Rng64;
+
+/// Operation kind in a trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// Point read.
+    Read,
+    /// Write / update.
+    Write,
+    /// Range scan.
+    Scan,
+}
+
+/// One traced operation.
+#[derive(Clone, Copy, Debug)]
+pub struct Op {
+    /// Kind.
+    pub kind: OpKind,
+    /// Key (rank-ordered: 0 most popular under zipfian generation).
+    pub key: u64,
+    /// Payload bytes.
+    pub size: u32,
+}
+
+/// Generates op streams matching a [`WorkloadSpec`].
+pub struct OpStreamGenerator {
+    spec: WorkloadSpec,
+    zipf: Option<Zipf>,
+    keyspace: u64,
+    rng: Rng64,
+}
+
+impl OpStreamGenerator {
+    /// New generator over `keyspace` keys, seeded deterministically.
+    pub fn new(spec: WorkloadSpec, keyspace: u64, seed: u64) -> OpStreamGenerator {
+        let skew = spec.features()[feat::SKEW] as f64;
+        // map skew feature [0,1] -> zipf theta (0 = uniform sampling)
+        let zipf = if skew > 0.05 { Some(Zipf::new(keyspace, 0.4 + skew)) } else { None };
+        OpStreamGenerator { spec, zipf, keyspace, rng: Rng64::new(seed) }
+    }
+
+    /// The spec this generator realises.
+    pub fn spec(&self) -> &WorkloadSpec {
+        &self.spec
+    }
+
+    /// Generate the next operation.
+    pub fn next_op(&mut self) -> Op {
+        let f = self.spec.features();
+        let (r, w) = (f[feat::READ] as f64, f[feat::WRITE] as f64);
+        let total = (r + w + f[feat::SCAN] as f64).max(1e-9);
+        let x = self.rng.f64() * total;
+        let kind = if x < r {
+            OpKind::Read
+        } else if x < r + w {
+            OpKind::Write
+        } else {
+            OpKind::Scan
+        };
+        let key = match &self.zipf {
+            Some(z) => z.sample(&mut self.rng),
+            None => self.rng.below(self.keyspace),
+        };
+        let mean_size = 64.0 + 4096.0 * f[feat::SIZE] as f64;
+        let size = (mean_size * (0.5 + self.rng.f64())) as u32;
+        Op { kind, key, size }
+    }
+
+    /// Generate `n` operations.
+    pub fn take(&mut self, n: usize) -> Vec<Op> {
+        (0..n).map(|_| self.next_op()).collect()
+    }
+}
+
+/// A workload derived from a recorded trace (measured features).
+pub struct TraceWorkload;
+
+impl TraceWorkload {
+    /// Estimate a [`WorkloadSpec`] from a trace. Skew is estimated from
+    /// the fraction of accesses hitting the top 1% of observed keys
+    /// (inverted through the same mapping the generator uses).
+    pub fn from_ops(name: &str, ops: &[Op], keyspace: u64) -> WorkloadSpec {
+        assert!(!ops.is_empty(), "empty trace");
+        let n = ops.len() as f32;
+        let mut reads = 0f32;
+        let mut writes = 0f32;
+        let mut scans = 0f32;
+        let mut size_sum = 0f64;
+        let mut counts = std::collections::HashMap::<u64, u32>::new();
+        for op in ops {
+            match op.kind {
+                OpKind::Read => reads += 1.0,
+                OpKind::Write => writes += 1.0,
+                OpKind::Scan => scans += 1.0,
+            }
+            size_sum += op.size as f64;
+            *counts.entry(op.key).or_insert(0) += 1;
+        }
+        // head mass: fraction of ops on the top-1%-of-keyspace hottest keys
+        let mut freqs: Vec<u32> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let head_keys = ((keyspace as f64) * 0.01).ceil() as usize;
+        let head_mass: f64 = freqs.iter().take(head_keys).map(|&c| c as f64).sum::<f64>()
+            / ops.len() as f64;
+        // uniform head mass would be ~1%; map [0.01, 0.8] -> skew [0, 1]
+        let skew = (((head_mass - 0.01) / 0.79).clamp(0.0, 1.0)) as f32;
+
+        let mean_size = size_sum / ops.len() as f64;
+        let size_feat = (((mean_size - 64.0) / 4096.0).clamp(0.0, 1.0)) as f32;
+
+        let mut f = [0f32; W_FEATURES];
+        f[feat::READ] = reads / n;
+        f[feat::WRITE] = writes / n;
+        f[feat::SCAN] = scans / n;
+        f[feat::SKEW] = skew;
+        f[feat::SIZE] = size_feat;
+        f[feat::CONCURRENCY] = 0.5;
+        f[feat::COMPUTE] = 0.1 + 0.4 * (scans / n);
+        WorkloadSpec::from_features(name, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_respects_op_mix() {
+        let mut g = OpStreamGenerator::new(WorkloadSpec::zipfian_read_write(), 10_000, 7);
+        let ops = g.take(20_000);
+        let reads = ops.iter().filter(|o| o.kind == OpKind::Read).count() as f64;
+        let frac = reads / ops.len() as f64;
+        assert!((0.7..0.8).contains(&frac), "read fraction {frac}");
+    }
+
+    #[test]
+    fn uniform_spec_uses_uniform_keys() {
+        let mut g = OpStreamGenerator::new(WorkloadSpec::uniform_read(), 1000, 8);
+        let ops = g.take(50_000);
+        let head = ops.iter().filter(|o| o.key < 10).count() as f64 / ops.len() as f64;
+        assert!(head < 0.03, "uniform head mass {head}");
+    }
+
+    #[test]
+    fn trace_roundtrip_recovers_features() {
+        // generate from a known spec, re-estimate, compare key features
+        let spec = WorkloadSpec::zipfian_read_write();
+        let mut g = OpStreamGenerator::new(spec.clone(), 10_000, 9);
+        let ops = g.take(50_000);
+        let est = TraceWorkload::from_ops("estimated", &ops, 10_000);
+        let (f0, f1) = (spec.features(), est.features());
+        assert!((f0[feat::READ] - f1[feat::READ]).abs() < 0.05);
+        assert!((f0[feat::WRITE] - f1[feat::WRITE]).abs() < 0.05);
+        assert!(f1[feat::SKEW] > 0.4, "skew underestimated: {}", f1[feat::SKEW]);
+        assert_eq!(f1[feat::BIAS], 1.0);
+    }
+
+    #[test]
+    fn trace_of_uniform_reads_is_unskewed() {
+        let mut g = OpStreamGenerator::new(WorkloadSpec::uniform_read(), 10_000, 10);
+        let ops = g.take(50_000);
+        let est = TraceWorkload::from_ops("est", &ops, 10_000);
+        assert!(est.features()[feat::SKEW] < 0.1);
+        assert!(est.features()[feat::READ] > 0.95);
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mk = || {
+            let mut g = OpStreamGenerator::new(WorkloadSpec::page_mix(), 100, 11);
+            g.take(100).iter().map(|o| o.key).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(), mk());
+    }
+}

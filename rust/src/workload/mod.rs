@@ -1,0 +1,240 @@
+//! The workload generator — one of the three components of the paper's
+//! flexible architecture (Fig. 2). Satisfies *workload scalability*: new
+//! workloads integrate by declaring a [`WorkloadSpec`] (or by deriving
+//! one from a recorded operation trace, the staging-environment log
+//! replay of §4.2), and the tuner never sees anything but the trait.
+//!
+//! A workload is summarised by an 8-feature vector fed to the surface
+//! artifact (DESIGN.md §3): the performance model is workload-dependent
+//! exactly as §2.2 requires — the same SUT under uniform-read vs zipfian
+//! read-write produces different surfaces (Fig. 1a vs 1d).
+
+pub mod generator;
+pub mod zipf;
+
+pub use generator::{Op, OpKind, OpStreamGenerator, TraceWorkload};
+
+/// Workload feature vector width (mirrors the artifact's W).
+pub const W_FEATURES: usize = 8;
+
+/// Feature indices (artifact contract).
+pub mod feat {
+    /// Fraction of point reads.
+    pub const READ: usize = 0;
+    /// Fraction of writes.
+    pub const WRITE: usize = 1;
+    /// Fraction of scans.
+    pub const SCAN: usize = 2;
+    /// Key skew: 0 = uniform, ~1 = heavy zipfian.
+    pub const SKEW: usize = 3;
+    /// Normalised request payload size.
+    pub const SIZE: usize = 4;
+    /// Normalised offered concurrency.
+    pub const CONCURRENCY: usize = 5;
+    /// Compute intensity (analytics-ness).
+    pub const COMPUTE: usize = 6;
+    /// Constant bias lane (always 1.0).
+    pub const BIAS: usize = 7;
+}
+
+/// A declarative workload description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    /// Name for reports (e.g. `uniform-read`).
+    pub name: String,
+    features: [f32; W_FEATURES],
+    /// Nominal test duration in simulated seconds (staged-test cost).
+    pub duration_s: f64,
+    /// Interactions per transaction (Table 1 reports both Txns/s and
+    /// Hits/s; hits = txns * hits_per_txn).
+    pub hits_per_txn: f64,
+}
+
+impl WorkloadSpec {
+    /// Build from raw features (bias lane is forced to 1).
+    pub fn from_features(name: &str, mut features: [f32; W_FEATURES]) -> WorkloadSpec {
+        features[feat::BIAS] = 1.0;
+        WorkloadSpec { name: name.into(), features, duration_s: 300.0, hits_per_txn: 3.3 }
+    }
+
+    /// The artifact-facing feature vector.
+    pub fn features(&self) -> &[f32; W_FEATURES] {
+        &self.features
+    }
+
+    /// Builder: staged-test duration.
+    pub fn with_duration(mut self, seconds: f64) -> Self {
+        self.duration_s = seconds;
+        self
+    }
+
+    /// Builder: hits per transaction.
+    pub fn with_hits_per_txn(mut self, h: f64) -> Self {
+        self.hits_per_txn = h;
+        self
+    }
+
+    // --- the paper's workloads -------------------------------------------
+
+    /// YCSB-style uniform point reads (Fig. 1a): `query_cache_type`
+    /// dominates MySQL here.
+    pub fn uniform_read() -> WorkloadSpec {
+        Self::from_features("uniform-read", [1.0, 0.0, 0.0, 0.0, 0.3, 0.5, 0.1, 1.0])
+    }
+
+    /// YCSB-style zipfian read-write mix (Fig. 1d, §5.1's cloud
+    /// application workload).
+    pub fn zipfian_read_write() -> WorkloadSpec {
+        Self::from_features("zipfian-rw", [0.75, 0.25, 0.0, 0.9, 0.35, 0.6, 0.15, 1.0])
+    }
+
+    /// Write-heavy ingest.
+    pub fn write_heavy() -> WorkloadSpec {
+        Self::from_features("write-heavy", [0.1, 0.9, 0.0, 0.4, 0.5, 0.7, 0.1, 1.0])
+    }
+
+    /// Scan-heavy reporting.
+    pub fn scan_heavy() -> WorkloadSpec {
+        Self::from_features("scan-heavy", [0.2, 0.05, 0.75, 0.2, 0.8, 0.3, 0.4, 1.0])
+    }
+
+    /// Web page mix for Tomcat (Fig. 1b / Table 1): bursty, sessionful.
+    pub fn page_mix() -> WorkloadSpec {
+        Self::from_features("page-mix", [0.85, 0.15, 0.0, 0.6, 0.45, 0.85, 0.25, 1.0])
+            .with_hits_per_txn(3.3)
+    }
+
+    /// Batch analytics for Spark (Fig. 1c/1f).
+    pub fn batch_analytics() -> WorkloadSpec {
+        Self::from_features("batch-analytics", [0.3, 0.1, 0.5, 0.1, 0.9, 0.4, 0.95, 1.0])
+            .with_duration(900.0)
+    }
+
+    /// All built-in workloads (CLI registry).
+    pub fn by_name(name: &str) -> Option<WorkloadSpec> {
+        match name {
+            "uniform-read" => Some(Self::uniform_read()),
+            "zipfian-rw" => Some(Self::zipfian_read_write()),
+            "write-heavy" => Some(Self::write_heavy()),
+            "scan-heavy" => Some(Self::scan_heavy()),
+            "page-mix" => Some(Self::page_mix()),
+            "batch-analytics" => Some(Self::batch_analytics()),
+            _ => None,
+        }
+    }
+
+    /// Registry names.
+    pub const NAMES: &'static [&'static str] = &[
+        "uniform-read",
+        "zipfian-rw",
+        "write-heavy",
+        "scan-heavy",
+        "page-mix",
+        "batch-analytics",
+    ];
+}
+
+/// Deployment environment features (mirrors the artifact's E): the §2.2
+/// finding that deployments change the surface (Fig. 1c vs 1f).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeploymentEnv {
+    /// Name for reports (e.g. `cluster-8`).
+    pub name: String,
+    features: [f32; 4],
+}
+
+/// Deployment feature indices.
+pub mod dep {
+    /// Cluster scale: 0 = standalone, ->1 large cluster.
+    pub const CLUSTER: usize = 0;
+    /// Normalised cores per node.
+    pub const CORES: usize = 1;
+    /// Normalised memory per node.
+    pub const MEMORY: usize = 2;
+    /// Co-deployed interference pressure.
+    pub const INTERFERENCE: usize = 3;
+}
+
+impl DeploymentEnv {
+    /// Build from raw features.
+    pub fn from_features(name: &str, features: [f32; 4]) -> DeploymentEnv {
+        DeploymentEnv { name: name.into(), features }
+    }
+
+    /// The artifact-facing feature vector.
+    pub fn features(&self) -> &[f32; 4] {
+        &self.features
+    }
+
+    /// Single beefy server (Fig. 1c).
+    pub fn standalone() -> DeploymentEnv {
+        Self::from_features("standalone", [0.0, 0.5, 0.5, 0.0])
+    }
+
+    /// An `n`-node cluster (Fig. 1f). Scale saturates around 32 nodes.
+    pub fn cluster(n: usize) -> DeploymentEnv {
+        let scale = (n as f32 / 32.0).min(1.0);
+        Self::from_features(&format!("cluster-{n}"), [scale, 0.5, 0.5, 0.1])
+    }
+
+    /// The §5.2 ARM virtual machine: modest cores, network-partitioned.
+    pub fn arm_vm() -> DeploymentEnv {
+        Self::from_features("arm-vm", [0.1, 0.25, 0.3, 0.2])
+    }
+
+    /// Raise interference (co-deployed software pressure, §2.2).
+    pub fn with_interference(mut self, level: f32) -> Self {
+        self.features[dep::INTERFERENCE] = level.clamp(0.0, 1.0);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_complete() {
+        for name in WorkloadSpec::NAMES {
+            let w = WorkloadSpec::by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(&w.name, name);
+            assert_eq!(w.features()[feat::BIAS], 1.0, "{name} bias");
+        }
+        assert!(WorkloadSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn op_mix_fractions_are_sane() {
+        for name in WorkloadSpec::NAMES {
+            let w = WorkloadSpec::by_name(name).unwrap();
+            let f = w.features();
+            let mix = f[feat::READ] + f[feat::WRITE] + f[feat::SCAN];
+            assert!((0.9..=1.1).contains(&mix), "{name} mix {mix}");
+            assert!(f.iter().all(|&x| (0.0..=1.0).contains(&x)), "{name}");
+        }
+    }
+
+    #[test]
+    fn uniform_vs_zipfian_differ_in_skew() {
+        let u = WorkloadSpec::uniform_read();
+        let z = WorkloadSpec::zipfian_read_write();
+        assert_eq!(u.features()[feat::SKEW], 0.0);
+        assert!(z.features()[feat::SKEW] > 0.8);
+    }
+
+    #[test]
+    fn deployments() {
+        assert_eq!(DeploymentEnv::standalone().features()[dep::CLUSTER], 0.0);
+        assert!(DeploymentEnv::cluster(8).features()[dep::CLUSTER] > 0.2);
+        assert!(DeploymentEnv::cluster(64).features()[dep::CLUSTER] <= 1.0);
+        let d = DeploymentEnv::standalone().with_interference(0.7);
+        assert_eq!(d.features()[dep::INTERFERENCE], 0.7);
+    }
+
+    #[test]
+    fn builders() {
+        let w = WorkloadSpec::uniform_read().with_duration(60.0).with_hits_per_txn(5.0);
+        assert_eq!(w.duration_s, 60.0);
+        assert_eq!(w.hits_per_txn, 5.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Zipfian key-popularity sampling for the op-stream generator.
+//!
+//! Implements the rejection-inversion method of Hörmann & Derflinger
+//! ("Rejection-inversion to generate variates from monotone discrete
+//! distributions", 1996) — the same algorithm YCSB-style generators use,
+//! O(1) per sample for any exponent theta > 0, theta != 1 handled too.
+
+use crate::util::rng::Rng64;
+
+/// Zipf(n, theta) sampler over keys `0..n` (0 most popular,
+/// p(rank k) proportional to (k+1)^-theta).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    // precomputed constants (Hörmann & Derflinger's notation, over the
+    // internal 1-based rank domain [0.5, n + 0.5])
+    h_x1: f64,
+    h_n: f64,
+    s: f64,
+}
+
+impl Zipf {
+    /// New sampler over `n` keys with skew `theta` (> 0). `theta` near 0
+    /// approaches uniform; YCSB default is 0.99.
+    pub fn new(n: u64, theta: f64) -> Zipf {
+        assert!(n >= 1, "zipf over empty key space");
+        assert!(theta > 0.0, "theta must be > 0");
+        let h_x1 = h_integral(1.5, theta) - 1.0;
+        let h_n = h_integral(n as f64 + 0.5, theta);
+        let s = 2.0 - h_integral_inverse(h_integral(2.5, theta) - h(2.0, theta), theta);
+        Zipf { n, theta, h_x1, h_n, s }
+    }
+
+    /// Draw one key in `0..n`.
+    pub fn sample(&self, rng: &mut Rng64) -> u64 {
+        loop {
+            let u = self.h_n + rng.f64() * (self.h_x1 - self.h_n);
+            let x = h_integral_inverse(u, self.theta);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
+            if k - x <= self.s
+                || u >= h_integral(k + 0.5, self.theta) - h(k, self.theta)
+            {
+                return k as u64 - 1; // 1-based rank -> 0-based key
+            }
+        }
+    }
+
+    /// Number of keys.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+}
+
+/// h(x) = x^-theta.
+fn h(x: f64, theta: f64) -> f64 {
+    (-theta * x.ln()).exp()
+}
+
+/// H(x) = integral of h = (x^(1-theta) - 1)/(1-theta); ln(x) at theta=1.
+fn h_integral(x: f64, theta: f64) -> f64 {
+    let log_x = x.ln();
+    helper2((1.0 - theta) * log_x) * log_x
+}
+
+/// H^-1(x).
+fn h_integral_inverse(x: f64, theta: f64) -> f64 {
+    let mut t = x * (1.0 - theta);
+    if t < -1.0 {
+        t = -1.0; // guard rounding at the domain edge
+    }
+    (helper1(t) * x).exp()
+}
+
+/// ln(1+x)/x, stable near 0.
+fn helper1(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x * (0.5 - x * (1.0 / 3.0 - 0.25 * x))
+    }
+}
+
+/// (exp(x)-1)/x, stable near 0.
+fn helper2(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        1.0 + x * 0.5 * (1.0 + x / 3.0 * (1.0 + 0.25 * x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn head_mass(theta: f64, n: u64, draws: usize) -> f64 {
+        let z = Zipf::new(n, theta);
+        let mut rng = Rng64::new(42);
+        let head = n / 100; // top 1%
+        let mut hits = 0usize;
+        for _ in 0..draws {
+            if z.sample(&mut rng) <= head {
+                hits += 1;
+            }
+        }
+        hits as f64 / draws as f64
+    }
+
+    #[test]
+    fn high_theta_concentrates_mass() {
+        let skewed = head_mass(0.99, 10_000, 20_000);
+        let mild = head_mass(0.2, 10_000, 20_000);
+        assert!(skewed > 0.3, "top-1% mass {skewed} too small for theta=0.99");
+        assert!(mild < 0.12, "top-1% mass {mild} too large for theta=0.2");
+        assert!(skewed > mild * 2.0);
+    }
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(100, 0.99);
+        let mut rng = Rng64::new(1);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 100);
+        }
+    }
+
+    #[test]
+    fn theta_one_works() {
+        let z = Zipf::new(1000, 1.0);
+        let mut rng = Rng64::new(2);
+        let mut first = 0;
+        for _ in 0..10_000 {
+            if z.sample(&mut rng) == 0 {
+                first += 1;
+            }
+        }
+        // p(0) = 1/H(1000) ~ 1/7.49 ~ 0.134
+        let p = first as f64 / 10_000.0;
+        assert!((0.09..0.18).contains(&p), "p(0) = {p}");
+    }
+
+    #[test]
+    fn single_key_space() {
+        let z = Zipf::new(1, 0.99);
+        let mut rng = Rng64::new(3);
+        assert_eq!(z.sample(&mut rng), 0);
+    }
+
+    #[test]
+    fn monotone_rank_frequency() {
+        let z = Zipf::new(50, 0.99);
+        let mut rng = Rng64::new(4);
+        let mut counts = vec![0u32; 50];
+        for _ in 0..200_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        // rank 0 must dominate rank 10 must dominate rank 40
+        assert!(counts[0] > counts[10] && counts[10] > counts[40], "{counts:?}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Integration: the rust PJRT engine must reproduce, bit-for-nearly-bit,
+//! the numbers python computed for the same patterned inputs. This is
+//! the proof that all three layers compose: Pallas kernel -> jax model
+//! -> HLO text -> rust PJRT execution.
+//!
+//! Requires `make artifacts` to have run (skips loudly otherwise).
+
+use acts::runtime::{golden, shapes, Engine};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = artifacts_dir();
+    match Engine::load(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP runtime_golden: {err} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn golden_outputs_match_python() {
+    let Some(engine) = engine_or_skip() else { return };
+    let cases = golden::parse_golden(artifacts_dir().join("golden_surface.txt"))
+        .expect("golden file parses");
+    assert!(!cases.is_empty());
+    for case in &cases {
+        // 1) our input generation matches python's (checksums)
+        let (configs, w, e, params) = golden::pattern_call(case.b);
+        for (name, want) in &case.insums {
+            let idx = shapes::INPUT_SPEC
+                .iter()
+                .position(|(n, _)| n == name)
+                .unwrap_or_else(|| panic!("unknown golden input {name}"));
+            let got: f64 = golden::pattern_input(idx, case.b).iter().map(|&x| x as f64).sum();
+            let tol = 1e-4 * (1.0 + want.abs());
+            assert!(
+                (got - want).abs() < tol,
+                "insum {name} b={}: rust {got} vs python {want}",
+                case.b
+            );
+        }
+        // 2) executing the artifact reproduces python's outputs
+        let perfs = engine.evaluate(&params, &w, &e, &configs).expect("evaluate");
+        assert_eq!(perfs.len(), case.b);
+        for (i, p) in perfs.iter().enumerate() {
+            let (wt, wl) = (case.thr[i], case.lat[i]);
+            let ttol = 1e-3 * (1.0 + wt.abs());
+            let ltol = 1e-3 * (1.0 + wl.abs());
+            assert!(
+                (p.throughput - wt).abs() < ttol,
+                "thr[{i}] b={}: rust {} vs python {wt}",
+                case.b,
+                p.throughput
+            );
+            assert!(
+                (p.latency - wl).abs() < ltol,
+                "lat[{i}] b={}: rust {} vs python {wl}",
+                case.b,
+                p.latency
+            );
+        }
+    }
+}
+
+#[test]
+fn shapes_table_matches_aot_dump() {
+    let path = artifacts_dir().join("shapes.txt");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("SKIP shapes_table: {} missing", path.display());
+        return;
+    };
+    let mut inputs_seen = 0;
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("D") => assert_eq!(it.next(), Some("64")),
+            Some("J") => assert_eq!(it.next(), Some("32")),
+            Some("R") => assert_eq!(it.next(), Some("8")),
+            Some("G") => assert_eq!(it.next(), Some("4")),
+            Some("W") => assert_eq!(it.next(), Some("8")),
+            Some("E") => assert_eq!(it.next(), Some("4")),
+            Some("buckets") => {
+                let got: Vec<usize> = it.map(|v| v.parse().unwrap()).collect();
+                assert_eq!(got, shapes::BUCKETS.to_vec());
+            }
+            Some("input") => {
+                let name = it.next().unwrap();
+                // python writes the batch dim as the literal token "B";
+                // the rust spec uses 0 — normalise both to "B"
+                let got: Vec<String> = it.map(|v| v.to_string()).collect();
+                let (spec_name, spec_dims) = shapes::INPUT_SPEC[inputs_seen];
+                assert_eq!(name, spec_name, "input {inputs_seen} name");
+                let spec: Vec<String> = spec_dims
+                    .iter()
+                    .map(|&d| if d == 0 { "B".to_string() } else { d.to_string() })
+                    .collect();
+                assert_eq!(got, spec, "input {name} dims");
+                inputs_seen += 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(inputs_seen, shapes::INPUT_SPEC.len());
+}
+
+#[test]
+fn bucket_padding_and_chunking_are_transparent() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (configs, w, e, params) = golden::pattern_call(16);
+
+    // evaluate rows one-by-one (bucket 1) and all at once (bucket 16):
+    // identical numbers expected
+    let all = engine.evaluate(&params, &w, &e, &configs).unwrap();
+    for (i, c) in configs.iter().enumerate() {
+        let one = engine.evaluate(&params, &w, &e, std::slice::from_ref(c)).unwrap();
+        assert_eq!(one.len(), 1);
+        assert!(
+            (one[0].throughput - all[i].throughput).abs() < 1e-3 * (1.0 + all[i].throughput),
+            "row {i}: {} vs {}",
+            one[0].throughput,
+            all[i].throughput
+        );
+    }
+
+    // an awkward batch (B=40) must round-trip through padding
+    let mut big: Vec<Vec<f32>> = Vec::new();
+    while big.len() < 40 {
+        big.extend(configs.iter().cloned());
+    }
+    big.truncate(40);
+    let got = engine.evaluate(&params, &w, &e, &big).unwrap();
+    assert_eq!(got.len(), 40);
+    for (i, p) in got.iter().enumerate() {
+        let want = &all[i % 16];
+        assert!((p.throughput - want.throughput).abs() < 1e-3 * (1.0 + want.throughput));
+    }
+}
+
+#[test]
+fn empty_request_is_empty() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (_, w, e, params) = golden::pattern_call(1);
+    let got = engine.evaluate(&params, &w, &e, &[]).unwrap();
+    assert!(got.is_empty());
+}
+
+#[test]
+fn invalid_inputs_are_rejected() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (configs, w, e, params) = golden::pattern_call(1);
+    // wrong workload width
+    assert!(engine.evaluate(&params, &w[..4], &e, &configs).is_err());
+    // wrong config width
+    let bad = vec![vec![0.5f32; 3]];
+    assert!(engine.evaluate(&params, &w, &e, &bad).is_err());
+}

@@ -1,0 +1,191 @@
+//! Integration: full tuning sessions over the real runtime + simulated
+//! staging environment — budget accounting, determinism, failure
+//! injection, co-deployed stacks, and the paper's headline gains.
+
+use acts::experiment::{mysql_gain, Lab};
+use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
+use acts::sut::{self, Composed};
+use acts::tuner::{self, TuningConfig};
+use acts::workload::{DeploymentEnv, WorkloadSpec};
+
+fn lab_or_skip() -> Option<Lab> {
+    match Lab::new() {
+        Ok(l) => Some(l),
+        Err(e) => {
+            eprintln!("SKIP tuner_e2e: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn mysql_headline_gain_band() {
+    // §5.1: ~12x with a solid budget; assert a generous band across the
+    // stochastic run
+    let Some(lab) = lab_or_skip() else { return };
+    let out = mysql_gain::run(&lab, 200, 1).unwrap();
+    assert!((8300.0..11300.0).contains(&out.baseline.throughput));
+    let speedup = out.speedup();
+    assert!((7.0..18.0).contains(&speedup), "speedup {speedup}");
+    assert_eq!(out.tests_used, 200);
+}
+
+#[test]
+fn session_is_deterministic_given_seeds() {
+    let Some(lab) = lab_or_skip() else { return };
+    let run = || {
+        let mut sut = lab.deploy(
+            Target::Single(sut::jvm()),
+            WorkloadSpec::page_mix(),
+            DeploymentEnv::standalone(),
+            SimulationOpts::default(),
+            99,
+        );
+        let cfg = TuningConfig { budget_tests: 40, seed: 7, ..Default::default() };
+        tuner::tune(&mut sut, &cfg).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.best.throughput, b.best.throughput);
+    assert_eq!(a.best_unit, b.best_unit);
+    assert_eq!(a.records.len(), b.records.len());
+}
+
+#[test]
+fn failure_injection_is_survived() {
+    let Some(lab) = lab_or_skip() else { return };
+    let opts = SimulationOpts {
+        restart_failure_p: 0.15,
+        test_failure_p: 0.1,
+        ..SimulationOpts::default()
+    };
+    let mut sut = lab.deploy(
+        Target::Single(sut::tomcat()),
+        WorkloadSpec::page_mix(),
+        DeploymentEnv::standalone(),
+        opts,
+        3,
+    );
+    let cfg = TuningConfig { budget_tests: 80, seed: 3, ..Default::default() };
+    let out = tuner::tune(&mut sut, &cfg).unwrap();
+    assert!(out.failures > 0, "no failures injected?");
+    assert_eq!(out.tests_used, 80);
+    assert_eq!(out.records.len() as u64 + out.failures, 80);
+    assert!(out.improvement >= 0.0);
+}
+
+#[test]
+fn stack_tuning_works_end_to_end() {
+    let Some(lab) = lab_or_skip() else { return };
+    let stack = Composed::new(vec![sut::frontend(), sut::mysql()]);
+    let dim = stack.space().dim();
+    let mut sut = lab.deploy(
+        Target::Stack(stack),
+        WorkloadSpec::zipfian_read_write(),
+        DeploymentEnv::standalone(),
+        SimulationOpts::default(),
+        5,
+    );
+    assert_eq!(sut.space().dim(), dim);
+    let cfg = TuningConfig { budget_tests: 30, seed: 5, ..Default::default() };
+    let out = tuner::tune(&mut sut, &cfg).unwrap();
+    assert!(out.best.throughput >= out.baseline.throughput);
+    // the stack's throughput is capped by the front-end tier
+    assert!(out.best.throughput < 20_000.0, "cap violated: {}", out.best.throughput);
+}
+
+#[test]
+fn budget_scalability_on_the_real_surface() {
+    // §3's resource-limit scalability: bigger budgets never do worse
+    // (same seed); measured on simulated mysql
+    let Some(lab) = lab_or_skip() else { return };
+    let run = |budget| {
+        let mut sut = lab.deploy(
+            Target::Single(sut::mysql()),
+            WorkloadSpec::zipfian_read_write(),
+            DeploymentEnv::standalone(),
+            SimulationOpts { noise_sigma: 0.0, ..SimulationOpts::default() },
+            11,
+        );
+        let cfg = TuningConfig { budget_tests: budget, seed: 11, ..Default::default() };
+        tuner::tune(&mut sut, &cfg).unwrap().best.throughput
+    };
+    let b30 = run(30);
+    let b120 = run(120);
+    assert!(b120 >= b30, "budget 120 ({b120}) worse than 30 ({b30})");
+}
+
+#[test]
+fn restart_and_settle_time_are_charged() {
+    let Some(lab) = lab_or_skip() else { return };
+    let opts = SimulationOpts { restart_s: 10.0, settle_s: 20.0, ..SimulationOpts::default() };
+    let wl = WorkloadSpec::page_mix().with_duration(100.0);
+    let mut sut = lab.deploy(
+        Target::Single(sut::jvm()),
+        wl,
+        DeploymentEnv::standalone(),
+        opts,
+        13,
+    );
+    let cfg = TuningConfig { budget_tests: 5, seed: 13, ..Default::default() };
+    let out = tuner::tune(&mut sut, &cfg).unwrap();
+    // 5 tests x 100s + 4 restarts x (10+20)s = 620s
+    assert!((out.sim_seconds - 620.0).abs() < 1e-6, "sim time {}", out.sim_seconds);
+}
+
+#[test]
+fn evaluate_batch_matches_run_test_modulo_noise() {
+    let Some(lab) = lab_or_skip() else { return };
+    let mut sut = lab.deploy(
+        Target::Single(sut::spark()),
+        WorkloadSpec::batch_analytics(),
+        DeploymentEnv::cluster(8),
+        SimulationOpts::ideal(),
+        17,
+    );
+    let unit = sut.current_unit().to_vec();
+    let m = sut.run_test().unwrap();
+    let p = sut.evaluate_batch(std::slice::from_ref(&unit)).unwrap()[0];
+    assert!((m.throughput - p.throughput).abs() < 1e-6 * (1.0 + p.throughput));
+}
+
+#[test]
+fn co_deployed_systems_tune_better_jointly() {
+    // §2.2: tuning tomcat alone (JVM pinned) must lose to joint tuning
+    // of the combined space at equal budget
+    let Some(lab) = lab_or_skip() else { return };
+    let c = acts::experiment::cotuning::run(&lab, 120, 1).unwrap();
+    assert!(
+        c.joint.best.throughput > c.frozen.best.throughput,
+        "joint {} !> frozen {}",
+        c.joint.best.throughput,
+        c.frozen.best.throughput
+    );
+    assert!(c.joint_advantage() > 0.02, "advantage {:.3}", c.joint_advantage());
+}
+
+#[test]
+fn gp_surrogate_competes_at_tiny_budgets() {
+    // the model-based baseline must function end-to-end on the real
+    // surface and beat pure random at a small budget (its sweet spot)
+    let Some(lab) = lab_or_skip() else { return };
+    let run = |opt: &str| {
+        let mut sut = lab.deploy(
+            Target::Single(sut::mysql()),
+            WorkloadSpec::zipfian_read_write(),
+            DeploymentEnv::standalone(),
+            SimulationOpts { noise_sigma: 0.0, ..SimulationOpts::default() },
+            21,
+        );
+        let cfg = TuningConfig {
+            budget_tests: 30,
+            optimizer: opt.into(),
+            seed: 21,
+            ..Default::default()
+        };
+        tuner::tune(&mut sut, &cfg).unwrap().best.throughput
+    };
+    let gp = run("gp");
+    let baseline = run("random");
+    assert!(gp > 0.8 * baseline, "gp {gp} vs random {baseline}");
+}
