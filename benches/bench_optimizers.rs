@@ -21,7 +21,15 @@ fn main() {
     let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
 
     // --- part 1: optimizer comparison --------------------------------
+    // driven through the batched pipeline: round-generating optimizers
+    // propose 16 staged tests per bucketed engine call. Coordinate
+    // descent's ask() is stateful only through tell() (it re-reads the
+    // same ladder rung until told), so a >1 round would test duplicates
+    // and misattribute their values — it runs at round size 1, which
+    // replays the sequential protocol exactly.
+    let round_size_for = |name: &str| if name == "coord" { 1 } else { 16 };
     println!("### Optimizer comparison on simulated MySQL (zipfian-rw), best ops/s\n");
+    println!("(batched sessions, round_size = 16; coord runs sequentially)\n");
     print!("| budget |");
     for name in OPTIMIZER_NAMES {
         print!(" {name} |");
@@ -52,9 +60,10 @@ fn main() {
                     budget_tests: budget,
                     optimizer: name.to_string(),
                     seed,
+                    round_size: round_size_for(name),
                     ..Default::default()
                 };
-                acc += tuner::tune(&mut sut, &cfg).unwrap().best.throughput;
+                acc += tuner::tune_batched(&mut sut, &cfg).unwrap().best.throughput;
             }
             let mean = acc / seeds.len() as f64;
             if budget == 200 && *name == "rrs" {
@@ -82,8 +91,8 @@ fn main() {
             SimulationOpts::default(),
             seed,
         );
-        let cfg = TuningConfig { budget_tests: 80, seed, ..Default::default() };
-        let out = tuner::tune(&mut sut, &cfg).unwrap();
+        let cfg = TuningConfig { budget_tests: 80, seed, round_size: 16, ..Default::default() };
+        let out = tuner::tune_batched(&mut sut, &cfg).unwrap();
         (out.best_unit.clone(), out.best.throughput)
     };
     let eval_on = |unit: &[f64], deployment: DeploymentEnv| {

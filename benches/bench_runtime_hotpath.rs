@@ -1,13 +1,28 @@
 //! Runtime hot-path bench: the PJRT engine's batched config evaluation —
 //! the path every staged test and every atlas point funnels through.
 //! This is the §Perf target workload (see EXPERIMENTS.md §Perf).
+//!
+//! Measures three layers and dumps `BENCH_runtime_hotpath.json` next to
+//! the crate root so the perf trajectory is tracked across PRs:
+//! * per-bucket `evaluate` throughput, unprepared (constants uploaded
+//!   every call) vs prepared (device-resident constants);
+//! * odd/chunked batches through the greedy bucket decomposition;
+//! * whole tuning sessions, sequential (`tune`, one B=1 engine call per
+//!   staged test) vs batched (`tune_batched`, one bucketed call per
+//!   round) — the ISSUE's ≥5x acceptance gate.
 
 use acts::benchkit::{black_box, Bench, BenchConfig};
+use acts::experiment::Lab;
+use acts::manipulator::{SimulationOpts, Target};
+use acts::report::Json;
 use acts::runtime::{golden, Engine, BUCKETS};
+use acts::sut;
+use acts::tuner::{self, TuningConfig};
+use acts::workload::{DeploymentEnv, WorkloadSpec};
 
 fn main() {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let engine = Engine::load(&dir).expect("artifacts missing — run `make artifacts`");
+    let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
+    let engine: &Engine = &lab.engine;
     println!("platform: {}", engine.platform());
 
     let mut b = Bench::with_config("runtime hot path", BenchConfig::quick());
@@ -34,7 +49,7 @@ fn main() {
         );
     }
 
-    // odd batch: padding overhead (B=40 -> bucket 256)
+    // odd batch: greedy decomposition (B=40 -> 16+16+16, was padded 256)
     {
         let (c16, w, e, params) = golden::pattern_call(16);
         let mut odd: Vec<Vec<f32>> = Vec::new();
@@ -42,22 +57,67 @@ fn main() {
             odd.extend(c16.iter().cloned());
         }
         odd.truncate(40);
-        b.bench_units("evaluate B=40 (padded to 256)", Some(40.0), || {
-            black_box(engine.evaluate(&params, &w, &e, &odd).unwrap());
+        let prepared = engine.prepare(&params, &w, &e).unwrap();
+        b.bench_units("evaluate B=40 (greedy 16+16+16)", Some(40.0), || {
+            black_box(engine.evaluate_prepared(&prepared, &odd).unwrap());
         });
     }
 
     // chunked: B=4096 across two max buckets
     {
-        let (c2048, w, e, params) = golden::pattern_call(16);
+        let (c16, w, e, params) = golden::pattern_call(16);
         let mut big: Vec<Vec<f32>> = Vec::new();
         while big.len() < 4096 {
-            big.extend(c2048.iter().cloned());
+            big.extend(c16.iter().cloned());
         }
         big.truncate(4096);
         b.bench_units("evaluate B=4096 (2 chunks)", Some(4096.0), || {
             black_box(engine.evaluate(&params, &w, &e, &big).unwrap());
         });
+    }
+
+    // whole tuning sessions on the simulated MySQL: the sequential
+    // ask/tell loop (every staged test is a B=1 engine call) vs the
+    // batched pipeline (one bucketed call per round of 64)
+    let session_budget: u64 = 129; // baseline + 128 staged tests
+    {
+        let deploy = |seed| {
+            lab.deploy(
+                Target::Single(sut::mysql()),
+                WorkloadSpec::zipfian_read_write(),
+                DeploymentEnv::standalone(),
+                SimulationOpts::ideal(),
+                seed,
+            )
+        };
+        let seq_cfg = TuningConfig {
+            budget_tests: session_budget,
+            seed: 7,
+            round_size: 1,
+            ..Default::default()
+        };
+        b.bench_units(
+            format!("session sequential ({session_budget} tests, B=1)"),
+            Some(session_budget as f64),
+            || {
+                let mut sut = deploy(7);
+                black_box(tuner::tune(&mut sut, &seq_cfg).unwrap());
+            },
+        );
+        let bat_cfg = TuningConfig {
+            budget_tests: session_budget,
+            seed: 7,
+            round_size: 64,
+            ..Default::default()
+        };
+        b.bench_units(
+            format!("session batched ({session_budget} tests, round=64)"),
+            Some(session_budget as f64),
+            || {
+                let mut sut = deploy(7);
+                black_box(tuner::tune_batched(&mut sut, &bat_cfg).unwrap());
+            },
+        );
     }
 
     b.report();
@@ -72,4 +132,36 @@ fn main() {
         .filter_map(|r| r.units_per_sec())
         .fold(0.0f64, f64::max);
     println!("peak eval throughput: {:.0} configs/s (target 1e5)", best);
+
+    // the ISSUE acceptance gate: batched session >= 5x sequential
+    let session_rate = |needle: &str| {
+        b.results()
+            .iter()
+            .find(|r| r.name.contains(needle))
+            .and_then(|r| r.units_per_sec())
+            .unwrap_or(0.0)
+    };
+    let seq = session_rate("session sequential");
+    let bat = session_rate("session batched");
+    let speedup = if seq > 0.0 { bat / seq } else { 0.0 };
+    println!("session config-evals/s: sequential {seq:.1}, batched {bat:.1}");
+    println!("batched session speedup: {speedup:.1}x (target >= 5x)");
+
+    // machine-readable dump for cross-PR tracking
+    let json = b.json(vec![
+        ("platform", Json::Str(engine.platform())),
+        ("session_speedup_batched_vs_sequential", Json::Num(speedup)),
+    ]);
+    let out_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime_hotpath.json");
+    std::fs::write(&out_path, &json).expect("write BENCH_runtime_hotpath.json");
+    println!("wrote {}", out_path.display());
+
+    // enforced, not just reported (after the JSON dump, so a failing
+    // run still records its numbers): a regression of the batched path
+    // below 5x the sequential session fails the bench run
+    assert!(
+        speedup >= 5.0,
+        "batched session speedup {speedup:.2}x below the 5x acceptance gate"
+    );
 }

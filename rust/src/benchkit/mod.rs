@@ -5,6 +5,7 @@
 //! throughput reporting, and markdown/CSV emission so each paper
 //! table/figure bench can print the rows the paper reports.
 
+use crate::report::Json;
 use crate::util::stats::Summary;
 use std::time::{Duration, Instant};
 
@@ -204,6 +205,33 @@ impl Bench {
     pub fn report(&self) {
         println!("\n{}", self.markdown());
     }
+
+    /// Machine-readable JSON of the group's results, for cross-PR perf
+    /// tracking (each bench target can dump this next to its stdout
+    /// report). `extra` appends caller key/values at the top level —
+    /// e.g. the platform or a derived speedup. Built on
+    /// [`crate::report::Json`], the in-crate writer.
+    pub fn json(&self, extra: Vec<(&str, Json)>) -> String {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("mean_s", Json::Num(r.secs.mean)),
+                    ("std_s", Json::Num(r.secs.std)),
+                    ("p50_s", Json::Num(r.secs.p50)),
+                    ("units_per_s", r.units_per_sec().map(Json::Num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        let mut kvs = vec![
+            ("group", Json::Str(self.group.clone())),
+            ("results", Json::Arr(results)),
+        ];
+        kvs.extend(extra);
+        Json::obj(kvs).to_string()
+    }
 }
 
 #[cfg(test)]
@@ -250,6 +278,25 @@ mod tests {
         let md = b.markdown();
         assert!(md.contains("### grp"));
         assert!(md.contains("| alpha |"));
+    }
+
+    #[test]
+    fn json_is_well_formed_and_escaped() {
+        let mut b = Bench::with_config("grp \"x\"", fast_config());
+        b.bench_units("with units", Some(10.0), || {
+            black_box(1 + 1);
+        });
+        b.bench("no units", || {
+            black_box(1 + 1);
+        });
+        let j = b.json(vec![("speedup", Json::Num(5.5))]);
+        assert!(j.contains("\"group\":\"grp \\\"x\\\"\""), "{j}");
+        assert!(j.contains("\"name\":\"with units\""));
+        assert!(j.contains("\"units_per_s\":null"));
+        assert!(j.contains("\"speedup\":5.5"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+        assert!(j.ends_with('}'));
     }
 
     #[test]

@@ -52,6 +52,24 @@ impl<O: Optimizer> Optimizer for FrozenSuffix<O> {
         }
     }
 
+    // Round protocol: delegate to the inner optimizer's (possibly
+    // native) batch implementation, mapping the frozen suffix on/off at
+    // the boundary so it keeps its round structure (LHS designs sized
+    // to the round, single surrogate fits).
+    fn ask_batch(&mut self, rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
+        self.inner
+            .ask_batch(rng, n)
+            .into_iter()
+            .map(|mut u| {
+                u.extend_from_slice(&self.frozen);
+                u
+            })
+            .collect()
+    }
+
+    // tell_batch: the trait default (a fold over `tell`) is already
+    // correct — `tell` strips the suffix per observation.
+
     fn best(&self) -> Option<&Observation> {
         self.best.as_ref()
     }
@@ -144,5 +162,20 @@ mod tests {
         }
         let b = opt.best().unwrap();
         assert_eq!(&b.unit[2..], &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn frozen_suffix_pins_trailing_dims_in_rounds() {
+        let mut rng = Rng64::new(2);
+        let mut opt = FrozenSuffix::new(Rrs::new(2, RrsParams::default()), vec![0.5, 0.125]);
+        let round = opt.ask_batch(&mut rng, 12);
+        assert_eq!(round.len(), 12);
+        for u in &round {
+            assert_eq!(u.len(), 4);
+            assert_eq!(&u[2..], &[0.5, 0.125]);
+        }
+        let values: Vec<f64> = round.iter().map(|u| u[0] + u[1]).collect();
+        opt.tell_batch(&round, &values);
+        assert_eq!(&opt.best().unwrap().unit[2..], &[0.5, 0.125]);
     }
 }

@@ -5,7 +5,8 @@
 //! the manual process as what it operationally is — one-knob-at-a-time
 //! heuristic search with slow human iteration (each manual test needs a
 //! human in the loop: reconfigure, rerun, read) — and compare against
-//! ACTS (LHS+RRS, automated staging tests) on *simulated wall-clock*.
+//! ACTS (LHS+RRS, automated staging tests driven through the batched
+//! tuning pipeline) on *simulated wall-clock*.
 
 use super::Lab;
 use crate::error::Result;
@@ -69,11 +70,13 @@ impl Labor {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_policy(
     lab: &Lab,
     optimizer: &str,
     policy_name: &str,
     budget: u64,
+    round_size: usize,
     per_test_overhead_s: f64,
     calendar_factor: f64,
     threshold: f64,
@@ -90,9 +93,14 @@ fn run_policy(
         budget_tests: budget,
         optimizer: optimizer.into(),
         seed,
+        round_size,
         ..Default::default()
     };
-    let out = tuner::tune(&mut sut, &cfg)?;
+    // a human loop is inherently sequential — the manual policies run
+    // at round_size 1, which replays the sequential protocol exactly;
+    // the automated policy runs whole rounds through the batched
+    // pipeline. One driver covers both.
+    let out = tuner::tune_batched(&mut sut, &cfg)?;
     let per_test_machine = out.sim_seconds / out.tests_used.max(1) as f64;
     let per_test_total = (per_test_machine + per_test_overhead_s) * calendar_factor;
     let calendar_s = per_test_total * out.tests_used as f64;
@@ -130,16 +138,19 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Labor> {
     let outcomes = vec![
         // manual: one-knob-at-a-time with human overhead + office hours
         run_policy(
-            lab, "coord", "manual (1-knob-at-a-time, human loop)", budget,
+            lab, "coord", "manual (1-knob-at-a-time, human loop)", budget, 1,
             MANUAL_OVERHEAD_S, CALENDAR_FACTOR, threshold, seed,
         )?,
         // manual but following random "best practice" guesses
         run_policy(
-            lab, "random", "manual (web heuristics, human loop)", budget,
+            lab, "random", "manual (web heuristics, human loop)", budget, 1,
             MANUAL_OVERHEAD_S, CALENDAR_FACTOR, threshold, seed ^ 1,
         )?,
-        // ACTS: automated staging tests, machine only
-        run_policy(lab, "rrs", "ACTS (LHS+RRS, automated)", budget, 0.0, 1.0, threshold, seed ^ 2)?,
+        // ACTS: automated staging tests, machine only, batched rounds
+        run_policy(
+            lab, "rrs", "ACTS (LHS+RRS, automated, batched)", budget, 16,
+            0.0, 1.0, threshold, seed ^ 2,
+        )?,
     ];
     Ok(Labor { outcomes, threshold })
 }

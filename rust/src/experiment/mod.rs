@@ -196,6 +196,11 @@ impl GridSweep {
 
 /// Sweep two knobs of a deployed SUT over a `side x side` unit grid,
 /// holding every other knob at the SUT's default.
+///
+/// The whole grid goes to the engine as one batched request; the
+/// engine's greedy bucket decomposition keeps the executed-row overhead
+/// bounded for odd `side*side` sizes (a 24x24 sweep runs as two 256
+/// calls plus four 16 calls, not as a padded 2048-row call).
 pub fn grid_sweep(
     sut: &SimulatedSut,
     knob_x: &str,

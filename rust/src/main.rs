@@ -88,14 +88,18 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
     let budget = args.get_u64("budget", 100);
     let name = target.name().to_string();
 
+    let round_size = args.get_usize("round-size", 16);
     let mut sut = lab.deploy(target, workload.clone(), deployment, SimulationOpts::default(), seed);
     let cfg = TuningConfig {
         budget_tests: budget,
         optimizer: args.get("optimizer", "rrs"),
         seed,
+        round_size,
         ..Default::default()
     };
-    let out = tuner::tune(&mut sut, &cfg)?;
+    // the batched driver covers every round size: at --round-size 1 it
+    // replays the sequential reference protocol bit-for-bit (tested)
+    let out = tuner::tune_batched(&mut sut, &cfg)?;
     println!(
         "tuned {} under {} | baseline {:.0} ops/s -> best {:.0} ops/s ({:+.1}%, {:.2}x)",
         name,
@@ -217,10 +221,12 @@ USAGE:
 
 COMMANDS:
     list         show registered SUTs, workloads, deployments, optimizers
-    tune         run a tuning session
+    tune         run a tuning session (batched rounds; --round-size 1
+                 for the sequential reference protocol)
                    --sut <name|a+b>   (mysql)        --workload <name> (zipfian-rw)
                    --deployment <d>   (standalone)   --optimizer <o>   (rrs)
                    --budget <n>       (100)          --seed <n>        (1)
+                   --round-size <n>   (16)
                    --curve            print per-test progress
                    --config           print the best configuration found
     surface      dump a 2-knob grid sweep as CSV

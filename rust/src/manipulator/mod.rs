@@ -1,10 +1,12 @@
 //! The system manipulator — the second component of the paper's
 //! flexible architecture (Fig. 2). It decouples the tuner from the SUT:
-//! the tuner only ever calls `set_config` / `restart` / `run_test`,
-//! which is what gives the architecture its SUT- and deployment-
-//! scalability (§4.2). [`SimulatedSut`] is the staging-environment
-//! implementation used throughout; a live deployment would implement
-//! the same trait with ssh/config-file plumbing.
+//! the tuner only ever calls `set_config` / `restart` / `run_test` (or
+//! their round form, `run_tests_batch`), which is what gives the
+//! architecture its SUT- and deployment-scalability (§4.2).
+//! [`SimulatedSut`] is the staging-environment implementation used
+//! throughout; a live deployment would implement the same trait with
+//! ssh/config-file plumbing (and `run_tests_batch` fanning out over
+//! parallel staging machines).
 
 pub mod simulated;
 
@@ -15,7 +17,7 @@ use crate::space::ConfigSpace;
 use crate::sut::{Composed, SutSpec};
 
 /// What a staged test measured (Table 1's row set).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Measurement {
     /// Primary metric: request throughput, ops/sec (hits/s for Tomcat).
     pub throughput: f64,
@@ -84,6 +86,40 @@ pub trait SystemManipulator {
 
     /// Run the bound workload against the running SUT and measure.
     fn run_test(&mut self) -> Result<Measurement>;
+
+    /// Stage, restart and measure every unit in `units` as one
+    /// evaluation round — the batched form of the protocol ("parallel
+    /// staging environments"). Returns one result per *executed* row,
+    /// in order: per-row failures
+    /// ([`crate::error::ActsError::TestFailed`]) land in their row's
+    /// slot and charge that row only. Any other error is a programming
+    /// or infrastructure error: it aborts the round at that row — its
+    /// error is the final entry, later rows are never staged or charged
+    /// (so the result may be shorter than `units`), and the caller
+    /// should abort the session, exactly as the sequential protocol
+    /// would have.
+    ///
+    /// The default replays the sequential `set_config` -> `restart` ->
+    /// `run_test` protocol per row, so a round of 1 is always identical
+    /// to one sequential staged test. Batch-aware manipulators override
+    /// this to evaluate the whole round in one engine call (see
+    /// [`SimulatedSut`]'s implementation).
+    fn run_tests_batch(&mut self, units: &[Vec<f64>]) -> Vec<Result<Measurement>> {
+        let mut rows = Vec::with_capacity(units.len());
+        for u in units {
+            let r = self
+                .set_config(u)
+                .and_then(|()| self.restart())
+                .and_then(|()| self.run_test());
+            let fatal =
+                matches!(&r, Err(e) if !matches!(e, crate::error::ActsError::TestFailed(_)));
+            rows.push(r);
+            if fatal {
+                break;
+            }
+        }
+        rows
+    }
 
     /// Total simulated seconds consumed so far (restarts + tests).
     fn sim_seconds(&self) -> f64;

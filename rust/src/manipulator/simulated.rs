@@ -292,6 +292,70 @@ impl SystemManipulator for SimulatedSut {
         Ok(self.measure(perf))
     }
 
+    /// Native batched round: the staging bookkeeping (restart, settle,
+    /// test window, per-row failure injection) runs row by row in the
+    /// sequential protocol's exact rng-draw order, but every surviving
+    /// row's surface evaluation is deferred into ONE bucketed engine
+    /// call — the whole point of the batched pipeline. A round of 1 is
+    /// bit-identical to `set_config` -> `restart` -> `run_test`.
+    fn run_tests_batch(&mut self, units: &[Vec<f64>]) -> Vec<Result<Measurement>> {
+        let mut rows: Vec<Result<Measurement>> = Vec::with_capacity(units.len());
+        // (row index, unit the SUT was running for that row's test)
+        let mut pending: Vec<(usize, Vec<f64>)> = Vec::with_capacity(units.len());
+        for unit in units {
+            let staged = (|| -> Result<()> {
+                self.set_config(unit)?;
+                self.restart()?;
+                // the test window is charged whether or not the run
+                // completes (mirrors `run_test`)
+                self.sim_seconds += self.workload.duration_s;
+                if self.rng.bool(self.opts.test_failure_p) {
+                    return Err(ActsError::TestFailed("workload run timed out".into()));
+                }
+                Ok(())
+            })();
+            match staged {
+                Ok(()) => {
+                    pending.push((rows.len(), self.current.clone()));
+                    // slot is overwritten after the round's evaluation
+                    rows.push(Err(ActsError::TestFailed("pending batched evaluation".into())));
+                }
+                Err(e) => {
+                    // a non-TestFailed error (bad dims, non-finite unit)
+                    // aborts the round at this row, like the sequential
+                    // protocol; rows already staged still get evaluated
+                    let fatal = !matches!(e, ActsError::TestFailed(_));
+                    rows.push(Err(e));
+                    if fatal {
+                        break;
+                    }
+                }
+            }
+        }
+        if pending.is_empty() {
+            return rows;
+        }
+        let survivor_units: Vec<Vec<f64>> = pending.iter().map(|(_, u)| u.clone()).collect();
+        match self.evaluate_batch(&survivor_units) {
+            Ok(perfs) => {
+                debug_assert_eq!(perfs.len(), pending.len());
+                for ((idx, _), perf) in pending.iter().zip(perfs) {
+                    self.tests_run += 1;
+                    rows[*idx] = Ok(self.measure(perf));
+                }
+            }
+            Err(e) => {
+                // engine-level failure: not a staged-test failure — every
+                // pending row surfaces it so the session aborts
+                let msg = format!("batched evaluation failed: {e}");
+                for (idx, _) in &pending {
+                    rows[*idx] = Err(ActsError::Xla(msg.clone()));
+                }
+            }
+        }
+        rows
+    }
+
     fn sim_seconds(&self) -> f64 {
         self.sim_seconds
     }

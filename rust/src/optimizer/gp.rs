@@ -50,26 +50,64 @@ impl GpSurrogate {
         sf2 * (-0.5 * d2 / ls2).exp()
     }
 
-    /// Posterior (mean, std) at `q` given the Cholesky factor and the
-    /// precomputed alpha = K^-1 y.
-    fn posterior(
-        &self,
-        q: &[f64],
-        chol: &Cholesky,
-        alpha: &[f64],
-        ls2: f64,
-        sf2: f64,
-        y_mean: f64,
-    ) -> (f64, f64) {
+    /// Fit the GP posterior on the (windowed) training set: one
+    /// Cholesky factorisation amortised over every candidate scored
+    /// against it — per proposal in [`Optimizer::ask`], per *round* in
+    /// [`Optimizer::ask_batch`].
+    fn fit(&self) -> GpFit {
+        let n = self.train_len();
+        let ys = self.train_ys();
+        let y_mean = ys.iter().sum::<f64>() / n as f64;
+        let y_var = ys.iter().map(|y| (y - y_mean) * (y - y_mean)).sum::<f64>() / n as f64;
+        let sf2 = y_var.max(1e-12);
+        let ls = 0.4 * (self.dim as f64).sqrt() / 2.0;
+        let ls2 = ls * ls;
+        let noise = 1e-4 * sf2 + 1e-10;
+
+        let train = self.train_xs();
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel(&train[i], &train[j], ls2, sf2);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += noise;
+        }
+        let chol = Cholesky::factor(k, n);
+        let resid: Vec<f64> = ys.iter().map(|y| y - y_mean).collect();
+        let alpha = chol.solve(&resid);
+        GpFit { chol, alpha, ls2, sf2, y_mean }
+    }
+
+    /// Posterior (mean, std) at `q` under a fit.
+    fn posterior(&self, q: &[f64], fit: &GpFit) -> (f64, f64) {
         let n = self.train_len();
         let mut k_star = Vec::with_capacity(n);
         for x in self.train_xs() {
-            k_star.push(self.kernel(q, x, ls2, sf2));
+            k_star.push(self.kernel(q, x, fit.ls2, fit.sf2));
         }
-        let mean = y_mean + k_star.iter().zip(alpha).map(|(k, a)| k * a).sum::<f64>();
-        let v = chol.solve_lower(&k_star);
-        let var = (sf2 - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        let mean = fit.y_mean + k_star.iter().zip(&fit.alpha).map(|(k, a)| k * a).sum::<f64>();
+        let v = fit.chol.solve_lower(&k_star);
+        let var = (fit.sf2 - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
         (mean, var.sqrt())
+    }
+
+    /// Candidate pool for EI maximisation: an LHS design plus local
+    /// perturbations of the incumbent.
+    fn candidate_pool(&self, rng: &mut Rng64, pool: usize) -> Vec<Vec<f64>> {
+        let mut cands = LhsSampler.sample(pool, self.dim, rng);
+        if let Some(b) = self.best.get() {
+            for _ in 0..self.candidates / 4 {
+                cands.push(
+                    b.unit
+                        .iter()
+                        .map(|&c| (c + rng.normal() * 0.08).clamp(0.0, 1.0))
+                        .collect(),
+                );
+            }
+        }
+        cands
     }
 
     fn train_len(&self) -> usize {
@@ -85,6 +123,16 @@ impl GpSurrogate {
         let n = self.train_len();
         &self.ys[self.ys.len() - n..]
     }
+}
+
+/// A fitted GP posterior: Cholesky factor, precomputed alpha = K^-1 y,
+/// and the hyperparameters it was fitted with.
+struct GpFit {
+    chol: Cholesky,
+    alpha: Vec<f64>,
+    ls2: f64,
+    sf2: f64,
+    y_mean: f64,
 }
 
 /// Lower-triangular Cholesky factor with solves.
@@ -208,47 +256,13 @@ impl Optimizer for GpSurrogate {
             }
         }
 
-        // fit the GP on (windowed) training data
-        let n = self.train_len();
-        let ys = self.train_ys();
-        let y_mean = ys.iter().sum::<f64>() / n as f64;
-        let y_var = ys.iter().map(|y| (y - y_mean) * (y - y_mean)).sum::<f64>() / n as f64;
-        let sf2 = y_var.max(1e-12);
-        let ls = 0.4 * (self.dim as f64).sqrt() / 2.0;
-        let ls2 = ls * ls;
-        let noise = 1e-4 * sf2 + 1e-10;
-
-        let train: Vec<Vec<f64>> = self.train_xs().to_vec();
-        let mut k = vec![0.0; n * n];
-        for i in 0..n {
-            for j in 0..=i {
-                let v = self.kernel(&train[i], &train[j], ls2, sf2);
-                k[i * n + j] = v;
-                k[j * n + i] = v;
-            }
-            k[i * n + i] += noise;
-        }
-        let chol = Cholesky::factor(k, n);
-        let resid: Vec<f64> = ys.iter().map(|y| y - y_mean).collect();
-        let alpha = chol.solve(&resid);
-
-        // candidate pool: LHS + local perturbations of the incumbent
-        let mut cands = LhsSampler.sample(self.candidates, self.dim, rng);
-        if let Some(b) = self.best.get() {
-            for _ in 0..self.candidates / 4 {
-                cands.push(
-                    b.unit
-                        .iter()
-                        .map(|&c| (c + rng.normal() * 0.08).clamp(0.0, 1.0))
-                        .collect(),
-                );
-            }
-        }
+        let fit = self.fit();
+        let cands = self.candidate_pool(rng, self.candidates);
         let f_best = self.best.get().map(|b| b.value).unwrap_or(f64::NEG_INFINITY);
         let mut best_cand = cands[0].clone();
         let mut best_ei = f64::NEG_INFINITY;
         for c in cands {
-            let (m, s) = self.posterior(&c, &chol, &alpha, ls2, sf2, y_mean);
+            let (m, s) = self.posterior(&c, &fit);
             let ei = expected_improvement(m, s, f_best);
             if ei > best_ei {
                 best_ei = ei;
@@ -256,6 +270,53 @@ impl Optimizer for GpSurrogate {
             }
         }
         best_cand
+    }
+
+    /// Native round proposal: the init design is served first; past it,
+    /// ONE fit (one O(n^3) factorisation) scores the whole candidate
+    /// pool and the round takes the top-EI candidates — versus a fresh
+    /// factorisation per proposal on the sequential path. Within a
+    /// round the posterior cannot update, so ranking one pool is the
+    /// faithful batch analogue.
+    fn ask_batch(&mut self, rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
+        if n <= 1 {
+            // bit-identical to the sequential protocol (round size 1)
+            return (0..n).map(|_| self.ask(rng)).collect();
+        }
+        let mut out = Vec::with_capacity(n);
+        // serve the space-filling init design first
+        while out.len() < n && self.xs.len() + out.len() < self.init_n {
+            if self.init_queue.is_empty() {
+                self.init_queue = LhsSampler.sample(self.init_n, self.dim, rng);
+            }
+            out.push(self.init_queue.pop().expect("refilled"));
+        }
+        let need = n - out.len();
+        if need == 0 {
+            return out;
+        }
+        if self.xs.is_empty() {
+            // nothing observed yet: no posterior to score — stay
+            // space-filling for the remainder of the round
+            out.extend(LhsSampler.sample(need, self.dim, rng));
+            return out;
+        }
+        let fit = self.fit();
+        let f_best = self.best.get().map(|b| b.value).unwrap_or(f64::NEG_INFINITY);
+        // the LHS part of the pool alone covers `need`, so the round
+        // can never run short
+        let mut scored: Vec<(f64, Vec<f64>)> = self
+            .candidate_pool(rng, self.candidates.max(2 * need))
+            .into_iter()
+            .map(|c| {
+                let (m, s) = self.posterior(&c, &fit);
+                (expected_improvement(m, s, f_best), c)
+            })
+            .collect();
+        scored
+            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        out.extend(scored.into_iter().take(need).map(|(_, c)| c));
+        out
     }
 
     fn tell(&mut self, unit: &[f64], value: f64) {

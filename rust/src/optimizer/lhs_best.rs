@@ -35,6 +35,22 @@ impl Optimizer for LhsScreening {
         self.queue.pop().expect("refilled")
     }
 
+    /// Native round proposal: refills use a design sized to the round
+    /// (never below the standing batch size, so a round of 1 replays
+    /// the sequential protocol bit-for-bit), keeping each round's draws
+    /// stratified over the whole space.
+    fn ask_batch(&mut self, rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            if self.queue.is_empty() {
+                let need = n - out.len();
+                self.queue = LhsSampler.sample(need.max(self.batch), self.dim, rng);
+            }
+            out.push(self.queue.pop().expect("refilled"));
+        }
+        out
+    }
+
     fn tell(&mut self, unit: &[f64], value: f64) {
         self.best.update(unit, value);
     }

@@ -11,6 +11,15 @@
 //! All optimizers speak the *ask/tell* protocol over the unit hypercube
 //! and maximize the observed value (throughput). The tuner owns the
 //! budget; optimizers just propose points and absorb results.
+//!
+//! The protocol also has a *round* form — [`Optimizer::ask_batch`] /
+//! [`Optimizer::tell_batch`] — used by the batched tuning pipeline
+//! (`tuner::tune_batched`): a whole round of proposals is generated
+//! against the round-start state, evaluated in one bucketed engine
+//! call, and folded back in test order. The defaults loop over
+//! `ask`/`tell`; RRS, LHS screening, random search and the GP
+//! surrogate provide native round implementations (a fresh LHS design
+//! sized to the round, a single surrogate fit scoring every proposal).
 
 mod anneal;
 mod coord_descent;
@@ -49,6 +58,36 @@ pub trait Optimizer: Send {
 
     /// Report the measured value for a previously asked point.
     fn tell(&mut self, unit: &[f64], value: f64);
+
+    /// Propose one evaluation round of `n` points.
+    ///
+    /// The round is generated against the round-start state — no
+    /// results arrive until the whole round is evaluated. The default
+    /// loops [`Optimizer::ask`]; native implementations may exploit the
+    /// round structure (one stratified design, one surrogate fit) but
+    /// must keep `ask_batch(rng, 1)` bit-identical to `ask(rng)` so the
+    /// batched tuner at round size 1 replays the sequential session
+    /// exactly.
+    ///
+    /// Caveat for strictly ask/tell-coupled optimizers: if `ask` only
+    /// advances its internal cursor on `tell` (coordinate descent
+    /// re-reads the same ladder rung until told), the default produces
+    /// a round of duplicates whose values the fold then misattributes.
+    /// Such optimizers should be driven at round size 1.
+    fn ask_batch(&mut self, rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| self.ask(rng)).collect()
+    }
+
+    /// Report one evaluation round: `units[i]` measured `values[i]`
+    /// (failed staged tests are reported at 0.0), in test order. The
+    /// default folds the observations in one [`Optimizer::tell`] at a
+    /// time, which is the reference semantics.
+    fn tell_batch(&mut self, units: &[Vec<f64>], values: &[f64]) {
+        debug_assert_eq!(units.len(), values.len());
+        for (u, &v) in units.iter().zip(values) {
+            self.tell(u, v);
+        }
+    }
 
     /// Best observation so far.
     fn best(&self) -> Option<&Observation>;
@@ -174,6 +213,67 @@ mod tests {
                     "{name}: budget {large} worse than {small}: {b} < {a}"
                 );
             }
+        }
+    }
+
+    /// Round protocol: every optimizer's `ask_batch` must stay in
+    /// bounds, return exactly `n` points, and keep working when rounds
+    /// and single asks are interleaved.
+    #[test]
+    fn all_optimizers_batch_in_bounds_and_sized() {
+        prop::check(12, 0x0B47, |g| {
+            let dim = g.usize_in(2..8);
+            let name = *g.choose(OPTIMIZER_NAMES);
+            let mut opt = by_name(name, dim).unwrap();
+            for round in 0..6 {
+                let n = g.usize_in(1..20);
+                let batch = opt.ask_batch(g.rng(), n);
+                if batch.len() != n {
+                    return Err(format!("{name}: round {round} returned {} of {n}", batch.len()));
+                }
+                for u in &batch {
+                    if u.len() != dim {
+                        return Err(format!("{name}: wrong dim"));
+                    }
+                    if !u.iter().all(|x| (0.0..=1.0).contains(x)) {
+                        return Err(format!("{name}: out of bounds {u:?}"));
+                    }
+                }
+                let values: Vec<f64> = batch.iter().map(|u| two_peaks(u)).collect();
+                opt.tell_batch(&batch, &values);
+                // interleave a plain ask/tell between rounds
+                let u = opt.ask(g.rng());
+                let v = two_peaks(&u);
+                opt.tell(&u, v);
+            }
+            opt.best().ok_or("no best after rounds")?;
+            Ok(())
+        });
+    }
+
+    /// `ask_batch(rng, 1)` must consume the rng exactly like `ask(rng)`
+    /// — the batched tuner's round-size-1 bit-identity rests on it.
+    #[test]
+    fn batch_of_one_is_bit_identical_to_ask() {
+        for name in OPTIMIZER_NAMES {
+            let mut seq = by_name(name, 4).unwrap();
+            let mut bat = by_name(name, 4).unwrap();
+            let mut rng_seq = Rng64::new(0xBEE5);
+            let mut rng_bat = Rng64::new(0xBEE5);
+            for _ in 0..50 {
+                let a = seq.ask(&mut rng_seq);
+                let b = bat.ask_batch(&mut rng_bat, 1);
+                assert_eq!(b.len(), 1, "{name}");
+                assert_eq!(a, b[0], "{name}: batch-of-one diverged from ask");
+                let v = two_peaks(&a);
+                seq.tell(&a, v);
+                bat.tell_batch(&b, &[v]);
+            }
+            assert_eq!(
+                seq.best().unwrap().unit,
+                bat.best().unwrap().unit,
+                "{name}: best diverged"
+            );
         }
     }
 

@@ -25,6 +25,13 @@ impl Optimizer for RandomSearch {
         (0..self.dim).map(|_| rng.f64()).collect()
     }
 
+    /// Native round proposal — uniform draws are already independent,
+    /// so the round is just `n` of them (identical rng stream to `n`
+    /// sequential asks, at any round size).
+    fn ask_batch(&mut self, rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| (0..self.dim).map(|_| rng.f64()).collect()).collect()
+    }
+
     fn tell(&mut self, unit: &[f64], value: f64) {
         self.best.update(unit, value);
     }

@@ -80,8 +80,6 @@ pub struct Rrs {
     window_n: usize,
     window_best: Option<(f64, Vec<f64>)>,
     threshold: f64,
-    /// The point we last asked (ask/tell correlation).
-    pending: Option<Vec<f64>>,
     best: BestTracker,
 }
 
@@ -96,7 +94,6 @@ impl Rrs {
             window_n: 0,
             window_best: None,
             threshold: f64::NEG_INFINITY,
-            pending: None,
             best: BestTracker::default(),
         }
     }
@@ -134,17 +131,44 @@ impl Optimizer for Rrs {
     }
 
     fn ask(&mut self, rng: &mut Rng64) -> Vec<f64> {
-        let point = match &self.phase {
+        match &self.phase {
             Phase::Explore => self.next_explore_point(rng),
             Phase::Exploit { center, rho, .. } => Self::sample_box(center, *rho, rng),
+        }
+    }
+
+    /// Native round proposal. Exploration rounds are already batches
+    /// internally: a fresh LHS design is drawn sized to the round (one
+    /// stratified design covering all `n` draws, instead of `n` pops
+    /// from fixed-size refills). Exploitation rounds sample the current
+    /// box `n` times — the centre cannot re-align mid-round because no
+    /// result has arrived yet.
+    fn ask_batch(&mut self, rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
+        if n <= 1 {
+            // bit-identical to the sequential protocol (round size 1)
+            return (0..n).map(|_| self.ask(rng)).collect();
+        }
+        let exploit = match &self.phase {
+            Phase::Exploit { center, rho, .. } => Some((center.clone(), *rho)),
+            Phase::Explore => None,
         };
-        self.pending = Some(point.clone());
-        point
+        if let Some((center, rho)) = exploit {
+            return (0..n).map(|_| Self::sample_box(&center, rho, rng)).collect();
+        }
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            if self.explore_queue.is_empty() {
+                let need = n - out.len();
+                self.explore_queue =
+                    LhsSampler.sample(need.max(self.params.lhs_batch), self.dim, rng);
+            }
+            out.push(self.explore_queue.pop().expect("batch refilled"));
+        }
+        out
     }
 
     fn tell(&mut self, unit: &[f64], value: f64) {
         self.best.update(unit, value);
-        self.pending = None;
 
         match &mut self.phase {
             Phase::Explore => {
@@ -270,6 +294,26 @@ mod tests {
         }
         let b = rrs.best().unwrap();
         assert!(b.value > 0.99, "best {}", b.value);
+    }
+
+    #[test]
+    fn batch_round_covers_exploration_window_and_enters_exploitation() {
+        let mut rng = Rng64::new(6);
+        let p = RrsParams { explore_n: 10, ..Default::default() };
+        let mut rrs = Rrs::new(3, p);
+        // one round larger than the exploration window: the fold-in
+        // finishes the window and the tail observations are absorbed
+        // by the freshly entered exploitation phase
+        let round = rrs.ask_batch(&mut rng, 16);
+        assert_eq!(round.len(), 16);
+        assert!(round.iter().all(|u| u.len() == 3));
+        let values: Vec<f64> = round.iter().map(|u| sphere(u)).collect();
+        rrs.tell_batch(&round, &values);
+        assert!(rrs.rho().is_some(), "window folded, should be exploiting");
+        // the next round samples the exploitation box
+        let next = rrs.ask_batch(&mut rng, 8);
+        assert_eq!(next.len(), 8);
+        assert!(next.iter().all(|u| u.iter().all(|x| (0.0..=1.0).contains(x))));
     }
 
     #[test]

@@ -3,15 +3,21 @@
 //!
 //! One [`Engine`] owns a PJRT CPU client and a compiled executable per
 //! static batch bucket (1 / 16 / 256 / 2048). An evaluation request of
-//! `B` configs is rounded up to the smallest fitting bucket (padding with
-//! copies of the first row) or chunked across the largest bucket when
-//! `B > 2048`. This is the L3 hot path: the whole Figure-1 atlas and
-//! every staged test of every tuning session funnels through
-//! [`Engine::evaluate`].
+//! `B` configs is decomposed greedily across the buckets
+//! ([`super::shapes::plan_buckets`]): exact chunks of the largest
+//! fitting bucket plus at most one padded call for the remainder, so an
+//! odd batch never executes a whole wide bucket of padding. This is the
+//! L3 hot path: the whole Figure-1 atlas and every staged-test round of
+//! every tuning session funnels through [`Engine::evaluate_prepared`].
+//!
+//! The engine is `Send + Sync` (telemetry is atomic; PJRT objects are
+//! thread-safe by the PJRT C API contract), so experiments can share
+//! one compiled engine across session threads via `Arc<Engine>`.
 
 use super::shapes::{self, BUCKETS, D_PAD, E_DIM, W_DIM};
 use crate::error::{ActsError, Result};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Per-SUT surface parameter blocks, flattened row-major (f32), in the
 /// artifact's input order minus the per-call inputs (`u`, `w`, `e`).
@@ -140,10 +146,29 @@ pub struct Engine {
     execs: Vec<(usize, xla::PjRtLoadedExecutable)>,
     artifacts_dir: PathBuf,
     /// Number of `execute` calls issued (hot-path telemetry).
-    calls: std::cell::Cell<u64>,
+    calls: AtomicU64,
     /// Number of config rows evaluated (incl. padding).
-    rows: std::cell::Cell<u64>,
+    rows: AtomicU64,
 }
+
+// SAFETY: two obligations are being claimed here.
+// (1) PJRT side: the C API requires clients, loaded executables and
+//     buffers to be usable from any thread concurrently (the CPU
+//     client serialises internally where it must), and every Engine
+//     method takes `&self`; our only interior mutability is the two
+//     atomic telemetry counters.
+// (2) Wrapper side: the vendored `xla` binding must hold plain FFI
+//     handles for the client/executable types (no thread-unsafe shared
+//     ownership such as `Rc` refcounts cloned per call) — this is the
+//     part the compiler cannot see past, and it MUST be re-audited
+//     whenever the binding is vendored or upgraded. Per-call wrapper
+//     objects (literals, buffers) are created, used and dropped within
+//     a single `evaluate_*` call on one thread and never cross threads.
+// Together these let experiments run whole tuning sessions in parallel
+// threads over one `Arc<Engine>` instead of compiling the bucket
+// ladder once per thread.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl Engine {
     /// Load and compile every bucket artifact from `artifacts_dir`.
@@ -166,7 +191,13 @@ impl Engine {
             let exe = client.compile(&comp)?;
             execs.push((bucket, exe));
         }
-        Ok(Engine { client, execs, artifacts_dir: dir, calls: 0.into(), rows: 0.into() })
+        Ok(Engine {
+            client,
+            execs,
+            artifacts_dir: dir,
+            calls: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+        })
     }
 
     /// The artifacts directory this engine loaded from.
@@ -179,15 +210,16 @@ impl Engine {
         self.client.platform_name()
     }
 
-    /// (execute calls, config rows) issued so far.
+    /// (execute calls, config rows incl. padding) issued so far.
     pub fn stats(&self) -> (u64, u64) {
-        (self.calls.get(), self.rows.get())
+        (self.calls.load(Ordering::Relaxed), self.rows.load(Ordering::Relaxed))
     }
 
     /// Evaluate `configs` (each a padded `[f32; D_PAD]` unit vector) for
     /// one SUT surface under workload features `w` and deployment
     /// features `e`. Any `configs.len() >= 1` is accepted: requests are
-    /// bucket-padded and, above the largest bucket, chunked.
+    /// decomposed greedily across the buckets (see
+    /// [`Engine::evaluate_prepared`]).
     ///
     /// One-shot convenience wrapper around [`Engine::prepare`] +
     /// [`Engine::evaluate_prepared`]; repeated callers (the manipulator,
@@ -255,6 +287,13 @@ impl Engine {
 
     /// Evaluate against a prepared constant set. Only the config batch
     /// is uploaded per call.
+    ///
+    /// The batch is split greedily across the compiled buckets
+    /// ([`shapes::plan_buckets`]): exact chunks of the largest fitting
+    /// bucket, with at most one padded call for the remainder — a B=40
+    /// request executes as 3×16 rows, not one 256-row call. The device
+    /// handle is resolved once per request and one upload scratch
+    /// buffer is reused across the plan's calls.
     pub fn evaluate_prepared(
         &self,
         prepared: &PreparedCall,
@@ -271,38 +310,55 @@ impl Engine {
                 )));
             }
         }
-        let max_bucket = *BUCKETS.last().expect("non-empty buckets");
+        // one devices() resolution (it allocates a Vec) per request, not
+        // per chunk
+        let devices = self.client.devices();
+        let device = &devices[0];
+        let mut scratch: Vec<f32> = Vec::new();
         let mut out = Vec::with_capacity(configs.len());
-        for chunk in configs.chunks(max_bucket) {
-            out.extend(self.evaluate_chunk(prepared, chunk)?);
+        let mut offset = 0usize;
+        for bucket in shapes::plan_buckets(configs.len()) {
+            let take = bucket.min(configs.len() - offset);
+            let chunk = &configs[offset..offset + take];
+            offset += take;
+            out.extend(self.evaluate_chunk(prepared, chunk, bucket, device, &mut scratch)?);
         }
+        debug_assert_eq!(offset, configs.len(), "plan must consume every row");
         Ok(out)
     }
 
-    fn evaluate_chunk(&self, prepared: &PreparedCall, configs: &[Vec<f32>]) -> Result<Vec<Perf>> {
+    /// Execute one planned call: `configs.len() <= bucket` rows, padded
+    /// up to `bucket` with copies of row 0 (cheap, valid data).
+    fn evaluate_chunk(
+        &self,
+        prepared: &PreparedCall,
+        configs: &[Vec<f32>],
+        bucket: usize,
+        device: &xla::PjRtDevice,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<Perf>> {
         let b = configs.len();
-        let bucket_pos = BUCKETS
-            .iter()
-            .position(|&cap| cap >= b)
-            .expect("chunked to max bucket");
-        let bucket = BUCKETS[bucket_pos];
+        debug_assert!(b >= 1 && b <= bucket);
+        let bucket_pos = BUCKETS.iter().position(|&k| k == bucket).expect("planned bucket");
         let exe = &self.execs[bucket_pos].1;
         let consts = &prepared.per_bucket[bucket_pos];
 
-        // u: bucket rows, padding with copies of row 0 (cheap, valid data)
-        let mut u = Vec::with_capacity(bucket * D_PAD);
+        // u: bucket rows in the reusable scratch buffer
+        scratch.clear();
+        scratch.reserve(bucket * D_PAD);
         for c in configs {
-            u.extend_from_slice(c);
+            scratch.extend_from_slice(c);
         }
         for _ in b..bucket {
-            u.extend_from_slice(&configs[0]);
+            scratch.extend_from_slice(&configs[0]);
         }
         // NB: go through a Literal (buffer_from_host_buffer may zero-copy
-        // and alias `u`) and keep `u_lit` alive until the output sync —
-        // the CPU client's CopyFromLiteral reads it from a worker thread.
-        let devices = self.client.devices();
-        let u_lit = xla::Literal::vec1(&u).reshape(&[bucket as i64, D_PAD as i64])?;
-        let u_buf = self.client.buffer_from_host_literal(Some(&devices[0]), &u_lit)?;
+        // and alias the host memory) and keep `u_lit` alive until the
+        // output sync — the CPU client's CopyFromLiteral reads it from a
+        // worker thread. The Literal owns its copy, so `scratch` is free
+        // for the plan's next call immediately.
+        let u_lit = xla::Literal::vec1(&scratch[..]).reshape(&[bucket as i64, D_PAD as i64])?;
+        let u_buf = self.client.buffer_from_host_literal(Some(device), &u_lit)?;
         // await the async H2D copy (readback sync; CopyRawToHost is not
         // implemented on this CPU client) so u_lit cannot be freed under
         // the copy thread on any early-return path
@@ -313,8 +369,8 @@ impl Engine {
         inputs.extend(consts.iter());
 
         let result = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
-        self.calls.set(self.calls.get() + 1);
-        self.rows.set(self.rows.get() + bucket as u64);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(bucket as u64, Ordering::Relaxed);
         let tuple = result[0][0].to_literal_sync()?;
         // the output sync above also guarantees the input transfer is
         // done; only now may u_lit drop
@@ -345,6 +401,14 @@ pub struct PreparedCall {
     _literals: Vec<xla::Literal>,
 }
 
+// SAFETY: after `Engine::prepare` returns, every buffer's H2D copy has
+// completed (it syncs before handing the value back) and the buffers
+// and literals are only ever read — PJRT buffers are usable from any
+// thread per the C API contract. This makes per-SUT prepared constants
+// movable into session worker threads.
+unsafe impl Send for PreparedCall {}
+unsafe impl Sync for PreparedCall {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -368,6 +432,15 @@ mod tests {
         let mut idxs: Vec<usize> = p.fields().iter().map(|(i, _)| *i).collect();
         idxs.sort_unstable();
         assert_eq!(idxs, (3..20).collect::<Vec<_>>());
+    }
+
+    /// Compile-time guarantee behind parallel-session experiments: the
+    /// engine and its prepared constants cross thread boundaries.
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+        assert_send_sync::<PreparedCall>();
     }
     // engine execution itself is covered by the `runtime_golden`
     // integration test (needs artifacts on disk)

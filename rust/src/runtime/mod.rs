@@ -7,7 +7,8 @@
 //!   `python/compile/model.py::INPUT_SPEC` (kept in sync by the golden
 //!   integration test).
 //! * [`engine`] — PJRT CPU client, per-bucket compiled executables, and
-//!   the batched `evaluate` entry point with bucket padding/chunking.
+//!   the batched `evaluate` entry point with greedy multi-bucket
+//!   decomposition of odd batch sizes.
 //! * [`golden`] — the patterned-input golden vectors shared with
 //!   python/compile/aot.py, proving the rust<->python round trip.
 

@@ -62,6 +62,51 @@ pub fn bucket_for(b: usize) -> Option<usize> {
     BUCKETS.iter().copied().find(|&cap| cap >= b)
 }
 
+/// Per-call dispatch overhead expressed in row-equivalents: padding up
+/// to this many extra rows into one larger-bucket call is cheaper than
+/// splitting the remainder into more calls (the hot-path bench puts a
+/// B=1 dispatch at roughly the cost of a handful of B=16 rows).
+pub const PAD_SLACK_ROWS: usize = 16;
+
+/// Greedy multi-bucket execution plan for a batch of `b` rows: the
+/// bucket sizes of the calls that cover the batch, in issue order. Each
+/// call consumes `min(bucket, rows left)` source rows; only the final
+/// call may pad.
+///
+/// Strategy per remainder: an exact bucket match ends the plan; else,
+/// if padding up to the smallest covering bucket wastes no more than
+/// `max(remainder, PAD_SLACK_ROWS)` rows, one padded call ends the plan
+/// (40 rows must *not* execute as 256 — but 2047 rows *should* execute
+/// as one 2048 call); otherwise split off an exact chunk of the largest
+/// fitting bucket and recurse. The seed behaviour (round every request
+/// up to one covering bucket) executed up to 6.4x the requested rows.
+pub fn plan_buckets(b: usize) -> Vec<usize> {
+    assert!(b > 0, "plan_buckets needs at least one row");
+    let mut plan = Vec::new();
+    let mut rem = b;
+    while rem > 0 {
+        if BUCKETS.contains(&rem) {
+            plan.push(rem);
+            break;
+        }
+        if let Some(cover) = bucket_for(rem) {
+            if cover - rem <= PAD_SLACK_ROWS.max(rem) {
+                plan.push(cover);
+                break;
+            }
+        }
+        let exact = BUCKETS
+            .iter()
+            .rev()
+            .find(|&&k| k < rem)
+            .copied()
+            .expect("BUCKETS start at 1, so any rem > 1 has an exact chunk");
+        plan.push(exact);
+        rem -= exact;
+    }
+    plan
+}
+
 /// Artifact file name for a bucket.
 pub fn artifact_name(bucket: usize) -> String {
     format!("surface_b{bucket}.hlo.txt")
@@ -99,5 +144,63 @@ mod tests {
         let mut s = BUCKETS.to_vec();
         s.sort_unstable();
         assert_eq!(s, BUCKETS.to_vec());
+    }
+
+    #[test]
+    fn plan_exact_bucket_sizes_are_single_calls() {
+        for &b in BUCKETS.iter() {
+            assert_eq!(plan_buckets(b), vec![b]);
+        }
+    }
+
+    #[test]
+    fn plan_splits_odd_batches_instead_of_padding_wide() {
+        // the ISSUE case: 40 rows must not execute 256 padded rows
+        assert_eq!(plan_buckets(40), vec![16, 16, 16]); // 48 rows, 3 calls
+        assert_eq!(plan_buckets(17), vec![16, 1]); // 17 rows, 2 calls
+        assert_eq!(plan_buckets(30), vec![16, 16]); // 32 rows
+        assert_eq!(plan_buckets(272), vec![256, 16]); // exact split
+    }
+
+    #[test]
+    fn plan_pads_when_waste_is_small() {
+        assert_eq!(plan_buckets(2), vec![16]); // 2 single-row calls lose
+        assert_eq!(plan_buckets(8), vec![16]);
+        assert_eq!(plan_buckets(255), vec![256]);
+        assert_eq!(plan_buckets(2047), vec![2048]); // not 23 small calls
+    }
+
+    #[test]
+    fn plan_chunks_above_the_largest_bucket() {
+        assert_eq!(plan_buckets(4096), vec![2048, 2048]);
+        assert_eq!(plan_buckets(2049), vec![2048, 1]);
+        assert_eq!(plan_buckets(2050), vec![2048, 16]);
+    }
+
+    #[test]
+    fn plan_always_covers_the_batch_and_every_call_is_a_bucket() {
+        for b in 1..600 {
+            let plan = plan_buckets(b);
+            assert!(plan.iter().all(|k| BUCKETS.contains(k)), "b={b}: {plan:?}");
+            // walking the plan consumes exactly b source rows
+            let mut rem = b;
+            for (i, &k) in plan.iter().enumerate() {
+                let take = k.min(rem);
+                assert!(take > 0, "b={b}: empty call {i} in {plan:?}");
+                // only the final call may pad
+                if take < k {
+                    assert_eq!(i, plan.len() - 1, "b={b}: padding mid-plan {plan:?}");
+                }
+                rem -= take;
+            }
+            assert_eq!(rem, 0, "b={b}: plan {plan:?} does not cover");
+            // executed rows stay within one PAD_SLACK_ROWS of the request
+            // unless the request itself was tiny
+            let rows: usize = plan.iter().sum();
+            assert!(
+                rows <= b + PAD_SLACK_ROWS.max(b),
+                "b={b}: plan {plan:?} executes {rows} rows"
+            );
+        }
     }
 }

@@ -11,6 +11,27 @@
 //! answer is guaranteed to be at least as good as the baseline: if
 //! tuning never beat the given setting, the baseline itself is
 //! returned (§4.3's "better than a known setting" reformulation).
+//!
+//! # The batched pipeline
+//!
+//! [`tune`] drives one staged test per ask/tell round-trip — every
+//! surface evaluation reaches the PJRT engine at batch size 1, the
+//! slowest point of its bucket ladder. [`tune_batched`] instead drives
+//! *rounds*: [`TuningConfig::round_size`] proposals are drawn together
+//! ([`Optimizer::ask_batch`] — DDS/LHS exploration already generates
+//! rounds internally), executed together
+//! ([`SystemManipulator::run_tests_batch`] — one bucketed engine call
+//! per round on the simulated staging environment), and folded back
+//! together ([`Optimizer::tell_batch`]), in test order.
+//!
+//! Semantics are unchanged: the budget ledger, failure accounting and
+//! baseline guarantee are identical, and a round size of 1 replays the
+//! sequential session bit-for-bit (same rng streams, identical
+//! [`TestRecord`]s). The only behavioural difference at larger round
+//! sizes is that results land at round granularity: the optimizer
+//! cannot re-centre mid-round, and the consecutive-failure cap can only
+//! stop the session at a round boundary (a round in flight has already
+//! consumed its budget).
 
 use crate::error::Result;
 use crate::manipulator::{Measurement, SystemManipulator};
@@ -28,6 +49,10 @@ pub struct TuningConfig {
     pub seed: u64,
     /// Consecutive failed staged tests tolerated before aborting.
     pub max_consecutive_failures: u32,
+    /// Staged tests proposed and executed per round by [`tune_batched`]
+    /// (the last round shrinks to the remaining budget). 1 replays the
+    /// sequential protocol exactly; [`tune`] ignores this knob.
+    pub round_size: usize,
 }
 
 impl Default for TuningConfig {
@@ -37,12 +62,13 @@ impl Default for TuningConfig {
             optimizer: "rrs".into(),
             seed: 0xAC75,
             max_consecutive_failures: 10,
+            round_size: 16,
         }
     }
 }
 
 /// One completed staged test.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TestRecord {
     /// 1-based test number (test 1 is the baseline).
     pub test_no: u64,
@@ -100,6 +126,42 @@ pub fn tune<M: SystemManipulator>(sut: &mut M, config: &TuningConfig) -> Result<
     tune_with(sut, opt.as_mut(), config)
 }
 
+/// Measure the baseline (the given setting) — test 1 of every session.
+/// A flaky staging environment can fail it too: retry within the
+/// failure cap, charging budget each attempt.
+fn run_baseline<M: SystemManipulator>(
+    sut: &mut M,
+    config: &TuningConfig,
+    tests_used: &mut u64,
+    failures: &mut u64,
+) -> Result<(Vec<f64>, Measurement)> {
+    let baseline_unit = sut.current_unit().to_vec();
+    let baseline = loop {
+        *tests_used += 1;
+        match sut.run_test() {
+            Ok(m) => break m,
+            Err(crate::error::ActsError::TestFailed(msg)) => {
+                *failures += 1;
+                if *failures > config.max_consecutive_failures as u64
+                    || *tests_used >= config.budget_tests
+                {
+                    return Err(crate::error::ActsError::TestFailed(format!(
+                        "baseline never completed: {msg}"
+                    )));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    Ok((baseline_unit, baseline))
+}
+
+/// Sign-robust relative gain (objectives are normally positive, but a
+/// caller's custom metric may not be).
+fn relative_gain(best: f64, baseline: f64) -> f64 {
+    (best - baseline) / baseline.abs().max(1e-12)
+}
+
 /// As [`tune`], but with a caller-supplied optimizer instance.
 pub fn tune_with<M: SystemManipulator>(
     sut: &mut M,
@@ -112,27 +174,7 @@ pub fn tune_with<M: SystemManipulator>(
     let mut tests_used: u64 = 0;
     let mut failures: u64 = 0;
 
-    // test 1: the baseline (the given setting the answer must beat).
-    // A flaky staging environment can fail it too — retry within the
-    // failure cap, charging budget each attempt.
-    let baseline_unit = sut.current_unit().to_vec();
-    let baseline = loop {
-        tests_used += 1;
-        match sut.run_test() {
-            Ok(m) => break m,
-            Err(crate::error::ActsError::TestFailed(msg)) => {
-                failures += 1;
-                if failures > config.max_consecutive_failures as u64
-                    || tests_used >= config.budget_tests
-                {
-                    return Err(crate::error::ActsError::TestFailed(format!(
-                        "baseline never completed: {msg}"
-                    )));
-                }
-            }
-            Err(e) => return Err(e),
-        }
-    };
+    let (baseline_unit, baseline) = run_baseline(sut, config, &mut tests_used, &mut failures)?;
     let mut best_unit = baseline_unit.clone();
     let mut best = baseline;
     records.push(TestRecord {
@@ -184,16 +226,121 @@ pub fn tune_with<M: SystemManipulator>(
         }
     }
 
-    // sign-robust relative gain (objectives are normally positive, but a
-    // caller's custom metric may not be)
-    let improvement =
-        (best.throughput - baseline.throughput) / baseline.throughput.abs().max(1e-12);
     Ok(TuningOutcome {
         records,
         baseline,
         best_unit,
         best,
-        improvement,
+        improvement: relative_gain(best.throughput, baseline.throughput),
+        tests_used,
+        failures,
+        sim_seconds: sut.sim_seconds(),
+    })
+}
+
+/// Run a *batched* tuning session against `sut` under `config`: rounds
+/// of [`TuningConfig::round_size`] staged tests are proposed, executed
+/// and folded back together, driving the engine's batch buckets at full
+/// width instead of one config per call. See the module docs for the
+/// exact semantics (identical ledger/guarantees; bit-identical to
+/// [`tune`] at round size 1).
+pub fn tune_batched<M: SystemManipulator>(
+    sut: &mut M,
+    config: &TuningConfig,
+) -> Result<TuningOutcome> {
+    let dim = sut.space().dim();
+    let mut opt = optimizer::by_name(&config.optimizer, dim).ok_or_else(|| {
+        crate::error::ActsError::InvalidArg(format!("unknown optimizer `{}`", config.optimizer))
+    })?;
+    tune_batched_with(sut, opt.as_mut(), config)
+}
+
+/// As [`tune_batched`], but with a caller-supplied optimizer instance.
+pub fn tune_batched_with<M: SystemManipulator>(
+    sut: &mut M,
+    opt: &mut dyn Optimizer,
+    config: &TuningConfig,
+) -> Result<TuningOutcome> {
+    assert!(config.budget_tests >= 1, "budget must allow the baseline test");
+    assert!(config.round_size >= 1, "round size must be at least 1");
+    let mut rng = Rng64::new(config.seed);
+    let mut records: Vec<TestRecord> = Vec::new();
+    let mut tests_used: u64 = 0;
+    let mut failures: u64 = 0;
+
+    let (baseline_unit, baseline) = run_baseline(sut, config, &mut tests_used, &mut failures)?;
+    let mut best_unit = baseline_unit.clone();
+    let mut best = baseline;
+    records.push(TestRecord {
+        test_no: tests_used,
+        unit: baseline_unit.clone(),
+        measurement: baseline,
+        best_so_far: baseline.throughput,
+    });
+    // the baseline is a real observation: seed the optimizer with it
+    opt.tell(&baseline_unit, baseline.throughput);
+
+    let mut consecutive_failures = 0u32;
+    while tests_used < config.budget_tests {
+        let n = ((config.budget_tests - tests_used) as usize).min(config.round_size);
+        let proposals = opt.ask_batch(&mut rng, n);
+        debug_assert_eq!(proposals.len(), n);
+        let staged: Vec<Vec<f64>> = proposals.iter().map(|p| sut.space().snap(p)).collect();
+        // a fatal (non-TestFailed) error aborts the round at its row, so
+        // the manipulator may return fewer than `n` results; the zip
+        // below then charges only the rows that actually executed
+        let outcomes = sut.run_tests_batch(&proposals);
+        debug_assert!(outcomes.len() <= n);
+
+        // fold the round back in test order; every executed row charges
+        // budget whether it passed or failed (§2.3)
+        let mut told_units: Vec<Vec<f64>> = Vec::with_capacity(n);
+        let mut told_values: Vec<f64> = Vec::with_capacity(n);
+        for (staged_unit, outcome) in staged.into_iter().zip(outcomes) {
+            match outcome {
+                Ok(m) => {
+                    tests_used += 1;
+                    consecutive_failures = 0;
+                    if m.throughput > best.throughput {
+                        best = m;
+                        best_unit = staged_unit.clone();
+                    }
+                    told_values.push(m.throughput);
+                    told_units.push(staged_unit.clone());
+                    records.push(TestRecord {
+                        test_no: tests_used,
+                        unit: staged_unit,
+                        measurement: m,
+                        best_so_far: best.throughput,
+                    });
+                }
+                Err(crate::error::ActsError::TestFailed(_)) => {
+                    tests_used += 1;
+                    failures += 1;
+                    consecutive_failures += 1;
+                    // a crashed config is informative: tell the optimizer
+                    // it performed at zero so the search moves away
+                    told_values.push(0.0);
+                    told_units.push(staged_unit);
+                }
+                // programming / infrastructure error, not a test failure
+                Err(e) => return Err(e),
+            }
+        }
+        opt.tell_batch(&told_units, &told_values);
+        // the cap is tracked per row but a round in flight has already
+        // consumed its budget: stop at the round boundary
+        if consecutive_failures > config.max_consecutive_failures {
+            break;
+        }
+    }
+
+    Ok(TuningOutcome {
+        records,
+        baseline,
+        best_unit,
+        best,
+        improvement: relative_gain(best.throughput, baseline.throughput),
         tests_used,
         failures,
         sim_seconds: sut.sim_seconds(),
@@ -214,7 +361,11 @@ mod tests {
         staged: Option<Vec<f64>>,
         seconds: f64,
         tests: u64,
+        /// Every k-th `run_test` call fails (flaky environment).
         fail_every: Option<u64>,
+        /// Every `run_test` call after the k-th fails (dead environment
+        /// with a passing baseline when k >= 1).
+        fail_after: Option<u64>,
         calls: u64,
     }
 
@@ -232,6 +383,7 @@ mod tests {
                 seconds: 0.0,
                 tests: 0,
                 fail_every: None,
+                fail_after: None,
                 calls: 0,
             }
         }
@@ -265,6 +417,11 @@ mod tests {
             if let Some(k) = self.fail_every {
                 if self.calls % k == 0 {
                     return Err(ActsError::TestFailed("injected".into()));
+                }
+            }
+            if let Some(k) = self.fail_after {
+                if self.calls > k {
+                    return Err(ActsError::TestFailed("injected (dead env)".into()));
                 }
             }
             self.tests += 1;
@@ -355,27 +512,38 @@ mod tests {
 
     #[test]
     fn consecutive_failure_cap_stops_session_early() {
-        struct AlwaysFailAfterFirst(FakeSut);
-        // simpler: fail_every = 1 but skip first call
         let mut sut = FakeSut::new(4);
-        sut.fail_every = Some(1);
-        sut.calls = 0;
-        // shift so baseline (call 1) passes: fail when calls % 1 == 0 is
-        // always true; instead run baseline manually via fail_every None
-        let _ = AlwaysFailAfterFirst; // silence
-        let mut sut = FakeSut::new(4);
-        sut.fail_every = None;
-        // hand-roll: baseline ok, then make everything fail
+        sut.fail_after = Some(1); // baseline (call 1) passes, everything after fails
         let cfg = TuningConfig {
             budget_tests: 1000,
             max_consecutive_failures: 5,
             ..Default::default()
         };
-        // trick: fail_every=2 means every second test fails; consecutive
-        // failures never exceed 1, so the session runs the whole budget.
-        sut.fail_every = Some(2);
         let out = tune(&mut sut, &cfg).unwrap();
-        assert_eq!(out.tests_used, 1000);
+        // baseline + (cap + 1) consecutive failures, then the session
+        // stops — nowhere near the 1000-test budget
+        assert_eq!(out.tests_used, 1 + 5 + 1);
+        assert_eq!(out.failures, 6);
+        assert_eq!(out.records.len(), 1, "only the baseline produced a record");
+        // baseline guarantee: the answer is the given setting itself
+        assert_eq!(out.best.throughput, out.baseline.throughput);
+        assert_eq!(out.improvement, 0.0);
+    }
+
+    #[test]
+    fn alternating_failures_never_trip_the_cap() {
+        // every second test fails: consecutive failures never exceed 1,
+        // so the session must run its whole budget
+        let mut sut = FakeSut::new(4);
+        sut.fail_every = Some(2);
+        let cfg = TuningConfig {
+            budget_tests: 60,
+            max_consecutive_failures: 5,
+            ..Default::default()
+        };
+        let out = tune(&mut sut, &cfg).unwrap();
+        assert_eq!(out.tests_used, 60);
+        assert!(out.failures >= 25, "failures {}", out.failures);
     }
 
     #[test]
@@ -404,5 +572,156 @@ mod tests {
         if out.baseline.throughput > 0.0 {
             assert!((out.speedup() - (1.0 + out.improvement)).abs() < 1e-9);
         }
+    }
+
+    // --- the batched pipeline ---------------------------------------
+
+    /// The headline equivalence guarantee: a batched session at round
+    /// size 1 replays the sequential session bit-for-bit — same rng
+    /// streams, identical records, ledger and answer — for every
+    /// optimizer with a native batch implementation, with and without
+    /// failure injection.
+    #[test]
+    fn batched_round_size_one_is_bit_identical_to_sequential() {
+        for optimizer in ["rrs", "random", "lhs-screen", "gp"] {
+            for fail_every in [None, Some(3)] {
+                let run = |batched: bool| {
+                    let mut sut = FakeSut::new(4);
+                    sut.fail_every = fail_every;
+                    let cfg = TuningConfig {
+                        budget_tests: 30,
+                        optimizer: optimizer.into(),
+                        seed: 99,
+                        round_size: 1,
+                        ..Default::default()
+                    };
+                    if batched {
+                        tune_batched(&mut sut, &cfg).unwrap()
+                    } else {
+                        tune(&mut sut, &cfg).unwrap()
+                    }
+                };
+                let seq = run(false);
+                let bat = run(true);
+                assert_eq!(
+                    seq.records, bat.records,
+                    "{optimizer} fail_every={fail_every:?}: records diverged"
+                );
+                assert_eq!(seq.tests_used, bat.tests_used);
+                assert_eq!(seq.failures, bat.failures);
+                assert_eq!(seq.best_unit, bat.best_unit);
+                assert_eq!(seq.best, bat.best);
+                assert_eq!(seq.sim_seconds, bat.sim_seconds);
+            }
+        }
+    }
+
+    /// The default `run_tests_batch` must match N sequential protocol
+    /// runs exactly (results, clock, test counter).
+    #[test]
+    fn run_tests_batch_default_matches_sequential_protocol() {
+        let mut batch_sut = FakeSut::new(3);
+        let mut seq_sut = FakeSut::new(3);
+        batch_sut.fail_every = Some(3);
+        seq_sut.fail_every = Some(3);
+        let units: Vec<Vec<f64>> =
+            (0..7).map(|i| vec![0.1 * i as f64, 0.5, 0.9 - 0.1 * i as f64]).collect();
+        let batch = batch_sut.run_tests_batch(&units);
+        let seq: Vec<crate::Result<Measurement>> = units
+            .iter()
+            .map(|u| {
+                seq_sut
+                    .set_config(u)
+                    .and_then(|()| seq_sut.restart())
+                    .and_then(|()| seq_sut.run_test())
+            })
+            .collect();
+        assert_eq!(batch.len(), seq.len());
+        for (i, (b, s)) in batch.iter().zip(&seq).enumerate() {
+            match (b, s) {
+                (Ok(mb), Ok(ms)) => assert_eq!(mb, ms, "row {i}"),
+                (Err(ActsError::TestFailed(_)), Err(ActsError::TestFailed(_))) => {}
+                other => panic!("row {i}: batch/sequential disagree: {other:?}"),
+            }
+        }
+        assert_eq!(batch_sut.sim_seconds(), seq_sut.sim_seconds());
+        assert_eq!(batch_sut.tests_run(), seq_sut.tests_run());
+        assert_eq!(batch_sut.current_unit(), seq_sut.current_unit());
+    }
+
+    #[test]
+    fn batched_budget_is_respected_exactly_at_any_round_size() {
+        for round_size in [1usize, 4, 7, 16, 64] {
+            let mut sut = FakeSut::new(4);
+            let cfg = TuningConfig { budget_tests: 25, round_size, ..Default::default() };
+            let out = tune_batched(&mut sut, &cfg).unwrap();
+            assert_eq!(out.tests_used, 25, "round_size {round_size}");
+            assert_eq!(out.records.len(), 25, "round_size {round_size}");
+            // record numbering stays 1-based and dense
+            assert_eq!(out.records.last().unwrap().test_no, 25);
+        }
+    }
+
+    #[test]
+    fn batched_answer_never_worse_than_baseline() {
+        for seed in 0..5 {
+            let mut sut = FakeSut::new(6);
+            let cfg = TuningConfig {
+                budget_tests: 20,
+                seed,
+                optimizer: "random".into(),
+                round_size: 8,
+                ..Default::default()
+            };
+            let out = tune_batched(&mut sut, &cfg).unwrap();
+            assert!(out.best.throughput >= out.baseline.throughput);
+            assert!(out.improvement >= 0.0);
+        }
+    }
+
+    #[test]
+    fn batched_best_curve_is_monotone() {
+        let mut sut = FakeSut::new(4);
+        let out = tune_batched(&mut sut, &TuningConfig::default()).unwrap();
+        let curve = out.best_curve();
+        assert!(curve.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(curve.last().copied().unwrap(), out.best.throughput);
+    }
+
+    #[test]
+    fn batched_failure_cap_stops_at_round_boundary() {
+        let mut sut = FakeSut::new(4);
+        sut.fail_after = Some(1); // baseline passes, everything after fails
+        let cfg = TuningConfig {
+            budget_tests: 1000,
+            max_consecutive_failures: 5,
+            round_size: 8,
+            ..Default::default()
+        };
+        let out = tune_batched(&mut sut, &cfg).unwrap();
+        // the cap trips mid-round but the round was already spent: the
+        // session stops after exactly one full round past the baseline
+        assert_eq!(out.tests_used, 1 + 8);
+        assert_eq!(out.failures, 8);
+        assert_eq!(out.records.len(), 1);
+        assert_eq!(out.best.throughput, out.baseline.throughput);
+    }
+
+    #[test]
+    fn batched_failures_consume_budget_but_produce_no_records() {
+        let mut sut = FakeSut::new(4);
+        sut.fail_every = Some(3);
+        let cfg = TuningConfig { budget_tests: 30, round_size: 8, ..Default::default() };
+        let out = tune_batched(&mut sut, &cfg).unwrap();
+        assert_eq!(out.tests_used, 30);
+        assert!(out.failures >= 8, "failures {}", out.failures);
+        assert_eq!(out.records.len() as u64, 30 - out.failures);
+    }
+
+    #[test]
+    fn batched_unknown_optimizer_is_an_error() {
+        let mut sut = FakeSut::new(3);
+        let cfg = TuningConfig { optimizer: "nope".into(), ..Default::default() };
+        assert!(tune_batched(&mut sut, &cfg).is_err());
     }
 }

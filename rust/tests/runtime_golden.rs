@@ -142,6 +142,52 @@ fn bucket_padding_and_chunking_are_transparent() {
 }
 
 #[test]
+fn greedy_decomposition_executes_few_padded_rows() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (configs, w, e, params) = golden::pattern_call(16);
+    let prepared = engine.prepare(&params, &w, &e).unwrap();
+    let all = engine.evaluate_prepared(&prepared, &configs).unwrap();
+    let cycle = |n: usize| -> Vec<Vec<f32>> {
+        let mut out: Vec<Vec<f32>> = Vec::new();
+        while out.len() < n {
+            out.extend(configs.iter().cloned());
+        }
+        out.truncate(n);
+        out
+    };
+
+    // B=40 must run as 3 bucket-16 calls (48 rows), not one padded
+    // 256-row call
+    let (calls0, rows0) = engine.stats();
+    let got = engine.evaluate_prepared(&prepared, &cycle(40)).unwrap();
+    let (calls1, rows1) = engine.stats();
+    assert_eq!(got.len(), 40);
+    assert_eq!(calls1 - calls0, 3, "B=40 should be 16+16+16");
+    assert_eq!(rows1 - rows0, 48, "B=40 must not execute 256 padded rows");
+    for (i, p) in got.iter().enumerate() {
+        let want = &all[i % 16];
+        assert!(
+            (p.throughput - want.throughput).abs() < 1e-3 * (1.0 + want.throughput),
+            "row {i} diverged under decomposition"
+        );
+    }
+
+    // B=17: one full bucket-16 call plus one single-row call
+    let got = engine.evaluate_prepared(&prepared, &cycle(17)).unwrap();
+    let (calls2, rows2) = engine.stats();
+    assert_eq!(got.len(), 17);
+    assert_eq!(calls2 - calls1, 2, "B=17 should be 16+1");
+    assert_eq!(rows2 - rows1, 17);
+
+    // B=2047: padding one row into the 2048 bucket beats 23 calls
+    let got = engine.evaluate_prepared(&prepared, &cycle(2047)).unwrap();
+    let (calls3, rows3) = engine.stats();
+    assert_eq!(got.len(), 2047);
+    assert_eq!(calls3 - calls2, 1, "B=2047 should pad to one 2048 call");
+    assert_eq!(rows3 - rows2, 2048);
+}
+
+#[test]
 fn empty_request_is_empty() {
     let Some(engine) = engine_or_skip() else { return };
     let (_, w, e, params) = golden::pattern_call(1);

@@ -165,6 +165,76 @@ fn co_deployed_systems_tune_better_jointly() {
 }
 
 #[test]
+fn batched_round_size_one_matches_sequential_on_the_real_surface() {
+    // the batched pipeline's equivalence guarantee, on the real engine
+    // with noise AND failure injection: round_size=1 replays tune()
+    // bit-for-bit
+    let Some(lab) = lab_or_skip() else { return };
+    let opts = SimulationOpts {
+        restart_failure_p: 0.1,
+        test_failure_p: 0.05,
+        ..SimulationOpts::default()
+    };
+    let deploy = || {
+        lab.deploy(
+            Target::Single(sut::mysql()),
+            WorkloadSpec::zipfian_read_write(),
+            DeploymentEnv::standalone(),
+            opts.clone(),
+            23,
+        )
+    };
+    let cfg = TuningConfig { budget_tests: 40, seed: 23, round_size: 1, ..Default::default() };
+    let mut seq_sut = deploy();
+    let seq = tuner::tune(&mut seq_sut, &cfg).unwrap();
+    let mut bat_sut = deploy();
+    let bat = tuner::tune_batched(&mut bat_sut, &cfg).unwrap();
+    assert_eq!(seq.records, bat.records, "round_size=1 must replay the sequential session");
+    assert_eq!(seq.tests_used, bat.tests_used);
+    assert_eq!(seq.failures, bat.failures);
+    assert_eq!(seq.sim_seconds, bat.sim_seconds);
+}
+
+#[test]
+fn batched_session_issues_far_fewer_engine_calls() {
+    // the point of the tentpole: a round of 16 staged tests is ONE
+    // bucketed execute call instead of 16 B=1 calls
+    let Some(lab) = lab_or_skip() else { return };
+    let deploy = |seed| {
+        lab.deploy(
+            Target::Single(sut::tomcat()),
+            WorkloadSpec::page_mix(),
+            DeploymentEnv::standalone(),
+            SimulationOpts::ideal(),
+            seed,
+        )
+    };
+    let budget = 33; // baseline + 32 staged tests
+
+    let (c0, _) = lab.engine.stats();
+    let cfg = TuningConfig { budget_tests: budget, seed: 31, round_size: 1, ..Default::default() };
+    let seq = tuner::tune(&mut deploy(31), &cfg).unwrap();
+    let (c1, _) = lab.engine.stats();
+    let seq_calls = c1 - c0;
+
+    let cfg = TuningConfig { budget_tests: budget, seed: 31, round_size: 16, ..Default::default() };
+    let bat = tuner::tune_batched(&mut deploy(31), &cfg).unwrap();
+    let (c2, _) = lab.engine.stats();
+    let bat_calls = c2 - c1;
+
+    assert_eq!(seq.tests_used, budget);
+    assert_eq!(bat.tests_used, budget);
+    assert!(bat.best.throughput >= bat.baseline.throughput);
+    // sequential: one engine call per staged test (33). batched:
+    // baseline + 2 rounds of 16 => 3 calls.
+    assert_eq!(seq_calls, budget);
+    assert!(
+        bat_calls * 5 <= seq_calls,
+        "batched session used {bat_calls} engine calls vs sequential {seq_calls}"
+    );
+}
+
+#[test]
 fn gp_surrogate_competes_at_tiny_budgets() {
     // the model-based baseline must function end-to-end on the real
     // surface and beat pure random at a small budget (its sweet spot)
