@@ -10,9 +10,11 @@
 //! the flexible architecture refuses to reuse samples across
 //! deployments (§4.2, difference 2).
 
+use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::Lab;
 use acts::manipulator::{SimulationOpts, Target};
 use acts::optimizer::OPTIMIZER_NAMES;
+use acts::report::Json;
 use acts::sut;
 use acts::tuner::{self, TuningConfig};
 use acts::workload::{DeploymentEnv, WorkloadSpec};
@@ -44,6 +46,7 @@ fn main() {
     let seeds = [1u64, 2, 3];
     let mut rrs_at_200 = 0.0;
     let mut random_at_200 = 0.0;
+    let mut best_at_200: Vec<(&str, f64)> = Vec::new();
     for &budget in &[25u64, 50, 100, 200] {
         print!("| {budget} |");
         for name in OPTIMIZER_NAMES {
@@ -72,6 +75,9 @@ fn main() {
             if budget == 200 && *name == "random" {
                 random_at_200 = mean;
             }
+            if budget == 200 {
+                best_at_200.push((*name, mean));
+            }
             print!(" {mean:.0} |");
         }
         println!();
@@ -80,6 +86,35 @@ fn main() {
         rrs_at_200 >= 0.95 * random_at_200,
         "RRS ({rrs_at_200}) should not lose clearly to random ({random_at_200})"
     );
+
+    // wall-clock per optimizer (one batched session each), through the
+    // shared bench harness so the numbers land in BENCH_optimizers.json
+    let mut b = Bench::with_config("optimizer sessions", BenchConfig::quick());
+    let session_budget = 100u64;
+    for name in OPTIMIZER_NAMES {
+        let cfg = TuningConfig {
+            budget_tests: session_budget,
+            optimizer: name.to_string(),
+            seed: 1,
+            round_size: round_size_for(name),
+            ..Default::default()
+        };
+        b.bench_units(
+            format!("session {name} ({session_budget} tests)"),
+            Some(session_budget as f64),
+            || {
+                let mut sut = lab.deploy(
+                    Target::Single(sut::mysql()),
+                    WorkloadSpec::zipfian_read_write(),
+                    DeploymentEnv::standalone(),
+                    SimulationOpts::ideal(),
+                    1,
+                );
+                black_box(tuner::tune_batched(&mut sut, &cfg).unwrap());
+            },
+        );
+    }
+    b.report();
 
     // --- part 2: Fig. 3 ablation — sample reuse across deployments ---
     println!("\n### Fig. 3 ablation: reuse best config across deployments vs tune in place\n");
@@ -121,4 +156,25 @@ fn main() {
         reused_on_cluster < best_cluster_inplace,
         "reuse should underperform in-place tuning"
     );
+
+    // machine-readable dump for cross-PR tracking, alongside
+    // BENCH_runtime_hotpath.json
+    let best_rows: Vec<Json> = best_at_200
+        .iter()
+        .map(|(name, mean)| {
+            Json::obj(vec![
+                ("optimizer", Json::Str(name.to_string())),
+                ("best_throughput", Json::Num(*mean)),
+            ])
+        })
+        .collect();
+    let json = b.json(vec![
+        ("best_at_budget_200", Json::Arr(best_rows)),
+        ("rrs_over_random_at_200", Json::Num(rrs_at_200 / random_at_200.max(1e-9))),
+        ("fig3_reuse_penalty", Json::Num(penalty)),
+    ]);
+    let out_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_optimizers.json");
+    std::fs::write(&out_path, &json).expect("write BENCH_optimizers.json");
+    println!("wrote {}", out_path.display());
 }

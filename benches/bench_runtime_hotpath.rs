@@ -2,22 +2,26 @@
 //! the path every staged test and every atlas point funnels through.
 //! This is the §Perf target workload (see EXPERIMENTS.md §Perf).
 //!
-//! Measures three layers and dumps `BENCH_runtime_hotpath.json` next to
+//! Measures four layers and dumps `BENCH_runtime_hotpath.json` next to
 //! the crate root so the perf trajectory is tracked across PRs:
 //! * per-bucket `evaluate` throughput, unprepared (constants uploaded
 //!   every call) vs prepared (device-resident constants);
 //! * odd/chunked batches through the greedy bucket decomposition;
 //! * whole tuning sessions, sequential (`tune`, one B=1 engine call per
 //!   staged test) vs batched (`tune_batched`, one bucketed call per
-//!   round) — the ISSUE's ≥5x acceptance gate.
+//!   round) — the ISSUE's ≥5x acceptance gate;
+//! * multi-session scheduling: 8 concurrent round-size-32 sessions
+//!   coalescing each tick's 256 rows into one bucket execute vs the
+//!   same 8 sessions run back-to-back through `tune_batched` — the
+//!   scheduler's ≥2x aggregate-throughput acceptance gate.
 
 use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::Lab;
-use acts::manipulator::{SimulationOpts, Target};
+use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
 use acts::report::Json;
 use acts::runtime::{golden, Engine, BUCKETS};
 use acts::sut;
-use acts::tuner::{self, TuningConfig};
+use acts::tuner::{self, Scheduler, TuningConfig, TuningSession};
 use acts::workload::{DeploymentEnv, WorkloadSpec};
 
 fn main() {
@@ -120,10 +124,82 @@ fn main() {
         );
     }
 
+    // multi-session scheduling: 8 round-size-32 sessions of one binding.
+    // Sequentially, each round is a partial-width [16,16] plan; the
+    // scheduler coalesces all 8 sessions' rounds into one 256-bucket
+    // execute per tick.
+    let n_sessions: u64 = 8;
+    let sched_budget: u64 = 129; // baseline + 4 rounds of 32 per session
+    {
+        let deploy = |seed| {
+            lab.deploy(
+                Target::Single(sut::mysql()),
+                WorkloadSpec::zipfian_read_write(),
+                DeploymentEnv::standalone(),
+                SimulationOpts::ideal(),
+                seed,
+            )
+        };
+        let cfg_for = |seed| TuningConfig {
+            budget_tests: sched_budget,
+            seed,
+            round_size: 32,
+            ..Default::default()
+        };
+        let aggregate = (n_sessions * sched_budget) as f64;
+        b.bench_units(
+            format!("{n_sessions} sessions sequential (tune_batched, round=32)"),
+            Some(aggregate),
+            || {
+                for s in 0..n_sessions {
+                    let mut sut = deploy(70 + s);
+                    black_box(tuner::tune_batched(&mut sut, &cfg_for(70 + s)).unwrap());
+                }
+            },
+        );
+        b.bench_units(
+            format!("{n_sessions} sessions scheduled (coalesced rounds)"),
+            Some(aggregate),
+            || {
+                let mut scheduler = Scheduler::new();
+                for s in 0..n_sessions {
+                    let sut = deploy(70 + s);
+                    let session =
+                        TuningSession::from_registry(sut.space().clone(), &cfg_for(70 + s))
+                            .unwrap();
+                    scheduler.add(session, sut);
+                }
+                black_box(scheduler.run());
+            },
+        );
+
+        // one instrumented run for the coalescing confirmation line
+        let before = engine.stats();
+        let mut scheduler = Scheduler::new();
+        for s in 0..n_sessions {
+            let sut = deploy(70 + s);
+            let session =
+                TuningSession::from_registry(sut.space().clone(), &cfg_for(70 + s)).unwrap();
+            scheduler.add(session, sut);
+        }
+        let _ = black_box(scheduler.run());
+        let after = engine.stats();
+        println!(
+            "scheduler coalescing: {} requests ({} rows) -> {} executes ({} rows incl. padding)",
+            after.requests - before.requests,
+            after.rows_requested - before.rows_requested,
+            after.execute_calls - before.execute_calls,
+            after.rows_executed - before.rows_executed,
+        );
+    }
+
     b.report();
 
-    let (calls, rows) = engine.stats();
-    println!("engine totals: {calls} execute calls, {rows} config rows");
+    let stats = engine.stats();
+    println!(
+        "engine totals: {} execute calls, {} config rows ({} requests, {} rows requested)",
+        stats.execute_calls, stats.rows_executed, stats.requests, stats.rows_requested
+    );
 
     // §Perf target: >= 1e5 config evals/s at the largest bucket
     let best = b
@@ -147,10 +223,21 @@ fn main() {
     println!("session config-evals/s: sequential {seq:.1}, batched {bat:.1}");
     println!("batched session speedup: {speedup:.1}x (target >= 5x)");
 
+    // the scheduler acceptance gate: 8 concurrent sessions through the
+    // coalescing scheduler vs the same 8 run one after another
+    let fleet_seq = session_rate("sessions sequential");
+    let fleet_sched = session_rate("sessions scheduled");
+    let sched_speedup = if fleet_seq > 0.0 { fleet_sched / fleet_seq } else { 0.0 };
+    println!(
+        "8-session aggregate config-evals/s: sequential {fleet_seq:.1}, scheduled {fleet_sched:.1}"
+    );
+    println!("scheduler speedup: {sched_speedup:.1}x (target >= 2x)");
+
     // machine-readable dump for cross-PR tracking
     let json = b.json(vec![
         ("platform", Json::Str(engine.platform())),
         ("session_speedup_batched_vs_sequential", Json::Num(speedup)),
+        ("scheduler_speedup_8x32_vs_sequential", Json::Num(sched_speedup)),
     ]);
     let out_path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime_hotpath.json");
@@ -159,9 +246,14 @@ fn main() {
 
     // enforced, not just reported (after the JSON dump, so a failing
     // run still records its numbers): a regression of the batched path
-    // below 5x the sequential session fails the bench run
+    // below 5x the sequential session, or of the scheduler below 2x
+    // the back-to-back sessions, fails the bench run
     assert!(
         speedup >= 5.0,
         "batched session speedup {speedup:.2}x below the 5x acceptance gate"
+    );
+    assert!(
+        sched_speedup >= 2.0,
+        "scheduler speedup {sched_speedup:.2}x below the 2x acceptance gate"
     );
 }

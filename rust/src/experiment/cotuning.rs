@@ -10,10 +10,10 @@
 
 use super::Lab;
 use crate::error::Result;
-use crate::manipulator::{SimulationOpts, Target};
+use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
 use crate::optimizer::{Observation, Optimizer, Rrs, RrsParams};
 use crate::sut;
-use crate::tuner::{self, TuningConfig, TuningOutcome};
+use crate::tuner::{Scheduler, TuningConfig, TuningOutcome, TuningSession};
 use crate::util::rng::Rng64;
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 
@@ -67,8 +67,24 @@ impl<O: Optimizer> Optimizer for FrozenSuffix<O> {
             .collect()
     }
 
-    // tell_batch: the trait default (a fold over `tell`) is already
-    // correct — `tell` strips the suffix per observation.
+    // Round fold: strip the suffix per observation but hand the whole
+    // round to the inner optimizer's (possibly native) `tell_batch`, so
+    // e.g. RRS still sees one exploitation round as one re-align/shrink
+    // decision through the wrapper. A fold over `tell` would silently
+    // downgrade it to the sequential semantics.
+    fn tell_batch(&mut self, units: &[Vec<f64>], values: &[f64]) {
+        debug_assert_eq!(units.len(), values.len());
+        let frozen_len = self.frozen.len();
+        let stripped: Vec<Vec<f64>> =
+            units.iter().map(|u| u[..u.len() - frozen_len].to_vec()).collect();
+        self.inner.tell_batch(&stripped, values);
+        for (u, &v) in units.iter().zip(values) {
+            let better = self.best.as_ref().map(|b| v > b.value).unwrap_or(true);
+            if better {
+                self.best = Some(Observation { unit: u.to_vec(), value: v });
+            }
+        }
+    }
 
     fn best(&self) -> Option<&Observation> {
         self.best.as_ref()
@@ -115,7 +131,17 @@ impl CoTuning {
     }
 }
 
-/// Run both strategies at equal budget.
+/// Run both strategies at equal budget — as two concurrent sessions in
+/// one [`Scheduler`], sharing the engine: both sessions deploy the same
+/// binding (same SUT, workload, deployment), so every tick their
+/// pending rows coalesce into one shared bucket execute instead of two
+/// partial-width calls.
+///
+/// Both sessions run at round size 1, which replays the historical
+/// sequential comparison's rng streams exactly — the comparison is
+/// about *what* the two strategies can reach at equal budget, so the
+/// per-strategy trajectories are kept identical to the pre-scheduler
+/// driver while the engine traffic is co-batched.
 pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<CoTuning> {
     let spec = sut::tomcat_with_jvm();
     let tomcat_dims = sut::tomcat().space.dim();
@@ -132,17 +158,24 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<CoTuning> {
             seed,
         )
     };
-    let cfg = TuningConfig { budget_tests: budget, seed, ..Default::default() };
+    let cfg = TuningConfig { budget_tests: budget, seed, round_size: 1, ..Default::default() };
 
-    let mut frozen_sut = deploy(seed);
-    let mut frozen_opt =
-        FrozenSuffix::new(Rrs::new(tomcat_dims, RrsParams::default()), jvm_defaults);
-    let frozen = tuner::tune_with(&mut frozen_sut, &mut frozen_opt, &cfg)?;
+    let mut scheduler = Scheduler::new();
+    let frozen_sut = deploy(seed);
+    let frozen_opt = FrozenSuffix::new(Rrs::new(tomcat_dims, RrsParams::default()), jvm_defaults);
+    let frozen_session =
+        TuningSession::new(frozen_sut.space().clone(), Box::new(frozen_opt), cfg.clone());
+    scheduler.add(frozen_session, frozen_sut);
 
-    let mut joint_sut = deploy(seed);
-    let mut joint_opt = Rrs::new(spec.space.dim(), RrsParams::default());
-    let joint = tuner::tune_with(&mut joint_sut, &mut joint_opt, &cfg)?;
+    let joint_sut = deploy(seed);
+    let joint_opt = Rrs::new(spec.space.dim(), RrsParams::default());
+    let joint_session =
+        TuningSession::new(joint_sut.space().clone(), Box::new(joint_opt), cfg.clone());
+    scheduler.add(joint_session, joint_sut);
 
+    let mut outcomes = scheduler.run().into_iter();
+    let frozen = outcomes.next().expect("frozen slot")?;
+    let joint = outcomes.next().expect("joint slot")?;
     Ok(CoTuning { frozen, joint })
 }
 
@@ -162,6 +195,23 @@ mod tests {
         }
         let b = opt.best().unwrap();
         assert_eq!(&b.unit[2..], &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn frozen_suffix_round_fold_reaches_inner_native_tell_batch() {
+        // a stalled exploitation round through the wrapper must count as
+        // ONE rrs failure (the native round decision), not one per row
+        let mut rng = Rng64::new(5);
+        let p = RrsParams { explore_n: 1, max_fail: 2, init_rho: 0.2, ..Default::default() };
+        let mut opt = FrozenSuffix::new(Rrs::new(2, p), vec![0.5]);
+        let u = opt.ask(&mut rng);
+        opt.tell(&u, 1.0); // inner enters exploitation at rho 0.2
+        let round = opt.ask_batch(&mut rng, 6);
+        opt.tell_batch(&round, &[0.0; 6]);
+        assert_eq!(opt.inner.rho(), Some(0.2), "one stalled round is one failure, no shrink");
+        let round = opt.ask_batch(&mut rng, 6);
+        opt.tell_batch(&round, &[0.0; 6]);
+        assert_eq!(opt.inner.rho(), Some(0.1), "second stalled round shrinks once");
     }
 
     #[test]

@@ -7,9 +7,9 @@
 //! the JVM's `TargetSurvivorRatio` relocates Tomcat's optimum;
 //! (f) Spark-cluster rises sharply at `executor.cores` = 4.
 
-use super::{grid_sweep, GridSweep, Lab};
+use super::{evaluate_panels, grid_units, GridSweep, Lab};
 use crate::error::Result;
-use crate::manipulator::{SimulationOpts, Target};
+use crate::manipulator::{SimulatedSut, SimulationOpts, Target};
 use crate::space::KnobValue;
 use crate::sut;
 use crate::workload::{DeploymentEnv, WorkloadSpec};
@@ -34,16 +34,9 @@ pub struct Fig1 {
     pub f: GridSweep,
 }
 
-/// Throughput vs `query_cache_size` (sweep), one series per
-/// `query_cache_type` level — the Fig. 1a/1d projection.
-fn mysql_lines(lab: &Lab, workload: WorkloadSpec, points: usize) -> Result<Vec<(String, Vec<f64>)>> {
-    let sut = lab.deploy(
-        Target::Single(sut::mysql()),
-        workload,
-        DeploymentEnv::standalone(),
-        SimulationOpts::ideal(),
-        1,
-    );
+/// Unit lists for the Fig. 1a/1d projection: throughput vs
+/// `query_cache_size`, one series per `query_cache_type` level.
+fn mysql_line_units(sut: &SimulatedSut, points: usize) -> Result<Vec<(String, Vec<Vec<f64>>)>> {
     let space = sut.target().space();
     let qct = space.index_of("query_cache_type")?;
     let qcs = space.index_of("query_cache_size")?;
@@ -57,82 +50,103 @@ fn mysql_lines(lab: &Lab, workload: WorkloadSpec, points: usize) -> Result<Vec<(
             u[qcs] = (k as f64 + 0.5) / points as f64;
             units.push(u);
         }
-        let perfs = sut.evaluate_batch(&units)?;
-        out.push((label.to_string(), perfs.iter().map(|p| p.throughput).collect()));
+        out.push((label.to_string(), units));
     }
     Ok(out)
 }
 
-/// Tomcat-with-JVM grid at a given `TargetSurvivorRatio` value.
-fn tomcat_jvm_grid(lab: &Lab, tsr: i64, side: usize) -> Result<GridSweep> {
-    let spec = sut::tomcat_with_jvm();
-    let space = spec.space.clone();
-    let sut = lab.deploy(
-        Target::Single(spec),
-        WorkloadSpec::page_mix(),
-        DeploymentEnv::standalone(),
-        SimulationOpts::ideal(),
-        1,
-    );
-    // sweep tomcat knobs with the JVM knob pinned
+/// Base unit vector of the tomcat+JVM SUT with `TargetSurvivorRatio`
+/// pinned to `tsr` (the Fig. 1e pinning).
+fn tomcat_jvm_base(sut: &SimulatedSut, tsr: i64) -> Result<Vec<f64>> {
+    let space = sut.target().space();
     let tsr_idx = space.index_of("jvm.TargetSurvivorRatio")?;
-    let ix = space.index_of("maxThreads")?;
-    let iy = space.index_of("cacheMaxSize_kb")?;
     let mut base = space.encode(&space.default_config());
     base[tsr_idx] = space.knobs()[tsr_idx].encode(&KnobValue::Int(tsr));
-    let axis: Vec<f64> = (0..side).map(|k| (k as f64 + 0.5) / side as f64).collect();
-    let mut units = Vec::new();
-    for &x in &axis {
-        for &y in &axis {
-            let mut u = base.clone();
-            u[ix] = x;
-            u[iy] = y;
-            units.push(u);
-        }
-    }
-    let perfs = sut.evaluate_batch(&units)?;
-    Ok(GridSweep {
-        knobs: ("maxThreads".into(), "cacheMaxSize_kb".into()),
-        side,
-        axis,
-        z: perfs.iter().map(|p| p.throughput).collect(),
-    })
+    Ok(base)
 }
 
-/// Run the full Figure-1 sweep set.
+/// Run the full Figure-1 sweep set — the atlas.
+///
+/// Every panel's rows are generated first, then the whole atlas runs
+/// through ONE coalesced engine pass ([`evaluate_panels`]): panels that
+/// share a staging binding (the three (a) series, the three (d) series,
+/// the two (e) grids) merge into shared bucket executes, and the rest
+/// ride the same conversation instead of issuing eight separate calls.
 pub fn run(lab: &Lab, side: usize) -> Result<Fig1> {
-    let a_lines = mysql_lines(lab, WorkloadSpec::uniform_read(), side * side / 4)?;
-    let d_lines = mysql_lines(lab, WorkloadSpec::zipfian_read_write(), side * side / 4)?;
+    let points = side * side / 4;
+    let deploy = |spec, workload, env| {
+        lab.deploy(Target::Single(spec), workload, env, SimulationOpts::ideal(), 1)
+    };
+    let mysql_uniform = deploy(sut::mysql(), WorkloadSpec::uniform_read(), DeploymentEnv::standalone());
+    let mysql_zipf =
+        deploy(sut::mysql(), WorkloadSpec::zipfian_read_write(), DeploymentEnv::standalone());
+    let tomcat = deploy(sut::tomcat(), WorkloadSpec::page_mix(), DeploymentEnv::standalone());
+    let spark_sa =
+        deploy(sut::spark(), WorkloadSpec::batch_analytics(), DeploymentEnv::standalone());
+    let tomcat_jvm =
+        deploy(sut::tomcat_with_jvm(), WorkloadSpec::page_mix(), DeploymentEnv::standalone());
+    let spark_cl = deploy(sut::spark(), WorkloadSpec::batch_analytics(), DeploymentEnv::cluster(8));
 
-    let tomcat = lab.deploy(
-        Target::Single(sut::tomcat()),
-        WorkloadSpec::page_mix(),
-        DeploymentEnv::standalone(),
-        SimulationOpts::ideal(),
-        1,
-    );
-    let b = grid_sweep(&tomcat, "maxThreads", "acceptCount", side)?;
+    // panel rows, in atlas order
+    let a_series = mysql_line_units(&mysql_uniform, points)?;
+    let d_series = mysql_line_units(&mysql_zipf, points)?;
+    let tomcat_base = tomcat.target().space().encode(&tomcat.target().space().default_config());
+    let (b_axis, b_units) = grid_units(&tomcat, "maxThreads", "acceptCount", side, &tomcat_base)?;
+    let spark_base =
+        spark_sa.target().space().encode(&spark_sa.target().space().default_config());
+    let (c_axis, c_units) =
+        grid_units(&spark_sa, "executor.cores", "executor.memory_mb", side, &spark_base)?;
+    let (e_axis, e_low_units) = grid_units(
+        &tomcat_jvm,
+        "maxThreads",
+        "cacheMaxSize_kb",
+        side,
+        &tomcat_jvm_base(&tomcat_jvm, 20)?,
+    )?;
+    let (_, e_high_units) = grid_units(
+        &tomcat_jvm,
+        "maxThreads",
+        "cacheMaxSize_kb",
+        side,
+        &tomcat_jvm_base(&tomcat_jvm, 80)?,
+    )?;
+    let (f_axis, f_units) =
+        grid_units(&spark_cl, "executor.cores", "executor.memory_mb", side, &spark_base)?;
 
-    let spark_sa = lab.deploy(
-        Target::Single(sut::spark()),
-        WorkloadSpec::batch_analytics(),
-        DeploymentEnv::standalone(),
-        SimulationOpts::ideal(),
-        1,
-    );
-    let c = grid_sweep(&spark_sa, "executor.cores", "executor.memory_mb", side)?;
+    // one coalesced engine pass over the whole atlas
+    let mut panels: Vec<(&SimulatedSut, &[Vec<f64>])> = Vec::new();
+    for (_, units) in &a_series {
+        panels.push((&mysql_uniform, units.as_slice()));
+    }
+    for (_, units) in &d_series {
+        panels.push((&mysql_zipf, units.as_slice()));
+    }
+    panels.push((&tomcat, b_units.as_slice()));
+    panels.push((&spark_sa, c_units.as_slice()));
+    panels.push((&tomcat_jvm, e_low_units.as_slice()));
+    panels.push((&tomcat_jvm, e_high_units.as_slice()));
+    panels.push((&spark_cl, f_units.as_slice()));
+    let mut throughputs = evaluate_panels(&panels)?.into_iter();
 
-    let e_low = tomcat_jvm_grid(lab, 20, side)?;
-    let e_high = tomcat_jvm_grid(lab, 80, side)?;
-
-    let spark_cl = lab.deploy(
-        Target::Single(sut::spark()),
-        WorkloadSpec::batch_analytics(),
-        DeploymentEnv::cluster(8),
-        SimulationOpts::ideal(),
-        1,
-    );
-    let f = grid_sweep(&spark_cl, "executor.cores", "executor.memory_mb", side)?;
+    let mut take_lines = |series: &[(String, Vec<Vec<f64>>)]| -> Vec<(String, Vec<f64>)> {
+        series
+            .iter()
+            .map(|(label, _)| (label.clone(), throughputs.next().expect("panel result")))
+            .collect()
+    };
+    let a_lines = take_lines(&a_series);
+    let d_lines = take_lines(&d_series);
+    let mut take_grid = |knob_x: &str, knob_y: &str, axis: &[f64]| GridSweep {
+        knobs: (knob_x.into(), knob_y.into()),
+        side,
+        axis: axis.to_vec(),
+        z: throughputs.next().expect("panel result"),
+    };
+    let b = take_grid("maxThreads", "acceptCount", &b_axis);
+    let c = take_grid("executor.cores", "executor.memory_mb", &c_axis);
+    let e_low = take_grid("maxThreads", "cacheMaxSize_kb", &e_axis);
+    let e_high = take_grid("maxThreads", "cacheMaxSize_kb", &e_axis);
+    let f = take_grid("executor.cores", "executor.memory_mb", &f_axis);
 
     Ok(Fig1 { a_lines, b, c, d_lines, e_low, e_high, f })
 }

@@ -9,10 +9,12 @@ pub mod fairness;
 pub mod fig1;
 pub mod labor;
 pub mod mysql_gain;
+pub mod sweep;
 pub mod table1;
 
 use crate::error::Result;
-use crate::manipulator::{SimulatedSut, SimulationOpts, Target};
+use crate::manipulator::{EngineRequest, SimulatedSut, SimulationOpts, SystemManipulator, Target};
+use crate::runtime::engine::EvalRequest;
 use crate::runtime::Engine;
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 use std::path::PathBuf;
@@ -194,6 +196,32 @@ impl GridSweep {
     }
 }
 
+/// Axis cell-centres and the unit grid of a 2-knob `side x side` sweep
+/// over `base` (every other knob held at `base`'s value) — the raw
+/// material of [`grid_sweep`] and the Figure-1 atlas.
+pub fn grid_units(
+    sut: &SimulatedSut,
+    knob_x: &str,
+    knob_y: &str,
+    side: usize,
+    base: &[f64],
+) -> Result<(Vec<f64>, Vec<Vec<f64>>)> {
+    let space = sut.target().space();
+    let ix = space.index_of(knob_x)?;
+    let iy = space.index_of(knob_y)?;
+    let axis: Vec<f64> = (0..side).map(|k| (k as f64 + 0.5) / side as f64).collect();
+    let mut units = Vec::with_capacity(side * side);
+    for &x in &axis {
+        for &y in &axis {
+            let mut u = base.to_vec();
+            u[ix] = x;
+            u[iy] = y;
+            units.push(u);
+        }
+    }
+    Ok((axis, units))
+}
+
 /// Sweep two knobs of a deployed SUT over a `side x side` unit grid,
 /// holding every other knob at the SUT's default.
 ///
@@ -208,19 +236,8 @@ pub fn grid_sweep(
     side: usize,
 ) -> Result<GridSweep> {
     let space = sut.target().space();
-    let ix = space.index_of(knob_x)?;
-    let iy = space.index_of(knob_y)?;
     let base = space.encode(&space.default_config());
-    let axis: Vec<f64> = (0..side).map(|k| (k as f64 + 0.5) / side as f64).collect();
-    let mut units = Vec::with_capacity(side * side);
-    for &x in &axis {
-        for &y in &axis {
-            let mut u = base.clone();
-            u[ix] = x;
-            u[iy] = y;
-            units.push(u);
-        }
-    }
+    let (axis, units) = grid_units(sut, knob_x, knob_y, side, &base)?;
     let perfs = sut.evaluate_batch(&units)?;
     Ok(GridSweep {
         knobs: (knob_x.into(), knob_y.into()),
@@ -228,6 +245,49 @@ pub fn grid_sweep(
         axis,
         z: perfs.iter().map(|p| p.throughput).collect(),
     })
+}
+
+/// Evaluate many sweep panels — (deployed SUT, unit list) pairs — in
+/// ONE coalesced engine pass: every panel's rows become engine requests
+/// ([`SimulatedSut::build_engine_requests`]) and requests sharing a
+/// binding merge into shared bucket executes
+/// ([`Engine::evaluate_coalesced`]). Returns each panel's throughputs,
+/// in panel order. This is how the Figure-1 atlas runs its six
+/// subfigures as one engine conversation instead of eight separate
+/// batched calls.
+pub fn evaluate_panels(panels: &[(&SimulatedSut, &[Vec<f64>])]) -> Result<Vec<Vec<f64>>> {
+    let mut requests: Vec<Vec<EngineRequest>> = Vec::with_capacity(panels.len());
+    for (sut, units) in panels {
+        requests.push(sut.build_engine_requests(units)?);
+    }
+    // one coalesced pass per engine instance (panels normally share the
+    // Lab's engine, but requests must never execute on a foreign one)
+    let flat: Vec<&EngineRequest> = requests.iter().flatten().collect();
+    let engine_keys: Vec<usize> =
+        flat.iter().map(|r| Arc::as_ptr(&r.engine) as usize).collect();
+    let mut results: Vec<Option<Vec<crate::runtime::Perf>>> = vec![None; flat.len()];
+    for group in crate::runtime::engine::group_by_key(&engine_keys) {
+        let engine = &flat[group[0]].engine;
+        let evals: Vec<EvalRequest> = group
+            .iter()
+            .map(|&i| EvalRequest { prepared: &flat[i].prepared, configs: &flat[i].configs })
+            .collect();
+        for (&i, out) in group.iter().zip(engine.evaluate_coalesced(&evals)?) {
+            results[i] = Some(out);
+        }
+    }
+    let mut outs = results.into_iter();
+    let mut throughputs = Vec::with_capacity(panels.len());
+    for ((sut, units), panel_requests) in panels.iter().zip(&requests) {
+        let member_perfs: Vec<_> = panel_requests
+            .iter()
+            .map(|_| outs.next().expect("one slot per request").expect("request evaluated"))
+            .collect();
+        let perfs = sut.combine_member_perfs(member_perfs);
+        debug_assert_eq!(perfs.len(), units.len());
+        throughputs.push(perfs.iter().map(|p| p.throughput).collect());
+    }
+    Ok(throughputs)
 }
 
 #[cfg(test)]

@@ -1,0 +1,108 @@
+//! Multi-seed sweep: N tuning sessions — one per seed — run
+//! *concurrently* through the [`Scheduler`] against one shared engine.
+//!
+//! All sessions deploy the same binding (SUT, workload, deployment), so
+//! every scheduling tick their pending rows coalesce into shared bucket
+//! executes: 8 sessions of round size 32 fill one 256-bucket call
+//! instead of eight partial-width calls, while each session keeps its
+//! own rng streams (manipulator seed = optimizer seed = the session's
+//! seed) and therefore produces records identical to a solo run.
+//!
+//! This is the repeatability workhorse: the per-seed spread of
+//! `improvement` is what the paper-style experiments report as run-to-
+//! run variance, and it now costs one engine conversation instead of N.
+
+use super::Lab;
+use crate::error::Result;
+use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
+use crate::report::Table;
+use crate::tuner::{Scheduler, TuningConfig, TuningOutcome, TuningSession};
+use crate::util::stats::Summary;
+use crate::workload::{DeploymentEnv, WorkloadSpec};
+
+/// Outcome of a multi-seed concurrent sweep.
+#[derive(Clone, Debug)]
+pub struct SeedSweep {
+    /// (seed, outcome), in seed order.
+    pub outcomes: Vec<(u64, TuningOutcome)>,
+}
+
+impl SeedSweep {
+    /// Per-seed improvements over baseline.
+    pub fn improvements(&self) -> Vec<f64> {
+        self.outcomes.iter().map(|(_, o)| o.improvement).collect()
+    }
+
+    /// Summary statistics of the improvement across seeds.
+    pub fn improvement_summary(&self) -> Summary {
+        Summary::of(&self.improvements())
+    }
+
+    /// The best outcome across seeds (by best throughput).
+    pub fn best(&self) -> &(u64, TuningOutcome) {
+        self.outcomes
+            .iter()
+            .max_by(|(_, a), (_, b)| {
+                a.best.throughput.partial_cmp(&b.best.throughput).expect("finite throughput")
+            })
+            .expect("at least one seed")
+    }
+
+    /// Render the per-seed table.
+    pub fn report(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["seed", "baseline", "best", "gain", "tests", "failures"]);
+        for (seed, o) in &self.outcomes {
+            t.row(&[
+                format!("{seed}"),
+                format!("{:.0}", o.baseline.throughput),
+                format!("{:.0}", o.best.throughput),
+                format!("{:+.1}%", o.improvement * 100.0),
+                format!("{}", o.tests_used),
+                format!("{}", o.failures),
+            ]);
+        }
+        let s = self.improvement_summary();
+        t.row(&[
+            "mean".into(),
+            String::new(),
+            String::new(),
+            format!("{:+.1}% ± {:.1}%", s.mean * 100.0, s.std * 100.0),
+            String::new(),
+            String::new(),
+        ]);
+        t
+    }
+}
+
+/// Run one tuning session per seed, all concurrently through a single
+/// [`Scheduler`] (see the module docs). `cfg.seed` is overridden per
+/// session; everything else in `cfg` applies to all of them.
+pub fn run_seeds(
+    lab: &Lab,
+    target: Target,
+    workload: WorkloadSpec,
+    deployment: DeploymentEnv,
+    opts: SimulationOpts,
+    cfg: &TuningConfig,
+    seeds: &[u64],
+) -> Result<SeedSweep> {
+    let mut scheduler = Scheduler::new();
+    for &seed in seeds {
+        let sut = lab.deploy(
+            target.clone(),
+            workload.clone(),
+            deployment.clone(),
+            opts.clone(),
+            seed,
+        );
+        let session_cfg = TuningConfig { seed, ..cfg.clone() };
+        let session = TuningSession::from_registry(sut.space().clone(), &session_cfg)?;
+        scheduler.add(session, sut);
+    }
+    let outcomes = scheduler.run();
+    let mut paired = Vec::with_capacity(seeds.len());
+    for (&seed, outcome) in seeds.iter().zip(outcomes) {
+        paired.push((seed, outcome?));
+    }
+    Ok(SeedSweep { outcomes: paired })
+}

@@ -89,7 +89,6 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
     let name = target.name().to_string();
 
     let round_size = args.get_usize("round-size", 16);
-    let mut sut = lab.deploy(target, workload.clone(), deployment, SimulationOpts::default(), seed);
     let cfg = TuningConfig {
         budget_tests: budget,
         optimizer: args.get("optimizer", "rrs"),
@@ -97,6 +96,55 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
         round_size,
         ..Default::default()
     };
+
+    // --sessions N: N concurrent sessions (seeds seed..seed+N) through
+    // the multi-session scheduler, coalescing their rounds into shared
+    // bucket executes on the one engine
+    let sessions = args.get_usize("sessions", 1);
+    if sessions > 1 {
+        if args.has("curve") {
+            eprintln!("acts: note: --curve prints a single session's progress; ignored with --sessions (use --seed to replay one)");
+        }
+        let space = target.space().clone();
+        let seeds: Vec<u64> = (0..sessions as u64).map(|i| seed + i).collect();
+        let before = lab.engine.stats();
+        let sweep = experiment::sweep::run_seeds(
+            &lab,
+            target,
+            workload.clone(),
+            deployment,
+            SimulationOpts::default(),
+            &cfg,
+            &seeds,
+        )?;
+        let after = lab.engine.stats();
+        print!(
+            "{}",
+            sweep
+                .report(&format!("{sessions} concurrent sessions on {name} under {}", workload.name))
+                .markdown()
+        );
+        let (best_seed, best) = sweep.best();
+        println!(
+            "best across seeds: seed {} -> {:.0} ops/s ({:+.1}%)",
+            best_seed,
+            best.best.throughput,
+            best.improvement * 100.0
+        );
+        println!(
+            "engine coalescing: {} requests -> {} executes ({} rows requested, {} executed)",
+            after.requests - before.requests,
+            after.execute_calls - before.execute_calls,
+            after.rows_requested - before.rows_requested,
+            after.rows_executed - before.rows_executed
+        );
+        if args.has("config") {
+            println!("{}", space.render(&space.decode(&best.best_unit)));
+        }
+        return Ok(());
+    }
+
+    let mut sut = lab.deploy(target, workload.clone(), deployment, SimulationOpts::default(), seed);
     // the batched driver covers every round size: at --round-size 1 it
     // replays the sequential reference protocol bit-for-bit (tested)
     let out = tuner::tune_batched(&mut sut, &cfg)?;
@@ -226,7 +274,10 @@ COMMANDS:
                    --sut <name|a+b>   (mysql)        --workload <name> (zipfian-rw)
                    --deployment <d>   (standalone)   --optimizer <o>   (rrs)
                    --budget <n>       (100)          --seed <n>        (1)
-                   --round-size <n>   (16)
+                   --round-size <n>   (16)           --sessions <n>    (1)
+                   --sessions N runs N concurrent sessions (seeds
+                   seed..seed+N) through the multi-session scheduler,
+                   coalescing their rounds into shared engine executes
                    --curve            print per-test progress
                    --config           print the best configuration found
     surface      dump a 2-knob grid sweep as CSV

@@ -7,14 +7,40 @@
 //! throughout; a live deployment would implement the same trait with
 //! ssh/config-file plumbing (and `run_tests_batch` fanning out over
 //! parallel staging machines).
+//!
+//! # The two-phase round protocol
+//!
+//! `run_tests_batch` is additionally split into two halves so that a
+//! scheduler driving *several* sessions can merge their surface
+//! evaluations into shared engine executes:
+//!
+//! * [`SystemManipulator::stage_tests`] performs every row's staging
+//!   bookkeeping — config, restart, test window, failure injection — in
+//!   the sequential protocol's exact per-manipulator rng order, but
+//!   defers the surface evaluation: surviving rows come back as
+//!   [`StagedRow::Pending`].
+//! * [`SystemManipulator::engine_requests`] converts the pending rows
+//!   into engine-ready [`EngineRequest`]s (one per target member). The
+//!   caller may evaluate them alone or coalesced with other sessions'
+//!   requests ([`crate::runtime::engine::Engine::evaluate_coalesced`]) —
+//!   per-row results are independent of what else shares the execute.
+//! * [`SystemManipulator::collect_results`] folds the per-row [`Perf`]s
+//!   back through the measurement model, in row order, completing the
+//!   round exactly as the one-shot `run_tests_batch` would have.
+//!
+//! Manipulators without an engine path (unit-test fakes, live ssh
+//! deployments) keep the defaults: `stage_tests` resolves every row
+//! sequentially and nothing is ever pending.
 
 pub mod simulated;
 
 pub use simulated::{SimulatedSut, SimulationOpts};
 
-use crate::error::Result;
+use crate::error::{ActsError, Result};
+use crate::runtime::engine::{Engine, Perf, PreparedCall};
 use crate::space::ConfigSpace;
 use crate::sut::{Composed, SutSpec};
+use std::sync::Arc;
 
 /// What a staged test measured (Table 1's row set).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -64,6 +90,77 @@ impl Target {
             Target::Stack(c) => &c.name,
         }
     }
+}
+
+/// One row of a staged-but-not-yet-evaluated round
+/// (see [`SystemManipulator::stage_tests`]).
+#[derive(Debug)]
+pub enum StagedRow {
+    /// The row resolved during staging: a failure-injection hit, a
+    /// fatal error, or (default implementations) a full sequential
+    /// evaluation.
+    Resolved(Result<Measurement>),
+    /// The row survived staging and awaits a surface evaluation; the
+    /// payload is the unit vector the SUT is actually running for it.
+    Pending(Vec<f64>),
+}
+
+/// The staging half of a round: per-row outcomes in test order, with
+/// surviving rows pending their surface evaluation.
+#[derive(Debug, Default)]
+pub struct StagedRound {
+    /// One entry per *attempted* row (a fatal staging error aborts the
+    /// round early, so this may be shorter than the requested round).
+    pub rows: Vec<StagedRow>,
+}
+
+impl StagedRound {
+    /// The pending rows' unit vectors, in row order.
+    pub fn pending_units(&self) -> Vec<Vec<f64>> {
+        self.rows
+            .iter()
+            .filter_map(|r| match r {
+                StagedRow::Pending(u) => Some(u.clone()),
+                StagedRow::Resolved(_) => None,
+            })
+            .collect()
+    }
+
+    /// Number of rows awaiting evaluation.
+    pub fn pending_len(&self) -> usize {
+        self.rows.iter().filter(|r| matches!(r, StagedRow::Pending(_))).count()
+    }
+
+    /// Finish the round *without* evaluations: resolved rows pass
+    /// through, every pending row resolves to an error built by `err` —
+    /// the round-level infrastructure-failure path (the engine call
+    /// died, or a manipulator broke the staging contract).
+    pub fn resolve_pending_with(
+        self,
+        mut err: impl FnMut() -> ActsError,
+    ) -> Vec<Result<Measurement>> {
+        self.rows
+            .into_iter()
+            .map(|row| match row {
+                StagedRow::Resolved(r) => r,
+                StagedRow::Pending(_) => Err(err()),
+            })
+            .collect()
+    }
+}
+
+/// An engine-ready evaluation request for one target member over a
+/// round's pending rows (see [`SystemManipulator::engine_requests`]).
+/// Requests from different sessions whose `prepared` is the same object
+/// (same binding via [`Engine::prepare_cached`]) coalesce into shared
+/// bucket executes.
+pub struct EngineRequest {
+    /// The engine that compiled the prepared constants.
+    pub engine: Arc<Engine>,
+    /// Device-resident constants the rows evaluate against.
+    pub prepared: Arc<PreparedCall>,
+    /// Padded config rows, one per pending row, in row order.
+    pub configs: Vec<Vec<f32>>,
 }
 
 /// The system-manipulator abstraction the tuner drives (Fig. 2): set a
@@ -121,6 +218,60 @@ pub trait SystemManipulator {
         rows
     }
 
+    /// Stage every row of a round — config, restart, failure injection,
+    /// test-window accounting, in the sequential protocol's exact
+    /// per-row order — *without* evaluating. Rows that survive staging
+    /// come back [`StagedRow::Pending`] so the caller can evaluate many
+    /// sessions' rows in one engine call and finish the round via
+    /// [`SystemManipulator::collect_results`].
+    ///
+    /// Contract: an implementation that returns pending rows must also
+    /// implement [`SystemManipulator::engine_requests`]. The default
+    /// runs the full sequential protocol per row (via
+    /// [`SystemManipulator::run_tests_batch`]) and never leaves a row
+    /// pending, so a `stage_tests` + `collect_results` round is always
+    /// identical to one `run_tests_batch` round.
+    fn stage_tests(&mut self, units: &[Vec<f64>]) -> StagedRound {
+        StagedRound {
+            rows: self.run_tests_batch(units).into_iter().map(StagedRow::Resolved).collect(),
+        }
+    }
+
+    /// Engine-ready requests evaluating `pending` (the
+    /// [`StagedRound::pending_units`] of a staged round) — one request
+    /// per target member, so a co-deployed stack yields several. `None`
+    /// means this manipulator has no shareable engine path (the
+    /// default); the scheduler then relies on `stage_tests` having
+    /// resolved every row.
+    fn engine_requests(&self, pending: &[Vec<f64>]) -> Option<Result<Vec<EngineRequest>>> {
+        let _ = pending;
+        None
+    }
+
+    /// Fold per-member engine results (one `Vec<Perf>` per request from
+    /// [`SystemManipulator::engine_requests`], each with one entry per
+    /// pending row) into one [`Perf`] per pending row. The default
+    /// passes the single member through.
+    fn combine_member_perfs(&self, member_perfs: Vec<Vec<Perf>>) -> Vec<Perf> {
+        member_perfs.into_iter().next().unwrap_or_default()
+    }
+
+    /// Finish a staged round: resolve every pending row with its
+    /// evaluated [`Perf`] (in row order), applying the measurement
+    /// model and test accounting exactly as the one-shot protocol
+    /// would. `perfs` must have one entry per pending row.
+    fn collect_results(&mut self, staged: StagedRound, perfs: Vec<Perf>) -> Vec<Result<Measurement>> {
+        // default implementations never leave rows pending; a pending
+        // row here means the stage/collect contract was broken
+        debug_assert!(perfs.is_empty(), "default stage_tests leaves no pending rows");
+        let _ = perfs;
+        staged.resolve_pending_with(|| {
+            ActsError::InvalidArg(
+                "manipulator staged pending rows but provides no collect path".into(),
+            )
+        })
+    }
+
     /// Total simulated seconds consumed so far (restarts + tests).
     fn sim_seconds(&self) -> f64;
 
@@ -129,4 +280,47 @@ pub trait SystemManipulator {
 
     /// The unit vector the SUT is currently running (post-snap).
     fn current_unit(&self) -> &[f64];
+}
+
+/// Forwarding impl so borrowed manipulators can be scheduled: the
+/// single-session wrappers (`tuner::tune*`) hand their `&mut M` to a
+/// [`crate::tuner::Scheduler`] slot, which owns its manipulator.
+/// Every method forwards, so overridden batch/stage paths are kept.
+impl<M: SystemManipulator + ?Sized> SystemManipulator for &mut M {
+    fn space(&self) -> &ConfigSpace {
+        (**self).space()
+    }
+    fn set_config(&mut self, unit: &[f64]) -> Result<()> {
+        (**self).set_config(unit)
+    }
+    fn restart(&mut self) -> Result<()> {
+        (**self).restart()
+    }
+    fn run_test(&mut self) -> Result<Measurement> {
+        (**self).run_test()
+    }
+    fn run_tests_batch(&mut self, units: &[Vec<f64>]) -> Vec<Result<Measurement>> {
+        (**self).run_tests_batch(units)
+    }
+    fn stage_tests(&mut self, units: &[Vec<f64>]) -> StagedRound {
+        (**self).stage_tests(units)
+    }
+    fn engine_requests(&self, pending: &[Vec<f64>]) -> Option<Result<Vec<EngineRequest>>> {
+        (**self).engine_requests(pending)
+    }
+    fn combine_member_perfs(&self, member_perfs: Vec<Vec<Perf>>) -> Vec<Perf> {
+        (**self).combine_member_perfs(member_perfs)
+    }
+    fn collect_results(&mut self, staged: StagedRound, perfs: Vec<Perf>) -> Vec<Result<Measurement>> {
+        (**self).collect_results(staged, perfs)
+    }
+    fn sim_seconds(&self) -> f64 {
+        (**self).sim_seconds()
+    }
+    fn tests_run(&self) -> u64 {
+        (**self).tests_run()
+    }
+    fn current_unit(&self) -> &[f64] {
+        (**self).current_unit()
+    }
 }

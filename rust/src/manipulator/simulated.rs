@@ -11,9 +11,9 @@
 //! * Table-1-style secondary metrics (txns, failed txns, errors) via a
 //!   Poisson error model where error rates fall as latency improves.
 
-use super::{Measurement, SystemManipulator, Target};
+use super::{EngineRequest, Measurement, StagedRound, StagedRow, SystemManipulator, Target};
 use crate::error::{ActsError, Result};
-use crate::runtime::engine::{Engine, Perf, PreparedCall};
+use crate::runtime::engine::{Engine, EvalRequest, Perf, PreparedCall};
 use crate::runtime::shapes::D_PAD;
 use crate::space::{unit_to_padded, ConfigSpace};
 use crate::util::rng::Rng64;
@@ -82,7 +82,10 @@ pub struct SimulatedSut {
     /// Device-resident constant inputs, one per target member — built
     /// lazily on the first evaluation (§Perf: uploading the ~150 KiB of
     /// parameter blocks per staged test dominated small-batch latency).
-    prepared: OnceCell<Vec<PreparedCall>>,
+    /// Shared via [`Engine::prepare_cached`], so every deployment of
+    /// the same binding holds *pointer-identical* constants — which is
+    /// what lets a scheduler coalesce their rounds into one execute.
+    prepared: OnceCell<Vec<Arc<PreparedCall>>>,
 }
 
 impl SimulatedSut {
@@ -126,7 +129,7 @@ impl SimulatedSut {
         e
     }
 
-    fn prepared(&self) -> Result<&Vec<PreparedCall>> {
+    fn prepared(&self) -> Result<&Vec<Arc<PreparedCall>>> {
         if let Some(p) = self.prepared.get() {
             return Ok(p);
         }
@@ -134,10 +137,10 @@ impl SimulatedSut {
         let e = self.effective_e();
         let mut calls = Vec::new();
         match &self.target {
-            Target::Single(sut) => calls.push(self.engine.prepare(&sut.params, &w, &e)?),
+            Target::Single(sut) => calls.push(self.engine.prepare_cached(&sut.params, &w, &e)?),
             Target::Stack(stack) => {
                 for member in &stack.members {
-                    calls.push(self.engine.prepare(&member.params, &w, &e)?);
+                    calls.push(self.engine.prepare_cached(&member.params, &w, &e)?);
                 }
             }
         }
@@ -160,21 +163,26 @@ impl SimulatedSut {
         &self.target
     }
 
-    /// Noise-free surface evaluation of arbitrary unit points — the bulk
-    /// path used by the Figure-1 atlas and the benches ("parallel
-    /// staging environments"). Does not consume simulated time.
-    pub fn evaluate_batch(&self, units: &[Vec<f64>]) -> Result<Vec<Perf>> {
+    /// Engine-ready requests (one per target member) evaluating `units`
+    /// — the shareable form of [`SimulatedSut::evaluate_batch`], used
+    /// both by it and by schedulers that coalesce several sessions'
+    /// rounds into one execute.
+    pub fn build_engine_requests(&self, units: &[Vec<f64>]) -> Result<Vec<EngineRequest>> {
         let prepared = self.prepared()?;
+        let mut requests = Vec::with_capacity(prepared.len());
         match &self.target {
             Target::Single(sut) => {
                 let configs: Vec<Vec<f32>> = units
                     .iter()
                     .map(|u| unit_to_padded(&sut.space.snap(u), D_PAD))
                     .collect();
-                self.engine.evaluate_prepared(&prepared[0], &configs)
+                requests.push(EngineRequest {
+                    engine: self.engine.clone(),
+                    prepared: prepared[0].clone(),
+                    configs,
+                });
             }
             Target::Stack(stack) => {
-                let mut combined: Vec<Perf> = Vec::new();
                 for (i, member) in stack.members.iter().enumerate() {
                     let configs: Vec<Vec<f32>> = units
                         .iter()
@@ -183,18 +191,28 @@ impl SimulatedSut {
                             unit_to_padded(&member.space.snap(parts[i]), D_PAD)
                         })
                         .collect();
-                    let perfs = self.engine.evaluate_prepared(&prepared[i], &configs)?;
-                    if combined.is_empty() {
-                        combined = perfs;
-                    } else {
-                        for (acc, p) in combined.iter_mut().zip(&perfs) {
-                            *acc = crate::sut::Composed::combine(&[*acc, *p]);
-                        }
-                    }
+                    requests.push(EngineRequest {
+                        engine: self.engine.clone(),
+                        prepared: prepared[i].clone(),
+                        configs,
+                    });
                 }
-                Ok(combined)
             }
         }
+        Ok(requests)
+    }
+
+    /// Noise-free surface evaluation of arbitrary unit points — the bulk
+    /// path used by the Figure-1 atlas and the benches ("parallel
+    /// staging environments"). Does not consume simulated time.
+    pub fn evaluate_batch(&self, units: &[Vec<f64>]) -> Result<Vec<Perf>> {
+        let requests = self.build_engine_requests(units)?;
+        let evals: Vec<EvalRequest> = requests
+            .iter()
+            .map(|r| EvalRequest { prepared: &r.prepared, configs: &r.configs })
+            .collect();
+        let member_perfs = self.engine.evaluate_coalesced(&evals)?;
+        Ok(self.combine_member_perfs(member_perfs))
     }
 
     fn measure(&mut self, perf: Perf) -> Measurement {
@@ -292,16 +310,14 @@ impl SystemManipulator for SimulatedSut {
         Ok(self.measure(perf))
     }
 
-    /// Native batched round: the staging bookkeeping (restart, settle,
-    /// test window, per-row failure injection) runs row by row in the
-    /// sequential protocol's exact rng-draw order, but every surviving
-    /// row's surface evaluation is deferred into ONE bucketed engine
-    /// call — the whole point of the batched pipeline. A round of 1 is
-    /// bit-identical to `set_config` -> `restart` -> `run_test`.
-    fn run_tests_batch(&mut self, units: &[Vec<f64>]) -> Vec<Result<Measurement>> {
-        let mut rows: Vec<Result<Measurement>> = Vec::with_capacity(units.len());
-        // (row index, unit the SUT was running for that row's test)
-        let mut pending: Vec<(usize, Vec<f64>)> = Vec::with_capacity(units.len());
+    /// The staging half of the native batched round: restart, settle,
+    /// test window and per-row failure injection run row by row in the
+    /// sequential protocol's exact rng-draw order; surviving rows defer
+    /// their surface evaluation ([`StagedRow::Pending`]) so the caller
+    /// can merge them — possibly with other sessions' rows — into one
+    /// bucketed engine call.
+    fn stage_tests(&mut self, units: &[Vec<f64>]) -> StagedRound {
+        let mut rows: Vec<StagedRow> = Vec::with_capacity(units.len());
         for unit in units {
             let staged = (|| -> Result<()> {
                 self.set_config(unit)?;
@@ -315,45 +331,86 @@ impl SystemManipulator for SimulatedSut {
                 Ok(())
             })();
             match staged {
-                Ok(()) => {
-                    pending.push((rows.len(), self.current.clone()));
-                    // slot is overwritten after the round's evaluation
-                    rows.push(Err(ActsError::TestFailed("pending batched evaluation".into())));
-                }
+                Ok(()) => rows.push(StagedRow::Pending(self.current.clone())),
                 Err(e) => {
                     // a non-TestFailed error (bad dims, non-finite unit)
                     // aborts the round at this row, like the sequential
                     // protocol; rows already staged still get evaluated
                     let fatal = !matches!(e, ActsError::TestFailed(_));
-                    rows.push(Err(e));
+                    rows.push(StagedRow::Resolved(Err(e)));
                     if fatal {
                         break;
                     }
                 }
             }
         }
-        if pending.is_empty() {
-            return rows;
-        }
-        let survivor_units: Vec<Vec<f64>> = pending.iter().map(|(_, u)| u.clone()).collect();
-        match self.evaluate_batch(&survivor_units) {
-            Ok(perfs) => {
-                debug_assert_eq!(perfs.len(), pending.len());
-                for ((idx, _), perf) in pending.iter().zip(perfs) {
-                    self.tests_run += 1;
-                    rows[*idx] = Ok(self.measure(perf));
+        StagedRound { rows }
+    }
+
+    fn engine_requests(&self, pending: &[Vec<f64>]) -> Option<Result<Vec<EngineRequest>>> {
+        Some(self.build_engine_requests(pending))
+    }
+
+    fn combine_member_perfs(&self, member_perfs: Vec<Vec<Perf>>) -> Vec<Perf> {
+        match &self.target {
+            Target::Single(_) => member_perfs.into_iter().next().unwrap_or_default(),
+            Target::Stack(_) => {
+                let mut members = member_perfs.into_iter();
+                let mut combined = members.next().unwrap_or_default();
+                for perfs in members {
+                    for (acc, p) in combined.iter_mut().zip(&perfs) {
+                        *acc = crate::sut::Composed::combine(&[*acc, *p]);
+                    }
                 }
+                combined
             }
+        }
+    }
+
+    /// The collection half: resolved rows pass through; every pending
+    /// row charges the test counter and runs the measurement model in
+    /// row order — the same rng-draw order the one-shot round used.
+    fn collect_results(&mut self, staged: StagedRound, perfs: Vec<Perf>) -> Vec<Result<Measurement>> {
+        debug_assert_eq!(staged.pending_len(), perfs.len());
+        let mut perfs = perfs.into_iter();
+        staged
+            .rows
+            .into_iter()
+            .map(|row| match row {
+                StagedRow::Resolved(r) => r,
+                StagedRow::Pending(_) => match perfs.next() {
+                    Some(p) => {
+                        self.tests_run += 1;
+                        Ok(self.measure(p))
+                    }
+                    None => Err(ActsError::InvalidArg(
+                        "staged round missing an evaluation for a pending row".into(),
+                    )),
+                },
+            })
+            .collect()
+    }
+
+    /// Native batched round: [`SimulatedSut::stage_tests`] bookkeeping,
+    /// ONE bucketed engine call for every surviving row, then
+    /// [`SimulatedSut::collect_results`] — the whole point of the
+    /// batched pipeline. A round of 1 is bit-identical to `set_config`
+    /// -> `restart` -> `run_test`.
+    fn run_tests_batch(&mut self, units: &[Vec<f64>]) -> Vec<Result<Measurement>> {
+        let staged = self.stage_tests(units);
+        let pending = staged.pending_units();
+        if pending.is_empty() {
+            return staged.resolve_pending_with(|| unreachable!("no pending rows"));
+        }
+        match self.evaluate_batch(&pending) {
+            Ok(perfs) => self.collect_results(staged, perfs),
             Err(e) => {
                 // engine-level failure: not a staged-test failure — every
                 // pending row surfaces it so the session aborts
                 let msg = format!("batched evaluation failed: {e}");
-                for (idx, _) in &pending {
-                    rows[*idx] = Err(ActsError::Xla(msg.clone()));
-                }
+                staged.resolve_pending_with(move || ActsError::Xla(msg.clone()))
             }
         }
-        rows
     }
 
     fn sim_seconds(&self) -> f64 {

@@ -14,12 +14,15 @@
 //!
 //! The protocol also has a *round* form — [`Optimizer::ask_batch`] /
 //! [`Optimizer::tell_batch`] — used by the batched tuning pipeline
-//! (`tuner::tune_batched`): a whole round of proposals is generated
-//! against the round-start state, evaluated in one bucketed engine
-//! call, and folded back in test order. The defaults loop over
-//! `ask`/`tell`; RRS, LHS screening, random search and the GP
-//! surrogate provide native round implementations (a fresh LHS design
-//! sized to the round, a single surrogate fit scoring every proposal).
+//! (`tuner::tune_batched` and the multi-session scheduler): a whole
+//! round of proposals is generated against the round-start state,
+//! evaluated in one bucketed engine call, and folded back in test
+//! order. The defaults loop over `ask`/`tell`; RRS, LHS screening,
+//! random search and the GP surrogate provide native round
+//! implementations (a fresh LHS design sized to the round, a single
+//! surrogate fit scoring every proposal), and RRS additionally folds a
+//! whole exploitation round into ONE re-align/shrink decision
+//! (`tell_batch`) instead of the per-observation sequential fold.
 
 mod anneal;
 mod coord_descent;
@@ -91,6 +94,31 @@ pub trait Optimizer: Send {
 
     /// Best observation so far.
     fn best(&self) -> Option<&Observation>;
+}
+
+/// Forwarding impl so a borrowed optimizer can be owned by a
+/// [`crate::tuner::TuningSession`] (`tune_with` / `tune_batched_with`
+/// hand out `&mut dyn Optimizer`). Every method forwards, so native
+/// batch implementations are preserved through the borrow.
+impl<O: Optimizer + ?Sized> Optimizer for &mut O {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn ask(&mut self, rng: &mut Rng64) -> Vec<f64> {
+        (**self).ask(rng)
+    }
+    fn tell(&mut self, unit: &[f64], value: f64) {
+        (**self).tell(unit, value)
+    }
+    fn ask_batch(&mut self, rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
+        (**self).ask_batch(rng, n)
+    }
+    fn tell_batch(&mut self, units: &[Vec<f64>], values: &[f64]) {
+        (**self).tell_batch(units, values)
+    }
+    fn best(&self) -> Option<&Observation> {
+        (**self).best()
+    }
 }
 
 /// Track-the-best helper shared by the implementations.

@@ -79,7 +79,6 @@ pub struct Rrs {
     /// re-exploits the same local optimum forever.
     window_n: usize,
     window_best: Option<(f64, Vec<f64>)>,
-    threshold: f64,
     best: BestTracker,
 }
 
@@ -93,7 +92,6 @@ impl Rrs {
             explore_queue: Vec::new(),
             window_n: 0,
             window_best: None,
-            threshold: f64::NEG_INFINITY,
             best: BestTracker::default(),
         }
     }
@@ -167,6 +165,68 @@ impl Optimizer for Rrs {
         out
     }
 
+    /// Native round fold. A batched session evaluates a whole round
+    /// against the round-start box, so the sequential per-observation
+    /// fold mis-models it: a stalled round of n would count n
+    /// consecutive failures (shrinking up to n/max_fail times) even
+    /// though only ONE box was actually sampled-and-disappointed. The
+    /// native fold treats the round's exploitation suffix as a single
+    /// re-align/shrink decision: re-align to the round's best
+    /// observation if it improves the centre, otherwise count one
+    /// failure (shrinking at most once). Explore-phase observations
+    /// still fold sequentially — the threshold window is inherently
+    /// order-dependent — so a round that completes the window flips
+    /// into exploitation mid-fold and the remainder becomes that one
+    /// decision. A round of 1 is bit-identical to `tell`.
+    fn tell_batch(&mut self, units: &[Vec<f64>], values: &[f64]) {
+        debug_assert_eq!(units.len(), values.len());
+        if units.len() <= 1 {
+            for (u, &v) in units.iter().zip(values) {
+                self.tell(u, v);
+            }
+            return;
+        }
+        // explore-phase prefix: sequential window estimation
+        let mut i = 0;
+        while i < units.len() && matches!(self.phase, Phase::Explore) {
+            self.tell(&units[i], values[i]);
+            i += 1;
+        }
+        if i >= units.len() {
+            return;
+        }
+        // exploitation suffix: one re-align/shrink decision
+        let mut round_best: Option<(usize, f64)> = None;
+        for (j, (u, &v)) in units[i..].iter().zip(&values[i..]).enumerate() {
+            self.best.update(u, v);
+            if round_best.map(|(_, bv)| v > bv).unwrap_or(true) {
+                round_best = Some((i + j, v));
+            }
+        }
+        let (best_idx, best_value) = round_best.expect("non-empty suffix");
+        if let Phase::Exploit { center, center_value, rho, fails } = &mut self.phase {
+            if best_value > *center_value {
+                // re-align on the round's best improver
+                *center = units[best_idx].clone();
+                *center_value = best_value;
+                *fails = 0;
+            } else {
+                *fails += 1;
+                if *fails >= self.params.max_fail {
+                    *rho *= self.params.shrink;
+                    *fails = 0;
+                    if *rho < self.params.rho_min {
+                        // converged locally: restart exploration with a
+                        // fresh threshold window
+                        self.phase = Phase::Explore;
+                        self.window_n = 0;
+                        self.window_best = None;
+                    }
+                }
+            }
+        }
+    }
+
     fn tell(&mut self, unit: &[f64], value: f64) {
         self.best.update(unit, value);
 
@@ -182,7 +242,6 @@ impl Optimizer for Rrs {
                     // threshold estimated: the window's best is the
                     // promising point — exploit around it
                     let (v, p) = self.window_best.take().expect("non-empty window");
-                    self.threshold = v;
                     self.phase = Phase::Exploit {
                         center: p,
                         center_value: v,
@@ -314,6 +373,77 @@ mod tests {
         let next = rrs.ask_batch(&mut rng, 8);
         assert_eq!(next.len(), 8);
         assert!(next.iter().all(|u| u.iter().all(|x| (0.0..=1.0).contains(x))));
+    }
+
+    #[test]
+    fn batched_exploitation_round_is_one_shrink_decision() {
+        let mut rng = Rng64::new(7);
+        let p = RrsParams {
+            explore_n: 1,
+            max_fail: 2,
+            init_rho: 0.2,
+            shrink: 0.5,
+            rho_min: 0.01,
+            ..Default::default()
+        };
+        let mut rrs = Rrs::new(3, p);
+        // enter exploitation around the first observation
+        let u = rrs.ask(&mut rng);
+        rrs.tell(&u, 1.0);
+        assert_eq!(rrs.rho(), Some(0.2));
+        // a fully stalled round of 6 counts as ONE failure (the
+        // sequential fold would have counted 6 and shrunk 3 times)
+        let round = rrs.ask_batch(&mut rng, 6);
+        rrs.tell_batch(&round, &[0.0; 6]);
+        assert_eq!(rrs.rho(), Some(0.2), "one stalled round must not shrink yet");
+        // the second stalled round reaches max_fail = 2: shrink once
+        let round = rrs.ask_batch(&mut rng, 6);
+        rrs.tell_batch(&round, &[0.0; 6]);
+        assert_eq!(rrs.rho(), Some(0.1), "second stalled round shrinks once");
+    }
+
+    #[test]
+    fn batched_round_realigns_to_round_best() {
+        let mut rng = Rng64::new(8);
+        let p = RrsParams { explore_n: 1, ..Default::default() };
+        let mut rrs = Rrs::new(2, p);
+        let u = rrs.ask(&mut rng);
+        rrs.tell(&u, 0.5); // exploit around u at value 0.5
+        let round = rrs.ask_batch(&mut rng, 4);
+        let values = [0.1, 0.9, 0.2, 0.7];
+        rrs.tell_batch(&round, &values);
+        match &rrs.phase {
+            Phase::Exploit { center, center_value, fails, .. } => {
+                assert_eq!(center, &round[1], "centre must move to the round's best");
+                assert_eq!(*center_value, 0.9);
+                assert_eq!(*fails, 0, "a re-aligning round resets the failure count");
+            }
+            _ => panic!("should be exploiting"),
+        }
+        assert_eq!(rrs.best().unwrap().value, 0.9);
+    }
+
+    #[test]
+    fn batched_round_straddles_window_into_exploitation() {
+        // a round larger than the exploration window: the prefix folds
+        // sequentially (finishing the window), the suffix lands in the
+        // fresh exploitation phase as one decision
+        let mut rng = Rng64::new(9);
+        let p = RrsParams { explore_n: 4, ..Default::default() };
+        let mut rrs = Rrs::new(3, p);
+        let round = rrs.ask_batch(&mut rng, 10);
+        let values: Vec<f64> = (0..10).map(|i| 0.1 * i as f64).collect();
+        rrs.tell_batch(&round, &values);
+        assert!(rrs.rho().is_some(), "window folded, should be exploiting");
+        match &rrs.phase {
+            // the suffix's best (value 0.9, the last point) improves on
+            // the window's best (0.3): the centre re-aligns to it
+            Phase::Exploit { center, center_value, .. } => {
+                assert_eq!(center, &round[9]);
+                assert_eq!(*center_value, 0.9);
+            }
+            _ => panic!("should be exploiting"),
+        }
     }
 
     #[test]

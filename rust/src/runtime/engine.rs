@@ -8,7 +8,21 @@
 //! fitting bucket plus at most one padded call for the remainder, so an
 //! odd batch never executes a whole wide bucket of padding. This is the
 //! L3 hot path: the whole Figure-1 atlas and every staged-test round of
-//! every tuning session funnels through [`Engine::evaluate_prepared`].
+//! every tuning session funnels through [`Engine::evaluate_prepared`] or
+//! the multi-request [`Engine::evaluate_coalesced`].
+//!
+//! # Coalesced execution
+//!
+//! [`Engine::evaluate_coalesced`] serves *many* logical requests in one
+//! pass: requests sharing the same [`PreparedCall`] (pointer identity —
+//! use [`Engine::prepare_cached`] so equal bindings share one prepared
+//! set) are concatenated and bucket-planned **together**, then the
+//! results are split back per request by row range. This is how the
+//! multi-session scheduler turns 8 concurrent tuning rounds of 32 rows
+//! each into a single 256-bucket execute instead of eight partial-width
+//! calls. [`Engine::stats`] accounts both sides of the funnel: logical
+//! `requests`/`rows_requested` in, physical `execute_calls`/
+//! `rows_executed` (padding included) out.
 //!
 //! The engine is `Send + Sync` (telemetry is atomic; PJRT objects are
 //! thread-safe by the PJRT C API contract), so experiments can share
@@ -16,8 +30,10 @@
 
 use super::shapes::{self, BUCKETS, D_PAD, E_DIM, W_DIM};
 use crate::error::{ActsError, Result};
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Per-SUT surface parameter blocks, flattened row-major (f32), in the
 /// artifact's input order minus the per-call inputs (`u`, `w`, `e`).
@@ -139,6 +155,34 @@ pub struct Perf {
     pub latency: f64,
 }
 
+/// One logical evaluation request for [`Engine::evaluate_coalesced`]:
+/// padded config rows to run against one prepared constant set.
+/// Requests whose `prepared` is the *same object* coalesce into shared
+/// bucket executes.
+pub struct EvalRequest<'a> {
+    /// Device-resident constants the rows evaluate against.
+    pub prepared: &'a PreparedCall,
+    /// Padded `[f32; D_PAD]` unit rows (may be empty).
+    pub configs: &'a [Vec<f32>],
+}
+
+/// Hot-path telemetry counters (see [`Engine::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// PJRT `execute` calls issued.
+    pub execute_calls: u64,
+    /// Config rows executed, bucket padding included.
+    pub rows_executed: u64,
+    /// Logical evaluation requests served: one per
+    /// [`Engine::evaluate_prepared`] call, one per [`EvalRequest`] in a
+    /// coalesced execute. `requests > execute_calls` is the signature
+    /// of cross-request coalescing; `requests < execute_calls` of
+    /// multi-call plans.
+    pub requests: u64,
+    /// Source rows requested, before planning and padding.
+    pub rows_requested: u64,
+}
+
 /// Compile-once, execute-many PJRT engine.
 pub struct Engine {
     client: xla::PjRtClient,
@@ -149,14 +193,23 @@ pub struct Engine {
     calls: AtomicU64,
     /// Number of config rows evaluated (incl. padding).
     rows: AtomicU64,
+    /// Number of logical evaluation requests served.
+    requests: AtomicU64,
+    /// Number of source rows requested (pre-padding).
+    rows_requested: AtomicU64,
+    /// Content-keyed prepared-constant cache ([`Engine::prepare_cached`]):
+    /// equal (params, w, e) bindings share one device-resident set, which
+    /// is what makes their requests coalescible by pointer identity.
+    prepare_cache: Mutex<HashMap<Vec<u32>, Arc<PreparedCall>>>,
 }
 
 // SAFETY: two obligations are being claimed here.
 // (1) PJRT side: the C API requires clients, loaded executables and
 //     buffers to be usable from any thread concurrently (the CPU
 //     client serialises internally where it must), and every Engine
-//     method takes `&self`; our only interior mutability is the two
-//     atomic telemetry counters.
+//     method takes `&self`; our only interior mutability is the
+//     atomic telemetry counters and the Mutex-guarded prepare cache
+//     (whose values are `Arc<PreparedCall>`, themselves Send + Sync).
 // (2) Wrapper side: the vendored `xla` binding must hold plain FFI
 //     handles for the client/executable types (no thread-unsafe shared
 //     ownership such as `Rc` refcounts cloned per call) — this is the
@@ -197,6 +250,9 @@ impl Engine {
             artifacts_dir: dir,
             calls: AtomicU64::new(0),
             rows: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            rows_requested: AtomicU64::new(0),
+            prepare_cache: Mutex::new(HashMap::new()),
         })
     }
 
@@ -210,9 +266,15 @@ impl Engine {
         self.client.platform_name()
     }
 
-    /// (execute calls, config rows incl. padding) issued so far.
-    pub fn stats(&self) -> (u64, u64) {
-        (self.calls.load(Ordering::Relaxed), self.rows.load(Ordering::Relaxed))
+    /// Telemetry counters so far: logical requests/rows in, physical
+    /// execute calls/rows (padding included) out.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            execute_calls: self.calls.load(Ordering::Relaxed),
+            rows_executed: self.rows.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            rows_requested: self.rows_requested.load(Ordering::Relaxed),
+        }
     }
 
     /// Evaluate `configs` (each a padded `[f32; D_PAD]` unit vector) for
@@ -285,6 +347,35 @@ impl Engine {
         Ok(PreparedCall { per_bucket, _literals: literals })
     }
 
+    /// As [`Engine::prepare`], but content-cached: equal (params, w, e)
+    /// bindings (bit-compared) share one device-resident constant set.
+    /// Besides skipping the ~150 KiB re-upload per deployment, the
+    /// shared `Arc` gives same-binding callers *pointer-identical*
+    /// prepared constants — the coalescing key of
+    /// [`Engine::evaluate_coalesced`].
+    pub fn prepare_cached(
+        &self,
+        params: &SurfaceParams,
+        w: &[f32],
+        e: &[f32],
+    ) -> Result<Arc<PreparedCall>> {
+        let mut key: Vec<u32> = Vec::with_capacity(W_DIM + E_DIM + 64);
+        key.extend(w.iter().map(|x| x.to_bits()));
+        key.extend(e.iter().map(|x| x.to_bits()));
+        for (_, slice) in params.fields() {
+            key.extend(slice.iter().map(|x| x.to_bits()));
+        }
+        if let Some(hit) = self.prepare_cache.lock().expect("prepare cache").get(&key) {
+            return Ok(hit.clone());
+        }
+        // prepare outside the lock (it blocks on device uploads); a
+        // concurrent racer keeps whichever entry landed first so every
+        // caller still ends up pointer-identical
+        let fresh = Arc::new(self.prepare(params, w, e)?);
+        let mut cache = self.prepare_cache.lock().expect("prepare cache");
+        Ok(cache.entry(key).or_insert(fresh).clone())
+    }
+
     /// Evaluate against a prepared constant set. Only the config batch
     /// is uploaded per call.
     ///
@@ -302,11 +393,58 @@ impl Engine {
         if configs.is_empty() {
             return Ok(Vec::new());
         }
-        for (i, c) in configs.iter().enumerate() {
-            if c.len() != D_PAD {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.rows_requested.fetch_add(configs.len() as u64, Ordering::Relaxed);
+        let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+        self.evaluate_rows(prepared, &rows)
+    }
+
+    /// Serve many logical requests as shared bucket executes: requests
+    /// against the *same* [`PreparedCall`] object are concatenated (in
+    /// request order) and bucket-planned together, then the results are
+    /// split back per request by row range. Returns one `Vec<Perf>` per
+    /// request, in request order.
+    ///
+    /// This is the cross-session batching primitive: 8 tuning sessions
+    /// staging 32 rows each against one shared binding execute as a
+    /// single 256-bucket call instead of eight partial-width calls.
+    /// Requests against distinct prepared sets (different SUT surfaces,
+    /// workloads or deployments) stay separate plans — per-call
+    /// constants cannot mix — but still share this one entry point.
+    pub fn evaluate_coalesced(&self, requests: &[EvalRequest<'_>]) -> Result<Vec<Vec<Perf>>> {
+        self.requests.fetch_add(requests.len() as u64, Ordering::Relaxed);
+        let requested: u64 = requests.iter().map(|r| r.configs.len() as u64).sum();
+        self.rows_requested.fetch_add(requested, Ordering::Relaxed);
+        let keys: Vec<usize> =
+            requests.iter().map(|r| r.prepared as *const PreparedCall as usize).collect();
+        let mut out: Vec<Vec<Perf>> = requests.iter().map(|_| Vec::new()).collect();
+        for group in group_by_key(&keys) {
+            let rows: Vec<&[f32]> = group
+                .iter()
+                .flat_map(|&i| requests[i].configs.iter().map(|c| c.as_slice()))
+                .collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let perfs = self.evaluate_rows(requests[group[0]].prepared, &rows)?;
+            let mut offset = 0usize;
+            for &i in &group {
+                let n = requests[i].configs.len();
+                out[i] = perfs[offset..offset + n].to_vec();
+                offset += n;
+            }
+            debug_assert_eq!(offset, rows.len(), "demux must consume every row");
+        }
+        Ok(out)
+    }
+
+    /// Shared core of the evaluate paths: validate, plan, execute.
+    fn evaluate_rows(&self, prepared: &PreparedCall, rows: &[&[f32]]) -> Result<Vec<Perf>> {
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != D_PAD {
                 return Err(ActsError::InvalidArg(format!(
                     "config {i} has {} lanes, want {D_PAD}",
-                    c.len()
+                    r.len()
                 )));
             }
         }
@@ -315,15 +453,15 @@ impl Engine {
         let devices = self.client.devices();
         let device = &devices[0];
         let mut scratch: Vec<f32> = Vec::new();
-        let mut out = Vec::with_capacity(configs.len());
+        let mut out = Vec::with_capacity(rows.len());
         let mut offset = 0usize;
-        for bucket in shapes::plan_buckets(configs.len()) {
-            let take = bucket.min(configs.len() - offset);
-            let chunk = &configs[offset..offset + take];
+        for bucket in shapes::plan_buckets(rows.len()) {
+            let take = bucket.min(rows.len() - offset);
+            let chunk = &rows[offset..offset + take];
             offset += take;
             out.extend(self.evaluate_chunk(prepared, chunk, bucket, device, &mut scratch)?);
         }
-        debug_assert_eq!(offset, configs.len(), "plan must consume every row");
+        debug_assert_eq!(offset, rows.len(), "plan must consume every row");
         Ok(out)
     }
 
@@ -332,7 +470,7 @@ impl Engine {
     fn evaluate_chunk(
         &self,
         prepared: &PreparedCall,
-        configs: &[Vec<f32>],
+        configs: &[&[f32]],
         bucket: usize,
         device: &xla::PjRtDevice,
         scratch: &mut Vec<f32>,
@@ -350,7 +488,7 @@ impl Engine {
             scratch.extend_from_slice(c);
         }
         for _ in b..bucket {
-            scratch.extend_from_slice(&configs[0]);
+            scratch.extend_from_slice(configs[0]);
         }
         // NB: go through a Literal (buffer_from_host_buffer may zero-copy
         // and alias the host memory) and keep `u_lit` alive until the
@@ -390,6 +528,22 @@ impl Engine {
             .map(|(&t, &l)| Perf { throughput: t as f64, latency: l as f64 })
             .collect())
     }
+}
+
+/// Stable grouping of equal keys preserving first-appearance order —
+/// the request-coalescing kernel of [`Engine::evaluate_coalesced`],
+/// also reused by the scheduler to group requests per engine. Returns,
+/// for each distinct key in first-seen order, the indices that carry
+/// it (each group ascending).
+pub(crate) fn group_by_key(keys: &[usize]) -> Vec<Vec<usize>> {
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (i, &k) in keys.iter().enumerate() {
+        match groups.iter_mut().find(|(gk, _)| *gk == k) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((k, vec![i])),
+        }
+    }
+    groups.into_iter().map(|(_, idxs)| idxs).collect()
 }
 
 /// Device-resident constant inputs (w, e, parameter blocks) for every
@@ -442,6 +596,20 @@ mod tests {
         assert_send_sync::<Engine>();
         assert_send_sync::<PreparedCall>();
     }
-    // engine execution itself is covered by the `runtime_golden`
-    // integration test (needs artifacts on disk)
+
+    #[test]
+    fn group_by_key_preserves_order_and_coalesces() {
+        // three bindings interleaved: groups appear in first-seen order,
+        // indices ascend within each group
+        assert_eq!(
+            group_by_key(&[7, 9, 7, 7, 3, 9]),
+            vec![vec![0, 2, 3], vec![1, 5], vec![4]]
+        );
+        assert_eq!(group_by_key(&[]), Vec::<Vec<usize>>::new());
+        assert_eq!(group_by_key(&[1]), vec![vec![0]]);
+        // all distinct: one singleton group per request
+        assert_eq!(group_by_key(&[4, 5, 6]), vec![vec![0], vec![1], vec![2]]);
+    }
+    // engine execution itself (including the coalesced path) is covered
+    // by the `runtime_golden` integration test (needs artifacts on disk)
 }

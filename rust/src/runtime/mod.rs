@@ -16,5 +16,5 @@ pub mod engine;
 pub mod golden;
 pub mod shapes;
 
-pub use engine::{Engine, SurfaceParams};
+pub use engine::{Engine, EngineStats, EvalRequest, Perf, PreparedCall, SurfaceParams};
 pub use shapes::{BUCKETS, D_PAD, E_DIM, G, J, R, RG, W_DIM};

@@ -3,40 +3,67 @@
 //! (number of staged tests), a configuration optimizing the SUT's
 //! deployment under a workload.
 //!
-//! The session owns the budget ledger and drives the protocol against
-//! any [`SystemManipulator`]: ask the optimizer for a point, stage it,
-//! restart the SUT, run the workload, tell the optimizer the result.
-//! Failed restarts/tests still consume budget (staged tests are the
-//! scarce resource whether or not they succeed — §2.3), and the final
-//! answer is guaranteed to be at least as good as the baseline: if
-//! tuning never beat the given setting, the baseline itself is
-//! returned (§4.3's "better than a known setting" reformulation).
+//! # Session = policy, scheduler = mechanism
 //!
-//! # The batched pipeline
+//! Tuning is split into two layers:
 //!
-//! [`tune`] drives one staged test per ask/tell round-trip — every
-//! surface evaluation reaches the PJRT engine at batch size 1, the
-//! slowest point of its bucket ladder. [`tune_batched`] instead drives
-//! *rounds*: [`TuningConfig::round_size`] proposals are drawn together
-//! ([`Optimizer::ask_batch`] — DDS/LHS exploration already generates
-//! rounds internally), executed together
-//! ([`SystemManipulator::run_tests_batch`] — one bucketed engine call
-//! per round on the simulated staging environment), and folded back
-//! together ([`Optimizer::tell_batch`]), in test order.
+//! * [`TuningSession`] (`session`) is a resumable **state machine**
+//!   owning everything a session *decides*: the optimizer and its rng
+//!   stream, the budget ledger, the consecutive-failure cap and the
+//!   baseline guarantee. It never drives a manipulator; it is polled —
+//!   [`TuningSession::next_round`] says what should run (the baseline,
+//!   or a round of proposals), [`TuningSession::absorb`] folds the
+//!   results back. Failed tests still consume budget (staged tests are
+//!   the scarce resource whether or not they succeed — §2.3), and the
+//!   final answer is never worse than the baseline: if tuning never
+//!   beat the given setting, the baseline itself is returned (§4.3's
+//!   "better than a known setting" reformulation).
+//! * [`Scheduler`] (`scheduler`) is the **driver**: it runs N
+//!   heterogeneous sessions (different SUTs, workloads, optimizers,
+//!   seeds) concurrently, staging each session's round against its own
+//!   manipulator and **coalescing** every session's pending rows into
+//!   shared bucket executes — 8 sessions of round size 32 fill one
+//!   256-bucket engine call instead of eight partial-width calls.
 //!
-//! Semantics are unchanged: the budget ledger, failure accounting and
-//! baseline guarantee are identical, and a round size of 1 replays the
-//! sequential session bit-for-bit (same rng streams, identical
-//! [`TestRecord`]s). The only behavioural difference at larger round
-//! sizes is that results land at round granularity: the optimizer
-//! cannot re-centre mid-round, and the consecutive-failure cap can only
-//! stop the session at a round boundary (a round in flight has already
-//! consumed its budget).
+//! # Cross-session batching semantics
+//!
+//! Coalescing changes *where* rows execute, never *what* they compute:
+//! per-row results are independent of what else shares an execute, and
+//! each manipulator's staging bookkeeping (failure injection draws,
+//! simulated clock) runs in the sequential per-session order. Round
+//! boundaries stay per-session — a session only forms its next round
+//! after absorbing the previous one, so the optimizer never sees
+//! partial rounds — and the consecutive-failure cap still stops a
+//! session only at its own round boundary (a round in flight has
+//! already consumed its budget). A multi-session run therefore
+//! produces, per session, records identical to running that session
+//! alone (asserted by the order-independence tests).
+//!
+//! # The classic entry points
+//!
+//! [`tune`] and [`tune_batched`] are thin wrappers over a
+//! single-session scheduler and replay the historical drivers
+//! bit-for-bit (same rng streams, identical [`TestRecord`]s — asserted
+//! against a frozen reference implementation in the tests): [`tune`]
+//! drives one staged test per ask/tell round-trip (round size 1);
+//! [`tune_batched`] drives [`TuningConfig::round_size`] proposals per
+//! round — drawn together ([`Optimizer::ask_batch`]), executed together
+//! (one bucketed engine call per round), folded back together
+//! ([`Optimizer::tell_batch`]), in test order. A round size of 1
+//! replays the sequential session exactly; at larger round sizes the
+//! only behavioural difference is round granularity: the optimizer
+//! cannot re-centre mid-round, and the failure cap stops the session
+//! only between rounds.
+
+pub mod scheduler;
+pub mod session;
+
+pub use scheduler::Scheduler;
+pub use session::{ProposedTest, Round, TuningSession};
 
 use crate::error::Result;
 use crate::manipulator::{Measurement, SystemManipulator};
 use crate::optimizer::{self, Optimizer};
-use crate::util::rng::Rng64;
 
 /// Session parameters (the ACTS problem instance).
 #[derive(Clone, Debug)]
@@ -126,36 +153,6 @@ pub fn tune<M: SystemManipulator>(sut: &mut M, config: &TuningConfig) -> Result<
     tune_with(sut, opt.as_mut(), config)
 }
 
-/// Measure the baseline (the given setting) — test 1 of every session.
-/// A flaky staging environment can fail it too: retry within the
-/// failure cap, charging budget each attempt.
-fn run_baseline<M: SystemManipulator>(
-    sut: &mut M,
-    config: &TuningConfig,
-    tests_used: &mut u64,
-    failures: &mut u64,
-) -> Result<(Vec<f64>, Measurement)> {
-    let baseline_unit = sut.current_unit().to_vec();
-    let baseline = loop {
-        *tests_used += 1;
-        match sut.run_test() {
-            Ok(m) => break m,
-            Err(crate::error::ActsError::TestFailed(msg)) => {
-                *failures += 1;
-                if *failures > config.max_consecutive_failures as u64
-                    || *tests_used >= config.budget_tests
-                {
-                    return Err(crate::error::ActsError::TestFailed(format!(
-                        "baseline never completed: {msg}"
-                    )));
-                }
-            }
-            Err(e) => return Err(e),
-        }
-    };
-    Ok((baseline_unit, baseline))
-}
-
 /// Sign-robust relative gain (objectives are normally positive, but a
 /// caller's custom metric may not be).
 fn relative_gain(best: f64, baseline: f64) -> f64 {
@@ -163,79 +160,16 @@ fn relative_gain(best: f64, baseline: f64) -> f64 {
 }
 
 /// As [`tune`], but with a caller-supplied optimizer instance.
+///
+/// A thin wrapper over a single-session [`Scheduler`] at round size 1,
+/// replaying the historical sequential driver bit-for-bit.
 pub fn tune_with<M: SystemManipulator>(
     sut: &mut M,
     opt: &mut dyn Optimizer,
     config: &TuningConfig,
 ) -> Result<TuningOutcome> {
-    assert!(config.budget_tests >= 1, "budget must allow the baseline test");
-    let mut rng = Rng64::new(config.seed);
-    let mut records: Vec<TestRecord> = Vec::new();
-    let mut tests_used: u64 = 0;
-    let mut failures: u64 = 0;
-
-    let (baseline_unit, baseline) = run_baseline(sut, config, &mut tests_used, &mut failures)?;
-    let mut best_unit = baseline_unit.clone();
-    let mut best = baseline;
-    records.push(TestRecord {
-        test_no: tests_used,
-        unit: baseline_unit.clone(),
-        measurement: baseline,
-        best_so_far: baseline.throughput,
-    });
-    // the baseline is a real observation: seed the optimizer with it
-    opt.tell(&baseline_unit, baseline.throughput);
-
-    let mut consecutive_failures = 0u32;
-    while tests_used < config.budget_tests {
-        let proposal = opt.ask(&mut rng);
-        let staged = match sut.set_config(&proposal) {
-            Ok(()) => sut.space().snap(&proposal),
-            Err(e) => {
-                return Err(e); // programming error (dim mismatch), not a test failure
-            }
-        };
-        tests_used += 1;
-        let outcome = sut.restart().and_then(|()| sut.run_test());
-        match outcome {
-            Ok(m) => {
-                consecutive_failures = 0;
-                opt.tell(&staged, m.throughput);
-                if m.throughput > best.throughput {
-                    best = m;
-                    best_unit = staged.clone();
-                }
-                records.push(TestRecord {
-                    test_no: tests_used,
-                    unit: staged,
-                    measurement: m,
-                    best_so_far: best.throughput,
-                });
-            }
-            Err(crate::error::ActsError::TestFailed(_)) => {
-                failures += 1;
-                consecutive_failures += 1;
-                // a crashed config is informative: tell the optimizer it
-                // performed at zero so the search moves away
-                opt.tell(&staged, 0.0);
-                if consecutive_failures > config.max_consecutive_failures {
-                    break;
-                }
-            }
-            Err(e) => return Err(e),
-        }
-    }
-
-    Ok(TuningOutcome {
-        records,
-        baseline,
-        best_unit,
-        best,
-        improvement: relative_gain(best.throughput, baseline.throughput),
-        tests_used,
-        failures,
-        sim_seconds: sut.sim_seconds(),
-    })
+    let sequential = TuningConfig { round_size: 1, ..config.clone() };
+    run_single(sut, opt, &sequential)
 }
 
 /// Run a *batched* tuning session against `sut` under `config`: rounds
@@ -256,95 +190,29 @@ pub fn tune_batched<M: SystemManipulator>(
 }
 
 /// As [`tune_batched`], but with a caller-supplied optimizer instance.
+///
+/// A thin wrapper over a single-session [`Scheduler`]: the session owns
+/// the ledger and policy, the scheduler stages rounds against `sut` and
+/// completes them through the (trivially coalesced) engine path.
 pub fn tune_batched_with<M: SystemManipulator>(
     sut: &mut M,
     opt: &mut dyn Optimizer,
     config: &TuningConfig,
 ) -> Result<TuningOutcome> {
-    assert!(config.budget_tests >= 1, "budget must allow the baseline test");
-    assert!(config.round_size >= 1, "round size must be at least 1");
-    let mut rng = Rng64::new(config.seed);
-    let mut records: Vec<TestRecord> = Vec::new();
-    let mut tests_used: u64 = 0;
-    let mut failures: u64 = 0;
+    run_single(sut, opt, config)
+}
 
-    let (baseline_unit, baseline) = run_baseline(sut, config, &mut tests_used, &mut failures)?;
-    let mut best_unit = baseline_unit.clone();
-    let mut best = baseline;
-    records.push(TestRecord {
-        test_no: tests_used,
-        unit: baseline_unit.clone(),
-        measurement: baseline,
-        best_so_far: baseline.throughput,
-    });
-    // the baseline is a real observation: seed the optimizer with it
-    opt.tell(&baseline_unit, baseline.throughput);
-
-    let mut consecutive_failures = 0u32;
-    while tests_used < config.budget_tests {
-        let n = ((config.budget_tests - tests_used) as usize).min(config.round_size);
-        let proposals = opt.ask_batch(&mut rng, n);
-        debug_assert_eq!(proposals.len(), n);
-        let staged: Vec<Vec<f64>> = proposals.iter().map(|p| sut.space().snap(p)).collect();
-        // a fatal (non-TestFailed) error aborts the round at its row, so
-        // the manipulator may return fewer than `n` results; the zip
-        // below then charges only the rows that actually executed
-        let outcomes = sut.run_tests_batch(&proposals);
-        debug_assert!(outcomes.len() <= n);
-
-        // fold the round back in test order; every executed row charges
-        // budget whether it passed or failed (§2.3)
-        let mut told_units: Vec<Vec<f64>> = Vec::with_capacity(n);
-        let mut told_values: Vec<f64> = Vec::with_capacity(n);
-        for (staged_unit, outcome) in staged.into_iter().zip(outcomes) {
-            match outcome {
-                Ok(m) => {
-                    tests_used += 1;
-                    consecutive_failures = 0;
-                    if m.throughput > best.throughput {
-                        best = m;
-                        best_unit = staged_unit.clone();
-                    }
-                    told_values.push(m.throughput);
-                    told_units.push(staged_unit.clone());
-                    records.push(TestRecord {
-                        test_no: tests_used,
-                        unit: staged_unit,
-                        measurement: m,
-                        best_so_far: best.throughput,
-                    });
-                }
-                Err(crate::error::ActsError::TestFailed(_)) => {
-                    tests_used += 1;
-                    failures += 1;
-                    consecutive_failures += 1;
-                    // a crashed config is informative: tell the optimizer
-                    // it performed at zero so the search moves away
-                    told_values.push(0.0);
-                    told_units.push(staged_unit);
-                }
-                // programming / infrastructure error, not a test failure
-                Err(e) => return Err(e),
-            }
-        }
-        opt.tell_batch(&told_units, &told_values);
-        // the cap is tracked per row but a round in flight has already
-        // consumed its budget: stop at the round boundary
-        if consecutive_failures > config.max_consecutive_failures {
-            break;
-        }
-    }
-
-    Ok(TuningOutcome {
-        records,
-        baseline,
-        best_unit,
-        best,
-        improvement: relative_gain(best.throughput, baseline.throughput),
-        tests_used,
-        failures,
-        sim_seconds: sut.sim_seconds(),
-    })
+/// The single-session scheduler behind [`tune_with`] /
+/// [`tune_batched_with`].
+fn run_single<M: SystemManipulator>(
+    sut: &mut M,
+    opt: &mut dyn Optimizer,
+    config: &TuningConfig,
+) -> Result<TuningOutcome> {
+    let session = TuningSession::new(sut.space().clone(), Box::new(opt), config.clone());
+    let mut scheduler = Scheduler::new();
+    scheduler.add(session, sut);
+    scheduler.run().pop().expect("one scheduled session")
 }
 
 #[cfg(test)]
@@ -723,5 +591,302 @@ mod tests {
         let mut sut = FakeSut::new(3);
         let cfg = TuningConfig { optimizer: "nope".into(), ..Default::default() };
         assert!(tune_batched(&mut sut, &cfg).is_err());
+    }
+
+    // --- session/scheduler equivalence ------------------------------
+
+    /// The frozen pre-refactor `tune_batched` loop, kept verbatim as
+    /// the reference semantics the session/scheduler split must replay
+    /// bit-for-bit (the production entry points are now thin wrappers
+    /// over a single-session scheduler, so comparing against *them*
+    /// would be circular).
+    fn reference_tune_batched<M: SystemManipulator>(
+        sut: &mut M,
+        opt: &mut dyn Optimizer,
+        config: &TuningConfig,
+    ) -> crate::Result<TuningOutcome> {
+        use crate::util::rng::Rng64;
+        assert!(config.budget_tests >= 1);
+        assert!(config.round_size >= 1);
+        let mut rng = Rng64::new(config.seed);
+        let mut records: Vec<TestRecord> = Vec::new();
+        let mut tests_used: u64 = 0;
+        let mut failures: u64 = 0;
+
+        let baseline_unit = sut.current_unit().to_vec();
+        let baseline = loop {
+            tests_used += 1;
+            match sut.run_test() {
+                Ok(m) => break m,
+                Err(ActsError::TestFailed(msg)) => {
+                    failures += 1;
+                    if failures > config.max_consecutive_failures as u64
+                        || tests_used >= config.budget_tests
+                    {
+                        return Err(ActsError::TestFailed(format!(
+                            "baseline never completed: {msg}"
+                        )));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        let mut best_unit = baseline_unit.clone();
+        let mut best = baseline;
+        records.push(TestRecord {
+            test_no: tests_used,
+            unit: baseline_unit.clone(),
+            measurement: baseline,
+            best_so_far: baseline.throughput,
+        });
+        opt.tell(&baseline_unit, baseline.throughput);
+
+        let mut consecutive_failures = 0u32;
+        while tests_used < config.budget_tests {
+            let n = ((config.budget_tests - tests_used) as usize).min(config.round_size);
+            let proposals = opt.ask_batch(&mut rng, n);
+            let staged: Vec<Vec<f64>> = proposals.iter().map(|p| sut.space().snap(p)).collect();
+            let outcomes = sut.run_tests_batch(&proposals);
+            let mut told_units: Vec<Vec<f64>> = Vec::with_capacity(n);
+            let mut told_values: Vec<f64> = Vec::with_capacity(n);
+            for (staged_unit, outcome) in staged.into_iter().zip(outcomes) {
+                match outcome {
+                    Ok(m) => {
+                        tests_used += 1;
+                        consecutive_failures = 0;
+                        if m.throughput > best.throughput {
+                            best = m;
+                            best_unit = staged_unit.clone();
+                        }
+                        told_values.push(m.throughput);
+                        told_units.push(staged_unit.clone());
+                        records.push(TestRecord {
+                            test_no: tests_used,
+                            unit: staged_unit,
+                            measurement: m,
+                            best_so_far: best.throughput,
+                        });
+                    }
+                    Err(ActsError::TestFailed(_)) => {
+                        tests_used += 1;
+                        failures += 1;
+                        consecutive_failures += 1;
+                        told_values.push(0.0);
+                        told_units.push(staged_unit);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            opt.tell_batch(&told_units, &told_values);
+            if consecutive_failures > config.max_consecutive_failures {
+                break;
+            }
+        }
+
+        Ok(TuningOutcome {
+            records,
+            baseline,
+            best_unit,
+            best,
+            improvement: relative_gain(best.throughput, baseline.throughput),
+            tests_used,
+            failures,
+            sim_seconds: sut.sim_seconds(),
+        })
+    }
+
+    fn assert_outcomes_identical(a: &TuningOutcome, b: &TuningOutcome, ctx: &str) {
+        assert_eq!(a.records, b.records, "{ctx}: records diverged");
+        assert_eq!(a.tests_used, b.tests_used, "{ctx}");
+        assert_eq!(a.failures, b.failures, "{ctx}");
+        assert_eq!(a.best_unit, b.best_unit, "{ctx}");
+        assert_eq!(a.best, b.best, "{ctx}");
+        assert_eq!(a.baseline, b.baseline, "{ctx}");
+        assert_eq!(a.sim_seconds, b.sim_seconds, "{ctx}");
+    }
+
+    /// The tentpole's equivalence guarantee: a 1-session scheduler (the
+    /// production `tune_batched`) replays the frozen monolithic loop
+    /// bit-for-bit — every optimizer, several round sizes, with and
+    /// without failure injection.
+    #[test]
+    fn single_session_scheduler_replays_reference_bit_for_bit() {
+        for optimizer in ["rrs", "random", "lhs-screen", "gp"] {
+            for round_size in [1usize, 4, 16] {
+                for fail_every in [None, Some(3)] {
+                    let cfg = TuningConfig {
+                        budget_tests: 30,
+                        optimizer: optimizer.into(),
+                        seed: 4242,
+                        round_size,
+                        ..Default::default()
+                    };
+                    let mut ref_sut = FakeSut::new(4);
+                    ref_sut.fail_every = fail_every;
+                    let mut ref_opt = optimizer::by_name(optimizer, 4).unwrap();
+                    let reference =
+                        reference_tune_batched(&mut ref_sut, ref_opt.as_mut(), &cfg).unwrap();
+
+                    let mut sched_sut = FakeSut::new(4);
+                    sched_sut.fail_every = fail_every;
+                    let scheduled = tune_batched(&mut sched_sut, &cfg).unwrap();
+                    assert_outcomes_identical(
+                        &reference,
+                        &scheduled,
+                        &format!("{optimizer} round={round_size} fail={fail_every:?}"),
+                    );
+                    assert_eq!(ref_sut.sim_seconds(), sched_sut.sim_seconds());
+                    assert_eq!(ref_sut.tests_run(), sched_sut.tests_run());
+                }
+            }
+        }
+    }
+
+    /// Order independence of multi-session scheduling: each session in
+    /// a heterogeneous scheduler (different seeds, optimizers, budgets,
+    /// round sizes, failure patterns) produces records identical to
+    /// running that session alone.
+    #[test]
+    fn multi_session_scheduler_matches_solo_runs() {
+        struct Case {
+            cfg: TuningConfig,
+            dim: usize,
+            fail_every: Option<u64>,
+        }
+        let cases = [
+            Case {
+                cfg: TuningConfig { budget_tests: 25, seed: 1, round_size: 8, ..Default::default() },
+                dim: 4,
+                fail_every: None,
+            },
+            Case {
+                cfg: TuningConfig {
+                    budget_tests: 40,
+                    optimizer: "random".into(),
+                    seed: 2,
+                    round_size: 16,
+                    ..Default::default()
+                },
+                dim: 6,
+                fail_every: Some(3),
+            },
+            Case {
+                cfg: TuningConfig {
+                    budget_tests: 9,
+                    optimizer: "gp".into(),
+                    seed: 3,
+                    round_size: 1,
+                    ..Default::default()
+                },
+                dim: 3,
+                fail_every: None,
+            },
+            Case {
+                cfg: TuningConfig {
+                    budget_tests: 33,
+                    optimizer: "lhs-screen".into(),
+                    seed: 4,
+                    round_size: 32,
+                    ..Default::default()
+                },
+                dim: 5,
+                fail_every: Some(5),
+            },
+        ];
+
+        let solo: Vec<TuningOutcome> = cases
+            .iter()
+            .map(|c| {
+                let mut sut = FakeSut::new(c.dim);
+                sut.fail_every = c.fail_every;
+                tune_batched(&mut sut, &c.cfg).unwrap()
+            })
+            .collect();
+
+        let mut scheduler = Scheduler::new();
+        for c in &cases {
+            let mut sut = FakeSut::new(c.dim);
+            sut.fail_every = c.fail_every;
+            let session = TuningSession::from_registry(sut.space().clone(), &c.cfg).unwrap();
+            scheduler.add(session, sut);
+        }
+        assert_eq!(scheduler.session_count(), cases.len());
+        let outcomes = scheduler.run();
+        assert_eq!(outcomes.len(), cases.len());
+        for (i, (solo_out, sched_out)) in solo.iter().zip(&outcomes).enumerate() {
+            let sched_out = sched_out.as_ref().unwrap();
+            assert_outcomes_identical(solo_out, sched_out, &format!("session {i}"));
+        }
+    }
+
+    /// A session whose baseline never completes fails alone; its
+    /// scheduler neighbours are unaffected.
+    #[test]
+    fn scheduler_isolates_per_session_failures() {
+        let mut scheduler = Scheduler::new();
+        // slot 0: dead environment — the baseline never completes
+        let mut dead = FakeSut::new(3);
+        dead.fail_every = Some(1);
+        let cfg = TuningConfig { budget_tests: 50, ..Default::default() };
+        let session = TuningSession::from_registry(dead.space().clone(), &cfg).unwrap();
+        scheduler.add(session, dead);
+        // slot 1: healthy session
+        let healthy = FakeSut::new(3);
+        let cfg2 = TuningConfig { budget_tests: 20, round_size: 8, ..Default::default() };
+        let session2 = TuningSession::from_registry(healthy.space().clone(), &cfg2).unwrap();
+        scheduler.add(session2, healthy);
+
+        let outcomes = scheduler.run();
+        assert!(outcomes[0].is_err(), "dead environment must fail its session");
+        let ok = outcomes[1].as_ref().unwrap();
+        assert_eq!(ok.tests_used, 20);
+        assert!(ok.improvement >= 0.0);
+    }
+
+    /// The poll protocol itself: baseline first (retried on failure),
+    /// then budget-clamped rounds, then Done; polling is idempotent.
+    #[test]
+    fn session_state_machine_protocol() {
+        let sut = FakeSut::new(3);
+        let cfg = TuningConfig { budget_tests: 6, round_size: 4, ..Default::default() };
+        let mut session = TuningSession::from_registry(sut.space().clone(), &cfg).unwrap();
+
+        assert!(matches!(session.next_round(), Round::Baseline));
+        assert!(matches!(session.next_round(), Round::Baseline), "poll is idempotent");
+        // a failed baseline attempt keeps the session asking for it
+        session.absorb_baseline(&[0.5, 0.5, 0.5], Err(ActsError::TestFailed("flaky".into())));
+        assert!(matches!(session.next_round(), Round::Baseline));
+        let m = Measurement {
+            throughput: 100.0,
+            latency_ms: 10.0,
+            p99_ms: 25.0,
+            txns_per_s: 30.0,
+            hits_per_s: 100.0,
+            passed_txns: 6000,
+            failed_txns: 0,
+            errors: 0,
+            duration_s: 60.0,
+        };
+        session.absorb_baseline(&[0.5, 0.5, 0.5], Ok(m));
+        assert_eq!(session.tests_used(), 2);
+
+        // first round: full width; re-polling re-issues it unchanged
+        let Round::Staged(tests) = session.next_round() else { panic!("expected a round") };
+        assert_eq!(tests.len(), 4);
+        let Round::Staged(again) = session.next_round() else { panic!("expected re-issue") };
+        assert_eq!(tests, again, "re-poll must re-issue the identical round");
+        session.absorb(tests.iter().map(|_| Ok(m)).collect());
+
+        // 6 budget - 2 used: the last round clamps to the remainder
+        let Round::Staged(tail) = session.next_round() else { panic!("expected a round") };
+        assert_eq!(tail.len(), 2, "last round shrinks to the remaining budget");
+        session.absorb(tail.iter().map(|_| Ok(m)).collect());
+
+        assert!(matches!(session.next_round(), Round::Done));
+        assert!(session.is_halted());
+        let out = session.into_outcome(123.0).unwrap();
+        assert_eq!(out.tests_used, 6);
+        assert_eq!(out.failures, 1);
+        assert_eq!(out.sim_seconds, 123.0);
     }
 }

@@ -1,0 +1,222 @@
+//! The multi-session scheduler — the *mechanism* half of the
+//! session/scheduler split.
+//!
+//! A [`Scheduler`] drives N heterogeneous [`TuningSession`]s (different
+//! SUTs, workloads, optimizers, seeds — each with its own manipulator)
+//! concurrently, in ticks. Each tick it polls every live session for
+//! its next round, runs the staging half of every round
+//! ([`SystemManipulator::stage_tests`] — per-manipulator rng order is
+//! untouched), then **coalesces** the pending rows of all sessions into
+//! shared bucket executes
+//! ([`crate::runtime::engine::Engine::evaluate_coalesced`]) and
+//! demultiplexes the results back to their owning sessions. Eight
+//! sessions staging 32 rows each against one shared binding execute as
+//! a single 256-bucket call instead of eight partial-width calls; the
+//! per-row results are identical either way, so every session's records
+//! match a solo run of that session (order independence — tested).
+//!
+//! Sessions advance independently: a session whose budget or failure
+//! cap ends it simply stops being polled while the others keep going,
+//! and per-session fatal errors — a failed baseline, a staging error,
+//! a malformed request (validated per session before pooling) — are
+//! carried into that session's outcome without disturbing its
+//! neighbours. The one genuinely shared fault is the engine itself
+//! dying under a coalesced execute: every session that contributed a
+//! request to that execute aborts its round, exactly as each would
+//! have had it issued the call alone.
+
+use super::session::{Round, TuningSession};
+use super::TuningOutcome;
+use crate::error::ActsError;
+use crate::manipulator::{EngineRequest, StagedRound, SystemManipulator};
+use crate::runtime::engine::{group_by_key, EvalRequest, Perf};
+use crate::runtime::shapes::D_PAD;
+use std::sync::Arc;
+
+struct Slot<'a, M: SystemManipulator> {
+    session: TuningSession<'a>,
+    sut: M,
+    live: bool,
+}
+
+/// Runs many tuning sessions concurrently against shared engines (see
+/// the module docs). Sessions are added with [`Scheduler::add`] and
+/// driven to completion by [`Scheduler::run`], which returns one
+/// outcome per session in insertion order.
+pub struct Scheduler<'a, M: SystemManipulator> {
+    slots: Vec<Slot<'a, M>>,
+}
+
+impl<'a, M: SystemManipulator> Default for Scheduler<'a, M> {
+    fn default() -> Self {
+        Scheduler { slots: Vec::new() }
+    }
+}
+
+impl<'a, M: SystemManipulator> Scheduler<'a, M> {
+    /// Empty scheduler.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a session and the manipulator it tunes. Returns the slot
+    /// index ([`Scheduler::run`] reports outcomes in this order).
+    pub fn add(&mut self, session: TuningSession<'a>, sut: M) -> usize {
+        self.slots.push(Slot { session, sut, live: true });
+        self.slots.len() - 1
+    }
+
+    /// Number of sessions scheduled.
+    pub fn session_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Drive every session to completion and return their outcomes in
+    /// insertion order. Per-session fatal errors (failed baselines,
+    /// engine faults) land in that session's slot; they do not abort
+    /// the other sessions.
+    pub fn run(mut self) -> Vec<crate::Result<TuningOutcome>> {
+        while self.tick() {}
+        self.slots
+            .into_iter()
+            .map(|slot| {
+                let sim_seconds = slot.sut.sim_seconds();
+                slot.session.into_outcome(sim_seconds)
+            })
+            .collect()
+    }
+
+    /// One scheduling tick: poll, stage, coalesce, execute, demux,
+    /// absorb. Returns false once no session has work left.
+    fn tick(&mut self) -> bool {
+        let mut did_work = false;
+        // rounds staged this tick and awaiting a (possibly shared)
+        // engine execute: (slot index, staged rows, engine requests)
+        let mut pool: Vec<(usize, StagedRound, Vec<EngineRequest>)> = Vec::new();
+        for i in 0..self.slots.len() {
+            let slot = &mut self.slots[i];
+            if !slot.live {
+                continue;
+            }
+            match slot.session.next_round() {
+                Round::Done => slot.live = false,
+                Round::Baseline => {
+                    did_work = true;
+                    let unit = slot.sut.current_unit().to_vec();
+                    let outcome = slot.sut.run_test();
+                    slot.session.absorb_baseline(&unit, outcome);
+                }
+                Round::Staged(tests) => {
+                    did_work = true;
+                    let units: Vec<Vec<f64>> = tests.into_iter().map(|t| t.unit).collect();
+                    let staged = slot.sut.stage_tests(&units);
+                    let pending = staged.pending_units();
+                    if pending.is_empty() {
+                        // every row resolved during staging (default
+                        // manipulators, or a round of pure failures)
+                        let results =
+                            staged.resolve_pending_with(|| unreachable!("no pending rows"));
+                        slot.session.absorb(results);
+                    } else {
+                        match slot.sut.engine_requests(&pending) {
+                            // malformed rows would fail the whole shared
+                            // execute at the engine: validate per session
+                            // so a bad manipulator only kills its own round
+                            Some(Ok(requests))
+                                if requests.iter().any(|r| {
+                                    r.configs.len() != pending.len()
+                                        || r.configs.iter().any(|c| c.len() != D_PAD)
+                                }) =>
+                            {
+                                let results = staged.resolve_pending_with(|| {
+                                    ActsError::InvalidArg(
+                                        "manipulator built malformed engine requests".into(),
+                                    )
+                                });
+                                slot.session.absorb(results);
+                            }
+                            Some(Ok(requests)) => pool.push((i, staged, requests)),
+                            Some(Err(e)) => {
+                                let msg = format!("batched evaluation failed: {e}");
+                                let results = staged
+                                    .resolve_pending_with(|| ActsError::Xla(msg.clone()));
+                                slot.session.absorb(results);
+                            }
+                            None => {
+                                // stage_tests left rows pending but there
+                                // is no engine path: contract violation
+                                let results = staged.resolve_pending_with(|| {
+                                    ActsError::InvalidArg(
+                                        "manipulator staged pending rows without an engine path"
+                                            .into(),
+                                    )
+                                });
+                                slot.session.absorb(results);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if pool.is_empty() {
+            return did_work;
+        }
+
+        // Coalesced execute: flatten every staged round's requests,
+        // group them by engine instance, and let each engine merge
+        // same-binding requests into shared bucket plans. Results come
+        // back per request; failures are per engine group.
+        let mut member_perfs: Vec<Vec<Vec<Perf>>> =
+            pool.iter().map(|(_, _, reqs)| vec![Vec::new(); reqs.len()]).collect();
+        let mut failed: Vec<Option<String>> = vec![None; pool.len()];
+        let flat: Vec<(usize, usize)> = pool
+            .iter()
+            .enumerate()
+            .flat_map(|(pi, (_, _, reqs))| (0..reqs.len()).map(move |ri| (pi, ri)))
+            .collect();
+        let engine_keys: Vec<usize> =
+            flat.iter().map(|&(pi, ri)| Arc::as_ptr(&pool[pi].2[ri].engine) as usize).collect();
+        for group in group_by_key(&engine_keys) {
+            let items: Vec<(usize, usize)> = group.into_iter().map(|g| flat[g]).collect();
+            let engine = &pool[items[0].0].2[items[0].1].engine;
+            let evals: Vec<EvalRequest> = items
+                .iter()
+                .map(|&(pi, ri)| {
+                    let r = &pool[pi].2[ri];
+                    EvalRequest { prepared: &r.prepared, configs: &r.configs }
+                })
+                .collect();
+            match engine.evaluate_coalesced(&evals) {
+                Ok(outs) => {
+                    for (&(pi, ri), out) in items.iter().zip(outs) {
+                        member_perfs[pi][ri] = out;
+                    }
+                }
+                Err(e) => {
+                    // the engine died under this group: every session
+                    // that contributed a request aborts its round, the
+                    // other groups are unaffected
+                    let msg = format!("batched evaluation failed: {e}");
+                    for &(pi, _) in &items {
+                        failed[pi] = Some(msg.clone());
+                    }
+                }
+            }
+        }
+
+        // Demultiplex and absorb, in slot order.
+        for (pi, (slot_idx, staged, _)) in pool.into_iter().enumerate() {
+            let slot = &mut self.slots[slot_idx];
+            let results = match &failed[pi] {
+                Some(msg) => staged.resolve_pending_with(|| ActsError::Xla(msg.clone())),
+                None => {
+                    let perfs =
+                        slot.sut.combine_member_perfs(std::mem::take(&mut member_perfs[pi]));
+                    slot.sut.collect_results(staged, perfs)
+                }
+            };
+            slot.session.absorb(results);
+        }
+        true
+    }
+}

@@ -1,0 +1,296 @@
+//! The tuning session as a resumable state machine — the *policy* half
+//! of the session/scheduler split.
+//!
+//! [`TuningSession`] owns everything a session decides: the optimizer
+//! and its rng stream, the budget ledger, the consecutive-failure cap
+//! and the baseline guarantee. It never touches a
+//! [`crate::manipulator::SystemManipulator`]; instead it exposes a
+//! poll-style protocol:
+//!
+//! 1. [`TuningSession::next_round`] — what should run next: the
+//!    baseline test, a round of [`ProposedTest`]s, or nothing
+//!    ([`Round::Done`]).
+//! 2. the driver executes the round against the session's manipulator
+//!    (alone, or coalesced with other sessions' rounds — see
+//!    [`crate::tuner::Scheduler`]);
+//! 3. [`TuningSession::absorb`] / [`TuningSession::absorb_baseline`] —
+//!    fold the results back: charge budget, update records/best, tell
+//!    the optimizer, track the failure cap.
+//! 4. [`TuningSession::into_outcome`] — the final [`TuningOutcome`]
+//!    (or the fatal error that halted the session).
+//!
+//! The ledger semantics are exactly those of the monolithic batched
+//! loop this module replaced (asserted bit-for-bit by the tuner's
+//! equivalence tests): every executed row charges budget whether it
+//! passed or failed (§2.3), results land at round granularity, the
+//! failure cap stops the session only at a round boundary, and the
+//! answer is never worse than the baseline.
+
+use super::{relative_gain, TestRecord, TuningConfig, TuningOutcome};
+use crate::error::ActsError;
+use crate::manipulator::Measurement;
+use crate::optimizer::{self, Optimizer};
+use crate::space::ConfigSpace;
+use crate::util::rng::Rng64;
+
+/// One staged test a session wants executed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProposedTest {
+    /// Proposed unit-space point (pre-snap; the manipulator snaps on
+    /// `set_config`, the session snaps its own copy for the ledger).
+    pub unit: Vec<f64>,
+}
+
+/// What a session wants next (see [`TuningSession::next_round`]).
+#[derive(Clone, Debug)]
+pub enum Round {
+    /// Measure the SUT at its current configuration (the given
+    /// setting): one `run_test`, no `set_config`/`restart`. Repeated
+    /// until the baseline completes or the session gives up.
+    Baseline,
+    /// Stage, restart and measure these proposals as one round
+    /// (`stage_tests`/`run_tests_batch`).
+    Staged(Vec<ProposedTest>),
+    /// The session has terminated — collect with
+    /// [`TuningSession::into_outcome`].
+    Done,
+}
+
+enum State {
+    /// Waiting for a successful baseline measurement.
+    Baseline,
+    /// Proposing rounds until the budget or the failure cap ends it.
+    Running,
+    /// Terminated: budget spent, cap tripped, or fatal error.
+    Halted,
+}
+
+/// A resumable tuning-session state machine (see the module docs).
+pub struct TuningSession<'a> {
+    space: ConfigSpace,
+    config: TuningConfig,
+    opt: Box<dyn Optimizer + 'a>,
+    rng: Rng64,
+    state: State,
+    records: Vec<TestRecord>,
+    tests_used: u64,
+    failures: u64,
+    consecutive_failures: u32,
+    baseline: Option<Measurement>,
+    best_unit: Vec<f64>,
+    best: Option<Measurement>,
+    /// The outstanding round's raw proposals (absorb pairs them back).
+    in_flight: Option<Vec<Vec<f64>>>,
+    /// The error that halted the session, surfaced by `into_outcome`.
+    fatal: Option<ActsError>,
+}
+
+impl<'a> TuningSession<'a> {
+    /// New session over `space` with a caller-supplied optimizer.
+    pub fn new(space: ConfigSpace, opt: Box<dyn Optimizer + 'a>, config: TuningConfig) -> Self {
+        assert!(config.budget_tests >= 1, "budget must allow the baseline test");
+        assert!(config.round_size >= 1, "round size must be at least 1");
+        let rng = Rng64::new(config.seed);
+        TuningSession {
+            space,
+            config,
+            opt,
+            rng,
+            state: State::Baseline,
+            records: Vec::new(),
+            tests_used: 0,
+            failures: 0,
+            consecutive_failures: 0,
+            baseline: None,
+            best_unit: Vec::new(),
+            best: None,
+            in_flight: None,
+            fatal: None,
+        }
+    }
+
+    /// New session with the optimizer resolved from the registry
+    /// (`config.optimizer`).
+    pub fn from_registry(
+        space: ConfigSpace,
+        config: &TuningConfig,
+    ) -> crate::Result<TuningSession<'static>> {
+        let dim = space.dim();
+        let opt = optimizer::by_name(&config.optimizer, dim).ok_or_else(|| {
+            ActsError::InvalidArg(format!("unknown optimizer `{}`", config.optimizer))
+        })?;
+        Ok(TuningSession::new(space, opt, config.clone()))
+    }
+
+    /// The session's configuration.
+    pub fn config(&self) -> &TuningConfig {
+        &self.config
+    }
+
+    /// Budget consumed so far (baseline and failures included).
+    pub fn tests_used(&self) -> u64 {
+        self.tests_used
+    }
+
+    /// True once [`TuningSession::next_round`] would return
+    /// [`Round::Done`] without further absorbs.
+    pub fn is_halted(&self) -> bool {
+        matches!(self.state, State::Halted)
+    }
+
+    /// Poll the session for its next unit of work. Idempotent: polling
+    /// again before absorbing re-issues the identical round (the rng
+    /// only advances when a new round is actually formed).
+    pub fn next_round(&mut self) -> Round {
+        if let Some(in_flight) = &self.in_flight {
+            return Round::Staged(
+                in_flight.iter().map(|u| ProposedTest { unit: u.clone() }).collect(),
+            );
+        }
+        match self.state {
+            State::Baseline => Round::Baseline,
+            State::Halted => Round::Done,
+            State::Running => {
+                if self.tests_used >= self.config.budget_tests {
+                    self.state = State::Halted;
+                    return Round::Done;
+                }
+                let n = ((self.config.budget_tests - self.tests_used) as usize)
+                    .min(self.config.round_size);
+                let proposals = self.opt.ask_batch(&mut self.rng, n);
+                debug_assert_eq!(proposals.len(), n);
+                let tests = proposals.iter().map(|u| ProposedTest { unit: u.clone() }).collect();
+                self.in_flight = Some(proposals);
+                Round::Staged(tests)
+            }
+        }
+    }
+
+    /// Fold in one baseline attempt: `unit` is the configuration the
+    /// SUT was running (its current unit), `outcome` the `run_test`
+    /// result. A flaky staging environment may fail the baseline too:
+    /// the session keeps asking for it within the failure cap, charging
+    /// budget each attempt (§2.3 — staged tests are the scarce resource
+    /// whether or not they succeed).
+    pub fn absorb_baseline(&mut self, unit: &[f64], outcome: crate::Result<Measurement>) {
+        assert!(
+            matches!(self.state, State::Baseline),
+            "absorb_baseline outside the baseline state"
+        );
+        self.tests_used += 1;
+        match outcome {
+            Ok(m) => {
+                self.baseline = Some(m);
+                self.best_unit = unit.to_vec();
+                self.best = Some(m);
+                self.records.push(TestRecord {
+                    test_no: self.tests_used,
+                    unit: unit.to_vec(),
+                    measurement: m,
+                    best_so_far: m.throughput,
+                });
+                // the baseline is a real observation: seed the optimizer
+                self.opt.tell(unit, m.throughput);
+                self.state = State::Running;
+            }
+            Err(ActsError::TestFailed(msg)) => {
+                self.failures += 1;
+                if self.failures > self.config.max_consecutive_failures as u64
+                    || self.tests_used >= self.config.budget_tests
+                {
+                    self.halt(ActsError::TestFailed(format!("baseline never completed: {msg}")));
+                }
+                // else: stay in Baseline — the next poll retries
+            }
+            Err(e) => self.halt(e),
+        }
+    }
+
+    /// Fold one executed round back in test order. `outcomes` pairs
+    /// positionally with the round's proposals and may be shorter: a
+    /// fatal (non-`TestFailed`) error aborts a round at its row, and
+    /// only rows that actually executed charge budget. A fatal row
+    /// halts the session with that error (surfaced by
+    /// [`TuningSession::into_outcome`]); otherwise the whole round is
+    /// told to the optimizer in one `tell_batch`, and the consecutive-
+    /// failure cap is checked at the round boundary — a round in flight
+    /// has already consumed its budget.
+    pub fn absorb(&mut self, outcomes: Vec<crate::Result<Measurement>>) {
+        let proposals = self.in_flight.take().expect("absorb without a round in flight");
+        debug_assert!(outcomes.len() <= proposals.len());
+        let mut told_units: Vec<Vec<f64>> = Vec::with_capacity(proposals.len());
+        let mut told_values: Vec<f64> = Vec::with_capacity(proposals.len());
+        for (proposal, outcome) in proposals.iter().zip(outcomes) {
+            let staged_unit = self.space.snap(proposal);
+            match outcome {
+                Ok(m) => {
+                    self.tests_used += 1;
+                    self.consecutive_failures = 0;
+                    let best_throughput =
+                        self.best.map(|b| b.throughput).unwrap_or(f64::NEG_INFINITY);
+                    if m.throughput > best_throughput {
+                        self.best = Some(m);
+                        self.best_unit = staged_unit.clone();
+                    }
+                    told_values.push(m.throughput);
+                    told_units.push(staged_unit.clone());
+                    self.records.push(TestRecord {
+                        test_no: self.tests_used,
+                        unit: staged_unit,
+                        measurement: m,
+                        best_so_far: self.best.expect("just set").throughput,
+                    });
+                }
+                Err(ActsError::TestFailed(_)) => {
+                    self.tests_used += 1;
+                    self.failures += 1;
+                    self.consecutive_failures += 1;
+                    // a crashed config is informative: tell the optimizer
+                    // it performed at zero so the search moves away
+                    told_values.push(0.0);
+                    told_units.push(staged_unit);
+                }
+                // programming / infrastructure error, not a test failure:
+                // the session dies without telling the partial round
+                Err(e) => {
+                    self.halt(e);
+                    return;
+                }
+            }
+        }
+        self.opt.tell_batch(&told_units, &told_values);
+        // the cap is tracked per row but can only stop the session at a
+        // round boundary
+        if self.consecutive_failures > self.config.max_consecutive_failures {
+            self.state = State::Halted;
+        }
+    }
+
+    fn halt(&mut self, e: ActsError) {
+        self.fatal = Some(e);
+        self.state = State::Halted;
+    }
+
+    /// Consume the session into its outcome. `sim_seconds` is the
+    /// manipulator's clock (the session never holds the manipulator).
+    /// Returns the fatal error if one halted the session.
+    pub fn into_outcome(self, sim_seconds: f64) -> crate::Result<TuningOutcome> {
+        if let Some(e) = self.fatal {
+            return Err(e);
+        }
+        let baseline = self.baseline.ok_or_else(|| {
+            ActsError::InvalidArg("session finished without a baseline measurement".into())
+        })?;
+        let best = self.best.expect("baseline implies a best");
+        Ok(TuningOutcome {
+            records: self.records,
+            baseline,
+            best_unit: self.best_unit,
+            best,
+            improvement: relative_gain(best.throughput, baseline.throughput),
+            tests_used: self.tests_used,
+            failures: self.failures,
+            sim_seconds,
+        })
+    }
+}

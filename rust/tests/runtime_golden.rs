@@ -5,7 +5,7 @@
 //!
 //! Requires `make artifacts` to have run (skips loudly otherwise).
 
-use acts::runtime::{golden, shapes, Engine};
+use acts::runtime::{golden, shapes, Engine, EvalRequest};
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -158,12 +158,12 @@ fn greedy_decomposition_executes_few_padded_rows() {
 
     // B=40 must run as 3 bucket-16 calls (48 rows), not one padded
     // 256-row call
-    let (calls0, rows0) = engine.stats();
+    let s0 = engine.stats();
     let got = engine.evaluate_prepared(&prepared, &cycle(40)).unwrap();
-    let (calls1, rows1) = engine.stats();
+    let s1 = engine.stats();
     assert_eq!(got.len(), 40);
-    assert_eq!(calls1 - calls0, 3, "B=40 should be 16+16+16");
-    assert_eq!(rows1 - rows0, 48, "B=40 must not execute 256 padded rows");
+    assert_eq!(s1.execute_calls - s0.execute_calls, 3, "B=40 should be 16+16+16");
+    assert_eq!(s1.rows_executed - s0.rows_executed, 48, "B=40 must not execute 256 padded rows");
     for (i, p) in got.iter().enumerate() {
         let want = &all[i % 16];
         assert!(
@@ -174,17 +174,76 @@ fn greedy_decomposition_executes_few_padded_rows() {
 
     // B=17: one full bucket-16 call plus one single-row call
     let got = engine.evaluate_prepared(&prepared, &cycle(17)).unwrap();
-    let (calls2, rows2) = engine.stats();
+    let s2 = engine.stats();
     assert_eq!(got.len(), 17);
-    assert_eq!(calls2 - calls1, 2, "B=17 should be 16+1");
-    assert_eq!(rows2 - rows1, 17);
+    assert_eq!(s2.execute_calls - s1.execute_calls, 2, "B=17 should be 16+1");
+    assert_eq!(s2.rows_executed - s1.rows_executed, 17);
 
     // B=2047: padding one row into the 2048 bucket beats 23 calls
     let got = engine.evaluate_prepared(&prepared, &cycle(2047)).unwrap();
-    let (calls3, rows3) = engine.stats();
+    let s3 = engine.stats();
     assert_eq!(got.len(), 2047);
-    assert_eq!(calls3 - calls2, 1, "B=2047 should pad to one 2048 call");
-    assert_eq!(rows3 - rows2, 2048);
+    assert_eq!(s3.execute_calls - s2.execute_calls, 1, "B=2047 should pad to one 2048 call");
+    assert_eq!(s3.rows_executed - s2.rows_executed, 2048);
+}
+
+#[test]
+fn coalesced_requests_match_separate_evaluation() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (configs, w, e, params) = golden::pattern_call(16);
+    let prepared = engine.prepare_cached(&params, &w, &e).unwrap();
+    // a second binding (different w) that must NOT coalesce with the first
+    let mut w2 = w.clone();
+    w2[0] += 0.25;
+    let prepared2 = engine.prepare_cached(&params, &w2, &e).unwrap();
+
+    let separate_a = engine.evaluate_prepared(&prepared, &configs).unwrap();
+    let separate_b = engine.evaluate_prepared(&prepared, &configs[..7]).unwrap();
+    let separate_c = engine.evaluate_prepared(&prepared2, &configs[..5]).unwrap();
+
+    // same three requests, one coalesced pass: the two same-binding
+    // requests (16 + 7 = 23 rows) plan together, the third stays its
+    // own plan — one entry point, per-request results unchanged
+    let s0 = engine.stats();
+    let out = engine
+        .evaluate_coalesced(&[
+            EvalRequest { prepared: &prepared, configs: &configs },
+            EvalRequest { prepared: &prepared, configs: &configs[..7] },
+            EvalRequest { prepared: &prepared2, configs: &configs[..5] },
+        ])
+        .unwrap();
+    let s1 = engine.stats();
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].len(), 16);
+    assert_eq!(out[1].len(), 7);
+    assert_eq!(out[2].len(), 5);
+    assert_eq!(s1.requests - s0.requests, 3);
+    // 23 rows -> one padded 16+16 plan? plan_buckets(23) pads to [16, 16]
+    // (remainder 7 <= PAD_SLACK); 5 rows -> one padded 16 call
+    assert_eq!(s1.rows_requested - s0.rows_requested, 28);
+    for (got, want) in [(&out[0], &separate_a), (&out[1], &separate_b), (&out[2], &separate_c)] {
+        for (g, w) in got.iter().zip(want) {
+            assert!(
+                (g.throughput - w.throughput).abs() < 1e-3 * (1.0 + w.throughput.abs()),
+                "coalesced result diverged: {} vs {}",
+                g.throughput,
+                w.throughput
+            );
+        }
+    }
+}
+
+#[test]
+fn prepare_cached_shares_identical_bindings() {
+    let Some(engine) = engine_or_skip() else { return };
+    let (_, w, e, params) = golden::pattern_call(1);
+    let a = engine.prepare_cached(&params, &w, &e).unwrap();
+    let b = engine.prepare_cached(&params, &w, &e).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "equal bindings must share one prepared set");
+    let mut w2 = w.clone();
+    w2[1] += 1.0;
+    let c = engine.prepare_cached(&params, &w2, &e).unwrap();
+    assert!(!std::sync::Arc::ptr_eq(&a, &c), "different bindings must not share");
 }
 
 #[test]

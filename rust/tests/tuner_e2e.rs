@@ -211,15 +211,15 @@ fn batched_session_issues_far_fewer_engine_calls() {
     };
     let budget = 33; // baseline + 32 staged tests
 
-    let (c0, _) = lab.engine.stats();
+    let c0 = lab.engine.stats().execute_calls;
     let cfg = TuningConfig { budget_tests: budget, seed: 31, round_size: 1, ..Default::default() };
     let seq = tuner::tune(&mut deploy(31), &cfg).unwrap();
-    let (c1, _) = lab.engine.stats();
+    let c1 = lab.engine.stats().execute_calls;
     let seq_calls = c1 - c0;
 
     let cfg = TuningConfig { budget_tests: budget, seed: 31, round_size: 16, ..Default::default() };
     let bat = tuner::tune_batched(&mut deploy(31), &cfg).unwrap();
-    let (c2, _) = lab.engine.stats();
+    let c2 = lab.engine.stats().execute_calls;
     let bat_calls = c2 - c1;
 
     assert_eq!(seq.tests_used, budget);
@@ -232,6 +232,105 @@ fn batched_session_issues_far_fewer_engine_calls() {
         bat_calls * 5 <= seq_calls,
         "batched session used {bat_calls} engine calls vs sequential {seq_calls}"
     );
+}
+
+#[test]
+fn scheduler_coalesces_eight_sessions_into_shared_executes() {
+    // the ISSUE acceptance shape: 8 concurrent round-size-32 sessions of
+    // the same binding must land each tick's 8×32 = 256 rows as ONE
+    // 256-bucket execute, not eight partial-width calls
+    let Some(lab) = lab_or_skip() else { return };
+    let n_sessions = 8u64;
+    let budget = 33; // baseline + one full round of 32
+    let mut scheduler = tuner::Scheduler::new();
+    for s in 0..n_sessions {
+        let sut = lab.deploy(
+            Target::Single(sut::mysql()),
+            WorkloadSpec::zipfian_read_write(),
+            DeploymentEnv::standalone(),
+            SimulationOpts::ideal(),
+            100 + s,
+        );
+        let cfg = TuningConfig {
+            budget_tests: budget,
+            seed: 100 + s,
+            round_size: 32,
+            ..Default::default()
+        };
+        let session =
+            tuner::TuningSession::from_registry(sut.space().clone(), &cfg).unwrap();
+        scheduler.add(session, sut);
+    }
+    let before = lab.engine.stats();
+    let outcomes = scheduler.run();
+    let after = lab.engine.stats();
+
+    for out in &outcomes {
+        let out = out.as_ref().unwrap();
+        assert_eq!(out.tests_used, budget);
+        assert!(out.best.throughput >= out.baseline.throughput);
+    }
+    // 8 baselines (B=1 each) + ONE coalesced 256-row execute
+    let calls = after.execute_calls - before.execute_calls;
+    let rows = after.rows_executed - before.rows_executed;
+    let requests = after.requests - before.requests;
+    assert_eq!(calls, n_sessions + 1, "8×32 rows must land as one 256-bucket execute");
+    assert_eq!(rows, n_sessions + 256);
+    // per-request accounting: 8 baseline requests + 8 coalesced round
+    // requests served by that single execute
+    assert_eq!(requests, 2 * n_sessions);
+    assert_eq!(after.rows_requested - before.rows_requested, n_sessions + n_sessions * 32);
+}
+
+#[test]
+fn scheduled_sessions_match_solo_runs_on_the_real_surface() {
+    // order independence of coalesced execution on the real engine:
+    // each co-scheduled session's trajectory matches its solo run (the
+    // solo rounds execute in different buckets, so values are compared
+    // with a float tolerance rather than bitwise)
+    let Some(lab) = lab_or_skip() else { return };
+    let deploy = |seed| {
+        lab.deploy(
+            Target::Single(sut::tomcat()),
+            WorkloadSpec::page_mix(),
+            DeploymentEnv::standalone(),
+            SimulationOpts::ideal(),
+            seed,
+        )
+    };
+    let cfg_for = |seed| TuningConfig {
+        budget_tests: 17, // baseline + one round of 16
+        seed,
+        round_size: 16,
+        ..Default::default()
+    };
+    let seeds = [41u64, 42, 43];
+    let solo: Vec<_> = seeds
+        .iter()
+        .map(|&s| tuner::tune_batched(&mut deploy(s), &cfg_for(s)).unwrap())
+        .collect();
+    let mut scheduler = tuner::Scheduler::new();
+    for &s in &seeds {
+        let sut = deploy(s);
+        let session =
+            tuner::TuningSession::from_registry(sut.space().clone(), &cfg_for(s)).unwrap();
+        scheduler.add(session, sut);
+    }
+    let scheduled = scheduler.run();
+    for ((solo_out, sched_out), &seed) in solo.iter().zip(&scheduled).zip(&seeds) {
+        let sched_out = sched_out.as_ref().unwrap();
+        assert_eq!(solo_out.tests_used, sched_out.tests_used, "seed {seed}");
+        assert_eq!(solo_out.failures, sched_out.failures, "seed {seed}");
+        assert_eq!(solo_out.records.len(), sched_out.records.len(), "seed {seed}");
+        assert_eq!(solo_out.sim_seconds, sched_out.sim_seconds, "seed {seed}");
+        for (a, b) in solo_out.records.iter().zip(&sched_out.records) {
+            assert_eq!(a.test_no, b.test_no, "seed {seed}");
+            assert_eq!(a.unit, b.unit, "seed {seed}: proposals must be identical");
+            let rel = (a.measurement.throughput - b.measurement.throughput).abs()
+                / a.measurement.throughput.abs().max(1e-9);
+            assert!(rel < 1e-5, "seed {seed}: row value diverged by {rel}");
+        }
+    }
 }
 
 #[test]

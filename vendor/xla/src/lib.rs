@@ -1,0 +1,223 @@
+//! Offline **stub** of the PJRT `xla` binding.
+//!
+//! The `acts` crate executes its AOT-compiled surface artifacts through
+//! a PJRT CPU client. The real binding links the XLA runtime and is
+//! supplied by the full build environment; this stub carries the exact
+//! API surface the crate uses so that the workspace builds — and the
+//! engine-free test suite runs — anywhere, with zero native
+//! dependencies.
+//!
+//! Behaviour: [`PjRtClient::cpu`] fails with a clear error, so
+//! `Engine::load` fails and every engine-backed integration test skips
+//! loudly (the same skip path as missing artifacts). Host-side types
+//! ([`Literal`]) are functional; device-side types are uninhabited —
+//! they can be *named* but never constructed, which the compiler
+//! verifies for us (`match *self {}`).
+//!
+//! When vendoring the real binding, re-audit the thread-safety
+//! obligations documented at the `unsafe impl Send/Sync for Engine`
+//! site in `acts::runtime::engine` (no `Rc` refcounts behind the
+//! client/executable handles).
+
+use std::fmt;
+
+/// Error type mirroring the real binding's (`Display` + `Error`).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "{what}: this build uses the offline `vendor/xla` stub — PJRT is unavailable \
+             (vendor the real xla binding to execute artifacts)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias mirroring the real binding.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can be read back as.
+pub trait ElementType: Copy {
+    /// Convert from the stub's f32 storage.
+    fn from_f32(v: f32) -> Self;
+}
+
+impl ElementType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl ElementType for f64 {
+    fn from_f32(v: f32) -> Self {
+        v as f64
+    }
+}
+
+/// Host-side literal: flat f32 storage plus dimensions. Functional in
+/// the stub (uploads never happen, but literals are built before the
+/// client is touched on some paths).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal over `data`.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape, validating the element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: literal has {} elements, dims {:?} want {want}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// The literal's dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Read back as a flat vector.
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Destructure a 2-tuple literal. Stub literals are never tuples.
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::stub("Literal::to_tuple2"))
+    }
+}
+
+/// Parsed HLO module proto. The stub only records that a file was read.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    _text_len: usize,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("from_text_file {path}: {e}")))?;
+        Ok(HloModuleProto { _text_len: text.len() })
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed proto.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// PJRT device handle. Uninhabited in the stub: a client is required
+/// to obtain one, and the stub client never starts.
+#[derive(Debug)]
+pub enum PjRtDevice {}
+
+/// PJRT device buffer. Uninhabited in the stub.
+#[derive(Debug)]
+pub enum PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Synchronously read the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match *self {}
+    }
+}
+
+/// PJRT loaded executable. Uninhabited in the stub.
+#[derive(Debug)]
+pub enum PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute over borrowed input buffers.
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match *self {}
+    }
+}
+
+/// PJRT client. Uninhabited in the stub: [`PjRtClient::cpu`] is the
+/// only constructor and it always fails.
+#[derive(Debug)]
+pub enum PjRtClient {}
+
+impl PjRtClient {
+    /// Start the CPU PJRT client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    /// The PJRT platform name.
+    pub fn platform_name(&self) -> String {
+        match *self {}
+    }
+
+    /// The client's devices.
+    pub fn devices(&self) -> Vec<PjRtDevice> {
+        match *self {}
+    }
+
+    /// Upload a host literal to a device buffer.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        match *self {}
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match *self {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.dims(), &[4]);
+        let reshaped = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(reshaped.dims(), &[2, 2]);
+        assert_eq!(reshaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_refuses_to_start_with_a_clear_message() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+}
