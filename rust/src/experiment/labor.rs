@@ -7,12 +7,18 @@
 //! human in the loop: reconfigure, rerun, read) — and compare against
 //! ACTS (LHS+RRS, automated staging tests driven through the batched
 //! tuning pipeline) on *simulated wall-clock*.
+//!
+//! All policies now run as one heterogeneous scheduler fleet (different
+//! optimizers, seeds and round sizes side by side): each session keeps
+//! its exact solo trajectory — co-scheduled records match solo runs
+//! (tested) — while their staged tests coalesce into shared engine
+//! executes instead of driving one session at a time.
 
 use super::Lab;
 use crate::error::Result;
 use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
 use crate::sut;
-use crate::tuner::{self, TuningConfig};
+use crate::tuner::{Scheduler, TuningConfig, TuningOutcome, TuningSession};
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 
 /// Human overhead per manual tuning iteration, seconds (reconfigure,
@@ -70,56 +76,39 @@ impl Labor {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_policy(
-    lab: &Lab,
-    optimizer: &str,
-    policy_name: &str,
-    budget: u64,
+/// One fleet member: the tuning configuration plus the cost model that
+/// turns its machine trajectory into calendar time.
+struct Policy {
+    name: &'static str,
+    optimizer: &'static str,
     round_size: usize,
     per_test_overhead_s: f64,
     calendar_factor: f64,
-    threshold: f64,
     seed: u64,
-) -> Result<PolicyOutcome> {
-    let mut sut = lab.deploy(
-        Target::Single(sut::mysql()),
-        WorkloadSpec::zipfian_read_write(),
-        DeploymentEnv::standalone(),
-        SimulationOpts::default(),
-        seed,
-    );
-    let cfg = TuningConfig {
-        budget_tests: budget,
-        optimizer: optimizer.into(),
-        seed,
-        round_size,
-        ..Default::default()
-    };
-    // a human loop is inherently sequential — the manual policies run
-    // at round_size 1, which replays the sequential protocol exactly;
-    // the automated policy runs whole rounds through the batched
-    // pipeline. One driver covers both.
-    let out = tuner::tune_batched(&mut sut, &cfg)?;
+}
+
+/// Fold one session's outcome through a policy's cost model.
+fn policy_outcome(policy: &Policy, threshold: f64, out: &TuningOutcome) -> PolicyOutcome {
     let per_test_machine = out.sim_seconds / out.tests_used.max(1) as f64;
-    let per_test_total = (per_test_machine + per_test_overhead_s) * calendar_factor;
+    let per_test_total = (per_test_machine + policy.per_test_overhead_s) * policy.calendar_factor;
     let calendar_s = per_test_total * out.tests_used as f64;
     let time_to_threshold_s = out
         .records
         .iter()
         .find(|r| r.best_so_far >= threshold)
         .map(|r| r.test_no as f64 * per_test_total);
-    Ok(PolicyOutcome {
-        policy: policy_name.into(),
+    PolicyOutcome {
+        policy: policy.name.into(),
         best: out.best.throughput,
         tests: out.tests_used,
         calendar_s,
         time_to_threshold_s,
-    })
+    }
 }
 
 /// Run the labor comparison. `budget` bounds the automated policies;
 /// the manual policy gets the same test count but pays human overhead.
+/// All policies tune concurrently in one scheduler fleet.
 pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Labor> {
     // the quality bar: what the junior team eventually reached — a
     // partial gain over default (2.5x), well short of the machine's best
@@ -135,22 +124,62 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Labor> {
     };
     let threshold = baseline * 8.0;
 
-    let outcomes = vec![
-        // manual: one-knob-at-a-time with human overhead + office hours
-        run_policy(
-            lab, "coord", "manual (1-knob-at-a-time, human loop)", budget, 1,
-            MANUAL_OVERHEAD_S, CALENDAR_FACTOR, threshold, seed,
-        )?,
+    let policies = [
+        // manual: one-knob-at-a-time with human overhead + office hours;
+        // a human loop is inherently sequential — round size 1 replays
+        // the sequential protocol exactly
+        Policy {
+            name: "manual (1-knob-at-a-time, human loop)",
+            optimizer: "coord",
+            round_size: 1,
+            per_test_overhead_s: MANUAL_OVERHEAD_S,
+            calendar_factor: CALENDAR_FACTOR,
+            seed,
+        },
         // manual but following random "best practice" guesses
-        run_policy(
-            lab, "random", "manual (web heuristics, human loop)", budget, 1,
-            MANUAL_OVERHEAD_S, CALENDAR_FACTOR, threshold, seed ^ 1,
-        )?,
+        Policy {
+            name: "manual (web heuristics, human loop)",
+            optimizer: "random",
+            round_size: 1,
+            per_test_overhead_s: MANUAL_OVERHEAD_S,
+            calendar_factor: CALENDAR_FACTOR,
+            seed: seed ^ 1,
+        },
         // ACTS: automated staging tests, machine only, batched rounds
-        run_policy(
-            lab, "rrs", "ACTS (LHS+RRS, automated, batched)", budget, 16,
-            0.0, 1.0, threshold, seed ^ 2,
-        )?,
+        Policy {
+            name: "ACTS (LHS+RRS, automated, batched)",
+            optimizer: "rrs",
+            round_size: 16,
+            per_test_overhead_s: 0.0,
+            calendar_factor: 1.0,
+            seed: seed ^ 2,
+        },
     ];
+
+    let mut scheduler = Scheduler::new();
+    for policy in &policies {
+        let sut = lab.deploy(
+            Target::Single(sut::mysql()),
+            WorkloadSpec::zipfian_read_write(),
+            DeploymentEnv::standalone(),
+            SimulationOpts::default(),
+            policy.seed,
+        );
+        let cfg = TuningConfig {
+            budget_tests: budget,
+            optimizer: policy.optimizer.into(),
+            seed: policy.seed,
+            round_size: policy.round_size,
+            ..Default::default()
+        };
+        let session = TuningSession::from_registry(sut.space().clone(), &cfg)?;
+        scheduler.add(session, sut);
+    }
+    let results = scheduler.run();
+
+    let mut outcomes = Vec::with_capacity(policies.len());
+    for (policy, result) in policies.iter().zip(results) {
+        outcomes.push(policy_outcome(policy, threshold, &result?));
+    }
     Ok(Labor { outcomes, threshold })
 }

@@ -15,26 +15,52 @@ pub mod table1;
 use crate::error::Result;
 use crate::manipulator::{EngineRequest, SimulatedSut, SimulationOpts, SystemManipulator, Target};
 use crate::runtime::engine::EvalRequest;
-use crate::runtime::Engine;
+use crate::runtime::{BackendKind, Engine};
+use crate::tuner::TuningConfig;
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 use std::path::PathBuf;
 use std::sync::Arc;
 
-/// Shared experiment context: the compiled engine plus SUT factory.
+/// Shared experiment context: the compiled (or premixed) engine plus
+/// SUT factory.
 pub struct Lab {
-    /// The PJRT engine (compile-once).
+    /// The execution engine (compile-once / premix-once).
     pub engine: Arc<Engine>,
 }
 
 impl Lab {
-    /// Load the engine from `ACTS_ARTIFACTS` (default `artifacts/`,
-    /// resolved against the crate root so tests work from anywhere).
+    /// Build the lab with the backend selected by the `ACTS_BACKEND`
+    /// environment variable (default `auto`: the PJRT engine over the
+    /// `ACTS_ARTIFACTS` directory when it loads, the pure-`std` native
+    /// CPU backend otherwise — so experiments, benches and engine-backed
+    /// tests run anywhere).
     pub fn new() -> Result<Lab> {
-        let dir = std::env::var("ACTS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        Lab::with_backend(BackendKind::from_env())
+    }
+
+    /// Build the lab with an explicit backend choice.
+    pub fn with_backend(kind: BackendKind) -> Result<Lab> {
+        Ok(Lab { engine: Arc::new(Engine::from_kind(kind, Self::artifacts_dir())?) })
+    }
+
+    /// Build the lab for one session configuration: an explicit
+    /// `--backend` choice ([`TuningConfig::backend`]) wins; `Auto`
+    /// defers to the environment ([`BackendKind::from_env`]).
+    pub fn for_config(cfg: &TuningConfig) -> Result<Lab> {
+        let kind = match cfg.backend {
+            BackendKind::Auto => BackendKind::from_env(),
+            explicit => explicit,
+        };
+        Lab::with_backend(kind)
+    }
+
+    /// The artifacts directory: `ACTS_ARTIFACTS`, default `artifacts/`
+    /// resolved against the crate root so tests work from anywhere.
+    fn artifacts_dir() -> PathBuf {
+        std::env::var("ACTS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
             let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
             manifest.join("artifacts")
-        });
-        Ok(Lab { engine: Arc::new(Engine::load(dir)?) })
+        })
     }
 
     /// Deploy a target in the simulated staging environment.

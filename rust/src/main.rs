@@ -12,9 +12,21 @@ use acts::experiment::{self, Lab};
 use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
 use acts::optimizer::OPTIMIZER_NAMES;
 use acts::report::fmt_duration;
+use acts::runtime::BackendKind;
 use acts::sut::{self, SUT_NAMES};
 use acts::tuner::{self, TuningConfig};
 use acts::workload::{DeploymentEnv, WorkloadSpec};
+
+/// Resolve the `--backend` flag (default: the `ACTS_BACKEND` env var,
+/// then auto).
+fn backend_arg(args: &Args) -> acts::Result<BackendKind> {
+    match args.get_opt("backend") {
+        None => Ok(BackendKind::from_env()),
+        Some(s) => BackendKind::parse(s).ok_or_else(|| {
+            acts::ActsError::InvalidArg(format!("unknown backend `{s}` (auto|pjrt|native)"))
+        }),
+    }
+}
 
 fn main() {
     let args = Args::from_env();
@@ -78,7 +90,6 @@ fn resolve_target(name: &str) -> acts::Result<Target> {
 }
 
 fn cmd_tune(args: &Args) -> acts::Result<()> {
-    let lab = Lab::new()?;
     let target = resolve_target(&args.get("sut", "mysql"))?;
     let workload = WorkloadSpec::by_name(&args.get("workload", "zipfian-rw"))
         .ok_or_else(|| acts::ActsError::InvalidArg("unknown workload".into()))?;
@@ -94,8 +105,10 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
         optimizer: args.get("optimizer", "rrs"),
         seed,
         round_size,
+        backend: backend_arg(args)?,
         ..Default::default()
     };
+    let lab = Lab::for_config(&cfg)?;
 
     // --sessions N: N concurrent sessions (seeds seed..seed+N) through
     // the multi-session scheduler, coalescing their rounds into shared
@@ -176,7 +189,7 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
 }
 
 fn cmd_surface(args: &Args) -> acts::Result<()> {
-    let lab = Lab::new()?;
+    let lab = Lab::with_backend(backend_arg(args)?)?;
     let target = resolve_target(&args.get("sut", "tomcat"))?;
     let workload = WorkloadSpec::by_name(&args.get("workload", "page-mix"))
         .ok_or_else(|| acts::ActsError::InvalidArg("unknown workload".into()))?;
@@ -197,7 +210,10 @@ fn cmd_experiment(args: &Args) -> acts::Result<()> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let budget = args.get_u64("budget", 100);
     let seed = args.get_u64("seed", 1);
-    let lab = Lab::new()?;
+    // --repeats N: run N tuning seeds concurrently through the
+    // scheduler fleet where the experiment supports it
+    let repeats = args.get_u64("repeats", 1).max(1);
+    let lab = Lab::with_backend(backend_arg(args)?)?;
     let run_one = |id: &str, lab: &Lab| -> acts::Result<()> {
         match id {
             "fig1" => {
@@ -206,11 +222,15 @@ fn cmd_experiment(args: &Args) -> acts::Result<()> {
                 println!("fig1 shapes: {s:#?}");
             }
             "mysql" => {
-                let out = experiment::mysql_gain::run(lab, budget, seed)?;
-                print!("{}", experiment::mysql_gain::report(&out).markdown());
+                let sweep = experiment::mysql_gain::run_repeats(lab, budget, seed, repeats)?;
+                let (_, best) = sweep.best();
+                print!("{}", experiment::mysql_gain::report(best).markdown());
+                if repeats > 1 {
+                    print!("{}", sweep.report("§5.1 MySQL seed fleet").markdown());
+                }
             }
             "table1" => {
-                let t1 = experiment::table1::run(lab, budget, seed)?;
+                let t1 = experiment::table1::run_repeats(lab, budget, seed, repeats)?;
                 print!("{}", t1.report().markdown());
                 println!(
                     "§5.2: eliminate 1 VM in every {} (paper: 26)",
@@ -275,17 +295,25 @@ COMMANDS:
                    --deployment <d>   (standalone)   --optimizer <o>   (rrs)
                    --budget <n>       (100)          --seed <n>        (1)
                    --round-size <n>   (16)           --sessions <n>    (1)
+                   --backend <b>      (auto)         auto | pjrt | native
                    --sessions N runs N concurrent sessions (seeds
-                   seed..seed+N) through the multi-session scheduler,
-                   coalescing their rounds into shared engine executes
+                   seed..seed+N) through the pipelined multi-session
+                   scheduler, coalescing their rounds into shared engine
+                   executes while the next tick stages
                    --curve            print per-test progress
                    --config           print the best configuration found
     surface      dump a 2-knob grid sweep as CSV
                    --sut --workload --deployment --x <knob> --y <knob> --side <n>
+                   --backend <b>
     experiment   run a paper experiment:
                    fig1 | mysql | table1 | bottleneck | labor | fairness | cotuning | coverage | all
-                   --budget <n> --seed <n>
+                   --budget <n> --seed <n> --backend <b>
+                   --repeats N fleets N tuning seeds concurrently
+                   (mysql, table1)
     help         this text
 
-Artifacts are loaded from ./artifacts (override: ACTS_ARTIFACTS).
+Backends: `pjrt` executes the AOT artifacts (loaded from ./artifacts,
+override: ACTS_ARTIFACTS); `native` is the pure-std CPU evaluator of the
+same surface and runs anywhere; `auto` (default, also via ACTS_BACKEND)
+prefers pjrt and falls back to native.
 ";

@@ -240,6 +240,38 @@ fn expected_improvement(mean: f64, std: f64, f_best: f64) -> f64 {
     (mean - f_best) * big_phi(z) + std * phi(z)
 }
 
+/// Diversity-penalised round selection (local penalisation, Gonzalez et
+/// al. AISTATS'16 style): greedily take the best *discounted* (EI,
+/// candidate) pair, where each already-selected point discounts its
+/// kernel-correlated neighbourhood by `1 - exp(-0.5 d^2 / ls2)` (the
+/// GP's own lengthscale). The first pick is a maximum-EI candidate
+/// (penalties start at 1); near-duplicates of a selected point are
+/// discounted to ~0 so a round's proposals spread across basins instead
+/// of clustering on one. Input order does not matter. Returns
+/// `min(need, scored.len())` candidates in selection order.
+fn select_diverse(scored: Vec<(f64, Vec<f64>)>, need: usize, ls2: f64) -> Vec<Vec<f64>> {
+    let mut remaining = scored;
+    let mut penalty = vec![1.0f64; remaining.len()];
+    let mut picked: Vec<Vec<f64>> = Vec::with_capacity(need.min(remaining.len()));
+    while picked.len() < need && !remaining.is_empty() {
+        let best = (0..remaining.len())
+            .max_by(|&a, &b| {
+                let sa = remaining[a].0 * penalty[a];
+                let sb = remaining[b].0 * penalty[b];
+                sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("non-empty remaining");
+        let (_, chosen) = remaining.swap_remove(best);
+        penalty.swap_remove(best);
+        for (p, (_, cand)) in penalty.iter_mut().zip(&remaining) {
+            let d2: f64 = chosen.iter().zip(cand).map(|(x, y)| (x - y) * (x - y)).sum();
+            *p *= 1.0 - (-0.5 * d2 / ls2).exp();
+        }
+        picked.push(chosen);
+    }
+    picked
+}
+
 impl Optimizer for GpSurrogate {
     fn name(&self) -> &'static str {
         "gp"
@@ -305,7 +337,7 @@ impl Optimizer for GpSurrogate {
         let f_best = self.best.get().map(|b| b.value).unwrap_or(f64::NEG_INFINITY);
         // the LHS part of the pool alone covers `need`, so the round
         // can never run short
-        let mut scored: Vec<(f64, Vec<f64>)> = self
+        let scored: Vec<(f64, Vec<f64>)> = self
             .candidate_pool(rng, self.candidates.max(2 * need))
             .into_iter()
             .map(|c| {
@@ -313,9 +345,11 @@ impl Optimizer for GpSurrogate {
                 (expected_improvement(m, s, f_best), c)
             })
             .collect();
-        scored
-            .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
-        out.extend(scored.into_iter().take(need).map(|(_, c)| c));
+        // a round's picks cannot inform each other (no tells mid-round),
+        // so bare top-EI clusters around one basin; the local
+        // penalisation spreads the round across basins instead (it
+        // re-scans for the penalised argmax per pick, so no pre-sort)
+        out.extend(select_diverse(scored, need, fit.ls2));
         out
     }
 
@@ -379,6 +413,58 @@ mod tests {
             gp.tell(&u, v);
         }
         assert!(gp.best().unwrap().value > 0.97, "{}", gp.best().unwrap().value);
+    }
+
+    #[test]
+    fn select_diverse_keeps_the_top_and_skips_near_duplicates() {
+        // A: best EI at the origin; B: almost-equal EI, essentially the
+        // same point; C: half the EI, far away. A 2-pick round must be
+        // {A, C}: after picking A, B's penalty ~= 0 while C keeps ~1.
+        let a = (1.0, vec![0.0, 0.0]);
+        let b = (0.99, vec![1e-4, 0.0]);
+        let c = (0.5, vec![0.9, 0.9]);
+        let picked = select_diverse(vec![a, b, c], 2, 0.16);
+        assert_eq!(picked.len(), 2);
+        assert_eq!(picked[0], vec![0.0, 0.0], "top EI must always be kept");
+        assert_eq!(picked[1], vec![0.9, 0.9], "near-duplicate must lose to the far basin");
+    }
+
+    #[test]
+    fn select_diverse_returns_everything_when_pool_is_small() {
+        let picked = select_diverse(vec![(1.0, vec![0.1]), (0.5, vec![0.9])], 8, 0.16);
+        assert_eq!(picked.len(), 2);
+    }
+
+    #[test]
+    fn ask_batch_rounds_are_in_range_and_spread() {
+        let f = |u: &[f64]| 1.0 - u.iter().map(|x| (x - 0.6) * (x - 0.6)).sum::<f64>();
+        let mut rng = Rng64::new(9);
+        let mut gp = GpSurrogate::new(3);
+        // get past the init design so rounds are EI-selected
+        for _ in 0..3 {
+            let round = gp.ask_batch(&mut rng, 8);
+            assert_eq!(round.len(), 8);
+            for u in &round {
+                assert_eq!(u.len(), 3);
+                assert!(u.iter().all(|x| (0.0..=1.0).contains(x)));
+            }
+            for u in &round {
+                gp.tell(u, f(u));
+            }
+        }
+        // past the init design: a diversity-penalised round must not
+        // collapse onto one point — every pair keeps some distance
+        let round = gp.ask_batch(&mut rng, 8);
+        for i in 0..round.len() {
+            for j in (i + 1)..round.len() {
+                let d2: f64 = round[i]
+                    .iter()
+                    .zip(&round[j])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!(d2 > 1e-8, "round proposals {i} and {j} coincide");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,157 @@
+//! The execution-backend abstraction: what the [`crate::runtime::Engine`]
+//! front-end drives to actually evaluate config rows.
+//!
+//! The engine owns everything backend-independent — request validation,
+//! the content-keyed prepared-constant cache, cross-request coalescing
+//! and the telemetry counters — and delegates the two device-specific
+//! operations to an [`ExecBackend`]:
+//!
+//! * [`ExecBackend::prepare`] turns a (surface params, workload,
+//!   deployment) binding into backend-resident constants;
+//! * [`ExecBackend::execute`] evaluates a planned batch of padded config
+//!   rows against such constants, reporting how many physical calls and
+//!   rows (padding included) the plan cost.
+//!
+//! Two implementations ship:
+//!
+//! * [`crate::runtime::pjrt::PjrtBackend`] — the compile-once PJRT
+//!   engine over the AOT HLO artifacts, with the greedy static-bucket
+//!   decomposition (the production path where the XLA binding and
+//!   artifacts exist);
+//! * [`crate::runtime::native::NativeBackend`] — a pure-`std` CPU
+//!   evaluator of the same golden surface (no static shapes, no vendor
+//!   binding), so every engine-backed test, bench and experiment runs
+//!   anywhere.
+//!
+//! Backends are selected by [`BackendKind`]: explicitly (the
+//! `acts tune --backend` flag, `TuningConfig::backend`), via the
+//! `ACTS_BACKEND` environment variable, or `auto` (PJRT when the
+//! artifacts load, native otherwise).
+
+use super::engine::{Perf, SurfaceParams};
+use crate::error::Result;
+use std::any::Any;
+
+/// Backend-resident prepared constants, type-erased so the engine can
+/// cache and share them without knowing the backend. Each backend
+/// downcasts back to its own concrete type in
+/// [`ExecBackend::execute`].
+pub trait PreparedData: Any + Send + Sync {
+    /// Downcast support (trait upcasting to `Any` is not stable on the
+    /// crate's MSRV).
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// Outcome of one [`ExecBackend::execute`]: per-row results plus the
+/// physical cost the backend's plan incurred, which the engine folds
+/// into [`crate::runtime::engine::EngineStats`].
+pub struct Execution {
+    /// One [`Perf`] per requested row, in row order.
+    pub perfs: Vec<Perf>,
+    /// Physical execute calls issued (PJRT: one per planned bucket
+    /// chunk; native: one per batch).
+    pub execute_calls: u64,
+    /// Rows physically evaluated, padding included (PJRT pads odd
+    /// chunks up to a static bucket; native never pads).
+    pub rows_executed: u64,
+}
+
+/// An execution substrate for the golden performance surface.
+///
+/// `Send + Sync` is a trait obligation: backends are shared across
+/// session threads behind one `Arc<Engine>` (the scheduler's pipelined
+/// tick executes on a worker thread while staging continues on the
+/// scheduler thread), so every implementation must be safe to call
+/// concurrently from multiple threads through `&self`.
+pub trait ExecBackend: Send + Sync {
+    /// Registry name (`"pjrt"`, `"native"`).
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform description (diagnostics).
+    fn platform(&self) -> String;
+
+    /// Upload/premix the constant inputs of one binding. `w` and `e`
+    /// are already width-validated by the engine; `params` is
+    /// block-validated.
+    fn prepare(
+        &self,
+        params: &SurfaceParams,
+        w: &[f32],
+        e: &[f32],
+    ) -> Result<Box<dyn PreparedData>>;
+
+    /// Evaluate `rows` (each a padded `[f32; D_PAD]` unit vector,
+    /// `rows.len() >= 1`, widths already validated) against constants
+    /// this backend prepared. Fails if `prepared` came from a different
+    /// backend.
+    fn execute(&self, prepared: &dyn PreparedData, rows: &[&[f32]]) -> Result<Execution>;
+}
+
+/// Which execution backend to use (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT if the artifacts load, otherwise fall back to the native
+    /// CPU backend (with a note on stderr). The default everywhere.
+    #[default]
+    Auto,
+    /// The PJRT engine over the AOT artifacts; fails without them.
+    Pjrt,
+    /// The pure-`std` native CPU evaluator; runs anywhere.
+    Native,
+}
+
+impl BackendKind {
+    /// Parse a CLI/env spelling.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(BackendKind::Auto),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            "native" | "cpu" => Some(BackendKind::Native),
+            _ => None,
+        }
+    }
+
+    /// Resolve from the `ACTS_BACKEND` environment variable (unset or
+    /// unparsable means [`BackendKind::Auto`]).
+    pub fn from_env() -> BackendKind {
+        match std::env::var("ACTS_BACKEND") {
+            Ok(v) => BackendKind::parse(&v).unwrap_or_else(|| {
+                eprintln!("acts: ACTS_BACKEND=`{v}` not recognised (auto|pjrt|native); using auto");
+                BackendKind::Auto
+            }),
+            Err(_) => BackendKind::Auto,
+        }
+    }
+
+    /// Registry spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_spellings() {
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("XLA"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse(" cpu "), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("auto"), Some(BackendKind::Auto));
+        assert_eq!(BackendKind::parse("tpu"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+    }
+
+    #[test]
+    fn backend_kind_round_trips_registry_names() {
+        for kind in [BackendKind::Auto, BackendKind::Pjrt, BackendKind::Native] {
+            assert_eq!(BackendKind::parse(kind.as_str()), Some(kind));
+        }
+    }
+}

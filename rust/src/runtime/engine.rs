@@ -1,37 +1,39 @@
-//! The PJRT execution engine: compile-once, execute-many surface
-//! artifacts, with batch bucketing.
+//! The execution engine front-end: compile-once (or premix-once),
+//! execute-many surface evaluation, with cross-request coalescing.
 //!
-//! One [`Engine`] owns a PJRT CPU client and a compiled executable per
-//! static batch bucket (1 / 16 / 256 / 2048). An evaluation request of
-//! `B` configs is decomposed greedily across the buckets
-//! ([`super::shapes::plan_buckets`]): exact chunks of the largest
-//! fitting bucket plus at most one padded call for the remainder, so an
-//! odd batch never executes a whole wide bucket of padding. This is the
-//! L3 hot path: the whole Figure-1 atlas and every staged-test round of
-//! every tuning session funnels through [`Engine::evaluate_prepared`] or
-//! the multi-request [`Engine::evaluate_coalesced`].
+//! One [`Engine`] owns an [`ExecBackend`] — the PJRT bucket engine
+//! ([`Engine::load`]) or the pure-`std` native CPU evaluator
+//! ([`Engine::native`]) — plus everything backend-independent: request
+//! validation, the content-keyed prepared-constant cache, cross-request
+//! coalescing and the hot-path telemetry. This is the L3 hot path: the
+//! whole Figure-1 atlas and every staged-test round of every tuning
+//! session funnels through [`Engine::evaluate_prepared`] or the
+//! multi-request [`Engine::evaluate_coalesced`].
 //!
 //! # Coalesced execution
 //!
 //! [`Engine::evaluate_coalesced`] serves *many* logical requests in one
 //! pass: requests sharing the same [`PreparedCall`] (pointer identity —
 //! use [`Engine::prepare_cached`] so equal bindings share one prepared
-//! set) are concatenated and bucket-planned **together**, then the
-//! results are split back per request by row range. This is how the
+//! set) are concatenated and executed **together**, then the results
+//! are split back per request by row range. This is how the
 //! multi-session scheduler turns 8 concurrent tuning rounds of 32 rows
-//! each into a single 256-bucket execute instead of eight partial-width
+//! each into a single 256-row execute instead of eight partial-width
 //! calls. [`Engine::stats`] accounts both sides of the funnel: logical
 //! `requests`/`rows_requested` in, physical `execute_calls`/
 //! `rows_executed` (padding included) out.
 //!
-//! The engine is `Send + Sync` (telemetry is atomic; PJRT objects are
-//! thread-safe by the PJRT C API contract), so experiments can share
-//! one compiled engine across session threads via `Arc<Engine>`.
+//! The engine is `Send + Sync` by construction (the backend trait
+//! requires it; telemetry is atomic; the prepare cache is mutex-
+//! guarded), so experiments share one engine across session threads via
+//! `Arc<Engine>` and the scheduler's pipelined tick executes on a
+//! worker thread while staging continues on the scheduler thread.
 
-use super::shapes::{self, BUCKETS, D_PAD, E_DIM, W_DIM};
+use super::backend::{BackendKind, ExecBackend, PreparedData};
+use super::shapes::{self, D_PAD, E_DIM, W_DIM};
 use crate::error::{ActsError, Result};
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -158,9 +160,9 @@ pub struct Perf {
 /// One logical evaluation request for [`Engine::evaluate_coalesced`]:
 /// padded config rows to run against one prepared constant set.
 /// Requests whose `prepared` is the *same object* coalesce into shared
-/// bucket executes.
+/// executes.
 pub struct EvalRequest<'a> {
-    /// Device-resident constants the rows evaluate against.
+    /// Backend-resident constants the rows evaluate against.
     pub prepared: &'a PreparedCall,
     /// Padded `[f32; D_PAD]` unit rows (may be empty).
     pub configs: &'a [Vec<f32>],
@@ -169,7 +171,8 @@ pub struct EvalRequest<'a> {
 /// Hot-path telemetry counters (see [`Engine::stats`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct EngineStats {
-    /// PJRT `execute` calls issued.
+    /// Physical backend execute calls issued (PJRT: one per planned
+    /// bucket chunk; native: one per batch).
     pub execute_calls: u64,
     /// Config rows executed, bucket padding included.
     pub rows_executed: u64,
@@ -183,13 +186,26 @@ pub struct EngineStats {
     pub rows_requested: u64,
 }
 
-/// Compile-once, execute-many PJRT engine.
+/// Backend-resident constant inputs for one (params, w, e) binding —
+/// see [`Engine::prepare`]. Type-erased over the engine's backend;
+/// `Send + Sync` by the [`PreparedData`] trait obligation, so prepared
+/// constants cross into the scheduler's execute worker thread.
+pub struct PreparedCall {
+    data: Box<dyn PreparedData>,
+}
+
+impl PreparedCall {
+    /// The backend-specific payload.
+    pub(crate) fn data(&self) -> &dyn PreparedData {
+        self.data.as_ref()
+    }
+}
+
+/// Compile-once (or premix-once), execute-many engine front-end over a
+/// pluggable [`ExecBackend`].
 pub struct Engine {
-    client: xla::PjRtClient,
-    /// (bucket, executable), ascending bucket order.
-    execs: Vec<(usize, xla::PjRtLoadedExecutable)>,
-    artifacts_dir: PathBuf,
-    /// Number of `execute` calls issued (hot-path telemetry).
+    backend: Box<dyn ExecBackend>,
+    /// Number of physical execute calls issued (hot-path telemetry).
     calls: AtomicU64,
     /// Number of config rows evaluated (incl. padding).
     rows: AtomicU64,
@@ -198,72 +214,64 @@ pub struct Engine {
     /// Number of source rows requested (pre-padding).
     rows_requested: AtomicU64,
     /// Content-keyed prepared-constant cache ([`Engine::prepare_cached`]):
-    /// equal (params, w, e) bindings share one device-resident set, which
+    /// equal (params, w, e) bindings share one backend-resident set, which
     /// is what makes their requests coalescible by pointer identity.
     prepare_cache: Mutex<HashMap<Vec<u32>, Arc<PreparedCall>>>,
 }
 
-// SAFETY: two obligations are being claimed here.
-// (1) PJRT side: the C API requires clients, loaded executables and
-//     buffers to be usable from any thread concurrently (the CPU
-//     client serialises internally where it must), and every Engine
-//     method takes `&self`; our only interior mutability is the
-//     atomic telemetry counters and the Mutex-guarded prepare cache
-//     (whose values are `Arc<PreparedCall>`, themselves Send + Sync).
-// (2) Wrapper side: the vendored `xla` binding must hold plain FFI
-//     handles for the client/executable types (no thread-unsafe shared
-//     ownership such as `Rc` refcounts cloned per call) — this is the
-//     part the compiler cannot see past, and it MUST be re-audited
-//     whenever the binding is vendored or upgraded. Per-call wrapper
-//     objects (literals, buffers) are created, used and dropped within
-//     a single `evaluate_*` call on one thread and never cross threads.
-// Together these let experiments run whole tuning sessions in parallel
-// threads over one `Arc<Engine>` instead of compiling the bucket
-// ladder once per thread.
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
-
 impl Engine {
-    /// Load and compile every bucket artifact from `artifacts_dir`.
-    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        let client = xla::PjRtClient::cpu()?;
-        let mut execs = Vec::with_capacity(BUCKETS.len());
-        for &bucket in BUCKETS.iter() {
-            let path = dir.join(shapes::artifact_name(bucket));
-            if !path.exists() {
-                return Err(ActsError::Artifact(format!(
-                    "{} missing — run `make artifacts` first",
-                    path.display()
-                )));
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| ActsError::Artifact("non-utf8 path".into()))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            execs.push((bucket, exe));
-        }
-        Ok(Engine {
-            client,
-            execs,
-            artifacts_dir: dir,
+    /// Engine over an explicit backend.
+    pub fn from_backend(backend: Box<dyn ExecBackend>) -> Engine {
+        Engine {
+            backend,
             calls: AtomicU64::new(0),
             rows: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             rows_requested: AtomicU64::new(0),
             prepare_cache: Mutex::new(HashMap::new()),
-        })
+        }
     }
 
-    /// The artifacts directory this engine loaded from.
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.artifacts_dir
+    /// Load and compile every bucket artifact from `artifacts_dir` into
+    /// a PJRT-backed engine.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        Ok(Engine::from_backend(Box::new(super::pjrt::PjrtBackend::load(artifacts_dir)?)))
     }
 
-    /// PJRT platform name (diagnostics).
+    /// Engine over the pure-`std` native CPU backend — no artifacts, no
+    /// XLA binding; runs anywhere.
+    pub fn native() -> Engine {
+        Engine::from_backend(Box::new(super::native::NativeBackend::new()))
+    }
+
+    /// Resolve a [`BackendKind`] into an engine: `Pjrt` loads the
+    /// artifacts (failing if it cannot), `Native` never touches them,
+    /// and `Auto` tries PJRT first and falls back to native with a note
+    /// on stderr — the "runs anywhere" default.
+    pub fn from_kind(kind: BackendKind, artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        match kind {
+            BackendKind::Pjrt => Engine::load(artifacts_dir),
+            BackendKind::Native => Ok(Engine::native()),
+            BackendKind::Auto => match Engine::load(artifacts_dir) {
+                Ok(engine) => Ok(engine),
+                Err(err) => {
+                    eprintln!(
+                        "acts: PJRT backend unavailable ({err}); using the native CPU backend"
+                    );
+                    Ok(Engine::native())
+                }
+            },
+        }
+    }
+
+    /// The backend's registry name (`"pjrt"`, `"native"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Backend platform description (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
     /// Telemetry counters so far: logical requests/rows in, physical
@@ -279,15 +287,13 @@ impl Engine {
 
     /// Evaluate `configs` (each a padded `[f32; D_PAD]` unit vector) for
     /// one SUT surface under workload features `w` and deployment
-    /// features `e`. Any `configs.len() >= 1` is accepted: requests are
-    /// decomposed greedily across the buckets (see
-    /// [`Engine::evaluate_prepared`]).
+    /// features `e`. Any `configs.len() >= 1` is accepted.
     ///
     /// One-shot convenience wrapper around [`Engine::prepare`] +
     /// [`Engine::evaluate_prepared`]; repeated callers (the manipulator,
     /// the benches) should prepare once — the §Perf pass showed the
     /// per-call upload of the constant parameter blocks (~150 KiB)
-    /// dominating small-batch latency.
+    /// dominating small-batch latency on the PJRT backend.
     pub fn evaluate(
         &self,
         params: &SurfaceParams,
@@ -299,8 +305,8 @@ impl Engine {
         self.evaluate_prepared(&prepared, configs)
     }
 
-    /// Upload the constant inputs (w, e, and every parameter block) to
-    /// device-resident buffers, once per bucket. The returned
+    /// Validate and hand one binding to the backend: device uploads on
+    /// PJRT, workload/deployment premix on native. The returned
     /// [`PreparedCall`] is reusable for any number of
     /// [`Engine::evaluate_prepared`] calls against this engine.
     pub fn prepare(&self, params: &SurfaceParams, w: &[f32], e: &[f32]) -> Result<PreparedCall> {
@@ -312,44 +318,12 @@ impl Engine {
             )));
         }
         params.validate()?;
-        let devices = self.client.devices();
-        let device = &devices[0];
-        let mut per_bucket = Vec::with_capacity(BUCKETS.len());
-        // NB: the CPU client's CopyFromLiteral is ASYNC — a worker thread
-        // reads from the Literal after buffer_from_host_literal returns,
-        // so every uploaded literal is kept alive inside PreparedCall.
-        let mut literals = Vec::new();
-        for &bucket in BUCKETS.iter() {
-            let mut upload = |idx: usize, data: &[f32]| -> Result<xla::PjRtBuffer> {
-                let dims: Vec<i64> =
-                    shapes::dims_for(idx, bucket).iter().map(|&d| d as i64).collect();
-                let lit = xla::Literal::vec1(data).reshape(&dims)?;
-                let buf = self.client.buffer_from_host_literal(Some(device), &lit)?;
-                literals.push(lit);
-                Ok(buf)
-            };
-            let mut bufs = Vec::with_capacity(shapes::INPUT_SPEC.len() - 1);
-            bufs.push(upload(1, w)?);
-            bufs.push(upload(2, e)?);
-            for (idx, slice) in params.fields() {
-                bufs.push(upload(idx, slice)?);
-            }
-            per_bucket.push(bufs);
-        }
-        // force every async H2D copy to complete before returning: a
-        // PreparedCall dropped mid-transfer would free the source
-        // literals under the copy thread (observed SIGSEGV otherwise)
-        for bufs in &per_bucket {
-            for buf in bufs {
-                let _ = buf.to_literal_sync()?;
-            }
-        }
-        Ok(PreparedCall { per_bucket, _literals: literals })
+        Ok(PreparedCall { data: self.backend.prepare(params, w, e)? })
     }
 
     /// As [`Engine::prepare`], but content-cached: equal (params, w, e)
-    /// bindings (bit-compared) share one device-resident constant set.
-    /// Besides skipping the ~150 KiB re-upload per deployment, the
+    /// bindings (bit-compared) share one backend-resident constant set.
+    /// Besides skipping the re-upload/re-premix per deployment, the
     /// shared `Arc` gives same-binding callers *pointer-identical*
     /// prepared constants — the coalescing key of
     /// [`Engine::evaluate_coalesced`].
@@ -377,14 +351,11 @@ impl Engine {
     }
 
     /// Evaluate against a prepared constant set. Only the config batch
-    /// is uploaded per call.
+    /// is handed to the backend per call.
     ///
-    /// The batch is split greedily across the compiled buckets
-    /// ([`shapes::plan_buckets`]): exact chunks of the largest fitting
-    /// bucket, with at most one padded call for the remainder — a B=40
-    /// request executes as 3×16 rows, not one 256-row call. The device
-    /// handle is resolved once per request and one upload scratch
-    /// buffer is reused across the plan's calls.
+    /// On the PJRT backend the batch is split greedily across the
+    /// compiled buckets ([`shapes::plan_buckets`]); the native backend
+    /// evaluates it as one call with no padding.
     pub fn evaluate_prepared(
         &self,
         prepared: &PreparedCall,
@@ -399,17 +370,17 @@ impl Engine {
         self.evaluate_rows(prepared, &rows)
     }
 
-    /// Serve many logical requests as shared bucket executes: requests
-    /// against the *same* [`PreparedCall`] object are concatenated (in
-    /// request order) and bucket-planned together, then the results are
-    /// split back per request by row range. Returns one `Vec<Perf>` per
-    /// request, in request order.
+    /// Serve many logical requests as shared executes: requests against
+    /// the *same* [`PreparedCall`] object are concatenated (in request
+    /// order) and executed together, then the results are split back
+    /// per request by row range. Returns one `Vec<Perf>` per request,
+    /// in request order.
     ///
     /// This is the cross-session batching primitive: 8 tuning sessions
     /// staging 32 rows each against one shared binding execute as a
-    /// single 256-bucket call instead of eight partial-width calls.
+    /// single 256-row call instead of eight partial-width calls.
     /// Requests against distinct prepared sets (different SUT surfaces,
-    /// workloads or deployments) stay separate plans — per-call
+    /// workloads or deployments) stay separate executes — per-call
     /// constants cannot mix — but still share this one entry point.
     pub fn evaluate_coalesced(&self, requests: &[EvalRequest<'_>]) -> Result<Vec<Vec<Perf>>> {
         self.requests.fetch_add(requests.len() as u64, Ordering::Relaxed);
@@ -438,7 +409,8 @@ impl Engine {
         Ok(out)
     }
 
-    /// Shared core of the evaluate paths: validate, plan, execute.
+    /// Shared core of the evaluate paths: validate, hand to the
+    /// backend, fold the physical cost into the telemetry.
     fn evaluate_rows(&self, prepared: &PreparedCall, rows: &[&[f32]]) -> Result<Vec<Perf>> {
         for (i, r) in rows.iter().enumerate() {
             if r.len() != D_PAD {
@@ -448,85 +420,11 @@ impl Engine {
                 )));
             }
         }
-        // one devices() resolution (it allocates a Vec) per request, not
-        // per chunk
-        let devices = self.client.devices();
-        let device = &devices[0];
-        let mut scratch: Vec<f32> = Vec::new();
-        let mut out = Vec::with_capacity(rows.len());
-        let mut offset = 0usize;
-        for bucket in shapes::plan_buckets(rows.len()) {
-            let take = bucket.min(rows.len() - offset);
-            let chunk = &rows[offset..offset + take];
-            offset += take;
-            out.extend(self.evaluate_chunk(prepared, chunk, bucket, device, &mut scratch)?);
-        }
-        debug_assert_eq!(offset, rows.len(), "plan must consume every row");
-        Ok(out)
-    }
-
-    /// Execute one planned call: `configs.len() <= bucket` rows, padded
-    /// up to `bucket` with copies of row 0 (cheap, valid data).
-    fn evaluate_chunk(
-        &self,
-        prepared: &PreparedCall,
-        configs: &[&[f32]],
-        bucket: usize,
-        device: &xla::PjRtDevice,
-        scratch: &mut Vec<f32>,
-    ) -> Result<Vec<Perf>> {
-        let b = configs.len();
-        debug_assert!(b >= 1 && b <= bucket);
-        let bucket_pos = BUCKETS.iter().position(|&k| k == bucket).expect("planned bucket");
-        let exe = &self.execs[bucket_pos].1;
-        let consts = &prepared.per_bucket[bucket_pos];
-
-        // u: bucket rows in the reusable scratch buffer
-        scratch.clear();
-        scratch.reserve(bucket * D_PAD);
-        for c in configs {
-            scratch.extend_from_slice(c);
-        }
-        for _ in b..bucket {
-            scratch.extend_from_slice(configs[0]);
-        }
-        // NB: go through a Literal (buffer_from_host_buffer may zero-copy
-        // and alias the host memory) and keep `u_lit` alive until the
-        // output sync — the CPU client's CopyFromLiteral reads it from a
-        // worker thread. The Literal owns its copy, so `scratch` is free
-        // for the plan's next call immediately.
-        let u_lit = xla::Literal::vec1(&scratch[..]).reshape(&[bucket as i64, D_PAD as i64])?;
-        let u_buf = self.client.buffer_from_host_literal(Some(device), &u_lit)?;
-        // await the async H2D copy (readback sync; CopyRawToHost is not
-        // implemented on this CPU client) so u_lit cannot be freed under
-        // the copy thread on any early-return path
-        let _ = u_buf.to_literal_sync()?;
-
-        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(consts.len() + 1);
-        inputs.push(&u_buf);
-        inputs.extend(consts.iter());
-
-        let result = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
-        self.calls.fetch_add(1, Ordering::Relaxed);
-        self.rows.fetch_add(bucket as u64, Ordering::Relaxed);
-        let tuple = result[0][0].to_literal_sync()?;
-        // the output sync above also guarantees the input transfer is
-        // done; only now may u_lit drop
-        drop(u_lit);
-        let (thr_lit, lat_lit) = tuple.to_tuple2()?;
-        let thr = thr_lit.to_vec::<f32>()?;
-        let lat = lat_lit.to_vec::<f32>()?;
-        if thr.len() != bucket || lat.len() != bucket {
-            return Err(ActsError::Artifact(format!(
-                "artifact returned {} outputs for bucket {bucket}",
-                thr.len()
-            )));
-        }
-        Ok(thr[..b]
-            .iter()
-            .zip(&lat[..b])
-            .map(|(&t, &l)| Perf { throughput: t as f64, latency: l as f64 })
-            .collect())
+        let execution = self.backend.execute(prepared.data(), rows)?;
+        debug_assert_eq!(execution.perfs.len(), rows.len(), "backend must answer every row");
+        self.calls.fetch_add(execution.execute_calls, Ordering::Relaxed);
+        self.rows.fetch_add(execution.rows_executed, Ordering::Relaxed);
+        Ok(execution.perfs)
     }
 }
 
@@ -545,23 +443,6 @@ pub(crate) fn group_by_key(keys: &[usize]) -> Vec<Vec<usize>> {
     }
     groups.into_iter().map(|(_, idxs)| idxs).collect()
 }
-
-/// Device-resident constant inputs (w, e, parameter blocks) for every
-/// bucket — see [`Engine::prepare`].
-pub struct PreparedCall {
-    /// Buffers in artifact input order minus `u`, one set per bucket.
-    per_bucket: Vec<Vec<xla::PjRtBuffer>>,
-    /// Source literals, kept alive for the async device copies.
-    _literals: Vec<xla::Literal>,
-}
-
-// SAFETY: after `Engine::prepare` returns, every buffer's H2D copy has
-// completed (it syncs before handing the value back) and the buffers
-// and literals are only ever read — PJRT buffers are usable from any
-// thread per the C API contract. This makes per-SUT prepared constants
-// movable into session worker threads.
-unsafe impl Send for PreparedCall {}
-unsafe impl Sync for PreparedCall {}
 
 #[cfg(test)]
 mod tests {
@@ -588,8 +469,10 @@ mod tests {
         assert_eq!(idxs, (3..20).collect::<Vec<_>>());
     }
 
-    /// Compile-time guarantee behind parallel-session experiments: the
-    /// engine and its prepared constants cross thread boundaries.
+    /// Compile-time guarantee behind parallel-session experiments and
+    /// the pipelined scheduler: the engine and its prepared constants
+    /// cross thread boundaries (now by construction — the backend trait
+    /// requires `Send + Sync`, so no `unsafe` is needed at this layer).
     #[test]
     fn engine_is_send_and_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
@@ -610,6 +493,89 @@ mod tests {
         // all distinct: one singleton group per request
         assert_eq!(group_by_key(&[4, 5, 6]), vec![vec![0], vec![1], vec![2]]);
     }
-    // engine execution itself (including the coalesced path) is covered
-    // by the `runtime_golden` integration test (needs artifacts on disk)
+
+    // --- engine front-end over the native backend -------------------
+    // (PJRT execution, including its bucket plans, is covered by the
+    // `runtime_golden` integration test when artifacts exist on disk;
+    // everything below runs anywhere.)
+
+    fn native_engine() -> Engine {
+        Engine::native()
+    }
+
+    #[test]
+    fn native_engine_reports_its_backend() {
+        let engine = native_engine();
+        assert_eq!(engine.backend_name(), "native");
+        assert!(engine.platform().contains("native"), "{}", engine.platform());
+    }
+
+    #[test]
+    fn empty_request_is_empty_and_uncounted() {
+        let engine = native_engine();
+        let (_, w, e, params) = crate::runtime::golden::pattern_call(1);
+        let got = engine.evaluate(&params, &w, &e, &[]).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(engine.stats().requests, 0);
+    }
+
+    #[test]
+    fn invalid_inputs_are_rejected() {
+        let engine = native_engine();
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(1);
+        // wrong workload width
+        assert!(engine.evaluate(&params, &w[..4], &e, &configs).is_err());
+        // wrong config width
+        let bad = vec![vec![0.5f32; 3]];
+        assert!(engine.evaluate(&params, &w, &e, &bad).is_err());
+    }
+
+    #[test]
+    fn prepare_cached_shares_identical_bindings() {
+        let engine = native_engine();
+        let (_, w, e, params) = crate::runtime::golden::pattern_call(1);
+        let a = engine.prepare_cached(&params, &w, &e).unwrap();
+        let b = engine.prepare_cached(&params, &w, &e).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "equal bindings must share one prepared set");
+        let mut w2 = w.clone();
+        w2[1] += 1.0;
+        let c = engine.prepare_cached(&params, &w2, &e).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "different bindings must not share");
+    }
+
+    #[test]
+    fn coalesced_requests_match_separate_evaluation_bitwise() {
+        let engine = native_engine();
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(16);
+        let prepared = engine.prepare_cached(&params, &w, &e).unwrap();
+        // a second binding (different w) that must NOT coalesce
+        let mut w2 = w.clone();
+        w2[0] += 0.25;
+        let prepared2 = engine.prepare_cached(&params, &w2, &e).unwrap();
+
+        let separate_a = engine.evaluate_prepared(&prepared, &configs).unwrap();
+        let separate_b = engine.evaluate_prepared(&prepared, &configs[..7]).unwrap();
+        let separate_c = engine.evaluate_prepared(&prepared2, &configs[..5]).unwrap();
+
+        let s0 = engine.stats();
+        let out = engine
+            .evaluate_coalesced(&[
+                EvalRequest { prepared: &prepared, configs: &configs },
+                EvalRequest { prepared: &prepared, configs: &configs[..7] },
+                EvalRequest { prepared: &prepared2, configs: &configs[..5] },
+            ])
+            .unwrap();
+        let s1 = engine.stats();
+        assert_eq!(out.len(), 3);
+        // native rows are batch-size invariant, so coalescing is exact
+        assert_eq!(out[0], separate_a);
+        assert_eq!(out[1], separate_b);
+        assert_eq!(out[2], separate_c);
+        assert_eq!(s1.requests - s0.requests, 3);
+        assert_eq!(s1.rows_requested - s0.rows_requested, 28);
+        // two same-binding requests share one execute; the third gets
+        // its own; native never pads
+        assert_eq!(s1.execute_calls - s0.execute_calls, 2);
+        assert_eq!(s1.rows_executed - s0.rows_executed, 28);
+    }
 }

@@ -1,20 +1,35 @@
-//! PJRT runtime: loads the AOT-compiled surface artifacts and executes
-//! them from the tuning hot path. Python never runs here — the artifacts
-//! under `artifacts/*.hlo.txt` were lowered once by `make artifacts`
-//! (python/compile/aot.py) and this module is pure rust + XLA.
+//! The execution runtime: evaluates the golden performance surface from
+//! the tuning hot path, behind a pluggable backend (see `README.md` in
+//! this directory).
 //!
+//! * [`backend`] — the [`backend::ExecBackend`] abstraction and
+//!   [`backend::BackendKind`] selection (CLI `--backend`, env
+//!   `ACTS_BACKEND`, auto fallback).
+//! * [`pjrt`] — the PJRT backend: loads the AOT-compiled surface
+//!   artifacts (`artifacts/*.hlo.txt`, lowered once by `make artifacts`
+//!   / python/compile/aot.py) and executes them with greedy static-
+//!   bucket decomposition. Python never runs here.
+//! * [`native`] — the pure-`std` CPU backend: evaluates the same golden
+//!   surface (the model in python/compile/kernels/ref.py) directly in
+//!   f32, parallelised with `std::thread::scope` — no artifacts, no
+//!   vendor binding, runs anywhere.
+//! * [`engine`] — the backend-agnostic front-end: validation, the
+//!   prepared-constant cache, cross-request coalescing, telemetry.
 //! * [`shapes`] — the artifact input table, mirroring
 //!   `python/compile/model.py::INPUT_SPEC` (kept in sync by the golden
 //!   integration test).
-//! * [`engine`] — PJRT CPU client, per-bucket compiled executables, and
-//!   the batched `evaluate` entry point with greedy multi-bucket
-//!   decomposition of odd batch sizes.
 //! * [`golden`] — the patterned-input golden vectors shared with
-//!   python/compile/aot.py, proving the rust<->python round trip.
+//!   python/compile/aot.py, proving the rust<->python round trip for
+//!   both backends.
 
+pub mod backend;
 pub mod engine;
 pub mod golden;
+pub mod native;
+pub mod pjrt;
 pub mod shapes;
 
+pub use backend::{BackendKind, ExecBackend};
 pub use engine::{Engine, EngineStats, EvalRequest, Perf, PreparedCall, SurfaceParams};
+pub use native::NativeBackend;
 pub use shapes::{BUCKETS, D_PAD, E_DIM, G, J, R, RG, W_DIM};

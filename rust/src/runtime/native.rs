@@ -1,0 +1,450 @@
+//! The native CPU execution backend: a pure-`std` evaluator of the same
+//! golden performance surface the PJRT artifacts compute, so every
+//! engine-backed test, bench and experiment runs anywhere — no XLA
+//! binding, no AOT artifacts, no vendor toolchain.
+//!
+//! # What it computes
+//!
+//! Exactly the model in `python/compile/model.py` +
+//! `python/compile/kernels/ref.py` (the artifact's source of truth), in
+//! f32 like the lowered HLO:
+//!
+//! * **premix** (at [`ExecBackend::prepare`], once per binding): fold
+//!   the workload vector `w` into the parameter blocks — basis weights
+//!   `(4,D)`, interaction matrix `(D,D)`, bump amplitudes `(J,)`, cliff
+//!   gains `(R,)` (plus the deployment term), gate floors `(G,)` — and
+//!   the deployment vector `e` into the scalar headroom factor.
+//! * **per row** (at [`ExecBackend::execute`]):
+//!   `score = base + inter + bumps + cliffs`, `gate = prod(gfac)`,
+//!   `thr = t_scale * softplus(score) * gate * dep`,
+//!   `lat = lat0 + lat1 / (1 + thr / t_sat)`.
+//!
+//! Per-row results are exactly batch-size independent (each row is a
+//! separate scalar computation), which is what the scheduler's
+//! coalescing and pipelining equivalence tests rely on bitwise.
+//!
+//! # Parallelism
+//!
+//! Rows are chunked across `std::thread::scope` workers (thread count
+//! from `ACTS_NATIVE_THREADS`, default `available_parallelism` capped
+//! at 8). Small batches stay on the calling thread — a B=1 staged test
+//! must not pay a thread spawn.
+
+use super::backend::{ExecBackend, Execution, PreparedData};
+use super::engine::{Perf, SurfaceParams};
+use super::shapes::{D_PAD, E_DIM, G, R, RG, W_DIM};
+use crate::error::{ActsError, Result};
+use std::any::Any;
+
+/// Batches below this stay on the calling thread.
+const PARALLEL_THRESHOLD_ROWS: usize = 64;
+
+/// Pure-`std` CPU backend (see the module docs).
+pub struct NativeBackend {
+    threads: usize,
+}
+
+impl NativeBackend {
+    /// Backend with the default worker count (`ACTS_NATIVE_THREADS`,
+    /// else `available_parallelism` capped at 8).
+    pub fn new() -> NativeBackend {
+        let threads = std::env::var("ACTS_NATIVE_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+            });
+        NativeBackend { threads }
+    }
+
+    /// Backend with an explicit worker count (>= 1).
+    pub fn with_threads(threads: usize) -> NativeBackend {
+        NativeBackend { threads: threads.max(1) }
+    }
+
+    /// Worker threads used for large batches.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend::new()
+    }
+}
+
+/// Workload/deployment-premixed constants — the native form of
+/// [`PreparedData`]. Mirrors `model.py::premix`.
+struct NativePrepared {
+    /// Basis weights, `(4, D)` row-major: `basis[c * D + d]`.
+    basis: Vec<f32>,
+    /// Step-basis slopes `(D,)`.
+    step_s: Vec<f32>,
+    /// Step-basis thresholds `(D,)`.
+    step_t: Vec<f32>,
+    /// Premixed interaction matrix `(D, D)` row-major.
+    q: Vec<f32>,
+    /// RBF centers `(J, D)` row-major.
+    centers: Vec<f32>,
+    /// Per-bump squared center norms `(J,)` (hoisted out of the row loop).
+    center_norm2: Vec<f32>,
+    /// RBF inverse widths `(J,)`.
+    inv_rho2: Vec<f32>,
+    /// Premixed bump amplitudes `(J,)`.
+    amps: Vec<f32>,
+    /// Stacked cliff + gate directions `(R+G, D)` row-major.
+    dirs: Vec<f32>,
+    cliff_tau: Vec<f32>,
+    cliff_kappa: Vec<f32>,
+    /// Premixed cliff gains `(R,)` (workload + deployment terms).
+    cliff_gain: Vec<f32>,
+    gate_tau: Vec<f32>,
+    gate_kappa: Vec<f32>,
+    /// Premixed gate floors `(G,)`, each in (0, 1).
+    gate_floor: Vec<f32>,
+    /// Deployment headroom `2 * sigmoid(e . dep_w)`, in (0, 2).
+    dep: f32,
+    /// Head constants [t_scale, lat0, lat1, t_sat].
+    consts: [f32; 4],
+}
+
+impl PreparedData for NativePrepared {
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Overflow-safe softplus: `logaddexp(x, 0)`.
+#[inline]
+fn softplus(x: f32) -> f32 {
+    x.max(0.0) + (-x.abs()).exp().ln_1p()
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+impl NativePrepared {
+    /// Evaluate one padded `[f32; D_PAD]` unit row — the scalar mirror
+    /// of `kernels/ref.py::surface_core_ref` plus the model heads.
+    fn eval_row(&self, u: &[f32]) -> Perf {
+        let d = D_PAD;
+
+        // base: per-knob basis response phi(u) . w with components
+        // [u, u^2, sin(pi u), sigmoid(s (u - t))]
+        let (b_lin, rest) = self.basis.split_at(d);
+        let (b_quad, rest) = rest.split_at(d);
+        let (b_hump, b_step) = rest.split_at(d);
+        let mut base = 0.0f32;
+        for k in 0..d {
+            let x = u[k];
+            base += x * b_lin[k]
+                + x * x * b_quad[k]
+                + (std::f32::consts::PI * x).sin() * b_hump[k]
+                + sigmoid(self.step_s[k] * (x - self.step_t[k])) * b_step[k];
+        }
+
+        // inter: u q u^T, one premixed (D, D) matrix
+        let mut inter = 0.0f32;
+        for (k, row) in self.q.chunks_exact(d).enumerate() {
+            inter += u[k] * dot(row, u);
+        }
+
+        // bumps: sum_j a_j exp(-|u - c_j|^2 / rho_j^2) via the expanded
+        // square |u|^2 + |c_j|^2 - 2 u.c_j (same form as the reference)
+        let u_norm2 = dot(u, u);
+        let mut bumps = 0.0f32;
+        for (j, c) in self.centers.chunks_exact(d).enumerate() {
+            let d2 = u_norm2 + self.center_norm2[j] - 2.0 * dot(u, c);
+            bumps += self.amps[j] * (-d2 * self.inv_rho2[j]).exp();
+        }
+
+        // cliffs + gate from the stacked direction projections
+        let mut proj = [0.0f32; RG];
+        for (k, dir) in self.dirs.chunks_exact(d).enumerate() {
+            proj[k] = dot(u, dir);
+        }
+        let mut cliffs = 0.0f32;
+        for r in 0..R {
+            cliffs +=
+                self.cliff_gain[r] * sigmoid(self.cliff_kappa[r] * (proj[r] - self.cliff_tau[r]));
+        }
+        let mut gate = 1.0f32;
+        for g in 0..G {
+            let floor = self.gate_floor[g];
+            gate *= floor
+                + (1.0 - floor) * sigmoid(self.gate_kappa[g] * (proj[R + g] - self.gate_tau[g]));
+        }
+
+        let score = base + inter + bumps + cliffs;
+        let [t_scale, lat0, lat1, t_sat] = self.consts;
+        let thr = t_scale * softplus(score) * gate * self.dep;
+        let lat = lat0 + lat1 / (1.0 + thr / t_sat);
+        Perf { throughput: thr as f64, latency: lat as f64 }
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        format!("native-cpu ({} threads)", self.threads)
+    }
+
+    /// Premix the binding (`model.py::premix` in f32): fold `w` into
+    /// the basis / interaction / amplitude / cliff-gain / gate-floor
+    /// blocks and `e` into the cliff gains and the deployment scalar.
+    fn prepare(
+        &self,
+        params: &SurfaceParams,
+        w: &[f32],
+        e: &[f32],
+    ) -> Result<Box<dyn PreparedData>> {
+        debug_assert_eq!(w.len(), W_DIM);
+        debug_assert_eq!(e.len(), E_DIM);
+        let d = D_PAD;
+
+        // basis_w = tensordot(m, w): (4, D, W) . (W,) -> (4, D)
+        let mut basis = vec![0.0f32; 4 * d];
+        for (out, m_row) in basis.iter_mut().zip(params.m.chunks_exact(W_DIM)) {
+            *out = dot(m_row, w);
+        }
+
+        // q = tensordot(w, qs): (W,) . (W, D, D) -> (D, D)
+        let mut q = vec![0.0f32; d * d];
+        for (f, qs_f) in params.qs.chunks_exact(d * d).enumerate() {
+            let wf = w[f];
+            for (acc, &v) in q.iter_mut().zip(qs_f) {
+                *acc += wf * v;
+            }
+        }
+
+        // amps = amps_w @ w: (J, W) . (W,) -> (J,)
+        let amps: Vec<f32> = params.amps_w.chunks_exact(W_DIM).map(|row| dot(row, w)).collect();
+
+        // cliff_gain = cliff_gain_w @ w + cliff_gain_e @ e: (R,)
+        let cliff_gain: Vec<f32> = (0..R)
+            .map(|r| {
+                dot(&params.cliff_gain_w[r * W_DIM..(r + 1) * W_DIM], w)
+                    + dot(&params.cliff_gain_e[r * E_DIM..(r + 1) * E_DIM], e)
+            })
+            .collect();
+
+        // gate_floor = sigmoid(gate_floor_w @ w): (G,)
+        let gate_floor: Vec<f32> = params
+            .gate_floor_w
+            .chunks_exact(W_DIM)
+            .map(|row| sigmoid(dot(row, w)))
+            .collect();
+
+        let center_norm2: Vec<f32> = params.centers.chunks_exact(d).map(|c| dot(c, c)).collect();
+
+        let dep = 2.0 * sigmoid(dot(e, &params.dep_w));
+
+        Ok(Box::new(NativePrepared {
+            basis,
+            step_s: params.step_s.clone(),
+            step_t: params.step_t.clone(),
+            q,
+            centers: params.centers.clone(),
+            center_norm2,
+            inv_rho2: params.inv_rho2.clone(),
+            amps,
+            dirs: params.dirs.clone(),
+            cliff_tau: params.cliff_tau.clone(),
+            cliff_kappa: params.cliff_kappa.clone(),
+            cliff_gain,
+            gate_tau: params.gate_tau.clone(),
+            gate_kappa: params.gate_kappa.clone(),
+            gate_floor,
+            dep,
+            consts: params.consts,
+        }))
+    }
+
+    /// Evaluate every row; large batches are chunked across scoped
+    /// worker threads. One batch is one logical execute call and never
+    /// pads — the native backend has no static shapes.
+    fn execute(&self, prepared: &dyn PreparedData, rows: &[&[f32]]) -> Result<Execution> {
+        let prepared = prepared.as_any().downcast_ref::<NativePrepared>().ok_or_else(|| {
+            ActsError::InvalidArg("prepared constants do not belong to the native backend".into())
+        })?;
+        let n = rows.len();
+        let mut perfs = vec![Perf { throughput: 0.0, latency: 0.0 }; n];
+        let workers = self.threads.min(n);
+        if workers <= 1 || n < PARALLEL_THRESHOLD_ROWS {
+            for (out, row) in perfs.iter_mut().zip(rows) {
+                *out = prepared.eval_row(row);
+            }
+        } else {
+            let chunk = (n + workers - 1) / workers;
+            std::thread::scope(|s| {
+                for (row_chunk, out_chunk) in rows.chunks(chunk).zip(perfs.chunks_mut(chunk)) {
+                    s.spawn(move || {
+                        for (out, row) in out_chunk.iter_mut().zip(row_chunk) {
+                            *out = prepared.eval_row(row);
+                        }
+                    });
+                }
+            });
+        }
+        Ok(Execution { perfs, execute_calls: 1, rows_executed: n as u64 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prepared_for(
+        params: &SurfaceParams,
+        w: &[f32],
+        e: &[f32],
+    ) -> (NativeBackend, Box<dyn PreparedData>) {
+        let backend = NativeBackend::with_threads(1);
+        let prepared = backend.prepare(params, w, e).unwrap();
+        (backend, prepared)
+    }
+
+    /// The neutral surface has a closed form:
+    /// score = 0, every gate factor = 0.75, dep = 1, so
+    /// thr = softplus(0) * 0.75^4 = ln(2) * 0.31640625.
+    #[test]
+    fn neutral_surface_matches_closed_form() {
+        let params = SurfaceParams::zeros();
+        let w = [0.0f32; W_DIM];
+        let e = [0.0f32; E_DIM];
+        let (backend, prepared) = prepared_for(&params, &w, &e);
+        let row = vec![0.0f32; D_PAD];
+        let out = backend.execute(prepared.as_ref(), &[&row]).unwrap();
+        let want = std::f64::consts::LN_2 * 0.75f64.powi(4);
+        assert!(
+            (out.perfs[0].throughput - want).abs() < 1e-6 * want,
+            "thr {} vs closed form {want}",
+            out.perfs[0].throughput
+        );
+        // consts = [1, 0, 0, 1] -> lat = 0 + 0/(1+thr) = 0
+        assert_eq!(out.perfs[0].latency, 0.0);
+    }
+
+    /// A single linear basis weight under a single workload feature:
+    /// score = u_0 * m_val * w_val exactly.
+    #[test]
+    fn single_basis_term_matches_closed_form() {
+        let mut params = SurfaceParams::zeros();
+        // disable the gates (hugely positive floor logit -> floor ~= 1)
+        for g in 0..G {
+            params.gate_floor_w[g * W_DIM] = 30.0;
+        }
+        // m[c=0, d=0, f=0] = 2.0
+        params.m[0] = 2.0;
+        let mut w = [0.0f32; W_DIM];
+        w[0] = 1.5;
+        let e = [0.0f32; E_DIM];
+        let (backend, prepared) = prepared_for(&params, &w, &e);
+        let mut row = vec![0.0f32; D_PAD];
+        row[0] = 0.5;
+        let out = backend.execute(prepared.as_ref(), &[&row]).unwrap();
+        let score = 0.5f64 * 2.0 * 1.5;
+        let want = (score.exp() + 1.0).ln(); // softplus, dep = 1, gate ~= 1
+        let got = out.perfs[0].throughput;
+        assert!((got - want).abs() < 1e-4 * want, "thr {got} vs {want}");
+    }
+
+    /// Per-row results must be exactly batch-size independent — the
+    /// bitwise guarantee behind coalescing and pipelining equivalence.
+    #[test]
+    fn rows_are_batch_size_invariant_bitwise() {
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(16);
+        let (backend, prepared) = prepared_for(&params, &w, &e);
+        let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+        let all = backend.execute(prepared.as_ref(), &rows).unwrap();
+        for (i, row) in rows.iter().enumerate() {
+            let one = backend.execute(prepared.as_ref(), &[row]).unwrap();
+            assert_eq!(one.perfs[0], all.perfs[i], "row {i}");
+        }
+    }
+
+    /// Threaded execution must produce bitwise-identical results to the
+    /// single-threaded path (same per-row scalar computation).
+    #[test]
+    fn threaded_execution_is_bitwise_identical() {
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(16);
+        // a batch big enough to cross the parallel threshold
+        let mut big: Vec<Vec<f32>> = Vec::new();
+        while big.len() < 300 {
+            big.extend(configs.iter().cloned());
+        }
+        big.truncate(300);
+        let rows: Vec<&[f32]> = big.iter().map(|c| c.as_slice()).collect();
+
+        let solo = NativeBackend::with_threads(1);
+        let multi = NativeBackend::with_threads(4);
+        let p1 = solo.prepare(&params, &w, &e).unwrap();
+        let p4 = multi.prepare(&params, &w, &e).unwrap();
+        let a = solo.execute(p1.as_ref(), &rows).unwrap();
+        let b = multi.execute(p4.as_ref(), &rows).unwrap();
+        assert_eq!(a.perfs, b.perfs);
+        assert_eq!(a.execute_calls, 1);
+        assert_eq!(b.execute_calls, 1);
+        assert_eq!(b.rows_executed, 300);
+    }
+
+    #[test]
+    fn foreign_prepared_constants_are_rejected() {
+        let params = SurfaceParams::zeros();
+        let w = [0.0f32; W_DIM];
+        let e = [0.0f32; E_DIM];
+        let (backend, _) = prepared_for(&params, &w, &e);
+        struct NotNative;
+        impl PreparedData for NotNative {
+            fn as_any(&self) -> &dyn Any {
+                self
+            }
+        }
+        let row = vec![0.0f32; D_PAD];
+        let err = backend.execute(&NotNative, &[&row]).unwrap_err().to_string();
+        assert!(err.contains("native backend"), "{err}");
+    }
+
+    /// The premix mirrors model.py: a cliff with both workload and
+    /// deployment gains folds `w` and `e` terms into one gain.
+    #[test]
+    fn premix_folds_workload_and_deployment_into_cliff_gain() {
+        let mut params = SurfaceParams::zeros();
+        for g in 0..G {
+            params.gate_floor_w[g * W_DIM] = 30.0;
+        }
+        // cliff 0 along knob 0: tau=0, kappa large -> sigmoid ~= 1 for
+        // u_0 = 0.8, so score ~= gain = w-part + e-part
+        params.dirs[0] = 1.0;
+        params.cliff_tau[0] = 0.0;
+        params.cliff_kappa[0] = 80.0;
+        params.cliff_gain_w[0] = 3.0; // feature 0
+        params.cliff_gain_e[0] = 2.0; // feature 0
+        let mut w = [0.0f32; W_DIM];
+        w[0] = 1.0;
+        let mut e = [0.0f32; E_DIM];
+        e[0] = 0.5;
+        let (backend, prepared) = prepared_for(&params, &w, &e);
+        let mut row = vec![0.0f32; D_PAD];
+        row[0] = 0.8;
+        let out = backend.execute(prepared.as_ref(), &[&row]).unwrap();
+        let score = 3.0f64 * 1.0 + 2.0 * 0.5; // = 4.0
+        // dep = 2*sigmoid(0) = 1; softplus(4) ~= 4.0181
+        let want = (score.exp() + 1.0).ln();
+        let got = out.perfs[0].throughput;
+        assert!((got - want).abs() < 1e-3 * want, "thr {got} vs {want}");
+    }
+}

@@ -1,0 +1,260 @@
+//! The PJRT execution backend: compile-once, execute-many surface
+//! artifacts with static batch buckets.
+//!
+//! One [`PjrtBackend`] owns a PJRT CPU client and a compiled executable
+//! per static batch bucket (1 / 16 / 256 / 2048). An execute of `B`
+//! rows is decomposed greedily across the buckets
+//! ([`super::shapes::plan_buckets`]): exact chunks of the largest
+//! fitting bucket plus at most one padded call for the remainder, so an
+//! odd batch never executes a whole wide bucket of padding.
+//!
+//! Everything backend-independent (validation, coalescing, caching,
+//! telemetry) lives in [`super::engine::Engine`]; this module is purely
+//! the XLA-facing half behind [`super::backend::ExecBackend`].
+
+use super::backend::{ExecBackend, Execution, PreparedData};
+use super::engine::{Perf, SurfaceParams};
+use super::shapes::{self, BUCKETS, D_PAD};
+use crate::error::{ActsError, Result};
+use std::any::Any;
+use std::path::{Path, PathBuf};
+
+/// Compile-once PJRT backend (see the module docs).
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    /// (bucket, executable), ascending bucket order.
+    execs: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    artifacts_dir: PathBuf,
+}
+
+// SAFETY: two obligations are being claimed here (re-audited for the
+// multi-threaded scheduler pipeline, whose worker thread executes on
+// this backend while the scheduler thread stages and may concurrently
+// `prepare` through the same `&self`).
+// (1) PJRT side: the PJRT C API requires clients, loaded executables
+//     and buffers to be usable from any thread concurrently (the CPU
+//     client serialises internally where it must), and every method
+//     here takes `&self` with no interior mutability at all — the
+//     telemetry counters and the prepared-constant cache both live in
+//     the engine front-end, not here.
+// (2) Wrapper side: the `xla` binding must hold plain FFI handles for
+//     the client/executable/buffer/device types — no thread-unsafe
+//     shared ownership such as `Rc` refcounts cloned per call. This is
+//     the part the compiler cannot see past and it MUST be re-audited
+//     whenever the binding is vendored or upgraded:
+//     * the in-repo `vendor/xla` STUB (audited 2026-07): `PjRtClient`,
+//       `PjRtLoadedExecutable`, `PjRtBuffer` and `PjRtDevice` are
+//       uninhabited enums — no value of these types can exist, so the
+//       claim is vacuously true there (the compiler would even derive
+//       the auto traits itself); `Literal` is `Vec<f32>` + `Vec<i64>`,
+//       plainly `Send + Sync`.
+//     * a REAL binding must be checked for `Rc`/`RefCell`/thread-local
+//       state behind those four types before swapping the path entry
+//       in Cargo.toml (the rust bindings around `xla_extension` keep
+//       raw `*mut` handles — fine — but verify the exact revision).
+//     Per-call wrapper objects (literals, buffers) are created, used
+//     and dropped within a single `execute` call on one thread and
+//     never cross threads.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+/// Device-resident constant inputs (w, e, parameter blocks) for every
+/// bucket — the PJRT form of [`PreparedData`].
+pub struct PjrtPrepared {
+    /// Buffers in artifact input order minus `u`, one set per bucket.
+    per_bucket: Vec<Vec<xla::PjRtBuffer>>,
+    /// Source literals, kept alive for the async device copies.
+    _literals: Vec<xla::Literal>,
+}
+
+// SAFETY: after `PjrtBackend::prepare` returns, every buffer's H2D copy
+// has completed (it syncs before handing the value back) and the
+// buffers and literals are only ever read — PJRT buffers are usable
+// from any thread per the C API contract, and the wrapper-side
+// obligation above covers the handle types. This makes per-SUT prepared
+// constants shareable across the scheduler and its execute worker
+// thread behind `Arc`.
+unsafe impl Send for PjrtPrepared {}
+unsafe impl Sync for PjrtPrepared {}
+
+impl PreparedData for PjrtPrepared {
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+impl PjrtBackend {
+    /// Load and compile every bucket artifact from `artifacts_dir`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<PjrtBackend> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu()?;
+        let mut execs = Vec::with_capacity(BUCKETS.len());
+        for &bucket in BUCKETS.iter() {
+            let path = dir.join(shapes::artifact_name(bucket));
+            if !path.exists() {
+                return Err(ActsError::Artifact(format!(
+                    "{} missing — run `make artifacts` first",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| ActsError::Artifact("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            execs.push((bucket, exe));
+        }
+        Ok(PjrtBackend { client, execs, artifacts_dir: dir })
+    }
+
+    /// The artifacts directory this backend loaded from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Execute one planned call: `configs.len() <= bucket` rows, padded
+    /// up to `bucket` with copies of row 0 (cheap, valid data).
+    fn execute_chunk(
+        &self,
+        prepared: &PjrtPrepared,
+        configs: &[&[f32]],
+        bucket: usize,
+        device: &xla::PjRtDevice,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<Perf>> {
+        let b = configs.len();
+        debug_assert!(b >= 1 && b <= bucket);
+        let bucket_pos = BUCKETS.iter().position(|&k| k == bucket).expect("planned bucket");
+        let exe = &self.execs[bucket_pos].1;
+        let consts = &prepared.per_bucket[bucket_pos];
+
+        // u: bucket rows in the reusable scratch buffer
+        scratch.clear();
+        scratch.reserve(bucket * D_PAD);
+        for c in configs {
+            scratch.extend_from_slice(c);
+        }
+        for _ in b..bucket {
+            scratch.extend_from_slice(configs[0]);
+        }
+        // NB: go through a Literal (buffer_from_host_buffer may zero-copy
+        // and alias the host memory) and keep `u_lit` alive until the
+        // output sync — the CPU client's CopyFromLiteral reads it from a
+        // worker thread. The Literal owns its copy, so `scratch` is free
+        // for the plan's next call immediately.
+        let u_lit = xla::Literal::vec1(&scratch[..]).reshape(&[bucket as i64, D_PAD as i64])?;
+        let u_buf = self.client.buffer_from_host_literal(Some(device), &u_lit)?;
+        // await the async H2D copy (readback sync; CopyRawToHost is not
+        // implemented on this CPU client) so u_lit cannot be freed under
+        // the copy thread on any early-return path
+        let _ = u_buf.to_literal_sync()?;
+
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(consts.len() + 1);
+        inputs.push(&u_buf);
+        inputs.extend(consts.iter());
+
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // the output sync above also guarantees the input transfer is
+        // done; only now may u_lit drop
+        drop(u_lit);
+        let (thr_lit, lat_lit) = tuple.to_tuple2()?;
+        let thr = thr_lit.to_vec::<f32>()?;
+        let lat = lat_lit.to_vec::<f32>()?;
+        if thr.len() != bucket || lat.len() != bucket {
+            return Err(ActsError::Artifact(format!(
+                "artifact returned {} outputs for bucket {bucket}",
+                thr.len()
+            )));
+        }
+        Ok(thr[..b]
+            .iter()
+            .zip(&lat[..b])
+            .map(|(&t, &l)| Perf { throughput: t as f64, latency: l as f64 })
+            .collect())
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload the constant inputs (w, e, and every parameter block) to
+    /// device-resident buffers, once per bucket.
+    fn prepare(
+        &self,
+        params: &SurfaceParams,
+        w: &[f32],
+        e: &[f32],
+    ) -> Result<Box<dyn PreparedData>> {
+        let devices = self.client.devices();
+        let device = &devices[0];
+        let mut per_bucket = Vec::with_capacity(BUCKETS.len());
+        // NB: the CPU client's CopyFromLiteral is ASYNC — a worker thread
+        // reads from the Literal after buffer_from_host_literal returns,
+        // so every uploaded literal is kept alive inside PjrtPrepared.
+        let mut literals = Vec::new();
+        for &bucket in BUCKETS.iter() {
+            let mut upload = |idx: usize, data: &[f32]| -> Result<xla::PjRtBuffer> {
+                let dims: Vec<i64> =
+                    shapes::dims_for(idx, bucket).iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data).reshape(&dims)?;
+                let buf = self.client.buffer_from_host_literal(Some(device), &lit)?;
+                literals.push(lit);
+                Ok(buf)
+            };
+            let mut bufs = Vec::with_capacity(shapes::INPUT_SPEC.len() - 1);
+            bufs.push(upload(1, w)?);
+            bufs.push(upload(2, e)?);
+            for (idx, slice) in params.fields() {
+                bufs.push(upload(idx, slice)?);
+            }
+            per_bucket.push(bufs);
+        }
+        // force every async H2D copy to complete before returning: a
+        // prepared set dropped mid-transfer would free the source
+        // literals under the copy thread (observed SIGSEGV otherwise)
+        for bufs in &per_bucket {
+            for buf in bufs {
+                let _ = buf.to_literal_sync()?;
+            }
+        }
+        Ok(Box::new(PjrtPrepared { per_bucket, _literals: literals }))
+    }
+
+    /// Execute a batch: the rows are split greedily across the compiled
+    /// buckets ([`shapes::plan_buckets`]) — exact chunks of the largest
+    /// fitting bucket, with at most one padded call for the remainder —
+    /// so a B=40 request executes as 3×16 rows, not one 256-row call.
+    /// The device handle is resolved once per batch and one upload
+    /// scratch buffer is reused across the plan's calls.
+    fn execute(&self, prepared: &dyn PreparedData, rows: &[&[f32]]) -> Result<Execution> {
+        let prepared = prepared.as_any().downcast_ref::<PjrtPrepared>().ok_or_else(|| {
+            ActsError::InvalidArg("prepared constants do not belong to the pjrt backend".into())
+        })?;
+        // one devices() resolution (it allocates a Vec) per batch, not
+        // per chunk
+        let devices = self.client.devices();
+        let device = &devices[0];
+        let mut scratch: Vec<f32> = Vec::new();
+        let mut perfs = Vec::with_capacity(rows.len());
+        let mut offset = 0usize;
+        let mut calls = 0u64;
+        let mut rows_executed = 0u64;
+        for bucket in shapes::plan_buckets(rows.len()) {
+            let take = bucket.min(rows.len() - offset);
+            let chunk = &rows[offset..offset + take];
+            offset += take;
+            perfs.extend(self.execute_chunk(prepared, chunk, bucket, device, &mut scratch)?);
+            calls += 1;
+            rows_executed += bucket as u64;
+        }
+        debug_assert_eq!(offset, rows.len(), "plan must consume every row");
+        Ok(Execution { perfs, execute_calls: calls, rows_executed })
+    }
+}

@@ -58,12 +58,13 @@
 pub mod scheduler;
 pub mod session;
 
-pub use scheduler::Scheduler;
+pub use scheduler::{Scheduler, SchedulerMode};
 pub use session::{ProposedTest, Round, TuningSession};
 
 use crate::error::Result;
 use crate::manipulator::{Measurement, SystemManipulator};
 use crate::optimizer::{self, Optimizer};
+use crate::runtime::BackendKind;
 
 /// Session parameters (the ACTS problem instance).
 #[derive(Clone, Debug)]
@@ -80,6 +81,12 @@ pub struct TuningConfig {
     /// (the last round shrinks to the remaining budget). 1 replays the
     /// sequential protocol exactly; [`tune`] ignores this knob.
     pub round_size: usize,
+    /// Which execution backend the session's staging environment should
+    /// evaluate on (consumed at engine construction —
+    /// `experiment::Lab::for_config` — not by the session itself, which
+    /// never touches an engine). `Auto` means PJRT when the artifacts
+    /// load, the native CPU backend otherwise.
+    pub backend: BackendKind,
 }
 
 impl Default for TuningConfig {
@@ -90,6 +97,7 @@ impl Default for TuningConfig {
             seed: 0xAC75,
             max_consecutive_failures: 10,
             round_size: 16,
+            backend: BackendKind::Auto,
         }
     }
 }
@@ -841,6 +849,94 @@ mod tests {
         let ok = outcomes[1].as_ref().unwrap();
         assert_eq!(ok.tests_used, 20);
         assert!(ok.improvement >= 0.0);
+    }
+
+    /// Eight heterogeneous sessions (mixed dims, optimizers, seeds,
+    /// round sizes and failure patterns) through the double-buffered
+    /// pipeline: every session's outcome must be bit-identical to the
+    /// sequential scheduler's AND to running that session alone —
+    /// pipelining changes where rounds execute, never what they
+    /// compute.
+    #[test]
+    fn pipelined_scheduler_matches_sequential_and_solo_bit_for_bit() {
+        struct Case {
+            cfg: TuningConfig,
+            dim: usize,
+            fail_every: Option<u64>,
+        }
+        let optimizers = ["rrs", "random", "lhs-screen", "gp"];
+        let cases: Vec<Case> = (0..8u64)
+            .map(|i| Case {
+                cfg: TuningConfig {
+                    budget_tests: 12 + 7 * i,
+                    optimizer: optimizers[i as usize % optimizers.len()].into(),
+                    seed: 1000 + i,
+                    round_size: [1usize, 4, 8, 16][i as usize % 4],
+                    ..Default::default()
+                },
+                dim: 3 + (i as usize % 4),
+                fail_every: if i % 3 == 0 { Some(4) } else { None },
+            })
+            .collect();
+
+        let build = |mode: SchedulerMode| {
+            let mut scheduler = Scheduler::with_mode(mode);
+            for c in &cases {
+                let mut sut = FakeSut::new(c.dim);
+                sut.fail_every = c.fail_every;
+                let session = TuningSession::from_registry(sut.space().clone(), &c.cfg).unwrap();
+                scheduler.add(session, sut);
+            }
+            scheduler.run()
+        };
+        let sequential = build(SchedulerMode::Sequential);
+        let pipelined = build(SchedulerMode::Pipelined);
+
+        let solo: Vec<TuningOutcome> = cases
+            .iter()
+            .map(|c| {
+                let mut sut = FakeSut::new(c.dim);
+                sut.fail_every = c.fail_every;
+                tune_batched(&mut sut, &c.cfg).unwrap()
+            })
+            .collect();
+
+        for (i, ((seq, pip), solo_out)) in
+            sequential.iter().zip(&pipelined).zip(&solo).enumerate()
+        {
+            let seq = seq.as_ref().unwrap();
+            let pip = pip.as_ref().unwrap();
+            assert_outcomes_identical(seq, pip, &format!("session {i}: pipelined vs sequential"));
+            assert_outcomes_identical(solo_out, pip, &format!("session {i}: pipelined vs solo"));
+        }
+    }
+
+    /// The pipeline isolates per-session faults exactly like the
+    /// sequential scheduler: a dead buffer neighbour cannot disturb the
+    /// healthy sessions in either buffer.
+    #[test]
+    fn pipelined_scheduler_isolates_per_session_failures() {
+        let mut scheduler = Scheduler::with_mode(SchedulerMode::Pipelined);
+        for i in 0..4u64 {
+            let mut sut = FakeSut::new(3);
+            if i == 1 {
+                // slot 1 (odd buffer): the baseline never completes
+                sut.fail_every = Some(1);
+            }
+            let cfg =
+                TuningConfig { budget_tests: 20, seed: i, round_size: 8, ..Default::default() };
+            let session = TuningSession::from_registry(sut.space().clone(), &cfg).unwrap();
+            scheduler.add(session, sut);
+        }
+        let outcomes = scheduler.run();
+        assert!(outcomes[1].is_err(), "dead environment must fail its session");
+        for (i, out) in outcomes.iter().enumerate() {
+            if i != 1 {
+                let out = out.as_ref().unwrap();
+                assert_eq!(out.tests_used, 20, "session {i}");
+                assert!(out.improvement >= 0.0, "session {i}");
+            }
+        }
     }
 
     /// The poll protocol itself: baseline first (retried on failure),

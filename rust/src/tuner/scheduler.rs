@@ -3,17 +3,41 @@
 //!
 //! A [`Scheduler`] drives N heterogeneous [`TuningSession`]s (different
 //! SUTs, workloads, optimizers, seeds — each with its own manipulator)
-//! concurrently, in ticks. Each tick it polls every live session for
-//! its next round, runs the staging half of every round
+//! concurrently. Per round it runs the staging half of every session
 //! ([`SystemManipulator::stage_tests`] — per-manipulator rng order is
-//! untouched), then **coalesces** the pending rows of all sessions into
-//! shared bucket executes
+//! untouched), **coalesces** the pending rows of the staged sessions
+//! into shared executes
 //! ([`crate::runtime::engine::Engine::evaluate_coalesced`]) and
 //! demultiplexes the results back to their owning sessions. Eight
 //! sessions staging 32 rows each against one shared binding execute as
-//! a single 256-bucket call instead of eight partial-width calls; the
-//! per-row results are identical either way, so every session's records
-//! match a solo run of that session (order independence — tested).
+//! one 256-row call instead of eight partial-width calls; the per-row
+//! results are identical either way, so every session's records match a
+//! solo run of that session (order independence — tested).
+//!
+//! # The double-buffered tick pipeline
+//!
+//! [`Scheduler::run`] (the production path, [`Scheduler::run_pipelined`])
+//! overlaps staging with execution: the sessions are split into two
+//! buffers (even/odd slots) that tick out of phase. While buffer A's
+//! coalesced execute runs on a dedicated worker thread, buffer B's
+//! `ask_batch` + `stage_tests` staging — and the demuxed absorb of the
+//! round that just finished — proceed on the scheduler thread; the two
+//! meet at the demux barrier and swap roles:
+//!
+//! ```text
+//! scheduler thread: stage A0 │ stage B0 · absorb A0 │ stage A1 · absorb B0 │ …
+//! worker thread:             │ execute A0           │ execute B0           │ …
+//! ```
+//!
+//! Every session still runs its own strict stage → execute → absorb →
+//! stage cycle (a session is only ever polled with no round in flight),
+//! and per-row results are independent of what shares an execute, so a
+//! pipelined run produces per-session records **bit-identical** to the
+//! sequential scheduler and to solo runs (tested). Only the engine's
+//! physical call pattern differs: rounds coalesce within a buffer
+//! rather than across all sessions. [`Scheduler::run_sequential`] keeps
+//! the single-threaded stage-all/execute-once/absorb-all tick for
+//! reference, equivalence tests and benchmarking.
 //!
 //! Sessions advance independently: a session whose budget or failure
 //! cap ends it simply stops being polled while the others keep going,
@@ -31,6 +55,7 @@ use crate::error::ActsError;
 use crate::manipulator::{EngineRequest, StagedRound, SystemManipulator};
 use crate::runtime::engine::{group_by_key, EvalRequest, Perf};
 use crate::runtime::shapes::D_PAD;
+use std::sync::mpsc;
 use std::sync::Arc;
 
 struct Slot<'a, M: SystemManipulator> {
@@ -39,24 +64,57 @@ struct Slot<'a, M: SystemManipulator> {
     live: bool,
 }
 
+/// One staged round awaiting a (possibly shared) engine execute:
+/// (slot index, staged rows, engine requests). Owns no borrows, so a
+/// pool crosses into the pipelined execute worker thread and back.
+struct PooledRound {
+    slot: usize,
+    staged: StagedRound,
+    requests: Vec<EngineRequest>,
+}
+
+type Pool = Vec<PooledRound>;
+
+/// Per-pool execute results: one `Vec<Perf>` per request per pooled
+/// round, plus the per-round engine failure (if its group died).
+type PoolResults = (Vec<Vec<Vec<Perf>>>, Vec<Option<String>>);
+
+/// How [`Scheduler::run`] drives its sessions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Double-buffered tick pipeline: staging overlaps execution on a
+    /// worker thread (the production default; see the module docs).
+    #[default]
+    Pipelined,
+    /// Single-threaded reference: stage every session, execute one
+    /// coalesced pass, absorb, repeat.
+    Sequential,
+}
+
 /// Runs many tuning sessions concurrently against shared engines (see
 /// the module docs). Sessions are added with [`Scheduler::add`] and
 /// driven to completion by [`Scheduler::run`], which returns one
 /// outcome per session in insertion order.
 pub struct Scheduler<'a, M: SystemManipulator> {
     slots: Vec<Slot<'a, M>>,
+    mode: SchedulerMode,
 }
 
 impl<'a, M: SystemManipulator> Default for Scheduler<'a, M> {
     fn default() -> Self {
-        Scheduler { slots: Vec::new() }
+        Scheduler { slots: Vec::new(), mode: SchedulerMode::default() }
     }
 }
 
 impl<'a, M: SystemManipulator> Scheduler<'a, M> {
-    /// Empty scheduler.
+    /// Empty scheduler in the default (pipelined) mode.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Empty scheduler with an explicit [`SchedulerMode`].
+    pub fn with_mode(mode: SchedulerMode) -> Self {
+        Scheduler { slots: Vec::new(), mode }
     }
 
     /// Add a session and the manipulator it tunes. Returns the slot
@@ -75,25 +133,110 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
     /// insertion order. Per-session fatal errors (failed baselines,
     /// engine faults) land in that session's slot; they do not abort
     /// the other sessions.
-    pub fn run(mut self) -> Vec<crate::Result<TuningOutcome>> {
-        while self.tick() {}
-        self.slots
-            .into_iter()
-            .map(|slot| {
-                let sim_seconds = slot.sut.sim_seconds();
-                slot.session.into_outcome(sim_seconds)
-            })
-            .collect()
+    pub fn run(self) -> Vec<crate::Result<TuningOutcome>> {
+        match self.mode {
+            SchedulerMode::Pipelined => self.run_pipelined(),
+            SchedulerMode::Sequential => self.run_sequential(),
+        }
     }
 
-    /// One scheduling tick: poll, stage, coalesce, execute, demux,
-    /// absorb. Returns false once no session has work left.
-    fn tick(&mut self) -> bool {
+    /// The single-threaded reference driver: one tick stages every live
+    /// session, executes one coalesced pass, absorbs, repeats. This is
+    /// PR 2's scheduler, kept as the semantics the pipeline must replay
+    /// bit-for-bit (and as the baseline the hot-path bench gates the
+    /// pipeline against).
+    pub fn run_sequential(mut self) -> Vec<crate::Result<TuningOutcome>> {
+        loop {
+            let all: Vec<usize> = (0..self.slots.len()).collect();
+            let (pool, did_work) = self.stage_group(&all);
+            if pool.is_empty() {
+                if !did_work {
+                    break;
+                }
+                continue;
+            }
+            let results = execute_pool(&pool);
+            self.absorb_pool(pool, results);
+        }
+        self.into_outcomes()
+    }
+
+    /// The double-buffered pipeline driver (see the module docs): two
+    /// session buffers tick out of phase, staging and absorbing on this
+    /// thread while the other buffer's coalesced execute runs on a
+    /// worker thread. Degenerates to [`Scheduler::run_sequential`]
+    /// below two sessions (one buffer has nothing to overlap with).
+    pub fn run_pipelined(mut self) -> Vec<crate::Result<TuningOutcome>> {
+        if self.slots.len() < 2 {
+            return self.run_sequential();
+        }
+        let groups: [Vec<usize>; 2] = {
+            let (even, odd) = (0..self.slots.len()).partition(|i| i % 2 == 0);
+            [even, odd]
+        };
+
+        let (job_tx, job_rx) = mpsc::channel::<Pool>();
+        let (res_tx, res_rx) = mpsc::channel::<(Pool, PoolResults)>();
+        let worker = std::thread::Builder::new()
+            .name("acts-exec".into())
+            .spawn(move || {
+                while let Ok(pool) = job_rx.recv() {
+                    let results = execute_pool(&pool);
+                    if res_tx.send((pool, results)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn the execute worker");
+
+        let mut inflight = false; // the *other* buffer's pool is executing
+        let mut idle = 0usize; // consecutive buffers with nothing to do
+        let mut g = 0usize;
+        loop {
+            // Stage this buffer's rounds — concurrently with the other
+            // buffer's execute (if one is in flight).
+            let (pool, did_work) = self.stage_group(&groups[g]);
+            if did_work || !pool.is_empty() {
+                idle = 0;
+            } else {
+                idle += 1;
+            }
+
+            if inflight {
+                // The demux barrier: wait for the other buffer's
+                // results, hand the worker this buffer's pool before
+                // absorbing so it never idles through the absorb.
+                let (done, results) = res_rx.recv().expect("execute worker died");
+                if pool.is_empty() {
+                    inflight = false;
+                } else {
+                    job_tx.send(pool).expect("execute worker died");
+                }
+                self.absorb_pool(done, results);
+            } else if !pool.is_empty() {
+                job_tx.send(pool).expect("execute worker died");
+                inflight = true;
+            }
+
+            g = 1 - g;
+            if !inflight && idle >= 2 {
+                break;
+            }
+        }
+        drop(job_tx);
+        worker.join().expect("execute worker panicked");
+        self.into_outcomes()
+    }
+
+    /// Poll and stage every listed slot: baselines run inline, staged
+    /// rounds that fully resolve during staging absorb immediately, and
+    /// rounds with pending rows are validated and pooled for a (shared)
+    /// engine execute. Returns the pool and whether any session did
+    /// work this pass.
+    fn stage_group(&mut self, indices: &[usize]) -> (Pool, bool) {
         let mut did_work = false;
-        // rounds staged this tick and awaiting a (possibly shared)
-        // engine execute: (slot index, staged rows, engine requests)
-        let mut pool: Vec<(usize, StagedRound, Vec<EngineRequest>)> = Vec::new();
-        for i in 0..self.slots.len() {
+        let mut pool: Pool = Vec::new();
+        for &i in indices {
             let slot = &mut self.slots[i];
             if !slot.live {
                 continue;
@@ -135,11 +278,13 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                                 });
                                 slot.session.absorb(results);
                             }
-                            Some(Ok(requests)) => pool.push((i, staged, requests)),
+                            Some(Ok(requests)) => {
+                                pool.push(PooledRound { slot: i, staged, requests })
+                            }
                             Some(Err(e)) => {
                                 let msg = format!("batched evaluation failed: {e}");
-                                let results = staged
-                                    .resolve_pending_with(|| ActsError::Xla(msg.clone()));
+                                let results =
+                                    staged.resolve_pending_with(|| ActsError::Xla(msg.clone()));
                                 slot.session.absorb(results);
                             }
                             None => {
@@ -158,65 +303,85 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                 }
             }
         }
-        if pool.is_empty() {
-            return did_work;
-        }
+        (pool, did_work)
+    }
 
-        // Coalesced execute: flatten every staged round's requests,
-        // group them by engine instance, and let each engine merge
-        // same-binding requests into shared bucket plans. Results come
-        // back per request; failures are per engine group.
-        let mut member_perfs: Vec<Vec<Vec<Perf>>> =
-            pool.iter().map(|(_, _, reqs)| vec![Vec::new(); reqs.len()]).collect();
-        let mut failed: Vec<Option<String>> = vec![None; pool.len()];
-        let flat: Vec<(usize, usize)> = pool
-            .iter()
-            .enumerate()
-            .flat_map(|(pi, (_, _, reqs))| (0..reqs.len()).map(move |ri| (pi, ri)))
-            .collect();
-        let engine_keys: Vec<usize> =
-            flat.iter().map(|&(pi, ri)| Arc::as_ptr(&pool[pi].2[ri].engine) as usize).collect();
-        for group in group_by_key(&engine_keys) {
-            let items: Vec<(usize, usize)> = group.into_iter().map(|g| flat[g]).collect();
-            let engine = &pool[items[0].0].2[items[0].1].engine;
-            let evals: Vec<EvalRequest> = items
-                .iter()
-                .map(|&(pi, ri)| {
-                    let r = &pool[pi].2[ri];
-                    EvalRequest { prepared: &r.prepared, configs: &r.configs }
-                })
-                .collect();
-            match engine.evaluate_coalesced(&evals) {
-                Ok(outs) => {
-                    for (&(pi, ri), out) in items.iter().zip(outs) {
-                        member_perfs[pi][ri] = out;
-                    }
-                }
-                Err(e) => {
-                    // the engine died under this group: every session
-                    // that contributed a request aborts its round, the
-                    // other groups are unaffected
-                    let msg = format!("batched evaluation failed: {e}");
-                    for &(pi, _) in &items {
-                        failed[pi] = Some(msg.clone());
-                    }
-                }
-            }
-        }
-
-        // Demultiplex and absorb, in slot order.
-        for (pi, (slot_idx, staged, _)) in pool.into_iter().enumerate() {
-            let slot = &mut self.slots[slot_idx];
+    /// Demultiplex executed results and absorb them, in pool (= slot)
+    /// order.
+    fn absorb_pool(&mut self, pool: Pool, results: PoolResults) {
+        let (mut member_perfs, failed) = results;
+        for (pi, round) in pool.into_iter().enumerate() {
+            let slot = &mut self.slots[round.slot];
             let results = match &failed[pi] {
-                Some(msg) => staged.resolve_pending_with(|| ActsError::Xla(msg.clone())),
+                Some(msg) => round.staged.resolve_pending_with(|| ActsError::Xla(msg.clone())),
                 None => {
                     let perfs =
                         slot.sut.combine_member_perfs(std::mem::take(&mut member_perfs[pi]));
-                    slot.sut.collect_results(staged, perfs)
+                    slot.sut.collect_results(round.staged, perfs)
                 }
             };
             slot.session.absorb(results);
         }
-        true
     }
+
+    /// Consume the scheduler into per-session outcomes, in insertion
+    /// order.
+    fn into_outcomes(self) -> Vec<crate::Result<TuningOutcome>> {
+        self.slots
+            .into_iter()
+            .map(|slot| {
+                let sim_seconds = slot.sut.sim_seconds();
+                slot.session.into_outcome(sim_seconds)
+            })
+            .collect()
+    }
+}
+
+/// Coalesced execute of one pool: flatten every staged round's
+/// requests, group them by engine instance, and let each engine merge
+/// same-binding requests into shared plans. Results come back per
+/// request; failures are per engine group. A pure function of the pool
+/// (no scheduler state), so the pipelined driver runs it on its worker
+/// thread while staging continues.
+fn execute_pool(pool: &Pool) -> PoolResults {
+    let mut member_perfs: Vec<Vec<Vec<Perf>>> =
+        pool.iter().map(|round| vec![Vec::new(); round.requests.len()]).collect();
+    let mut failed: Vec<Option<String>> = vec![None; pool.len()];
+    let flat: Vec<(usize, usize)> = pool
+        .iter()
+        .enumerate()
+        .flat_map(|(pi, round)| (0..round.requests.len()).map(move |ri| (pi, ri)))
+        .collect();
+    let engine_keys: Vec<usize> = flat
+        .iter()
+        .map(|&(pi, ri)| Arc::as_ptr(&pool[pi].requests[ri].engine) as usize)
+        .collect();
+    for group in group_by_key(&engine_keys) {
+        let items: Vec<(usize, usize)> = group.into_iter().map(|g| flat[g]).collect();
+        let engine = &pool[items[0].0].requests[items[0].1].engine;
+        let evals: Vec<EvalRequest> = items
+            .iter()
+            .map(|&(pi, ri)| {
+                let r = &pool[pi].requests[ri];
+                EvalRequest { prepared: &r.prepared, configs: &r.configs }
+            })
+            .collect();
+        match engine.evaluate_coalesced(&evals) {
+            Ok(outs) => {
+                for (&(pi, ri), out) in items.iter().zip(outs) {
+                    member_perfs[pi][ri] = out;
+                }
+            }
+            Err(e) => {
+                // the engine died under this group: every session
+                // that contributed a request aborts its round, the
+                // other groups are unaffected
+                let msg = format!("batched evaluation failed: {e}");
+                for &(pi, _) in &items {
+                    failed[pi] = Some(msg.clone());
+                }
+            }
+        }
+    }
+    (member_perfs, failed)
 }

@@ -1,18 +1,25 @@
 //! Integration: full tuning sessions over the real runtime + simulated
 //! staging environment — budget accounting, determinism, failure
 //! injection, co-deployed stacks, and the paper's headline gains.
+//!
+//! `Lab::new` resolves an execution backend everywhere (PJRT with
+//! artifacts, the native CPU backend otherwise), so this suite executes
+//! — it does not skip — on machines without the XLA toolchain.
 
 use acts::experiment::{mysql_gain, Lab};
 use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
 use acts::sut::{self, Composed};
-use acts::tuner::{self, TuningConfig};
+use acts::tuner::{self, SchedulerMode, TuningConfig};
 use acts::workload::{DeploymentEnv, WorkloadSpec};
 
 fn lab_or_skip() -> Option<Lab> {
+    // kept for symmetry with historical skip-based suites: with the
+    // backend-abstracted runtime Lab::new always resolves (native
+    // fallback), so these tests now run everywhere
     match Lab::new() {
         Ok(l) => Some(l),
         Err(e) => {
-            eprintln!("SKIP tuner_e2e: {e} (run `make artifacts`)");
+            eprintln!("SKIP tuner_e2e: {e}");
             None
         }
     }
@@ -236,13 +243,14 @@ fn batched_session_issues_far_fewer_engine_calls() {
 
 #[test]
 fn scheduler_coalesces_eight_sessions_into_shared_executes() {
-    // the ISSUE acceptance shape: 8 concurrent round-size-32 sessions of
-    // the same binding must land each tick's 8×32 = 256 rows as ONE
-    // 256-bucket execute, not eight partial-width calls
+    // the coalescing mechanism (pinned on the sequential scheduler so
+    // the physical call pattern is exact): 8 concurrent round-size-32
+    // sessions of the same binding must land each tick's 8×32 = 256
+    // rows as ONE 256-row execute, not eight partial-width calls
     let Some(lab) = lab_or_skip() else { return };
     let n_sessions = 8u64;
     let budget = 33; // baseline + one full round of 32
-    let mut scheduler = tuner::Scheduler::new();
+    let mut scheduler = tuner::Scheduler::with_mode(SchedulerMode::Sequential);
     for s in 0..n_sessions {
         let sut = lab.deploy(
             Target::Single(sut::mysql()),
@@ -279,6 +287,105 @@ fn scheduler_coalesces_eight_sessions_into_shared_executes() {
     // per-request accounting: 8 baseline requests + 8 coalesced round
     // requests served by that single execute
     assert_eq!(requests, 2 * n_sessions);
+    assert_eq!(after.rows_requested - before.rows_requested, n_sessions + n_sessions * 32);
+}
+
+#[test]
+fn pipelined_scheduler_matches_sequential_on_the_real_surface() {
+    // the double-buffered pipeline's equivalence guarantee on the real
+    // engine: 8 heterogeneous sessions (mixed optimizers, seeds, round
+    // sizes, with failure injection) produce per-session records
+    // BIT-identical to the sequential scheduler across multiple rounds.
+    // Pinned to the native backend, whose per-row results are bitwise
+    // batch-size invariant: PJRT executes the two modes in different
+    // bucket shapes, so its per-row f32 drift would feed the optimizers
+    // and legitimately diverge later rounds' proposals (single-round
+    // PJRT equivalence is covered by
+    // `scheduled_sessions_match_solo_runs_on_the_real_surface`).
+    let lab = Lab::with_backend(acts::runtime::BackendKind::Native).expect("native backend");
+    let optimizers = ["rrs", "random", "lhs-screen", "gp"];
+    let opts = SimulationOpts {
+        restart_failure_p: 0.05,
+        test_failure_p: 0.05,
+        ..SimulationOpts::default()
+    };
+    let run = |mode: SchedulerMode| {
+        let mut scheduler = tuner::Scheduler::with_mode(mode);
+        for s in 0..8u64 {
+            let sut = lab.deploy(
+                Target::Single(sut::mysql()),
+                WorkloadSpec::zipfian_read_write(),
+                DeploymentEnv::standalone(),
+                opts.clone(),
+                300 + s,
+            );
+            let cfg = TuningConfig {
+                budget_tests: 20 + 5 * s,
+                optimizer: optimizers[s as usize % optimizers.len()].into(),
+                seed: 300 + s,
+                round_size: [1usize, 4, 8, 16][s as usize % 4],
+                ..Default::default()
+            };
+            let session = tuner::TuningSession::from_registry(sut.space().clone(), &cfg).unwrap();
+            scheduler.add(session, sut);
+        }
+        scheduler.run()
+    };
+    let sequential = run(SchedulerMode::Sequential);
+    let pipelined = run(SchedulerMode::Pipelined);
+    for (i, (seq, pip)) in sequential.iter().zip(&pipelined).enumerate() {
+        let seq = seq.as_ref().unwrap();
+        let pip = pip.as_ref().unwrap();
+        assert_eq!(seq.tests_used, pip.tests_used, "session {i}");
+        assert_eq!(seq.failures, pip.failures, "session {i}");
+        assert_eq!(seq.sim_seconds, pip.sim_seconds, "session {i}");
+        assert_eq!(seq.records, pip.records, "session {i}: records must be bit-identical");
+        assert_eq!(seq.best_unit, pip.best_unit, "session {i}");
+    }
+}
+
+#[test]
+fn pipelined_scheduler_coalesces_within_buffers() {
+    // the pipeline's physical call pattern: 8 one-round sessions split
+    // into two out-of-phase buffers of 4, so the round executes as TWO
+    // coalesced 128-row calls (one per buffer) instead of one 256-row
+    // call — the price of overlapping staging with execution — while
+    // the logical request accounting stays identical
+    let Some(lab) = lab_or_skip() else { return };
+    let n_sessions = 8u64;
+    let budget = 33; // baseline + one full round of 32
+    let mut scheduler = tuner::Scheduler::with_mode(SchedulerMode::Pipelined);
+    for s in 0..n_sessions {
+        let sut = lab.deploy(
+            Target::Single(sut::mysql()),
+            WorkloadSpec::zipfian_read_write(),
+            DeploymentEnv::standalone(),
+            SimulationOpts::ideal(),
+            200 + s,
+        );
+        let cfg = TuningConfig {
+            budget_tests: budget,
+            seed: 200 + s,
+            round_size: 32,
+            ..Default::default()
+        };
+        let session = tuner::TuningSession::from_registry(sut.space().clone(), &cfg).unwrap();
+        scheduler.add(session, sut);
+    }
+    let before = lab.engine.stats();
+    let outcomes = scheduler.run();
+    let after = lab.engine.stats();
+
+    for out in &outcomes {
+        let out = out.as_ref().unwrap();
+        assert_eq!(out.tests_used, budget);
+        assert!(out.best.throughput >= out.baseline.throughput);
+    }
+    // 8 baselines (one call each) + one coalesced execute per buffer
+    let calls = after.execute_calls - before.execute_calls;
+    assert_eq!(calls, n_sessions + 2, "two buffers -> two coalesced round executes");
+    // logical accounting is mode-independent
+    assert_eq!(after.requests - before.requests, 2 * n_sessions);
     assert_eq!(after.rows_requested - before.rows_requested, n_sessions + n_sessions * 32);
 }
 

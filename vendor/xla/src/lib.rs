@@ -15,9 +15,11 @@
 //! verifies for us (`match *self {}`).
 //!
 //! When vendoring the real binding, re-audit the thread-safety
-//! obligations documented at the `unsafe impl Send/Sync for Engine`
-//! site in `acts::runtime::engine` (no `Rc` refcounts behind the
-//! client/executable handles).
+//! obligations documented at the `unsafe impl Send/Sync for
+//! PjrtBackend / PjrtPrepared` sites in `acts::runtime::pjrt` (no `Rc`
+//! refcounts behind the client/executable/buffer/device handles). In
+//! THIS stub those four types are uninhabited enums, so the obligation
+//! is vacuously met; a real binding must be checked by hand.
 
 use std::fmt;
 
