@@ -1,7 +1,9 @@
 //! §5.5 reproduction bench: bottleneck identification via tuning —
 //! the backend improves a lot alone, the composed stack stays pinned.
 
+use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::{bottleneck, Lab};
+use acts::report::Json;
 
 fn main() {
     let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
@@ -34,4 +36,23 @@ fn main() {
             b.frontend_is_bottleneck()
         );
     }
+
+    // timing: the two-cell fleet driver at a small budget
+    let mut bench = Bench::with_config("bottleneck experiment driver", BenchConfig::quick());
+    bench.bench("bottleneck run (2-cell fleet, budget 24)", || {
+        black_box(bottleneck::run(&lab, 24, 9).unwrap());
+    });
+    bench.report();
+
+    // machine-readable dump for cross-PR tracking
+    let json = bench.json(vec![
+        ("backend_gain", Json::Num(b.backend_alone.improvement)),
+        ("composed_gain", Json::Num(b.composed.improvement)),
+        ("backend_untuned_ops", Json::Num(b.backend_untuned)),
+        ("composed_best_ops", Json::Num(b.composed.best.throughput)),
+        ("frontend_is_bottleneck", Json::Bool(b.frontend_is_bottleneck())),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_bottleneck.json");
+    std::fs::write(&out_path, &json).expect("write BENCH_bottleneck.json");
+    println!("wrote {}", out_path.display());
 }

@@ -4,6 +4,7 @@
 
 use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::{fig1, Lab};
+use acts::report::Json;
 
 fn main() {
     let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
@@ -53,4 +54,20 @@ fn main() {
         black_box(fig1::run(&lab, 12).unwrap());
     });
     b.report();
+
+    // machine-readable dump for cross-PR tracking
+    let json = b.json(vec![
+        ("a_dominance", Json::Num(s.a_dominance)),
+        ("d_dominance", Json::Num(s.d_dominance)),
+        ("b_extrema", Json::Num(s.b_extrema as f64)),
+        ("b_vs_c_roughness", Json::Num(s.b_vs_c_roughness)),
+        ("c_roughness", Json::Num(s.c_roughness)),
+        ("e_optimum_shift_cells", Json::Num(s.e_optimum_shift as f64)),
+        ("f_jump", Json::Num(s.f_jump.1)),
+        ("f_vs_c_roughness", Json::Num(s.f_vs_c_roughness)),
+    ]);
+    let out_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fig1_surfaces.json");
+    std::fs::write(&out_path, &json).expect("write BENCH_fig1_surfaces.json");
+    println!("wrote {}", out_path.display());
 }

@@ -2,8 +2,9 @@
 //! policies (with human-in-the-loop overhead and office hours) against
 //! the automated ACTS pipeline on the same SUT/workload/budget.
 
+use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::{labor, Lab};
-use acts::report::fmt_duration;
+use acts::report::{fmt_duration, Json};
 
 fn main() {
     let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
@@ -38,4 +39,40 @@ fn main() {
         manual[0].time_to_threshold_s.map(fmt_duration).unwrap_or_else(|| "never".into()),
         manual[1].time_to_threshold_s.map(fmt_duration).unwrap_or_else(|| "never".into()),
     );
+
+    // timing: the three-policy fleet driver at a small budget
+    let mut b = Bench::with_config("labor experiment driver", BenchConfig::quick());
+    b.bench("labor run (3-policy fleet, budget 40)", || {
+        black_box(labor::run(&lab, 40, 5).unwrap());
+    });
+    b.report();
+
+    // machine-readable dump for cross-PR tracking
+    let policy_rows: Vec<Json> = l
+        .outcomes
+        .iter()
+        .map(|o| {
+            Json::obj(vec![
+                ("policy", Json::Str(o.policy.clone())),
+                ("best_ops", Json::Num(o.best)),
+                ("calendar_s", Json::Num(o.calendar_s)),
+                (
+                    "time_to_threshold_s",
+                    o.time_to_threshold_s.map(Json::Num).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    let json = b.json(vec![
+        ("threshold_ops", Json::Num(l.threshold)),
+        ("policies", Json::Arr(policy_rows)),
+        (
+            "manual_over_acts_calendar",
+            Json::Num(manual[0].calendar_s / acts.calendar_s.max(1e-9)),
+        ),
+    ]);
+    let out_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_labor_costs.json");
+    std::fs::write(&out_path, &json).expect("write BENCH_labor_costs.json");
+    println!("wrote {}", out_path.display());
 }

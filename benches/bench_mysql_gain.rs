@@ -5,6 +5,7 @@
 use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::{mysql_gain, Lab};
 use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
+use acts::report::Json;
 use acts::sut;
 use acts::workload::{DeploymentEnv, WorkloadSpec};
 
@@ -40,4 +41,16 @@ fn main() {
         black_box(sut.run_test().unwrap());
     });
     b.report();
+
+    // machine-readable dump for cross-PR tracking
+    let json = b.json(vec![
+        ("baseline_ops", Json::Num(out.baseline.throughput)),
+        ("best_ops", Json::Num(out.best.throughput)),
+        ("speedup", Json::Num(out.speedup())),
+        ("tests_used", Json::Num(out.tests_used as f64)),
+        ("paper_speedup", Json::Num(mysql_gain::PAPER_BEST_OPS / mysql_gain::PAPER_DEFAULT_OPS)),
+    ]);
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_mysql_gain.json");
+    std::fs::write(&out_path, &json).expect("write BENCH_mysql_gain.json");
+    println!("wrote {}", out_path.display());
 }

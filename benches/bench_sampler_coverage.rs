@@ -4,6 +4,7 @@
 
 use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::coverage;
+use acts::report::Json;
 use acts::sampling::{self, Sampler};
 use acts::util::rng::Rng64;
 
@@ -35,4 +36,24 @@ fn main() {
         });
     }
     b.report();
+
+    // machine-readable dump for cross-PR tracking: the coverage sweep
+    // next to the wall-clock rows
+    let coverage_rows: Vec<Json> = pts
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("sampler", Json::Str(p.sampler.clone())),
+                ("m", Json::Num(p.m as f64)),
+                ("min_dist", Json::Num(p.min_dist)),
+                ("occupancy", Json::Num(p.occupancy)),
+                ("dispersion", Json::Num(p.dispersion)),
+            ])
+        })
+        .collect();
+    let json = b.json(vec![("coverage", Json::Arr(coverage_rows))]);
+    let out_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sampler_coverage.json");
+    std::fs::write(&out_path, &json).expect("write BENCH_sampler_coverage.json");
+    println!("wrote {}", out_path.display());
 }

@@ -2,7 +2,9 @@
 //! VM. Prints the paper's table with measured columns and the VM-
 //! elimination arithmetic.
 
+use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::{table1, Lab};
+use acts::report::Json;
 
 fn main() {
     let lab = Lab::new().expect("artifacts missing — run `make artifacts`");
@@ -34,4 +36,24 @@ fn main() {
             t.tuned.failed_txns
         );
     }
+
+    // timing: the experiment driver itself (small budget — the shape
+    // is tune + two long confirmation runs through the fleet path)
+    let mut b = Bench::with_config("table1 experiment driver", BenchConfig::quick());
+    b.bench("table1 run (budget 12)", || {
+        black_box(table1::run(&lab, 12, 9).unwrap());
+    });
+    b.report();
+
+    // machine-readable dump for cross-PR tracking
+    let json = b.json(vec![
+        ("txn_improvement", Json::Num(imp)),
+        ("vm_elimination_denominator", Json::Num(t1.vm_elimination_denominator() as f64)),
+        ("default_txns_per_s", Json::Num(t1.default.txns_per_s)),
+        ("tuned_txns_per_s", Json::Num(t1.tuned.txns_per_s)),
+    ]);
+    let out_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_table1_tomcat.json");
+    std::fs::write(&out_path, &json).expect("write BENCH_table1_tomcat.json");
+    println!("wrote {}", out_path.display());
 }

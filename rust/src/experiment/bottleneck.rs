@@ -9,9 +9,10 @@
 use super::Lab;
 use crate::error::Result;
 use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
+use crate::scenario::{Fleet, ScenarioSpec};
 use crate::space::KnobValue;
 use crate::sut::{self, Composed};
-use crate::tuner::{self, TuningConfig, TuningOutcome};
+use crate::tuner::{TuningConfig, TuningOutcome};
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 
 /// Paper's backend-alone tuning gain.
@@ -88,7 +89,11 @@ pub fn ops_config_unit(space: &crate::space::ConfigSpace) -> Result<Vec<f64>> {
     Ok(space.encode(&cfg))
 }
 
-/// Run both §5.5 tuning sessions.
+/// Run both §5.5 tuning sessions — as two scenario specs (each with a
+/// §5.5 starting configuration, [`ScenarioSpec::with_initial_unit`])
+/// compiled into one fleet sharing the engine. Round size 1 keeps each
+/// run on the paper's sequential protocol, bit-identical to the
+/// historical per-session driver.
 pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Bottleneck> {
     let workload = WorkloadSpec::zipfian_read_write();
     let deployment = DeploymentEnv::standalone();
@@ -108,48 +113,50 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Bottleneck> {
     // (1) backend alone, from the ops config, with a quick ops-style
     // budget (the paper's +63% run was a quick standalone pass, not the
     // exhaustive §5.1 sweep)
-    let mut backend = lab.deploy(
-        Target::Single(sut::mysql()),
-        workload.clone(),
-        deployment.clone(),
-        SimulationOpts::default(),
-        seed,
-    );
-    let ops_unit = ops_config_unit(backend.space())?;
-    backend.set_config(&ops_unit)?;
-    backend.restart()?;
+    let ops_unit = ops_config_unit(&sut::mysql().space)?;
     let backend_cfg = TuningConfig {
         budget_tests: (budget / 8).clamp(6, 16),
         optimizer: "lhs-screen".into(),
         seed,
+        round_size: 1,
         ..Default::default()
     };
-    let backend_alone = tuner::tune(&mut backend, &backend_cfg)?;
+    let backend_spec = ScenarioSpec::new(
+        Target::Single(sut::mysql()),
+        workload.clone(),
+        deployment.clone(),
+        backend_cfg,
+    )
+    .with_label("mysql alone (from ops config)")
+    .with_initial_unit(ops_unit.clone());
 
-    // (2) the co-deployed stack, tuned hard with the full budget
-    let stack = Composed::new(vec![sut::frontend(), sut::mysql()]);
-    let mut composed_sut = lab.deploy(
-        Target::Stack(stack),
-        workload,
-        deployment,
-        SimulationOpts::default(),
-        seed ^ 0xB0771,
-    );
-    // the stack starts with the same ops-tuned backend behind the stock
+    // (2) the co-deployed stack, tuned hard with the full budget; the
+    // stack starts with the same ops-tuned backend behind the stock
     // front-end
-    {
-        let space = composed_sut.space().clone();
+    let stack = Composed::new(vec![sut::frontend(), sut::mysql()]);
+    let composed_unit = {
+        let space = stack.space();
         let mut unit = space.encode(&space.default_config());
-        let backend_space = sut::mysql().space;
-        let ops = ops_config_unit(&backend_space)?;
         let off = sut::frontend().space.dim();
-        unit[off..off + ops.len()].copy_from_slice(&ops);
-        composed_sut.set_config(&unit)?;
-        composed_sut.restart()?;
-    }
-    let composed_cfg =
-        TuningConfig { budget_tests: budget, optimizer: "rrs".into(), seed, ..Default::default() };
-    let composed = tuner::tune(&mut composed_sut, &composed_cfg)?;
+        unit[off..off + ops_unit.len()].copy_from_slice(&ops_unit);
+        unit
+    };
+    let composed_cfg = TuningConfig {
+        budget_tests: budget,
+        optimizer: "rrs".into(),
+        seed,
+        round_size: 1,
+        ..Default::default()
+    };
+    let composed_spec =
+        ScenarioSpec::new(Target::Stack(stack), workload, deployment, composed_cfg)
+            .with_label("frontend+mysql (ops-tuned backend)")
+            .with_sut_seed(seed ^ 0xB0771)
+            .with_initial_unit(composed_unit);
 
+    let report = Fleet::compile(lab, vec![backend_spec, composed_spec])?.run();
+    let mut cells = report.cells.into_iter();
+    let backend_alone = cells.next().expect("backend cell").outcome?;
+    let composed = cells.next().expect("composed cell").outcome?;
     Ok(Bottleneck { backend_alone, composed, backend_untuned })
 }

@@ -10,10 +10,11 @@
 
 use super::Lab;
 use crate::error::Result;
-use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
+use crate::manipulator::Target;
 use crate::optimizer::{Observation, Optimizer, Rrs, RrsParams};
+use crate::scenario::{Fleet, ScenarioSpec};
 use crate::sut;
-use crate::tuner::{Scheduler, TuningConfig, TuningOutcome, TuningSession};
+use crate::tuner::{TuningConfig, TuningOutcome};
 use crate::util::rng::Rng64;
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 
@@ -131,11 +132,14 @@ impl CoTuning {
     }
 }
 
-/// Run both strategies at equal budget — as two concurrent sessions in
-/// one [`Scheduler`], sharing the engine: both sessions deploy the same
-/// binding (same SUT, workload, deployment), so every tick their
-/// pending rows coalesce into one shared bucket execute instead of two
-/// partial-width calls.
+/// Run both strategies at equal budget — as two scenario specs
+/// compiled into one fleet ([`crate::scenario::Fleet`]), sharing the
+/// engine: both sessions deploy the same binding (same SUT, workload,
+/// deployment), so every tick their pending rows coalesce into one
+/// shared bucket execute instead of two partial-width calls. The
+/// frozen strategy is the scenario the optimizer registry cannot
+/// spell, so its spec carries a custom optimizer factory
+/// ([`ScenarioSpec::with_optimizer`]).
 ///
 /// Both sessions run at round size 1, which replays the historical
 /// sequential comparison's rng streams exactly — the comparison is
@@ -149,33 +153,26 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<CoTuning> {
         let full = spec.space.encode(&spec.space.default_config());
         full[tomcat_dims..].to_vec()
     };
-    let deploy = |seed| {
-        lab.deploy(
+    let cfg = TuningConfig { budget_tests: budget, seed, round_size: 1, ..Default::default() };
+    let scenario = |label: &str| {
+        ScenarioSpec::new(
             Target::Single(spec.clone()),
             WorkloadSpec::page_mix(),
             DeploymentEnv::standalone(),
-            SimulationOpts::default(),
-            seed,
+            cfg.clone(),
         )
+        .with_label(label)
     };
-    let cfg = TuningConfig { budget_tests: budget, seed, round_size: 1, ..Default::default() };
+    let frozen_spec = scenario("tomcat knobs only (JVM pinned)").with_optimizer(move |_dim| {
+        Box::new(FrozenSuffix::new(Rrs::new(tomcat_dims, RrsParams::default()), jvm_defaults))
+    });
+    let joint_spec = scenario("joint tomcat+JVM")
+        .with_optimizer(|dim| Box::new(Rrs::new(dim, RrsParams::default())));
 
-    let mut scheduler = Scheduler::new();
-    let frozen_sut = deploy(seed);
-    let frozen_opt = FrozenSuffix::new(Rrs::new(tomcat_dims, RrsParams::default()), jvm_defaults);
-    let frozen_session =
-        TuningSession::new(frozen_sut.space().clone(), Box::new(frozen_opt), cfg.clone());
-    scheduler.add(frozen_session, frozen_sut);
-
-    let joint_sut = deploy(seed);
-    let joint_opt = Rrs::new(spec.space.dim(), RrsParams::default());
-    let joint_session =
-        TuningSession::new(joint_sut.space().clone(), Box::new(joint_opt), cfg.clone());
-    scheduler.add(joint_session, joint_sut);
-
-    let mut outcomes = scheduler.run().into_iter();
-    let frozen = outcomes.next().expect("frozen slot")?;
-    let joint = outcomes.next().expect("joint slot")?;
+    let report = Fleet::compile(lab, vec![frozen_spec, joint_spec])?.run();
+    let mut cells = report.cells.into_iter();
+    let frozen = cells.next().expect("frozen cell").outcome?;
+    let joint = cells.next().expect("joint cell").outcome?;
     Ok(CoTuning { frozen, joint })
 }
 

@@ -11,9 +11,10 @@
 use super::Lab;
 use crate::error::Result;
 use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
+use crate::scenario::{Fleet, ScenarioSpec};
 use crate::space::KnobValue;
 use crate::sut::{self, SutSpec};
-use crate::tuner::{self, TuningConfig};
+use crate::tuner::TuningConfig;
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 
 /// One system's default-vs-tuned numbers.
@@ -128,32 +129,50 @@ fn measure_default(lab: &Lab, spec: SutSpec, seed: u64) -> Result<f64> {
     Ok(sut.run_test()?.throughput)
 }
 
-fn tune_system(lab: &Lab, spec: SutSpec, budget: u64, seed: u64) -> Result<f64> {
-    let mut sut = lab.deploy(
+/// The tuning half of one variant, as a scenario spec (round size 1 —
+/// the paper's sequential protocol, bit-identical to the historical
+/// per-variant driver).
+fn tuning_scenario(spec: SutSpec, budget: u64, seed: u64) -> ScenarioSpec {
+    let cfg = TuningConfig {
+        budget_tests: budget,
+        optimizer: "rrs".into(),
+        seed,
+        round_size: 1,
+        ..Default::default()
+    };
+    let label = format!("{} (tuned)", spec.name);
+    ScenarioSpec::new(
         Target::Single(spec),
         WorkloadSpec::zipfian_read_write(),
         DeploymentEnv::standalone(),
-        SimulationOpts::default(),
-        seed,
-    );
-    let cfg =
-        TuningConfig { budget_tests: budget, optimizer: "rrs".into(), seed, ..Default::default() };
-    Ok(tuner::tune(&mut sut, &cfg)?.best.throughput)
+        cfg,
+    )
+    .with_label(label)
 }
 
-/// Run the fairness experiment.
+/// Run the fairness experiment: both vendor variants tuned as one
+/// two-cell fleet sharing the engine (the variants' surfaces differ,
+/// so their sessions keep separate prepared plans but ride one engine
+/// conversation).
 pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Fairness> {
     let a_spec = variant_a();
     let b_spec = variant_b()?;
-    let a = SystemResult {
-        name: a_spec.name.clone(),
-        default: measure_default(lab, a_spec.clone(), seed)?,
-        tuned: tune_system(lab, a_spec, budget, seed)?,
-    };
-    let b = SystemResult {
-        name: b_spec.name.clone(),
-        default: measure_default(lab, b_spec.clone(), seed ^ 1)?,
-        tuned: tune_system(lab, b_spec, budget, seed ^ 1)?,
-    };
+    let a_default = measure_default(lab, a_spec.clone(), seed)?;
+    let b_default = measure_default(lab, b_spec.clone(), seed ^ 1)?;
+
+    let fleet = Fleet::compile(
+        lab,
+        vec![
+            tuning_scenario(a_spec.clone(), budget, seed),
+            tuning_scenario(b_spec.clone(), budget, seed ^ 1),
+        ],
+    )?;
+    let report = fleet.run();
+    let mut cells = report.cells.into_iter();
+    let a_tuned = cells.next().expect("variant A cell").outcome?.best.throughput;
+    let b_tuned = cells.next().expect("variant B cell").outcome?.best.throughput;
+
+    let a = SystemResult { name: a_spec.name, default: a_default, tuned: a_tuned };
+    let b = SystemResult { name: b_spec.name, default: b_default, tuned: b_tuned };
     Ok(Fairness { a, b })
 }

@@ -9,10 +9,10 @@
 
 use super::{evaluate_panels, grid_units, GridSweep, Lab};
 use crate::error::Result;
-use crate::manipulator::{SimulatedSut, SimulationOpts, Target};
+use crate::manipulator::{SimulatedSut, SimulationOpts};
+use crate::scenario::ScenarioSpec;
 use crate::space::KnobValue;
-use crate::sut;
-use crate::workload::{DeploymentEnv, WorkloadSpec};
+use crate::tuner::TuningConfig;
 
 /// All six subfigures' sweeps plus the shape metrics the paper shows.
 #[derive(Clone, Debug)]
@@ -74,18 +74,21 @@ fn tomcat_jvm_base(sut: &SimulatedSut, tsr: i64) -> Result<Vec<f64>> {
 /// ride the same conversation instead of issuing eight separate calls.
 pub fn run(lab: &Lab, side: usize) -> Result<Fig1> {
     let points = side * side / 4;
-    let deploy = |spec, workload, env| {
-        lab.deploy(Target::Single(spec), workload, env, SimulationOpts::ideal(), 1)
+    // every panel's staging environment is named declaratively and
+    // deployed through the scenario layer's spec → SimulatedSut path
+    // (the atlas is evaluation-only, so no sessions are compiled)
+    let deploy = |sut: &str, workload: &str, deployment: &str| -> Result<SimulatedSut> {
+        Ok(ScenarioSpec::from_names(sut, workload, deployment, TuningConfig::default())?
+            .with_sim(SimulationOpts::ideal())
+            .with_sut_seed(1)
+            .deploy(lab))
     };
-    let mysql_uniform = deploy(sut::mysql(), WorkloadSpec::uniform_read(), DeploymentEnv::standalone());
-    let mysql_zipf =
-        deploy(sut::mysql(), WorkloadSpec::zipfian_read_write(), DeploymentEnv::standalone());
-    let tomcat = deploy(sut::tomcat(), WorkloadSpec::page_mix(), DeploymentEnv::standalone());
-    let spark_sa =
-        deploy(sut::spark(), WorkloadSpec::batch_analytics(), DeploymentEnv::standalone());
-    let tomcat_jvm =
-        deploy(sut::tomcat_with_jvm(), WorkloadSpec::page_mix(), DeploymentEnv::standalone());
-    let spark_cl = deploy(sut::spark(), WorkloadSpec::batch_analytics(), DeploymentEnv::cluster(8));
+    let mysql_uniform = deploy("mysql", "uniform-read", "standalone")?;
+    let mysql_zipf = deploy("mysql", "zipfian-rw", "standalone")?;
+    let tomcat = deploy("tomcat", "page-mix", "standalone")?;
+    let spark_sa = deploy("spark", "batch-analytics", "standalone")?;
+    let tomcat_jvm = deploy("tomcat-jvm", "page-mix", "standalone")?;
+    let spark_cl = deploy("spark", "batch-analytics", "cluster-8")?;
 
     // panel rows, in atlas order
     let a_series = mysql_line_units(&mysql_uniform, points)?;

@@ -8,17 +8,20 @@
 //! ACTS (LHS+RRS, automated staging tests driven through the batched
 //! tuning pipeline) on *simulated wall-clock*.
 //!
-//! All policies now run as one heterogeneous scheduler fleet (different
-//! optimizers, seeds and round sizes side by side): each session keeps
-//! its exact solo trajectory — co-scheduled records match solo runs
-//! (tested) — while their staged tests coalesce into shared engine
-//! executes instead of driving one session at a time.
+//! All policies run as one heterogeneous scenario fleet (different
+//! optimizers, seeds and round sizes side by side), declared as
+//! [`crate::scenario::ScenarioSpec`]s and compiled through
+//! [`crate::scenario::Fleet`]: each session keeps its exact solo
+//! trajectory — co-scheduled records match solo runs (tested) — while
+//! their staged tests coalesce into shared engine executes instead of
+//! driving one session at a time.
 
 use super::Lab;
 use crate::error::Result;
 use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
+use crate::scenario::{Fleet, ScenarioSpec};
 use crate::sut;
-use crate::tuner::{Scheduler, TuningConfig, TuningOutcome, TuningSession};
+use crate::tuner::{TuningConfig, TuningOutcome};
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 
 /// Human overhead per manual tuning iteration, seconds (reconfigure,
@@ -156,30 +159,30 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Labor> {
         },
     ];
 
-    let mut scheduler = Scheduler::new();
-    for policy in &policies {
-        let sut = lab.deploy(
-            Target::Single(sut::mysql()),
-            WorkloadSpec::zipfian_read_write(),
-            DeploymentEnv::standalone(),
-            SimulationOpts::default(),
-            policy.seed,
-        );
-        let cfg = TuningConfig {
-            budget_tests: budget,
-            optimizer: policy.optimizer.into(),
-            seed: policy.seed,
-            round_size: policy.round_size,
-            ..Default::default()
-        };
-        let session = TuningSession::from_registry(sut.space().clone(), &cfg)?;
-        scheduler.add(session, sut);
-    }
-    let results = scheduler.run();
+    let specs: Vec<ScenarioSpec> = policies
+        .iter()
+        .map(|policy| {
+            let cfg = TuningConfig {
+                budget_tests: budget,
+                optimizer: policy.optimizer.into(),
+                seed: policy.seed,
+                round_size: policy.round_size,
+                ..Default::default()
+            };
+            ScenarioSpec::new(
+                Target::Single(sut::mysql()),
+                WorkloadSpec::zipfian_read_write(),
+                DeploymentEnv::standalone(),
+                cfg,
+            )
+            .with_label(policy.name)
+        })
+        .collect();
+    let report = Fleet::compile(lab, specs)?.run();
 
     let mut outcomes = Vec::with_capacity(policies.len());
-    for (policy, result) in policies.iter().zip(results) {
-        outcomes.push(policy_outcome(policy, threshold, &result?));
+    for (policy, cell) in policies.iter().zip(report.cells) {
+        outcomes.push(policy_outcome(policy, threshold, &cell.outcome?));
     }
     Ok(Labor { outcomes, threshold })
 }

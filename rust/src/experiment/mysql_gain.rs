@@ -5,19 +5,19 @@
 //! 118,184 ops/s (BestConfig), a 12.04x peak. Here: LHS+RRS over the
 //! 40-knob simulated MySQL within a staged-test budget.
 //!
-//! Seed repeats run as a concurrent scheduler fleet
-//! ([`run_repeats`] -> [`super::sweep::run_seeds`]): every seed keeps
-//! its exact solo trajectory (round size 1 — the paper's sequential
-//! protocol) while the sessions' staged tests coalesce into shared
-//! engine executes instead of driving one session at a time.
+//! Seed repeats are declared as a scenario [`Matrix`] (one axis:
+//! seeds) and compiled into a concurrent fleet
+//! ([`crate::scenario::Fleet`]): every seed keeps its exact solo
+//! trajectory (round size 1 — the paper's sequential protocol) while
+//! the sessions' staged tests coalesce into shared engine executes
+//! instead of driving one session at a time.
 
-use super::sweep::{self, SeedSweep};
+use super::sweep::SeedSweep;
 use super::Lab;
 use crate::error::Result;
-use crate::manipulator::{SimulationOpts, Target};
-use crate::sut;
+use crate::manipulator::SimulationOpts;
+use crate::scenario::{Fleet, Matrix};
 use crate::tuner::{TuningConfig, TuningOutcome};
-use crate::workload::{DeploymentEnv, WorkloadSpec};
 
 /// Paper numbers for EXPERIMENTS.md comparison.
 pub const PAPER_DEFAULT_OPS: f64 = 9_815.0;
@@ -25,28 +25,27 @@ pub const PAPER_DEFAULT_OPS: f64 = 9_815.0;
 pub const PAPER_BEST_OPS: f64 = 118_184.0;
 
 /// Run the §5.1 experiment with `budget` staged tests, `repeats` seeds
-/// (`seed..seed+repeats`) tuned concurrently through one scheduler.
+/// (`seed..seed+repeats`) tuned concurrently through one compiled
+/// fleet.
 pub fn run_repeats(lab: &Lab, budget: u64, seed: u64, repeats: u64) -> Result<SeedSweep> {
     // round size 1 replays the paper's sequential protocol per seed
     // (bit-identical to the historical single-session driver — tested);
     // concurrency comes from the fleet, not from within a session
-    let cfg = TuningConfig {
-        budget_tests: budget,
-        optimizer: "rrs".into(),
-        seed,
-        round_size: 1,
-        ..Default::default()
+    let matrix = Matrix {
+        suts: vec!["mysql".into()],
+        workloads: vec!["zipfian-rw".into()],
+        deployments: vec!["standalone".into()],
+        optimizers: vec!["rrs".into()],
+        seeds: (0..repeats.max(1)).map(|i| seed + i).collect(),
+        base: TuningConfig { budget_tests: budget, round_size: 1, ..Default::default() },
+        sim: SimulationOpts::default(),
     };
-    let seeds: Vec<u64> = (0..repeats.max(1)).map(|i| seed + i).collect();
-    sweep::run_seeds(
-        lab,
-        Target::Single(sut::mysql()),
-        WorkloadSpec::zipfian_read_write(),
-        DeploymentEnv::standalone(),
-        SimulationOpts::default(),
-        &cfg,
-        &seeds,
-    )
+    let report = Fleet::compile(lab, matrix.expand()?)?.run();
+    let mut paired = Vec::with_capacity(report.cells.len());
+    for cell in report.cells {
+        paired.push((cell.seed, cell.outcome?));
+    }
+    Ok(SeedSweep { outcomes: paired })
 }
 
 /// Run the §5.1 experiment with `budget` staged tests (one seed).

@@ -1,5 +1,6 @@
-//! Multi-seed sweep: N tuning sessions — one per seed — run
-//! *concurrently* through the [`Scheduler`] against one shared engine.
+//! Multi-seed sweep: N tuning sessions — one per seed — compiled as
+//! one scenario fleet ([`crate::scenario::Fleet`]) and run
+//! *concurrently* against one shared engine.
 //!
 //! All sessions deploy the same binding (SUT, workload, deployment), so
 //! every scheduling tick their pending rows coalesce into shared bucket
@@ -14,9 +15,10 @@
 
 use super::Lab;
 use crate::error::Result;
-use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
+use crate::manipulator::{SimulationOpts, Target};
 use crate::report::Table;
-use crate::tuner::{Scheduler, TuningConfig, TuningOutcome, TuningSession};
+use crate::scenario::{Fleet, ScenarioSpec};
+use crate::tuner::{TuningConfig, TuningOutcome};
 use crate::util::stats::Summary;
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 
@@ -74,8 +76,8 @@ impl SeedSweep {
     }
 }
 
-/// Run one tuning session per seed, all concurrently through a single
-/// [`Scheduler`] (see the module docs). `cfg.seed` is overridden per
+/// Run one tuning session per seed, all concurrently through one
+/// compiled fleet (see the module docs). `cfg.seed` is overridden per
 /// session; everything else in `cfg` applies to all of them.
 pub fn run_seeds(
     lab: &Lab,
@@ -86,23 +88,18 @@ pub fn run_seeds(
     cfg: &TuningConfig,
     seeds: &[u64],
 ) -> Result<SeedSweep> {
-    let mut scheduler = Scheduler::new();
-    for &seed in seeds {
-        let sut = lab.deploy(
-            target.clone(),
-            workload.clone(),
-            deployment.clone(),
-            opts.clone(),
-            seed,
-        );
-        let session_cfg = TuningConfig { seed, ..cfg.clone() };
-        let session = TuningSession::from_registry(sut.space().clone(), &session_cfg)?;
-        scheduler.add(session, sut);
-    }
-    let outcomes = scheduler.run();
+    let specs: Vec<ScenarioSpec> = seeds
+        .iter()
+        .map(|&seed| {
+            let tuning = TuningConfig { seed, ..cfg.clone() };
+            ScenarioSpec::new(target.clone(), workload.clone(), deployment.clone(), tuning)
+                .with_sim(opts.clone())
+        })
+        .collect();
+    let report = Fleet::compile(lab, specs)?.run();
     let mut paired = Vec::with_capacity(seeds.len());
-    for (&seed, outcome) in seeds.iter().zip(outcomes) {
-        paired.push((seed, outcome?));
+    for (&seed, cell) in seeds.iter().zip(report.cells) {
+        paired.push((seed, cell.outcome?));
     }
     Ok(SeedSweep { outcomes: paired })
 }

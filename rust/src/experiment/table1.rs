@@ -95,8 +95,10 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Table1> {
 /// The best seed's configuration goes to the confirmation runs.
 pub fn run_repeats(lab: &Lab, budget: u64, seed: u64, repeats: u64) -> Result<Table1> {
     // the §5.2 deployment: ARM VM, half the cores pinned by networking
-    // (expressed as heavy interference) -> little headroom
-    let deployment = DeploymentEnv::arm_vm().with_interference(0.55);
+    // (expressed as heavy interference) -> little headroom; nameable
+    // from scenario specs and the CLI via the deployment registry
+    let deployment =
+        DeploymentEnv::by_name("arm-vm-interference-0.55").expect("registered deployment");
     let workload = WorkloadSpec::page_mix().with_duration(300.0);
     // round size 1 keeps each seed on the paper's sequential protocol
     // (bit-identical to the historical single-session driver — tested)

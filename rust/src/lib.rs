@@ -21,6 +21,8 @@
 //! * [`runtime`] — PJRT loader/executor for the AOT surface artifacts
 //! * [`manipulator`] — the system-manipulator abstraction + simulation
 //! * [`tuner`] — resource-limited tuning sessions (the ACTS loop)
+//! * [`scenario`] — declarative scenario specs, matrices and the fleet
+//!   compiler every experiment and the `acts fleet` CLI run through
 //! * [`experiment`] — drivers regenerating each paper table and figure
 //! * [`util`], [`testkit`], [`benchkit`], [`report`] — in-repo substrates
 //!   (PRNG, stats, property tests, benchmarking, reporting) that the
@@ -35,6 +37,7 @@ pub mod optimizer;
 pub mod report;
 pub mod runtime;
 pub mod sampling;
+pub mod scenario;
 pub mod space;
 pub mod sut;
 pub mod testkit;

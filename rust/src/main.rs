@@ -1,19 +1,21 @@
 //! `acts` — the ACTS tuning framework CLI (Layer-3 leader binary).
 //!
 //! Commands:
-//!   list                              show registered SUTs/workloads/optimizers
+//!   list [kind]                       show registered SUTs/workloads/deployments/optimizers
 //!   tune   --sut S --workload W ...   run one tuning session
+//!   fleet  --suts a,b --workloads ... run a scenario matrix as one fleet
 //!   surface --sut S --x K --y K ...   dump a 2-knob grid sweep as CSV
 //!   experiment <fig1|mysql|table1|bottleneck|labor|fairness|coverage>
 //!   help
 
 use acts::cli::Args;
 use acts::experiment::{self, Lab};
-use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
+use acts::manipulator::{SimulationOpts, SystemManipulator};
 use acts::optimizer::OPTIMIZER_NAMES;
 use acts::report::fmt_duration;
 use acts::runtime::BackendKind;
-use acts::sut::{self, SUT_NAMES};
+use acts::scenario::{resolve_target, Fleet, Matrix};
+use acts::sut::SUT_NAMES;
 use acts::tuner::{self, TuningConfig};
 use acts::workload::{DeploymentEnv, WorkloadSpec};
 
@@ -40,33 +42,15 @@ fn main() {
     std::process::exit(code);
 }
 
-fn deployment_by_name(name: &str) -> Option<DeploymentEnv> {
-    match name {
-        "standalone" => Some(DeploymentEnv::standalone()),
-        "arm-vm" => Some(DeploymentEnv::arm_vm()),
-        s if s.starts_with("cluster-") => {
-            s["cluster-".len()..].parse().ok().map(DeploymentEnv::cluster)
-        }
-        _ => None,
-    }
-}
-
 fn run(args: &Args) -> acts::Result<()> {
     match args.command.as_str() {
         "" | "help" => {
             print!("{}", HELP);
             Ok(())
         }
-        "list" => {
-            println!("SUTs:        {}", SUT_NAMES.join(", "));
-            println!("             frontend+mysql (stack via --sut frontend+mysql)");
-            println!("workloads:   {}", WorkloadSpec::NAMES.join(", "));
-            println!("deployments: standalone, arm-vm, cluster-<n>");
-            println!("optimizers:  {}", OPTIMIZER_NAMES.join(", "));
-            println!("samplers:    {}", acts::sampling::SAMPLER_NAMES.join(", "));
-            Ok(())
-        }
+        "list" => cmd_list(args),
         "tune" => cmd_tune(args),
+        "fleet" => cmd_fleet(args),
         "surface" => cmd_surface(args),
         "experiment" => cmd_experiment(args),
         other => {
@@ -76,24 +60,46 @@ fn run(args: &Args) -> acts::Result<()> {
     }
 }
 
-fn resolve_target(name: &str) -> acts::Result<Target> {
-    if let Some(spec) = sut::by_name(name) {
-        return Ok(Target::Single(spec));
-    }
-    if name.contains('+') {
-        let members: Option<Vec<_>> = name.split('+').map(sut::by_name).collect();
-        if let Some(members) = members {
-            return Ok(Target::Stack(sut::Composed::new(members)));
+/// `acts list [suts|workloads|deployments|optimizers|samplers]` — the
+/// bare form prints every registry; a kind prints that registry one
+/// name per line (machine-readable, straight off the registries the
+/// scenario layer resolves against).
+fn cmd_list(args: &Args) -> acts::Result<()> {
+    let registry = |kind: &str| -> acts::Result<&'static [&'static str]> {
+        match kind {
+            "suts" => Ok(SUT_NAMES),
+            "workloads" => Ok(WorkloadSpec::NAMES),
+            "deployments" => Ok(DeploymentEnv::NAME_PATTERNS),
+            "optimizers" => Ok(OPTIMIZER_NAMES),
+            "samplers" => Ok(acts::sampling::SAMPLER_NAMES),
+            other => Err(acts::ActsError::InvalidArg(format!(
+                "unknown registry `{other}` (suts|workloads|deployments|optimizers|samplers)"
+            ))),
+        }
+    };
+    match args.positional.first() {
+        Some(kind) => {
+            for name in registry(kind)? {
+                println!("{name}");
+            }
+        }
+        None => {
+            println!("SUTs:        {}", SUT_NAMES.join(", "));
+            println!("             (stacks compose with `+`, e.g. --sut frontend+mysql)");
+            println!("workloads:   {}", WorkloadSpec::NAMES.join(", "));
+            println!("deployments: {}", DeploymentEnv::NAME_PATTERNS.join(", "));
+            println!("optimizers:  {}", OPTIMIZER_NAMES.join(", "));
+            println!("samplers:    {}", acts::sampling::SAMPLER_NAMES.join(", "));
         }
     }
-    Err(acts::ActsError::InvalidArg(format!("unknown SUT `{name}`")))
+    Ok(())
 }
 
 fn cmd_tune(args: &Args) -> acts::Result<()> {
     let target = resolve_target(&args.get("sut", "mysql"))?;
     let workload = WorkloadSpec::by_name(&args.get("workload", "zipfian-rw"))
         .ok_or_else(|| acts::ActsError::InvalidArg("unknown workload".into()))?;
-    let deployment = deployment_by_name(&args.get("deployment", "standalone"))
+    let deployment = DeploymentEnv::by_name(&args.get("deployment", "standalone"))
         .ok_or_else(|| acts::ActsError::InvalidArg("unknown deployment".into()))?;
     let seed = args.get_u64("seed", 1);
     let budget = args.get_u64("budget", 100);
@@ -188,12 +194,79 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
     Ok(())
 }
 
+/// `acts fleet` — expand comma-separated scenario axes into a matrix,
+/// compile every cell onto one shared engine and run them as a single
+/// concurrent fleet (see `rust/src/scenario/README.md`).
+fn cmd_fleet(args: &Args) -> acts::Result<()> {
+    let split = |s: String| -> Vec<String> {
+        s.split(',').map(|t| t.trim().to_string()).filter(|t| !t.is_empty()).collect()
+    };
+    let seed = args.get_u64("seed", 1);
+    let n_seeds = args.get_u64("seeds", 1).max(1);
+    let base = TuningConfig {
+        budget_tests: args.get_u64("budget", 40),
+        seed,
+        round_size: args.get_usize("round-size", 8),
+        backend: backend_arg(args)?,
+        ..Default::default()
+    };
+    let matrix = Matrix {
+        suts: split(args.get("suts", &args.get("sut", "mysql"))),
+        workloads: split(args.get("workloads", &args.get("workload", "zipfian-rw"))),
+        deployments: split(args.get("deployments", &args.get("deployment", "standalone"))),
+        optimizers: split(args.get("optimizers", &args.get("optimizer", "rrs"))),
+        seeds: (0..n_seeds).map(|i| seed + i).collect(),
+        base: base.clone(),
+        sim: SimulationOpts::default(),
+    };
+    println!(
+        "fleet: {} cells ({} suts x {} workloads x {} deployments x {} optimizers x {} seeds)",
+        matrix.cells(),
+        matrix.suts.len(),
+        matrix.workloads.len(),
+        matrix.deployments.len(),
+        matrix.optimizers.len(),
+        matrix.seeds.len()
+    );
+    let specs = matrix.expand()?;
+    let lab = Lab::for_config(&base)?;
+    let report = Fleet::compile(&lab, specs)?.run();
+
+    print!("{}", report.table().markdown());
+    let agg = report.aggregate();
+    println!(
+        "cells: {} ok, {} failed | best {:.0} ops/s | median best {:.0} ops/s | median gain {:+.1}% | tests {} ({} failed) | staging {}",
+        agg.cells_ok,
+        agg.cells_failed,
+        agg.best_throughput,
+        agg.median_best_throughput,
+        agg.median_improvement * 100.0,
+        agg.tests_total,
+        agg.failures_total,
+        fmt_duration(agg.sim_seconds_total)
+    );
+    if let Some(best) = report.best_cell() {
+        println!("best cell: {}", best.label);
+    }
+    let c = report.coalescing;
+    println!(
+        "engine coalescing: {} requests -> {} executes ({} rows requested, {} executed)",
+        c.requests, c.execute_calls, c.rows_requested, c.rows_executed
+    );
+    if let Some(path) = args.get_opt("json") {
+        std::fs::write(path, report.json().to_string())
+            .map_err(|e| acts::ActsError::io(path, e))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_surface(args: &Args) -> acts::Result<()> {
     let lab = Lab::with_backend(backend_arg(args)?)?;
     let target = resolve_target(&args.get("sut", "tomcat"))?;
     let workload = WorkloadSpec::by_name(&args.get("workload", "page-mix"))
         .ok_or_else(|| acts::ActsError::InvalidArg("unknown workload".into()))?;
-    let deployment = deployment_by_name(&args.get("deployment", "standalone"))
+    let deployment = DeploymentEnv::by_name(&args.get("deployment", "standalone"))
         .ok_or_else(|| acts::ActsError::InvalidArg("unknown deployment".into()))?;
     let sut = lab.deploy(target, workload, deployment, SimulationOpts::ideal(), 1);
     let sweep = experiment::grid_sweep(
@@ -288,7 +361,9 @@ USAGE:
     acts <command> [flags]
 
 COMMANDS:
-    list         show registered SUTs, workloads, deployments, optimizers
+    list [kind]  show registered SUTs, workloads, deployments, optimizers;
+                 `acts list suts` (workloads|deployments|optimizers|samplers)
+                 prints one registry, one name per line
     tune         run a tuning session (batched rounds; --round-size 1
                  for the sequential reference protocol)
                    --sut <name|a+b>   (mysql)        --workload <name> (zipfian-rw)
@@ -302,6 +377,21 @@ COMMANDS:
                    executes while the next tick stages
                    --curve            print per-test progress
                    --config           print the best configuration found
+    fleet        expand a scenario matrix (cartesian axes) and run every
+                 cell concurrently through one compiled fleet, sharing
+                 one engine so cross-scenario rounds coalesce
+                   --suts a,b,..         (mysql)        comma-separated axis
+                   --workloads w,..      (zipfian-rw)   comma-separated axis
+                   --deployments d,..    (standalone)   comma-separated axis
+                   --optimizers o,..     (rrs)          comma-separated axis
+                   --seeds <n>           (1)            seeds seed..seed+n
+                   --seed <n>            (1)            first seed
+                   --budget <n>          (40)           per cell
+                   --round-size <n>      (8)            per cell
+                   --backend <b>         (auto)
+                   --json <file>         dump the fleet report as JSON
+                 deployments are registry names: standalone, arm-vm,
+                 cluster-<n>, <deployment>-interference-<f>
     surface      dump a 2-knob grid sweep as CSV
                    --sut --workload --deployment --x <knob> --y <knob> --side <n>
                    --backend <b>

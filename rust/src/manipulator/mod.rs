@@ -272,6 +272,15 @@ pub trait SystemManipulator {
         })
     }
 
+    /// Estimated simulated cost of ONE staged test (restart + settle +
+    /// test window), in seconds. Purely advisory: schedulers use it to
+    /// balance rounds across pipeline buffers (round cost = round size
+    /// × this estimate); it must never influence results. The default
+    /// (1.0) makes estimated round cost proportional to round size.
+    fn est_test_cost(&self) -> f64 {
+        1.0
+    }
+
     /// Total simulated seconds consumed so far (restarts + tests).
     fn sim_seconds(&self) -> f64;
 
@@ -313,6 +322,9 @@ impl<M: SystemManipulator + ?Sized> SystemManipulator for &mut M {
     }
     fn collect_results(&mut self, staged: StagedRound, perfs: Vec<Perf>) -> Vec<Result<Measurement>> {
         (**self).collect_results(staged, perfs)
+    }
+    fn est_test_cost(&self) -> f64 {
+        (**self).est_test_cost()
     }
     fn sim_seconds(&self) -> f64 {
         (**self).sim_seconds()

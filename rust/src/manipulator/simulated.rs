@@ -413,6 +413,12 @@ impl SystemManipulator for SimulatedSut {
         }
     }
 
+    fn est_test_cost(&self) -> f64 {
+        // the simulated staging protocol per staged test: one restart,
+        // the settle window, then the workload's test window
+        self.opts.restart_s + self.opts.settle_s + self.workload.duration_s
+    }
+
     fn sim_seconds(&self) -> f64 {
         self.sim_seconds
     }

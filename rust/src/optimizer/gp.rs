@@ -256,8 +256,13 @@ fn select_diverse(scored: Vec<(f64, Vec<f64>)>, need: usize, ls2: f64) -> Vec<Ve
     while picked.len() < need && !remaining.is_empty() {
         let best = (0..remaining.len())
             .max_by(|&a, &b| {
-                let sa = remaining[a].0 * penalty[a];
-                let sb = remaining[b].0 * penalty[b];
+                // EI is analytically >= 0 but goes slightly negative
+                // numerically far below f_best; clamp before the
+                // multiplicative discount, or a penalised near-duplicate
+                // (negative x small penalty -> ~0) would outrank every
+                // distant negative-EI candidate
+                let sa = remaining[a].0.max(0.0) * penalty[a];
+                let sb = remaining[b].0.max(0.0) * penalty[b];
                 sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal)
             })
             .expect("non-empty remaining");
@@ -433,6 +438,24 @@ mod tests {
     fn select_diverse_returns_everything_when_pool_is_small() {
         let picked = select_diverse(vec![(1.0, vec![0.1]), (0.5, vec![0.9])], 8, 0.16);
         assert_eq!(picked.len(), 2);
+    }
+
+    #[test]
+    fn select_diverse_negative_scores_do_not_reward_near_duplicates() {
+        // EI is analytically >= 0 but can go slightly negative
+        // numerically; an unclamped multiplicative penalty would flip
+        // the ordering (negative x ~0 penalty ranks ABOVE a distant
+        // negative score) and cluster the round on the first pick
+        let a = (1.0, vec![0.0, 0.0]);
+        let dup = (-1e-9, vec![1e-4, 0.0]); // near-clone of A, tiny negative EI
+        let far = (-1e-12, vec![0.9, 0.9]); // far basin, even closer to zero
+        let picked = select_diverse(vec![a, dup, far], 2, 0.16);
+        assert_eq!(picked[0], vec![0.0, 0.0]);
+        assert_ne!(
+            picked[1],
+            vec![1e-4, 0.0],
+            "a near-duplicate must not outrank distant candidates on negative EI"
+        );
     }
 
     #[test]

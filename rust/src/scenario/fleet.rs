@@ -1,0 +1,369 @@
+//! The fleet compiler — `Vec<ScenarioSpec>` → ready scheduler sessions
+//! → [`FleetReport`].
+//!
+//! [`Fleet::compile`] turns each spec into a deployed staging
+//! environment plus a [`TuningSession`], all added to ONE
+//! [`Scheduler`] over ONE shared engine — so scenarios that share a
+//! staging binding (same surface parameters, workload and deployment)
+//! coalesce their rounds into shared bucket executes exactly as the
+//! multi-seed sweeps always have, and heterogeneous cells still ride
+//! the same engine conversation. [`Fleet::run`] drives every session
+//! to completion and demultiplexes the outcomes back into per-cell
+//! records ([`FleetCell`]) plus aggregate statistics
+//! ([`FleetReport::aggregate`]) and the engine's coalescing counters.
+//!
+//! Per-cell results are bit-identical to running that cell's session
+//! alone (`tune_batched` with the same spec) on the native backend —
+//! the scheduler's order-independence guarantee, asserted end-to-end
+//! by `rust/tests/fleet.rs`.
+
+use super::{OptimizerSel, ScenarioSpec};
+use crate::error::{ActsError, Result};
+use crate::experiment::Lab;
+use crate::manipulator::{SimulatedSut, SystemManipulator};
+use crate::report::{Json, Table};
+use crate::runtime::Engine;
+use crate::tuner::{Scheduler, SchedulerMode, TuningOutcome, TuningSession};
+use crate::util::stats::Summary;
+use std::sync::Arc;
+
+/// Per-cell identity carried from spec to report.
+struct CellMeta {
+    label: String,
+    sut: String,
+    workload: String,
+    deployment: String,
+    optimizer: String,
+    seed: u64,
+}
+
+/// A compiled fleet: ready scheduler sessions plus the cell metadata
+/// to demux their outcomes. Build with [`Fleet::compile`], drive with
+/// [`Fleet::run`].
+///
+/// A cell whose starting configuration
+/// ([`ScenarioSpec::with_initial_unit`]) fails to install — a
+/// crash-looping staging environment — is compiled as a pre-failed
+/// cell (its error lands in its [`FleetCell`]) rather than aborting
+/// the fleet: install failures are environment faults and get the
+/// same per-cell isolation as a failed baseline. Malformed specs
+/// (unknown optimizer, wrong-dimension units) still fail the compile.
+pub struct Fleet {
+    /// One entry per cell, in spec order: metadata plus the install
+    /// error for cells that never reached the scheduler.
+    cells: Vec<(CellMeta, Option<ActsError>)>,
+    scheduler: Scheduler<'static, SimulatedSut>,
+    engine: Arc<Engine>,
+}
+
+impl Fleet {
+    /// Compile `specs` onto `lab`'s shared engine in the default
+    /// (pipelined) scheduler mode.
+    pub fn compile(lab: &Lab, specs: Vec<ScenarioSpec>) -> Result<Fleet> {
+        Fleet::compile_with_mode(lab, specs, SchedulerMode::default())
+    }
+
+    /// Compile with an explicit [`SchedulerMode`].
+    pub fn compile_with_mode(
+        lab: &Lab,
+        specs: Vec<ScenarioSpec>,
+        mode: SchedulerMode,
+    ) -> Result<Fleet> {
+        let mut scheduler = Scheduler::with_mode(mode);
+        let mut cells = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let mut sut = spec.deploy(lab);
+            // the session first: a spec the registries cannot resolve
+            // is a programming error and fails the whole compile
+            // (optimizer construction never touches the sut's rng, so
+            // building it before the install keeps the historical
+            // deploy -> set_config -> restart stream intact)
+            let ScenarioSpec {
+                label, target, workload, deployment, tuning, initial_unit, optimizer, ..
+            } = spec;
+            let session = match optimizer {
+                OptimizerSel::Registry => {
+                    TuningSession::from_registry(sut.space().clone(), &tuning)?
+                }
+                OptimizerSel::Custom(f) => {
+                    let opt = f(sut.space().dim());
+                    TuningSession::new(sut.space().clone(), opt, tuning.clone())
+                }
+            };
+            // install the starting configuration; a crash-looping
+            // environment (TestFailed) pre-fails this cell only
+            let install_err = match &initial_unit {
+                Some(unit) => {
+                    match sut.set_config(unit).and_then(|()| sut.restart()) {
+                        Ok(()) => None,
+                        Err(ActsError::TestFailed(msg)) => {
+                            Some(ActsError::TestFailed(format!(
+                                "starting configuration never installed: {msg}"
+                            )))
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                None => None,
+            };
+            let meta = CellMeta {
+                label,
+                sut: target.name().to_string(),
+                workload: workload.name,
+                deployment: deployment.name,
+                optimizer: tuning.optimizer,
+                seed: tuning.seed,
+            };
+            if install_err.is_none() {
+                scheduler.add(session, sut);
+            }
+            cells.push((meta, install_err));
+        }
+        Ok(Fleet { cells, scheduler, engine: lab.engine.clone() })
+    }
+
+    /// Number of compiled cells (pre-failed cells included).
+    pub fn session_count(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Drive every cell's session to completion (concurrently, through
+    /// the scheduler) and demux the outcomes into a [`FleetReport`].
+    /// Per-cell fatal errors land in their cell; they do not abort the
+    /// fleet.
+    pub fn run(self) -> FleetReport {
+        let before = self.engine.stats();
+        let mut outcomes = self.scheduler.run().into_iter();
+        let after = self.engine.stats();
+        let cells = self
+            .cells
+            .into_iter()
+            .map(|(m, install_err)| {
+                let outcome = match install_err {
+                    // pre-failed at compile: never reached the scheduler
+                    Some(e) => Err(e),
+                    None => outcomes.next().expect("one scheduler outcome per live cell"),
+                };
+                FleetCell {
+                    label: m.label,
+                    sut: m.sut,
+                    workload: m.workload,
+                    deployment: m.deployment,
+                    optimizer: m.optimizer,
+                    seed: m.seed,
+                    outcome,
+                }
+            })
+            .collect();
+        FleetReport {
+            cells,
+            coalescing: Coalescing {
+                requests: after.requests - before.requests,
+                execute_calls: after.execute_calls - before.execute_calls,
+                rows_requested: after.rows_requested - before.rows_requested,
+                rows_executed: after.rows_executed - before.rows_executed,
+            },
+        }
+    }
+}
+
+/// One fleet cell: its scenario identity plus the session outcome (a
+/// per-cell fatal — failed baseline, engine fault — stays in its
+/// cell).
+pub struct FleetCell {
+    /// The spec's report label.
+    pub label: String,
+    /// Target registry name.
+    pub sut: String,
+    /// Workload name.
+    pub workload: String,
+    /// Deployment name.
+    pub deployment: String,
+    /// Optimizer name ([`crate::tuner::TuningConfig::optimizer`];
+    /// custom-factory cells keep the config's name).
+    pub optimizer: String,
+    /// Tuning seed.
+    pub seed: u64,
+    /// The session's outcome, records included.
+    pub outcome: Result<TuningOutcome>,
+}
+
+/// Engine-counter deltas over the fleet run: `requests >
+/// execute_calls` is the signature of cross-scenario coalescing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Coalescing {
+    /// Logical evaluation requests served.
+    pub requests: u64,
+    /// Physical backend execute calls issued.
+    pub execute_calls: u64,
+    /// Source rows requested, before planning and padding.
+    pub rows_requested: u64,
+    /// Rows executed, bucket padding included.
+    pub rows_executed: u64,
+}
+
+/// Aggregate statistics over a fleet's completed cells.
+#[derive(Clone, Debug)]
+pub struct FleetAggregate {
+    /// Total cells.
+    pub cells: usize,
+    /// Cells that completed.
+    pub cells_ok: usize,
+    /// Cells that died (per-cell fatal errors).
+    pub cells_failed: usize,
+    /// Best tuned throughput across completed cells.
+    pub best_throughput: f64,
+    /// Median of the cells' best throughputs.
+    pub median_best_throughput: f64,
+    /// Median of the cells' improvements over baseline.
+    pub median_improvement: f64,
+    /// Staged tests consumed, fleet-wide.
+    pub tests_total: u64,
+    /// Failed staged tests, fleet-wide.
+    pub failures_total: u64,
+    /// Simulated staging seconds consumed, fleet-wide.
+    pub sim_seconds_total: f64,
+}
+
+/// The demuxed outcome of one fleet run.
+pub struct FleetReport {
+    /// Per-cell records, in spec order.
+    pub cells: Vec<FleetCell>,
+    /// Engine coalescing counters over the run.
+    pub coalescing: Coalescing,
+}
+
+impl FleetReport {
+    /// The completed cells, with their outcomes.
+    pub fn ok_cells(&self) -> impl Iterator<Item = (&FleetCell, &TuningOutcome)> {
+        self.cells.iter().filter_map(|c| c.outcome.as_ref().ok().map(|o| (c, o)))
+    }
+
+    /// The completed cell with the best tuned throughput.
+    pub fn best_cell(&self) -> Option<&FleetCell> {
+        self.ok_cells()
+            .max_by(|(_, a), (_, b)| {
+                a.best
+                    .throughput
+                    .partial_cmp(&b.best.throughput)
+                    .expect("finite throughput")
+            })
+            .map(|(c, _)| c)
+    }
+
+    /// Aggregate statistics (best/median throughput, totals).
+    pub fn aggregate(&self) -> FleetAggregate {
+        let bests: Vec<f64> = self.ok_cells().map(|(_, o)| o.best.throughput).collect();
+        let improvements: Vec<f64> = self.ok_cells().map(|(_, o)| o.improvement).collect();
+        let best_summary = Summary::of(&bests);
+        let imp_summary = Summary::of(&improvements);
+        let zero_if_empty = |x: f64| if bests.is_empty() { 0.0 } else { x };
+        FleetAggregate {
+            cells: self.cells.len(),
+            cells_ok: bests.len(),
+            cells_failed: self.cells.len() - bests.len(),
+            best_throughput: zero_if_empty(best_summary.max),
+            median_best_throughput: zero_if_empty(best_summary.p50),
+            median_improvement: zero_if_empty(imp_summary.p50),
+            tests_total: self.ok_cells().map(|(_, o)| o.tests_used).sum(),
+            failures_total: self.ok_cells().map(|(_, o)| o.failures).sum(),
+            sim_seconds_total: self.ok_cells().map(|(_, o)| o.sim_seconds).sum(),
+        }
+    }
+
+    /// Render the per-cell table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fleet report (one row per scenario cell)",
+            &["cell", "baseline", "best", "gain", "tests", "failures", "sim time"],
+        );
+        for cell in &self.cells {
+            match &cell.outcome {
+                Ok(o) => t.row(&[
+                    cell.label.clone(),
+                    format!("{:.0}", o.baseline.throughput),
+                    format!("{:.0}", o.best.throughput),
+                    format!("{:+.1}%", o.improvement * 100.0),
+                    format!("{}", o.tests_used),
+                    format!("{}", o.failures),
+                    crate::report::fmt_duration(o.sim_seconds),
+                ]),
+                Err(e) => t.row(&[
+                    cell.label.clone(),
+                    "-".into(),
+                    "-".into(),
+                    format!("FAILED: {e}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            };
+        }
+        t
+    }
+
+    /// Machine-readable dump: aggregate + coalescing + one object per
+    /// cell (summary and best-so-far curve; full per-row records stay
+    /// in memory on [`FleetCell::outcome`]).
+    pub fn json(&self) -> Json {
+        let agg = self.aggregate();
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|cell| {
+                let mut kvs = vec![
+                    ("label", Json::Str(cell.label.clone())),
+                    ("sut", Json::Str(cell.sut.clone())),
+                    ("workload", Json::Str(cell.workload.clone())),
+                    ("deployment", Json::Str(cell.deployment.clone())),
+                    ("optimizer", Json::Str(cell.optimizer.clone())),
+                    ("seed", Json::Num(cell.seed as f64)),
+                ];
+                match &cell.outcome {
+                    Ok(o) => {
+                        kvs.push(("ok", Json::Bool(true)));
+                        kvs.push(("baseline", Json::Num(o.baseline.throughput)));
+                        kvs.push(("best", Json::Num(o.best.throughput)));
+                        kvs.push(("improvement", Json::Num(o.improvement)));
+                        kvs.push(("speedup", Json::Num(o.speedup())));
+                        kvs.push(("tests_used", Json::Num(o.tests_used as f64)));
+                        kvs.push(("failures", Json::Num(o.failures as f64)));
+                        kvs.push(("sim_seconds", Json::Num(o.sim_seconds)));
+                        kvs.push(("best_curve", Json::nums(&o.best_curve())));
+                    }
+                    Err(e) => {
+                        kvs.push(("ok", Json::Bool(false)));
+                        kvs.push(("error", Json::Str(e.to_string())));
+                    }
+                }
+                Json::obj(kvs)
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "aggregate",
+                Json::obj(vec![
+                    ("cells", Json::Num(agg.cells as f64)),
+                    ("cells_ok", Json::Num(agg.cells_ok as f64)),
+                    ("cells_failed", Json::Num(agg.cells_failed as f64)),
+                    ("best_throughput", Json::Num(agg.best_throughput)),
+                    ("median_best_throughput", Json::Num(agg.median_best_throughput)),
+                    ("median_improvement", Json::Num(agg.median_improvement)),
+                    ("tests_total", Json::Num(agg.tests_total as f64)),
+                    ("failures_total", Json::Num(agg.failures_total as f64)),
+                    ("sim_seconds_total", Json::Num(agg.sim_seconds_total)),
+                ]),
+            ),
+            (
+                "coalescing",
+                Json::obj(vec![
+                    ("requests", Json::Num(self.coalescing.requests as f64)),
+                    ("execute_calls", Json::Num(self.coalescing.execute_calls as f64)),
+                    ("rows_requested", Json::Num(self.coalescing.rows_requested as f64)),
+                    ("rows_executed", Json::Num(self.coalescing.rows_executed as f64)),
+                ]),
+            ),
+            ("cells", Json::Arr(cells)),
+        ])
+    }
+}

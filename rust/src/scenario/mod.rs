@@ -1,0 +1,364 @@
+//! The declarative scenario layer — one spec-to-scheduler path for
+//! every experiment (see `README.md` in this directory).
+//!
+//! The paper's whole point is scalability across *scenarios*: systems,
+//! workloads, deployments, parameters and resource limits must all be
+//! swappable without touching the tuner (§4.2, Fig. 2). This module is
+//! where that swappability becomes a first-class object:
+//!
+//! * [`ScenarioSpec`] names one complete tuning scenario — target
+//!   (single SUT or composed stack), workload, deployment environment,
+//!   optimizer, [`TuningConfig`] budget/round/backend knobs, simulation
+//!   options and seeds. Specs resolve from registry names
+//!   ([`ScenarioSpec::from_names`]) or carry explicit payloads for
+//!   scenarios the registries cannot spell (custom SUT variants,
+//!   wrapped optimizers, non-default starting configurations).
+//! * [`Matrix`] expands cartesian axes — suts × workloads ×
+//!   deployments × optimizers × seeds — into a `Vec<ScenarioSpec>`,
+//!   the declarative form of "run this experiment over that grid".
+//! * [`Fleet`] (`fleet`) compiles a `Vec<ScenarioSpec>` into ready
+//!   [`crate::tuner::Scheduler`] sessions sharing one engine — so
+//!   cross-scenario coalescing keeps working — runs them, and demuxes
+//!   the outcomes into a [`FleetReport`] with per-cell records and
+//!   aggregate statistics.
+//!
+//! Every experiment driver (`crate::experiment`) re-expresses its runs
+//! as scenario specs through this compiler instead of hand-building
+//! scheduler sessions; the `acts fleet` CLI subcommand exposes the
+//! same path as comma-separated axis flags.
+
+pub mod fleet;
+
+pub use fleet::{Fleet, FleetAggregate, FleetCell, FleetReport};
+
+use crate::error::{ActsError, Result};
+use crate::experiment::Lab;
+use crate::manipulator::{SimulatedSut, SimulationOpts, Target};
+use crate::optimizer::Optimizer;
+use crate::sut;
+use crate::tuner::TuningConfig;
+use crate::workload::{DeploymentEnv, WorkloadSpec};
+
+/// Resolve a tuning target by registry name: a single SUT (`mysql`),
+/// or a co-deployed stack joined with `+` (`frontend+mysql`).
+pub fn resolve_target(name: &str) -> Result<Target> {
+    if let Some(spec) = sut::by_name(name) {
+        return Ok(Target::Single(spec));
+    }
+    if name.contains('+') {
+        let members: Option<Vec<_>> = name.split('+').map(sut::by_name).collect();
+        if let Some(members) = members {
+            return Ok(Target::Stack(sut::Composed::new(members)));
+        }
+    }
+    Err(ActsError::InvalidArg(format!("unknown SUT `{name}`")))
+}
+
+/// How a scenario's optimizer is built (see
+/// [`ScenarioSpec::with_optimizer`]).
+pub enum OptimizerSel {
+    /// Resolve [`TuningConfig::optimizer`] from the registry.
+    Registry,
+    /// Caller-supplied factory (`dim -> optimizer`) for scenarios the
+    /// registry cannot spell, e.g. the co-tuning experiment's
+    /// frozen-suffix wrapper.
+    Custom(Box<dyn FnOnce(usize) -> Box<dyn Optimizer> + 'static>),
+}
+
+/// One complete tuning scenario, declaratively: everything needed to
+/// deploy a staging environment and compile a scheduler session —
+/// nothing about *how* it is driven (that is the fleet compiler's and
+/// the scheduler's business).
+pub struct ScenarioSpec {
+    /// Cell label for reports (defaults to
+    /// `sut/workload/deployment/optimizer/s<seed>`).
+    pub label: String,
+    /// The tuning target (single SUT or composed stack).
+    pub target: Target,
+    /// The workload the staging environment binds.
+    pub workload: WorkloadSpec,
+    /// The deployment environment.
+    pub deployment: DeploymentEnv,
+    /// Budget / optimizer / round / backend knobs.
+    pub tuning: TuningConfig,
+    /// Staging-simulation options (noise, restart cost, failures).
+    pub sim: SimulationOpts,
+    /// Manipulator seed (noise / failure-injection streams); defaults
+    /// to the tuning seed, as every registry scenario uses.
+    pub sut_seed: u64,
+    /// Optional unit vector to install (`set_config` + `restart`)
+    /// before the baseline test — the §5.5 "ops team already tuned
+    /// this" starting point. `None` starts at the shipped defaults.
+    pub initial_unit: Option<Vec<f64>>,
+    optimizer: OptimizerSel,
+}
+
+impl ScenarioSpec {
+    /// New spec from resolved payloads; the optimizer comes from the
+    /// registry ([`TuningConfig::optimizer`]).
+    pub fn new(
+        target: Target,
+        workload: WorkloadSpec,
+        deployment: DeploymentEnv,
+        tuning: TuningConfig,
+    ) -> ScenarioSpec {
+        let label = format!(
+            "{}/{}/{}/{}/s{}",
+            target.name(),
+            workload.name,
+            deployment.name,
+            tuning.optimizer,
+            tuning.seed
+        );
+        let sut_seed = tuning.seed;
+        ScenarioSpec {
+            label,
+            target,
+            workload,
+            deployment,
+            tuning,
+            sim: SimulationOpts::default(),
+            sut_seed,
+            initial_unit: None,
+            optimizer: OptimizerSel::Registry,
+        }
+    }
+
+    /// New spec entirely from registry names (the CLI / matrix path):
+    /// SUT (or `a+b` stack), workload and deployment are resolved
+    /// through their registries, erroring on unknown names.
+    pub fn from_names(
+        sut: &str,
+        workload: &str,
+        deployment: &str,
+        tuning: TuningConfig,
+    ) -> Result<ScenarioSpec> {
+        let target = resolve_target(sut)?;
+        let workload = WorkloadSpec::by_name(workload)
+            .ok_or_else(|| ActsError::InvalidArg(format!("unknown workload `{workload}`")))?;
+        let deployment = DeploymentEnv::by_name(deployment)
+            .ok_or_else(|| ActsError::InvalidArg(format!("unknown deployment `{deployment}`")))?;
+        Ok(ScenarioSpec::new(target, workload, deployment, tuning))
+    }
+
+    /// Builder: simulation options.
+    pub fn with_sim(mut self, sim: SimulationOpts) -> Self {
+        self.sim = sim;
+        self
+    }
+
+    /// Builder: report label.
+    pub fn with_label(mut self, label: impl Into<String>) -> Self {
+        self.label = label.into();
+        self
+    }
+
+    /// Builder: manipulator seed, when it must differ from the tuning
+    /// seed.
+    pub fn with_sut_seed(mut self, seed: u64) -> Self {
+        self.sut_seed = seed;
+        self
+    }
+
+    /// Builder: starting configuration (installed before the baseline).
+    pub fn with_initial_unit(mut self, unit: Vec<f64>) -> Self {
+        self.initial_unit = Some(unit);
+        self
+    }
+
+    /// Builder: custom optimizer factory (`dim -> optimizer`),
+    /// overriding the registry resolution of
+    /// [`TuningConfig::optimizer`].
+    pub fn with_optimizer(
+        mut self,
+        f: impl FnOnce(usize) -> Box<dyn Optimizer> + 'static,
+    ) -> Self {
+        self.optimizer = OptimizerSel::Custom(Box::new(f));
+        self
+    }
+
+    /// How this spec's optimizer is built.
+    pub fn optimizer_sel(&self) -> &OptimizerSel {
+        &self.optimizer
+    }
+
+    /// Deploy this scenario's staging environment on `lab`'s shared
+    /// engine (the spec → [`SimulatedSut`] half of the compiler; used
+    /// directly by evaluation-only experiments like the Figure-1
+    /// atlas, which sweep surfaces without tuning sessions).
+    pub fn deploy(&self, lab: &Lab) -> SimulatedSut {
+        lab.deploy(
+            self.target.clone(),
+            self.workload.clone(),
+            self.deployment.clone(),
+            self.sim.clone(),
+            self.sut_seed,
+        )
+    }
+}
+
+/// Cartesian scenario axes: expands suts × workloads × deployments ×
+/// optimizers × seeds (seeds innermost, suts outermost) into
+/// [`ScenarioSpec`]s sharing one base [`TuningConfig`] and one set of
+/// simulation options.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    /// SUT registry names (or `a+b` stacks).
+    pub suts: Vec<String>,
+    /// Workload registry names.
+    pub workloads: Vec<String>,
+    /// Deployment registry names (see [`DeploymentEnv::by_name`]).
+    pub deployments: Vec<String>,
+    /// Optimizer registry names.
+    pub optimizers: Vec<String>,
+    /// Tuning seeds (one session per seed per cell).
+    pub seeds: Vec<u64>,
+    /// Base tuning configuration; `optimizer` and `seed` are
+    /// overridden per cell.
+    pub base: TuningConfig,
+    /// Simulation options applied to every cell.
+    pub sim: SimulationOpts,
+}
+
+impl Default for Matrix {
+    /// A 1-cell matrix of the default scenario.
+    fn default() -> Self {
+        Matrix {
+            suts: vec!["mysql".into()],
+            workloads: vec!["zipfian-rw".into()],
+            deployments: vec!["standalone".into()],
+            optimizers: vec!["rrs".into()],
+            seeds: vec![1],
+            base: TuningConfig::default(),
+            sim: SimulationOpts::default(),
+        }
+    }
+}
+
+impl Matrix {
+    /// Number of cells the expansion will produce.
+    pub fn cells(&self) -> usize {
+        self.suts.len()
+            * self.workloads.len()
+            * self.deployments.len()
+            * self.optimizers.len()
+            * self.seeds.len()
+    }
+
+    /// Expand into one [`ScenarioSpec`] per cell, in row-major axis
+    /// order (suts outermost, seeds innermost). Errors on empty axes
+    /// and unknown registry names.
+    pub fn expand(&self) -> Result<Vec<ScenarioSpec>> {
+        if self.cells() == 0 {
+            return Err(ActsError::InvalidArg(
+                "scenario matrix has an empty axis (zero cells)".into(),
+            ));
+        }
+        let mut specs = Vec::with_capacity(self.cells());
+        for sut in &self.suts {
+            for workload in &self.workloads {
+                for deployment in &self.deployments {
+                    for optimizer in &self.optimizers {
+                        for &seed in &self.seeds {
+                            let tuning = TuningConfig {
+                                optimizer: optimizer.clone(),
+                                seed,
+                                ..self.base.clone()
+                            };
+                            specs.push(
+                                ScenarioSpec::from_names(sut, workload, deployment, tuning)?
+                                    .with_sim(self.sim.clone()),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        Ok(specs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_resolves_from_registry_names() {
+        let s = ScenarioSpec::from_names(
+            "tomcat",
+            "page-mix",
+            "arm-vm-interference-0.55",
+            TuningConfig { seed: 7, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(s.target.name(), "tomcat");
+        assert_eq!(s.workload.name, "page-mix");
+        assert_eq!(s.deployment.name, "arm-vm-interference-0.55");
+        assert_eq!(s.sut_seed, 7);
+        assert_eq!(s.label, "tomcat/page-mix/arm-vm-interference-0.55/rrs/s7");
+    }
+
+    #[test]
+    fn spec_resolves_stacks() {
+        let s = ScenarioSpec::from_names(
+            "frontend+mysql",
+            "zipfian-rw",
+            "standalone",
+            TuningConfig::default(),
+        )
+        .unwrap();
+        assert!(matches!(s.target, Target::Stack(_)));
+    }
+
+    #[test]
+    fn unknown_names_error() {
+        let cfg = TuningConfig::default();
+        assert!(ScenarioSpec::from_names("nope", "zipfian-rw", "standalone", cfg.clone()).is_err());
+        assert!(ScenarioSpec::from_names("mysql", "nope", "standalone", cfg.clone()).is_err());
+        assert!(ScenarioSpec::from_names("mysql", "zipfian-rw", "nope", cfg).is_err());
+    }
+
+    #[test]
+    fn matrix_expands_cartesian_axes_in_order() {
+        let m = Matrix {
+            suts: vec!["mysql".into(), "tomcat".into()],
+            workloads: vec!["uniform-read".into(), "zipfian-rw".into()],
+            deployments: vec!["standalone".into()],
+            optimizers: vec!["rrs".into(), "gp".into()],
+            seeds: vec![1, 2],
+            base: TuningConfig { budget_tests: 9, ..Default::default() },
+            sim: SimulationOpts::ideal(),
+        };
+        assert_eq!(m.cells(), 16);
+        let specs = m.expand().unwrap();
+        assert_eq!(specs.len(), 16);
+        // seeds innermost, suts outermost
+        assert_eq!(specs[0].label, "mysql/uniform-read/standalone/rrs/s1");
+        assert_eq!(specs[1].label, "mysql/uniform-read/standalone/rrs/s2");
+        assert_eq!(specs[2].label, "mysql/uniform-read/standalone/gp/s1");
+        assert_eq!(specs[15].label, "tomcat/zipfian-rw/standalone/gp/s2");
+        for s in &specs {
+            assert_eq!(s.tuning.budget_tests, 9);
+            assert_eq!(s.sut_seed, s.tuning.seed);
+            assert_eq!(s.sim.noise_sigma, 0.0, "sim opts must propagate");
+        }
+    }
+
+    #[test]
+    fn empty_axis_is_an_error() {
+        let m = Matrix { seeds: vec![], ..Default::default() };
+        assert_eq!(m.cells(), 0);
+        assert!(m.expand().is_err());
+    }
+
+    #[test]
+    fn matrix_with_unknown_name_errors() {
+        let m = Matrix { optimizers: vec!["nope".into()], ..Default::default() };
+        // optimizer names are validated at session compile, not expand
+        // (the registry lives behind TuningConfig) — but unknown SUTs
+        // fail the expansion itself
+        assert!(m.expand().is_ok());
+        let m = Matrix { suts: vec!["nope".into()], ..Default::default() };
+        assert!(m.expand().is_err());
+    }
+}

@@ -18,7 +18,13 @@
 //!
 //! [`Scheduler::run`] (the production path, [`Scheduler::run_pipelined`])
 //! overlaps staging with execution: the sessions are split into two
-//! buffers (even/odd slots) that tick out of phase. While buffer A's
+//! buffers that tick out of phase — balanced by **estimated round
+//! cost** (round size × the manipulator's
+//! [`SystemManipulator::est_test_cost`] estimate, greedy
+//! longest-processing-time), so a heterogeneous fleet (one 16-wide
+//! round next to round-size-1 sessions) does not stall one buffer
+//! behind the other. Buffer assignment is purely a scheduling choice:
+//! per-session records are independent of it (tested). While buffer A's
 //! coalesced execute runs on a dedicated worker thread, buffer B's
 //! `ask_batch` + `stage_tests` staging — and the demuxed absorb of the
 //! round that just finished — proceed on the scheduler thread; the two
@@ -170,10 +176,12 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
         if self.slots.len() < 2 {
             return self.run_sequential();
         }
-        let groups: [Vec<usize>; 2] = {
-            let (even, odd) = (0..self.slots.len()).partition(|i| i % 2 == 0);
-            [even, odd]
-        };
+        let costs: Vec<f64> = self
+            .slots
+            .iter()
+            .map(|s| s.session.config().round_size as f64 * s.sut.est_test_cost())
+            .collect();
+        let groups = partition_by_cost(&costs);
 
         let (job_tx, job_rx) = mpsc::channel::<Pool>();
         let (res_tx, res_rx) = mpsc::channel::<(Pool, PoolResults)>();
@@ -337,6 +345,33 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
     }
 }
 
+/// Split sessions across the two pipeline buffers by estimated round
+/// cost (greedy longest-processing-time: sessions sorted by cost
+/// descending — index ascending on ties — each join the lighter
+/// buffer), so heterogeneous fleets with very uneven round costs
+/// balance instead of stalling one buffer. Deterministic; with ≥ 2
+/// sessions both buffers are non-empty (every cost is floored to a
+/// positive load). Buffer membership never affects per-session
+/// results — only where rounds execute (the equivalence tests pin
+/// this).
+fn partition_by_cost(costs: &[f64]) -> [Vec<usize>; 2] {
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| {
+        costs[b].partial_cmp(&costs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut groups: [Vec<usize>; 2] = [Vec::new(), Vec::new()];
+    let mut load = [0.0f64; 2];
+    for i in order {
+        let g = usize::from(load[0] > load[1]);
+        groups[g].push(i);
+        load[g] += costs[i].max(f64::MIN_POSITIVE);
+    }
+    for g in &mut groups {
+        g.sort_unstable();
+    }
+    groups
+}
+
 /// Coalesced execute of one pool: flatten every staged round's
 /// requests, group them by engine instance, and let each engine merge
 /// same-binding requests into shared plans. Results come back per
@@ -384,4 +419,59 @@ fn execute_pool(pool: &Pool) -> PoolResults {
         }
     }
     (member_perfs, failed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::partition_by_cost;
+
+    fn load(costs: &[f64], group: &[usize]) -> f64 {
+        group.iter().map(|&i| costs[i]).sum()
+    }
+
+    #[test]
+    fn cost_partition_covers_every_index_once() {
+        let costs = [3.0, 1.0, 4.0, 1.0, 5.0];
+        let groups = partition_by_cost(&costs);
+        let mut all: Vec<usize> = groups.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+        assert!(!groups[0].is_empty() && !groups[1].is_empty());
+    }
+
+    #[test]
+    fn heavy_sessions_split_across_buffers() {
+        // index parity would put both heavy sessions (0 and 4) in the
+        // even buffer and stall the odd one; cost balancing must not
+        let costs = [160.0, 1.0, 1.0, 1.0, 160.0, 1.0];
+        let groups = partition_by_cost(&costs);
+        assert_ne!(
+            groups[0].contains(&0),
+            groups[0].contains(&4),
+            "the two heavy sessions must land in different buffers: {groups:?}"
+        );
+        let (a, b) = (load(&costs, &groups[0]), load(&costs, &groups[1]));
+        assert!((a - b).abs() <= 2.0, "buffer loads {a} vs {b} not balanced");
+    }
+
+    #[test]
+    fn equal_costs_alternate_like_parity() {
+        let costs = [7.0; 8];
+        let groups = partition_by_cost(&costs);
+        assert_eq!(groups[0], vec![0, 2, 4, 6]);
+        assert_eq!(groups[1], vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn zero_costs_still_fill_both_buffers() {
+        let groups = partition_by_cost(&[0.0, 0.0, 0.0]);
+        assert!(!groups[0].is_empty() && !groups[1].is_empty());
+        assert_eq!(groups.iter().map(Vec::len).sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn deterministic_for_equal_inputs() {
+        let costs = [2.0, 9.0, 9.0, 2.0, 5.0];
+        assert_eq!(partition_by_cost(&costs), partition_by_cost(&costs));
+    }
 }

@@ -187,6 +187,41 @@ impl DeploymentEnv {
         self.features[dep::INTERFERENCE] = level.clamp(0.0, 1.0);
         self
     }
+
+    /// Resolve a deployment by registry name, so deployments are
+    /// nameable from the CLI and scenario specs:
+    ///
+    /// * `standalone`, `arm-vm` — the fixed environments;
+    /// * `cluster-<n>` — an n-node cluster, e.g. `cluster-8`;
+    /// * `<deployment>-interference-<f>` — any of the above with the
+    ///   interference feature pinned to `f` in `[0, 1]`, e.g.
+    ///   `arm-vm-interference-0.55` (the §5.2 fully-utilised VM).
+    ///
+    /// Round-trips: the resolved environment's `name` is the input
+    /// string verbatim.
+    pub fn by_name(name: &str) -> Option<DeploymentEnv> {
+        if let Some((base, level)) = name.rsplit_once("-interference-") {
+            let level: f32 = level.parse().ok()?;
+            if !(0.0..=1.0).contains(&level) {
+                return None;
+            }
+            let mut d = Self::by_name(base)?.with_interference(level);
+            d.name = name.to_string();
+            return Some(d);
+        }
+        match name {
+            "standalone" => Some(Self::standalone()),
+            "arm-vm" => Some(Self::arm_vm()),
+            _ => name
+                .strip_prefix("cluster-")
+                .and_then(|n| n.parse::<usize>().ok())
+                .map(Self::cluster),
+        }
+    }
+
+    /// Registry name patterns (`acts list deployments`).
+    pub const NAME_PATTERNS: &'static [&'static str] =
+        &["standalone", "arm-vm", "cluster-<n>", "<deployment>-interference-<f>"];
 }
 
 #[cfg(test)]
@@ -236,5 +271,58 @@ mod tests {
         let w = WorkloadSpec::uniform_read().with_duration(60.0).with_hits_per_txn(5.0);
         assert_eq!(w.duration_s, 60.0);
         assert_eq!(w.hits_per_txn, 5.0);
+    }
+
+    #[test]
+    fn deployment_registry_round_trips() {
+        for name in [
+            "standalone",
+            "arm-vm",
+            "cluster-8",
+            "cluster-64",
+            "standalone-interference-0.7",
+            "arm-vm-interference-0.55",
+            "cluster-8-interference-0.25",
+        ] {
+            let d = DeploymentEnv::by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(d.name, name, "registry name must round-trip");
+        }
+    }
+
+    #[test]
+    fn deployment_registry_matches_constructors() {
+        assert_eq!(
+            DeploymentEnv::by_name("standalone").unwrap().features(),
+            DeploymentEnv::standalone().features()
+        );
+        assert_eq!(
+            DeploymentEnv::by_name("arm-vm").unwrap().features(),
+            DeploymentEnv::arm_vm().features()
+        );
+        assert_eq!(
+            DeploymentEnv::by_name("cluster-8").unwrap().features(),
+            DeploymentEnv::cluster(8).features()
+        );
+        assert_eq!(
+            DeploymentEnv::by_name("arm-vm-interference-0.55").unwrap().features(),
+            DeploymentEnv::arm_vm().with_interference(0.55).features()
+        );
+    }
+
+    #[test]
+    fn deployment_registry_rejects_garbage() {
+        for name in [
+            "nope",
+            "cluster-",
+            "cluster-x",
+            "cluster--3",
+            "standalone-interference-",
+            "standalone-interference-abc",
+            "standalone-interference-1.5",
+            "standalone-interference--0.2",
+            "nope-interference-0.5",
+        ] {
+            assert!(DeploymentEnv::by_name(name).is_none(), "`{name}` must not resolve");
+        }
     }
 }

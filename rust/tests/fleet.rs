@@ -1,0 +1,179 @@
+//! Integration: the scenario layer and fleet compiler end-to-end.
+//!
+//! The headline guarantee: every cell of a mixed scenario matrix
+//! produces records **bit-identical** to running that cell's session
+//! alone through `tune_batched` — compiling scenarios into one
+//! concurrent fleet changes where rounds execute, never what they
+//! compute. Pinned to the native backend, whose per-row results are
+//! bitwise batch-size invariant (PJRT executes fleet and solo runs in
+//! different bucket shapes, so its per-row f32 drift would feed the
+//! optimizers and legitimately diverge later rounds).
+
+use acts::experiment::Lab;
+use acts::manipulator::{SimulationOpts, Target};
+use acts::runtime::BackendKind;
+use acts::scenario::{Fleet, Matrix, ScenarioSpec};
+use acts::sut;
+use acts::tuner::{self, TuningConfig};
+use acts::workload::{DeploymentEnv, WorkloadSpec};
+
+const BUDGET: u64 = 9; // baseline + two rounds of 4
+const ROUND: usize = 4;
+
+fn native_lab() -> Lab {
+    Lab::with_backend(BackendKind::Native).expect("native backend")
+}
+
+#[test]
+fn fleet_cells_match_solo_runs_bit_for_bit() {
+    let lab = native_lab();
+    // 2 suts x 2 workloads x 2 optimizers x 2 seeds = 16 mixed cells
+    let matrix = Matrix {
+        suts: vec!["mysql".into(), "tomcat".into()],
+        workloads: vec!["uniform-read".into(), "zipfian-rw".into()],
+        deployments: vec!["standalone".into()],
+        optimizers: vec!["rrs".into(), "gp".into()],
+        seeds: vec![11, 12],
+        base: TuningConfig { budget_tests: BUDGET, round_size: ROUND, ..Default::default() },
+        sim: SimulationOpts::default(),
+    };
+    assert_eq!(matrix.cells(), 16);
+    let report = Fleet::compile(&lab, matrix.expand().unwrap()).unwrap().run();
+    assert_eq!(report.cells.len(), 16);
+
+    for cell in &report.cells {
+        let out = cell.outcome.as_ref().unwrap_or_else(|e| panic!("{}: {e}", cell.label));
+        // replay the same cell alone, straight through tune_batched
+        let mut sut = lab.deploy(
+            Target::Single(sut::by_name(&cell.sut).unwrap()),
+            WorkloadSpec::by_name(&cell.workload).unwrap(),
+            DeploymentEnv::by_name(&cell.deployment).unwrap(),
+            SimulationOpts::default(),
+            cell.seed,
+        );
+        let cfg = TuningConfig {
+            budget_tests: BUDGET,
+            optimizer: cell.optimizer.clone(),
+            seed: cell.seed,
+            round_size: ROUND,
+            ..Default::default()
+        };
+        let solo = tuner::tune_batched(&mut sut, &cfg).unwrap();
+        assert_eq!(solo.records, out.records, "{}: records diverged", cell.label);
+        assert_eq!(solo.tests_used, out.tests_used, "{}", cell.label);
+        assert_eq!(solo.failures, out.failures, "{}", cell.label);
+        assert_eq!(solo.best_unit, out.best_unit, "{}", cell.label);
+        assert_eq!(solo.best, out.best, "{}", cell.label);
+        assert_eq!(solo.sim_seconds, out.sim_seconds, "{}", cell.label);
+    }
+
+    // aggregate over the full fleet
+    let agg = report.aggregate();
+    assert_eq!(agg.cells, 16);
+    assert_eq!(agg.cells_ok, 16);
+    assert_eq!(agg.cells_failed, 0);
+    assert_eq!(agg.tests_total, 16 * BUDGET);
+    assert!(agg.best_throughput > 0.0);
+    assert!(agg.best_throughput >= agg.median_best_throughput);
+    assert!(agg.sim_seconds_total > 0.0);
+
+    // the fleet shares one engine: cells with the same staging binding
+    // coalesce their rounds, so physical executes < logical requests
+    assert!(
+        report.coalescing.execute_calls < report.coalescing.requests,
+        "no cross-scenario coalescing: {} executes for {} requests",
+        report.coalescing.execute_calls,
+        report.coalescing.requests
+    );
+}
+
+#[test]
+fn fleet_report_json_is_well_formed() {
+    let lab = native_lab();
+    let matrix = Matrix {
+        suts: vec!["mysql".into()],
+        optimizers: vec!["rrs".into()],
+        seeds: vec![1, 2],
+        base: TuningConfig { budget_tests: 5, round_size: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let report = Fleet::compile(&lab, matrix.expand().unwrap()).unwrap().run();
+    let json = report.json().to_string();
+    assert!(json.contains("\"aggregate\""), "{json}");
+    assert!(json.contains("\"cells_ok\":2"), "{json}");
+    assert!(json.contains("\"coalescing\""), "{json}");
+    assert!(json.contains("\"label\":\"mysql/zipfian-rw/standalone/rrs/s1\""), "{json}");
+    assert!(json.contains("\"best_curve\""), "{json}");
+    assert_eq!(json.matches('{').count(), json.matches('}').count());
+    assert_eq!(json.matches('[').count(), json.matches(']').count());
+}
+
+#[test]
+fn fleet_isolates_per_cell_failures() {
+    // a cell whose optimizer name does not resolve must fail at
+    // compile; a cell whose environment is dead must fail at run —
+    // without disturbing its neighbours
+    let lab = native_lab();
+    let bad = Matrix { optimizers: vec!["nope".into()], ..Default::default() };
+    assert!(
+        Fleet::compile(&lab, bad.expand().unwrap()).is_err(),
+        "unknown optimizer must fail the compile"
+    );
+
+    // dead staging environment: every restart crash-loops, so the
+    // baseline never completes and the cell dies; the healthy cell
+    // finishes its whole budget
+    let cfg = TuningConfig { budget_tests: 8, round_size: 2, ..Default::default() };
+    let dead = ScenarioSpec::from_names("mysql", "zipfian-rw", "standalone", cfg.clone())
+        .unwrap()
+        .with_sim(SimulationOpts { restart_failure_p: 1.0, test_failure_p: 1.0, ..SimulationOpts::default() })
+        .with_label("dead cell");
+    let healthy = ScenarioSpec::from_names("mysql", "zipfian-rw", "standalone", cfg.clone()).unwrap();
+    let report = Fleet::compile(&lab, vec![dead, healthy]).unwrap().run();
+    assert!(report.cells[0].outcome.is_err(), "dead environment must fail its cell");
+    let ok = report.cells[1].outcome.as_ref().unwrap();
+    assert_eq!(ok.tests_used, 8);
+    let agg = report.aggregate();
+    assert_eq!((agg.cells_ok, agg.cells_failed), (1, 1));
+
+    // a starting configuration that can never install (every restart
+    // crash-loops) pre-fails its cell at compile — same isolation
+    let space = acts::sut::mysql().space;
+    let default_unit = space.encode(&space.default_config());
+    let crashy = ScenarioSpec::from_names("mysql", "zipfian-rw", "standalone", cfg.clone())
+        .unwrap()
+        .with_sim(SimulationOpts { restart_failure_p: 1.0, ..SimulationOpts::default() })
+        .with_initial_unit(default_unit)
+        .with_label("crash-looping install");
+    let healthy = ScenarioSpec::from_names("mysql", "zipfian-rw", "standalone", cfg).unwrap();
+    let fleet = Fleet::compile(&lab, vec![crashy, healthy]).unwrap();
+    assert_eq!(fleet.session_count(), 2);
+    let report = fleet.run();
+    let err = report.cells[0].outcome.as_ref().unwrap_err();
+    assert!(err.to_string().contains("never installed"), "{err}");
+    assert_eq!(report.cells[1].outcome.as_ref().unwrap().tests_used, 8);
+}
+
+#[test]
+fn initial_unit_spec_starts_from_that_configuration() {
+    let lab = native_lab();
+    let spec = sut::mysql();
+    let space = spec.space.clone();
+    // a non-default starting unit (snapped by set_config)
+    let unit: Vec<f64> = (0..space.dim()).map(|i| ((i % 4) as f64 + 0.5) / 4.0).collect();
+    let snapped = space.snap(&unit);
+    let cfg = TuningConfig { budget_tests: 1, ..Default::default() };
+    let scenario = ScenarioSpec::new(
+        Target::Single(spec),
+        WorkloadSpec::zipfian_read_write(),
+        DeploymentEnv::standalone(),
+        cfg,
+    )
+    .with_sim(SimulationOpts::ideal())
+    .with_initial_unit(unit);
+    let report = Fleet::compile(&lab, vec![scenario]).unwrap().run();
+    let out = report.cells[0].outcome.as_ref().unwrap();
+    // budget 1 = baseline only, measured at the installed configuration
+    assert_eq!(out.records.len(), 1);
+    assert_eq!(out.best_unit, snapped, "baseline must run at the installed unit");
+}
