@@ -10,6 +10,7 @@
 //! the flexible architecture refuses to reuse samples across
 //! deployments (§4.2, difference 2).
 
+use acts::budget::Budget;
 use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::Lab;
 use acts::manipulator::{SimulationOpts, Target};
@@ -60,7 +61,7 @@ fn main() {
                     seed,
                 );
                 let cfg = TuningConfig {
-                    budget_tests: budget,
+                    budget: Budget::tests(budget),
                     optimizer: name.to_string(),
                     seed,
                     round_size: round_size_for(name),
@@ -93,7 +94,7 @@ fn main() {
     let session_budget = 100u64;
     for name in OPTIMIZER_NAMES {
         let cfg = TuningConfig {
-            budget_tests: session_budget,
+            budget: Budget::tests(session_budget),
             optimizer: name.to_string(),
             seed: 1,
             round_size: round_size_for(name),
@@ -126,7 +127,8 @@ fn main() {
             SimulationOpts::default(),
             seed,
         );
-        let cfg = TuningConfig { budget_tests: 80, seed, round_size: 16, ..Default::default() };
+        let cfg =
+            TuningConfig { budget: Budget::tests(80), seed, round_size: 16, ..Default::default() };
         let out = tuner::tune_batched(&mut sut, &cfg).unwrap();
         (out.best_unit.clone(), out.best.throughput)
     };

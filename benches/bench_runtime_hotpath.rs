@@ -13,15 +13,18 @@
 //!   5x target is a PJRT dispatch-amortisation number; the native
 //!   backend has almost no per-call dispatch to amortise);
 //! * multi-session scheduling: 8 concurrent round-size-32 sessions,
-//!   three ways — back-to-back `tune_batched`, the sequential
-//!   coalescing scheduler (PR 2), and the double-buffered pipelined
-//!   scheduler (staging overlaps execution on a worker thread) — with
-//!   the pipelined ≥1.3x-over-sequential-scheduler acceptance gate.
+//!   several ways — back-to-back `tune_batched`, the sequential
+//!   coalescing scheduler (PR 2), and the N-lane work-stealing
+//!   pipelined scheduler at 2/4/8 lanes (staging overlaps execution on
+//!   a shared worker pool) — with the 2-lane
+//!   ≥1.3x-over-sequential-scheduler acceptance gate and lane-scaling
+//!   rows recorded in the json.
 //!
 //! Runs on whatever backend `Lab::new` resolves (PJRT with artifacts,
 //! the native CPU backend anywhere else), so the perf trajectory is
 //! tracked in CI too.
 
+use acts::budget::Budget;
 use acts::benchkit::{black_box, Bench, BenchConfig};
 use acts::experiment::Lab;
 use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
@@ -102,7 +105,7 @@ fn main() {
             )
         };
         let seq_cfg = TuningConfig {
-            budget_tests: session_budget,
+            budget: Budget::tests(session_budget),
             seed: 7,
             round_size: 1,
             ..Default::default()
@@ -116,7 +119,7 @@ fn main() {
             },
         );
         let bat_cfg = TuningConfig {
-            budget_tests: session_budget,
+            budget: Budget::tests(session_budget),
             seed: 7,
             round_size: 64,
             ..Default::default()
@@ -151,7 +154,7 @@ fn main() {
             )
         };
         let cfg_for = |seed| TuningConfig {
-            budget_tests: sched_budget,
+            budget: Budget::tests(sched_budget),
             seed,
             round_size: 32,
             ..Default::default()
@@ -184,19 +187,26 @@ fn main() {
                 black_box(schedule_and_run(SchedulerMode::Sequential));
             },
         );
-        b.bench_units(
-            format!("{n_sessions} sessions pipelined (double-buffered ticks)"),
-            Some(aggregate),
-            || {
-                black_box(schedule_and_run(SchedulerMode::Pipelined));
-            },
-        );
+        // lane scaling: the N-lane work-stealing pipeline at 2 (the
+        // historical double buffer), 4 and 8 lanes — same sessions,
+        // same results (lane-invariant, tested), different overlap
+        for lanes in [2usize, 4, 8] {
+            b.bench_units(
+                format!("{n_sessions} sessions pipelined ({lanes} lanes)"),
+                Some(aggregate),
+                || {
+                    black_box(schedule_and_run(SchedulerMode::Pipelined { lanes }));
+                },
+            );
+        }
 
         // one instrumented run per scheduler mode for the coalescing
         // confirmation lines
-        for (mode, label) in
-            [(SchedulerMode::Sequential, "sequential"), (SchedulerMode::Pipelined, "pipelined")]
-        {
+        for (mode, label) in [
+            (SchedulerMode::Sequential, "sequential"),
+            (SchedulerMode::Pipelined { lanes: 2 }, "pipelined(2)"),
+            (SchedulerMode::Pipelined { lanes: 4 }, "pipelined(4)"),
+        ] {
             let before = engine.stats();
             let _ = black_box(schedule_and_run(mode));
             let after = engine.stats();
@@ -252,12 +262,15 @@ fn main() {
     // backend-independent: the overlap is real work on either backend)
     let fleet_seq = session_rate("sessions sequential");
     let fleet_sched = session_rate("sessions scheduled");
-    let fleet_pipe = session_rate("sessions pipelined");
+    let fleet_pipe = session_rate("sessions pipelined (2 lanes)");
+    let fleet_pipe4 = session_rate("sessions pipelined (4 lanes)");
+    let fleet_pipe8 = session_rate("sessions pipelined (8 lanes)");
     let sched_speedup = if fleet_seq > 0.0 { fleet_sched / fleet_seq } else { 0.0 };
     let pipeline_speedup = if fleet_sched > 0.0 { fleet_pipe / fleet_sched } else { 0.0 };
     println!(
         "8-session aggregate config-evals/s: back-to-back {fleet_seq:.1}, \
-         scheduled {fleet_sched:.1}, pipelined {fleet_pipe:.1}"
+         scheduled {fleet_sched:.1}, pipelined {fleet_pipe:.1} (2 lanes), \
+         {fleet_pipe4:.1} (4 lanes), {fleet_pipe8:.1} (8 lanes)"
     );
     println!("scheduler speedup: {sched_speedup:.1}x (target >= {sched_gate}x)");
     println!("pipelined speedup over sequential scheduler: {pipeline_speedup:.2}x (target >= 1.3x)");
@@ -269,6 +282,14 @@ fn main() {
         ("session_speedup_batched_vs_sequential", Json::Num(speedup)),
         ("scheduler_speedup_8x32_vs_sequential", Json::Num(sched_speedup)),
         ("pipeline_speedup_vs_sequential_scheduler", Json::Num(pipeline_speedup)),
+        (
+            "pipeline_lanes4_speedup_vs_2",
+            Json::Num(if fleet_pipe > 0.0 { fleet_pipe4 / fleet_pipe } else { 0.0 }),
+        ),
+        (
+            "pipeline_lanes8_speedup_vs_2",
+            Json::Num(if fleet_pipe > 0.0 { fleet_pipe8 / fleet_pipe } else { 0.0 }),
+        ),
     ]);
     let out_path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime_hotpath.json");

@@ -4,6 +4,7 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+use acts::budget::Budget;
 use acts::experiment::Lab;
 use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
 use acts::sut;
@@ -25,7 +26,12 @@ fn main() -> acts::Result<()> {
     );
 
     // 3. run a resource-limited tuning session: LHS + RRS, 30 tests
-    let cfg = TuningConfig { budget_tests: 30, optimizer: "rrs".into(), seed: 42, ..Default::default() };
+    let cfg = TuningConfig {
+        budget: Budget::tests(30),
+        optimizer: "rrs".into(),
+        seed: 42,
+        ..Default::default()
+    };
     let out = tuner::tune(&mut sut, &cfg)?;
 
     // 4. read the results

@@ -1,0 +1,445 @@
+//! First-class resource budgets — the paper's "resource limit" (§3)
+//! generalised from a bare staged-test count into a composite, nameable
+//! ledger (see `README.md` in this directory).
+//!
+//! The ACTS problem is *best configuration within a resource limit*,
+//! and the related work makes the limit's *kind* part of the problem:
+//! BestConfig frames tuning as best-config-in-a-budget, and Tuneful
+//! shows that whether the budget is counted in samples or in time
+//! changes which tuner wins. A [`Budget`] therefore carries up to three
+//! dimensions, and is exhausted as soon as **any** of them is:
+//!
+//! * **tests** — staged tests (the paper's original limit; failures
+//!   charge it too, §2.3);
+//! * **simsec** — simulated staging-environment wall-clock seconds
+//!   (restarts + settle + test windows, as measured by the
+//!   manipulator's clock);
+//! * **cost** — abstract cost units, charged per staged test at the
+//!   driver's per-test estimate
+//!   ([`crate::manipulator::SystemManipulator::est_test_cost`]) — the
+//!   "cloud bill" dimension when wall-clock and money diverge.
+//!
+//! Budgets are **nameable** ([`Budget::by_name`]): `tests-200`,
+//! `simsec-3600`, `cost-900`, or any `+`-joined combination
+//! (`tests-200+simsec-900`). That makes resource limits a scenario axis
+//! like any other: `acts fleet --budgets tests-100,simsec-600` sweeps
+//! them exactly as `--workloads` sweeps workloads.
+//!
+//! The [`Ledger`] is the mutable half: [`crate::tuner::TuningSession`]
+//! charges it per executed row and observes the manipulator clock at
+//! every round boundary, shrinking its final rounds to the tightest
+//! remaining dimension and reporting *which* dimension ended the run
+//! ([`StopCause`]). A tests-only budget keeps the pre-ledger semantics
+//! bit-for-bit (asserted against the frozen reference loop in the tuner
+//! tests).
+
+use std::fmt;
+
+/// One budget dimension (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BudgetDim {
+    /// Staged-test count (`tests-<n>`).
+    Tests,
+    /// Simulated staging wall-clock seconds (`simsec-<s>`).
+    SimSeconds,
+    /// Abstract cost units (`cost-<c>`).
+    CostUnits,
+}
+
+impl fmt::Display for BudgetDim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BudgetDim::Tests => "tests",
+            BudgetDim::SimSeconds => "simsec",
+            BudgetDim::CostUnits => "cost",
+        })
+    }
+}
+
+/// Why a completed session stopped proposing rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopCause {
+    /// A budget dimension exhausted (the normal way to finish).
+    Exhausted(BudgetDim),
+    /// The consecutive-failure cap tripped at a round boundary.
+    FailureCap,
+}
+
+impl fmt::Display for StopCause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StopCause::Exhausted(dim) => write!(f, "budget:{dim}"),
+            StopCause::FailureCap => f.write_str("failure-cap"),
+        }
+    }
+}
+
+/// A composite resource limit: up to three dimensions, exhausted when
+/// ANY of them is. Build with the dimension constructors and the `and_*`
+/// combinators, or resolve a name via [`Budget::by_name`]. At least one
+/// dimension must be bounded ([`Budget::is_bounded`]) for a session to
+/// terminate; [`crate::tuner::TuningSession`] asserts it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Budget {
+    /// Staged tests allowed (baseline included); `None` = unlimited.
+    pub tests: Option<u64>,
+    /// Simulated staging seconds allowed; `None` = unlimited.
+    pub sim_seconds: Option<f64>,
+    /// Abstract cost units allowed; `None` = unlimited.
+    pub cost_units: Option<f64>,
+}
+
+impl Budget {
+    /// A pure staged-test budget — the paper's original resource limit
+    /// (`tests-<n>`), bit-identical to the historical `budget_tests`
+    /// counting.
+    pub fn tests(n: u64) -> Budget {
+        Budget { tests: Some(n), sim_seconds: None, cost_units: None }
+    }
+
+    /// A pure simulated-wall-clock budget (`simsec-<s>`).
+    pub fn sim_seconds(s: f64) -> Budget {
+        Budget { tests: None, sim_seconds: Some(s), cost_units: None }
+    }
+
+    /// A pure abstract-cost budget (`cost-<c>`).
+    pub fn cost_units(c: f64) -> Budget {
+        Budget { tests: None, sim_seconds: None, cost_units: Some(c) }
+    }
+
+    /// Combinator: also bound staged tests.
+    pub fn and_tests(mut self, n: u64) -> Budget {
+        self.tests = Some(n);
+        self
+    }
+
+    /// Combinator: also bound simulated seconds.
+    pub fn and_sim_seconds(mut self, s: f64) -> Budget {
+        self.sim_seconds = Some(s);
+        self
+    }
+
+    /// Combinator: also bound cost units.
+    pub fn and_cost_units(mut self, c: f64) -> Budget {
+        self.cost_units = Some(c);
+        self
+    }
+
+    /// True when at least one dimension is bounded (a session over an
+    /// unbounded budget would never terminate).
+    pub fn is_bounded(&self) -> bool {
+        self.tests.is_some() || self.sim_seconds.is_some() || self.cost_units.is_some()
+    }
+
+    /// True when every bounded dimension carries a usable limit:
+    /// `tests >= 1` (the baseline must fit) and finite, strictly
+    /// positive time/cost limits. A NaN or non-positive limit would
+    /// never compare as exhausted while admitting zero further tests —
+    /// a session that spins forever — so [`crate::tuner::TuningSession`]
+    /// asserts this alongside [`Budget::is_bounded`]. Everything
+    /// [`Budget::by_name`] resolves is valid by construction.
+    pub fn is_valid(&self) -> bool {
+        self.tests != Some(0)
+            && self.sim_seconds.map_or(true, |s| s.is_finite() && s > 0.0)
+            && self.cost_units.map_or(true, |c| c.is_finite() && c > 0.0)
+    }
+
+    /// Resolve a budget by registry name: `tests-<n>`, `simsec-<s>`,
+    /// `cost-<c>`, or any `+`-joined combination of distinct dimensions
+    /// (`tests-200+simsec-900`). Values must be positive and finite
+    /// (`tests` at least 1 — the baseline test must fit); duplicate
+    /// dimensions and unknown prefixes do not resolve.
+    pub fn by_name(name: &str) -> Option<Budget> {
+        let mut budget = Budget { tests: None, sim_seconds: None, cost_units: None };
+        for term in name.split('+') {
+            if let Some(v) = term.strip_prefix("tests-") {
+                let n: u64 = v.parse().ok()?;
+                if n == 0 || budget.tests.replace(n).is_some() {
+                    return None;
+                }
+            } else if let Some(v) = term.strip_prefix("simsec-") {
+                let s = parse_positive(v)?;
+                if budget.sim_seconds.replace(s).is_some() {
+                    return None;
+                }
+            } else if let Some(v) = term.strip_prefix("cost-") {
+                let c = parse_positive(v)?;
+                if budget.cost_units.replace(c).is_some() {
+                    return None;
+                }
+            } else {
+                return None;
+            }
+        }
+        budget.is_bounded().then_some(budget)
+    }
+
+    /// The canonical registry name (dimensions in `tests`, `simsec`,
+    /// `cost` order). Round-trips through [`Budget::by_name`].
+    pub fn name(&self) -> String {
+        let mut terms: Vec<String> = Vec::new();
+        if let Some(n) = self.tests {
+            terms.push(format!("tests-{n}"));
+        }
+        if let Some(s) = self.sim_seconds {
+            terms.push(format!("simsec-{s}"));
+        }
+        if let Some(c) = self.cost_units {
+            terms.push(format!("cost-{c}"));
+        }
+        if terms.is_empty() {
+            "unbounded".into()
+        } else {
+            terms.join("+")
+        }
+    }
+
+    /// Start an empty ledger over this budget.
+    pub fn ledger(&self) -> Ledger {
+        Ledger { limits: self.clone(), tests: 0, sim_seconds: 0.0, cost_units: 0.0 }
+    }
+
+    /// Registry name patterns (`acts list budgets`).
+    pub const NAME_PATTERNS: &'static [&'static str] =
+        &["tests-<n>", "simsec-<s>", "cost-<c>", "<dim>-<v>+<dim>-<v>"];
+}
+
+/// Strictly positive finite f64, rejecting exotic spellings the
+/// round-trip name could not reproduce.
+fn parse_positive(s: &str) -> Option<f64> {
+    if s.is_empty() || !s.chars().all(|c| c.is_ascii_digit() || c == '.') {
+        return None;
+    }
+    let v: f64 = s.parse().ok()?;
+    (v.is_finite() && v > 0.0).then_some(v)
+}
+
+/// The mutable half of a budget: what has been spent on each dimension.
+/// Tests and cost units are *charged* per executed row
+/// ([`Ledger::charge_test`]); simulated time is *observed* from the
+/// manipulator's clock at round boundaries
+/// ([`Ledger::observe_sim_seconds`]) so it reflects real elapsed
+/// staging time (restarts included), not an estimate.
+#[derive(Clone, Debug)]
+pub struct Ledger {
+    limits: Budget,
+    tests: u64,
+    sim_seconds: f64,
+    cost_units: f64,
+}
+
+impl Ledger {
+    /// The limits this ledger charges against.
+    pub fn limits(&self) -> &Budget {
+        &self.limits
+    }
+
+    /// Staged tests charged so far (baseline and failures included).
+    pub fn tests_spent(&self) -> u64 {
+        self.tests
+    }
+
+    /// Simulated seconds observed so far.
+    pub fn sim_seconds_spent(&self) -> f64 {
+        self.sim_seconds
+    }
+
+    /// Cost units charged so far.
+    pub fn cost_units_spent(&self) -> f64 {
+        self.cost_units
+    }
+
+    /// Charge one executed staged test (passed or failed — §2.3):
+    /// one test plus `cost_units` of abstract cost.
+    pub fn charge_test(&mut self, cost_units: f64) {
+        self.tests += 1;
+        self.cost_units += cost_units.max(0.0);
+    }
+
+    /// Fold in the manipulator's simulated clock (monotone: an older
+    /// reading never rolls the ledger back).
+    pub fn observe_sim_seconds(&mut self, clock: f64) {
+        if clock > self.sim_seconds {
+            self.sim_seconds = clock;
+        }
+    }
+
+    /// The first exhausted dimension, in `tests`, `simsec`, `cost`
+    /// order — `None` while every bounded dimension has headroom.
+    pub fn exhaustion(&self) -> Option<BudgetDim> {
+        if self.limits.tests.is_some_and(|n| self.tests >= n) {
+            return Some(BudgetDim::Tests);
+        }
+        if self.limits.sim_seconds.is_some_and(|s| self.sim_seconds >= s) {
+            return Some(BudgetDim::SimSeconds);
+        }
+        if self.limits.cost_units.is_some_and(|c| self.cost_units >= c) {
+            return Some(BudgetDim::CostUnits);
+        }
+        None
+    }
+
+    /// True once any bounded dimension is spent.
+    pub fn exhausted(&self) -> bool {
+        self.exhaustion().is_some()
+    }
+
+    /// How many more staged tests fit the **tightest** remaining
+    /// dimension, given a per-test estimate (`est_test_cost`, used for
+    /// both the time and the cost dimension). Rounds up, so any
+    /// positive headroom admits at least one test — the paper's
+    /// "answer from any budget" condition; a session's final round
+    /// shrinks to this. A pure tests budget ignores the estimate
+    /// entirely (bit-identity with the historical counting).
+    pub fn remaining_tests(&self, est_test_cost: f64) -> u64 {
+        let est = est_test_cost.max(1e-9);
+        let mut n = u64::MAX;
+        if let Some(t) = self.limits.tests {
+            n = n.min(t.saturating_sub(self.tests));
+        }
+        if let Some(s) = self.limits.sim_seconds {
+            n = n.min(tests_that_fit(s - self.sim_seconds, est));
+        }
+        if let Some(c) = self.limits.cost_units {
+            n = n.min(tests_that_fit(c - self.cost_units, est));
+        }
+        n
+    }
+}
+
+/// `ceil(remaining / per_test)` clamped at zero.
+fn tests_that_fit(remaining: f64, per_test: f64) -> u64 {
+    if remaining <= 0.0 {
+        0
+    } else {
+        (remaining / per_test).ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_single_dimensions() {
+        assert_eq!(Budget::by_name("tests-200"), Some(Budget::tests(200)));
+        assert_eq!(Budget::by_name("simsec-3600"), Some(Budget::sim_seconds(3600.0)));
+        assert_eq!(Budget::by_name("simsec-900.5"), Some(Budget::sim_seconds(900.5)));
+        assert_eq!(Budget::by_name("cost-42"), Some(Budget::cost_units(42.0)));
+    }
+
+    #[test]
+    fn by_name_resolves_composites_in_any_order() {
+        let b = Budget::by_name("tests-200+simsec-900").unwrap();
+        assert_eq!(b, Budget::tests(200).and_sim_seconds(900.0));
+        let c = Budget::by_name("simsec-900+tests-200").unwrap();
+        assert_eq!(b, c);
+        let d = Budget::by_name("tests-10+simsec-60+cost-5").unwrap();
+        assert_eq!(d, Budget::tests(10).and_sim_seconds(60.0).and_cost_units(5.0));
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for name in ["tests-200", "simsec-3600", "simsec-900.5", "cost-42",
+                     "tests-200+simsec-900", "tests-10+simsec-60+cost-5"] {
+            let b = Budget::by_name(name).unwrap_or_else(|| panic!("`{name}` must resolve"));
+            assert_eq!(b.name(), name, "canonical name must round-trip");
+            assert_eq!(Budget::by_name(&b.name()), Some(b));
+        }
+    }
+
+    #[test]
+    fn by_name_rejects_garbage() {
+        for name in [
+            "", "tests-", "tests-0", "tests-abc", "tests--5", "nope-5", "simsec-",
+            "simsec-abc", "simsec-0", "simsec--3", "simsec-inf", "simsec-1e3", "cost-0",
+            "tests-5+tests-6", "tests-5+", "+tests-5", "tests-5 ",
+        ] {
+            assert!(Budget::by_name(name).is_none(), "`{name}` must not resolve");
+        }
+    }
+
+    #[test]
+    fn tests_only_ledger_counts_exactly() {
+        // the bit-identity foundation: a tests budget is a plain counter
+        let mut l = Budget::tests(3).ledger();
+        assert_eq!(l.remaining_tests(123.0), 3);
+        l.charge_test(999.0);
+        l.observe_sim_seconds(1e12); // unbounded dims never bind
+        assert_eq!(l.remaining_tests(123.0), 2);
+        assert!(!l.exhausted());
+        l.charge_test(0.0);
+        l.charge_test(0.0);
+        assert_eq!(l.exhaustion(), Some(BudgetDim::Tests));
+        assert_eq!(l.remaining_tests(1.0), 0);
+    }
+
+    #[test]
+    fn any_dimension_exhausts_the_composite() {
+        let b = Budget::tests(100).and_sim_seconds(300.0);
+        let mut l = b.ledger();
+        l.charge_test(1.0);
+        assert!(!l.exhausted());
+        l.observe_sim_seconds(300.0);
+        assert_eq!(l.exhaustion(), Some(BudgetDim::SimSeconds));
+
+        let mut l = Budget::tests(100).and_cost_units(5.0).ledger();
+        for _ in 0..5 {
+            l.charge_test(1.0);
+        }
+        assert_eq!(l.exhaustion(), Some(BudgetDim::CostUnits));
+    }
+
+    #[test]
+    fn remaining_shrinks_to_the_tightest_dimension() {
+        let mut l = Budget::tests(100).and_sim_seconds(100.0).ledger();
+        // 70s spent: 30s left at ~10s/test -> 3 more tests, not 100
+        l.observe_sim_seconds(70.0);
+        assert_eq!(l.remaining_tests(10.0), 3);
+        // positive headroom always admits at least one test (ceil)
+        l.observe_sim_seconds(99.9);
+        assert_eq!(l.remaining_tests(10.0), 1);
+        l.observe_sim_seconds(100.0);
+        assert_eq!(l.remaining_tests(10.0), 0);
+    }
+
+    #[test]
+    fn clock_observation_is_monotone() {
+        let mut l = Budget::sim_seconds(50.0).ledger();
+        l.observe_sim_seconds(40.0);
+        l.observe_sim_seconds(10.0);
+        assert_eq!(l.sim_seconds_spent(), 40.0);
+    }
+
+    #[test]
+    fn bounded_and_unbounded() {
+        assert!(Budget::tests(1).is_bounded());
+        let unbounded = Budget { tests: None, sim_seconds: None, cost_units: None };
+        assert!(!unbounded.is_bounded());
+        assert_eq!(unbounded.name(), "unbounded");
+        assert!(Budget::by_name("unbounded").is_none());
+    }
+
+    #[test]
+    fn hand_built_garbage_limits_are_invalid() {
+        // a NaN / zero limit would never exhaust while admitting zero
+        // tests — the session asserts is_valid so it cannot spin
+        assert!(!Budget::sim_seconds(f64::NAN).is_valid());
+        assert!(!Budget::sim_seconds(0.0).is_valid());
+        assert!(!Budget::sim_seconds(f64::INFINITY).is_valid());
+        assert!(!Budget::cost_units(-1.0).is_valid());
+        assert!(!Budget::tests(0).is_valid());
+        assert!(Budget::tests(1).and_sim_seconds(0.5).is_valid());
+        for name in ["tests-200", "simsec-900.5", "tests-10+simsec-60+cost-5"] {
+            assert!(Budget::by_name(name).unwrap().is_valid(), "{name}");
+        }
+    }
+
+    #[test]
+    fn stop_cause_renders_for_reports() {
+        assert_eq!(StopCause::Exhausted(BudgetDim::Tests).to_string(), "budget:tests");
+        assert_eq!(StopCause::Exhausted(BudgetDim::SimSeconds).to_string(), "budget:simsec");
+        assert_eq!(StopCause::Exhausted(BudgetDim::CostUnits).to_string(), "budget:cost");
+        assert_eq!(StopCause::FailureCap.to_string(), "failure-cap");
+    }
+}

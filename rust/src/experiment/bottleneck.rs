@@ -7,6 +7,7 @@
 //! level, locating the bottleneck in the front-end tier.
 
 use super::Lab;
+use crate::budget::Budget;
 use crate::error::Result;
 use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
 use crate::scenario::{Fleet, ScenarioSpec};
@@ -115,7 +116,7 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Bottleneck> {
     // exhaustive §5.1 sweep)
     let ops_unit = ops_config_unit(&sut::mysql().space)?;
     let backend_cfg = TuningConfig {
-        budget_tests: (budget / 8).clamp(6, 16),
+        budget: Budget::tests((budget / 8).clamp(6, 16)),
         optimizer: "lhs-screen".into(),
         seed,
         round_size: 1,
@@ -142,7 +143,7 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Bottleneck> {
         unit
     };
     let composed_cfg = TuningConfig {
-        budget_tests: budget,
+        budget: Budget::tests(budget),
         optimizer: "rrs".into(),
         seed,
         round_size: 1,

@@ -9,6 +9,7 @@
 //! Joint tuning must win: part of the optimum lives in the cross terms.
 
 use super::Lab;
+use crate::budget::Budget;
 use crate::error::Result;
 use crate::manipulator::Target;
 use crate::optimizer::{Observation, Optimizer, Rrs, RrsParams};
@@ -153,7 +154,8 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<CoTuning> {
         let full = spec.space.encode(&spec.space.default_config());
         full[tomcat_dims..].to_vec()
     };
-    let cfg = TuningConfig { budget_tests: budget, seed, round_size: 1, ..Default::default() };
+    let cfg =
+        TuningConfig { budget: Budget::tests(budget), seed, round_size: 1, ..Default::default() };
     let scenario = |label: &str| {
         ScenarioSpec::new(
             Target::Single(spec.clone()),

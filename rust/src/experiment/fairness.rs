@@ -9,6 +9,7 @@
 //! A wins — an ordering flip only objective tuning exposes.
 
 use super::Lab;
+use crate::budget::Budget;
 use crate::error::Result;
 use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
 use crate::scenario::{Fleet, ScenarioSpec};
@@ -134,7 +135,7 @@ fn measure_default(lab: &Lab, spec: SutSpec, seed: u64) -> Result<f64> {
 /// per-variant driver).
 fn tuning_scenario(spec: SutSpec, budget: u64, seed: u64) -> ScenarioSpec {
     let cfg = TuningConfig {
-        budget_tests: budget,
+        budget: Budget::tests(budget),
         optimizer: "rrs".into(),
         seed,
         round_size: 1,

@@ -17,6 +17,7 @@
 //! driving one session at a time.
 
 use super::Lab;
+use crate::budget::Budget;
 use crate::error::Result;
 use crate::manipulator::{SimulationOpts, SystemManipulator, Target};
 use crate::scenario::{Fleet, ScenarioSpec};
@@ -159,11 +160,16 @@ pub fn run(lab: &Lab, budget: u64, seed: u64) -> Result<Labor> {
         },
     ];
 
+    // every policy races the same stopping rule, expressed as a NAMED
+    // budget (`tests-<n>`, the §5.3 "same test allowance" race) — the
+    // same registry string `acts fleet --budgets` sweeps
+    let stopping_rule =
+        Budget::by_name(&format!("tests-{budget}")).expect("tests-<n> is a registered budget");
     let specs: Vec<ScenarioSpec> = policies
         .iter()
         .map(|policy| {
             let cfg = TuningConfig {
-                budget_tests: budget,
+                budget: stopping_rule.clone(),
                 optimizer: policy.optimizer.into(),
                 seed: policy.seed,
                 round_size: policy.round_size,

@@ -30,14 +30,17 @@ pub const PAPER_BEST_OPS: f64 = 118_184.0;
 pub fn run_repeats(lab: &Lab, budget: u64, seed: u64, repeats: u64) -> Result<SeedSweep> {
     // round size 1 replays the paper's sequential protocol per seed
     // (bit-identical to the historical single-session driver — tested);
-    // concurrency comes from the fleet, not from within a session
+    // concurrency comes from the fleet, not from within a session. The
+    // resource limit rides the matrix's budgets axis as a NAMED budget
+    // — the same `tests-<n>` string `acts fleet --budgets` sweeps.
     let matrix = Matrix {
         suts: vec!["mysql".into()],
         workloads: vec!["zipfian-rw".into()],
         deployments: vec!["standalone".into()],
         optimizers: vec!["rrs".into()],
+        budgets: vec![format!("tests-{budget}")],
         seeds: (0..repeats.max(1)).map(|i| seed + i).collect(),
-        base: TuningConfig { budget_tests: budget, round_size: 1, ..Default::default() },
+        base: TuningConfig { round_size: 1, ..Default::default() },
         sim: SimulationOpts::default(),
     };
     let report = Fleet::compile(lab, matrix.expand()?)?.run();

@@ -78,7 +78,11 @@ impl SeedSweep {
 
 /// Run one tuning session per seed, all concurrently through one
 /// compiled fleet (see the module docs). `cfg.seed` is overridden per
-/// session; everything else in `cfg` applies to all of them.
+/// session; everything else in `cfg` applies to all of them — the
+/// stopping rule included: `cfg.budget` is a composite
+/// [`crate::budget::Budget`] (`acts tune --budget tests-200+simsec-900`
+/// arrives here by name), so a sweep can race seeds against a time or
+/// cost limit as naturally as against a test count.
 pub fn run_seeds(
     lab: &Lab,
     target: Target,

@@ -6,6 +6,7 @@
 
 use super::sweep;
 use super::Lab;
+use crate::budget::Budget;
 use crate::error::Result;
 use crate::manipulator::{Measurement, SimulationOpts, SystemManipulator, Target};
 use crate::sut;
@@ -102,8 +103,11 @@ pub fn run_repeats(lab: &Lab, budget: u64, seed: u64, repeats: u64) -> Result<Ta
     let workload = WorkloadSpec::page_mix().with_duration(300.0);
     // round size 1 keeps each seed on the paper's sequential protocol
     // (bit-identical to the historical single-session driver — tested)
+    // the §5.2 stopping rule as a NAMED budget (`tests-<n>`), the same
+    // registry string the budgets axis sweeps
     let cfg = TuningConfig {
-        budget_tests: budget,
+        budget: Budget::by_name(&format!("tests-{budget}"))
+            .expect("tests-<n> is a registered budget"),
         optimizer: "rrs".into(),
         seed,
         round_size: 1,

@@ -14,6 +14,7 @@
 //! Layout (see DESIGN.md for the full inventory and experiment index):
 //!
 //! * [`space`] — configuration parameters (knobs) and config spaces
+//! * [`budget`] — composite, nameable resource limits and their ledger
 //! * [`sampling`] — scalable samplers: LHS (the paper's choice) & friends
 //! * [`optimizer`] — RRS (the paper's choice) and baseline optimizers
 //! * [`workload`] — workload specs, zipfian/uniform op-stream generation
@@ -29,6 +30,7 @@
 //!   offline crate set does not provide
 
 pub mod benchkit;
+pub mod budget;
 pub mod cli;
 pub mod error;
 pub mod experiment;

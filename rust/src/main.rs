@@ -4,19 +4,21 @@
 //!   list [kind]                       show registered SUTs/workloads/deployments/optimizers
 //!   tune   --sut S --workload W ...   run one tuning session
 //!   fleet  --suts a,b --workloads ... run a scenario matrix as one fleet
+//!   fleet-diff old.json new.json      diff two fleet/bench JSON dumps
 //!   surface --sut S --x K --y K ...   dump a 2-knob grid sweep as CSV
 //!   experiment <fig1|mysql|table1|bottleneck|labor|fairness|coverage>
 //!   help
 
+use acts::budget::Budget;
 use acts::cli::Args;
 use acts::experiment::{self, Lab};
 use acts::manipulator::{SimulationOpts, SystemManipulator};
 use acts::optimizer::OPTIMIZER_NAMES;
 use acts::report::fmt_duration;
 use acts::runtime::BackendKind;
-use acts::scenario::{resolve_target, Fleet, Matrix};
+use acts::scenario::{self, resolve_target, Fleet, Matrix};
 use acts::sut::SUT_NAMES;
-use acts::tuner::{self, TuningConfig};
+use acts::tuner::{self, SchedulerMode, TuningConfig};
 use acts::workload::{DeploymentEnv, WorkloadSpec};
 
 /// Resolve the `--backend` flag (default: the `ACTS_BACKEND` env var,
@@ -28,6 +30,35 @@ fn backend_arg(args: &Args) -> acts::Result<BackendKind> {
             acts::ActsError::InvalidArg(format!("unknown backend `{s}` (auto|pjrt|native)"))
         }),
     }
+}
+
+/// Resolve the `--budget` flag: a bare integer is the classic staged-
+/// test count (`tests-<n>`); anything else resolves through the budget
+/// registry (`simsec-3600`, `tests-200+simsec-900`, ...).
+fn budget_arg(args: &Args, default_tests: u64) -> acts::Result<Budget> {
+    match args.get_opt("budget") {
+        None => Ok(Budget::tests(default_tests)),
+        Some(s) => {
+            if let Ok(n) = s.parse::<u64>() {
+                if n == 0 {
+                    return Err(acts::ActsError::InvalidArg(
+                        "--budget must allow at least the baseline test".into(),
+                    ));
+                }
+                return Ok(Budget::tests(n));
+            }
+            Budget::by_name(s).ok_or_else(|| {
+                acts::ActsError::InvalidArg(format!(
+                    "unknown budget `{s}` (tests-<n> | simsec-<s> | cost-<c>, join with `+`)"
+                ))
+            })
+        }
+    }
+}
+
+/// Resolve the `--lanes` flag (default: `ACTS_LANES`, then 2).
+fn lanes_arg(args: &Args) -> usize {
+    args.get_usize("lanes", tuner::default_lanes()).max(1)
 }
 
 fn main() {
@@ -51,6 +82,7 @@ fn run(args: &Args) -> acts::Result<()> {
         "list" => cmd_list(args),
         "tune" => cmd_tune(args),
         "fleet" => cmd_fleet(args),
+        "fleet-diff" => cmd_fleet_diff(args),
         "surface" => cmd_surface(args),
         "experiment" => cmd_experiment(args),
         other => {
@@ -72,8 +104,9 @@ fn cmd_list(args: &Args) -> acts::Result<()> {
             "deployments" => Ok(DeploymentEnv::NAME_PATTERNS),
             "optimizers" => Ok(OPTIMIZER_NAMES),
             "samplers" => Ok(acts::sampling::SAMPLER_NAMES),
+            "budgets" => Ok(Budget::NAME_PATTERNS),
             other => Err(acts::ActsError::InvalidArg(format!(
-                "unknown registry `{other}` (suts|workloads|deployments|optimizers|samplers)"
+                "unknown registry `{other}` (suts|workloads|deployments|optimizers|samplers|budgets)"
             ))),
         }
     };
@@ -90,6 +123,7 @@ fn cmd_list(args: &Args) -> acts::Result<()> {
             println!("deployments: {}", DeploymentEnv::NAME_PATTERNS.join(", "));
             println!("optimizers:  {}", OPTIMIZER_NAMES.join(", "));
             println!("samplers:    {}", acts::sampling::SAMPLER_NAMES.join(", "));
+            println!("budgets:     {}", Budget::NAME_PATTERNS.join(", "));
         }
     }
     Ok(())
@@ -102,12 +136,12 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
     let deployment = DeploymentEnv::by_name(&args.get("deployment", "standalone"))
         .ok_or_else(|| acts::ActsError::InvalidArg("unknown deployment".into()))?;
     let seed = args.get_u64("seed", 1);
-    let budget = args.get_u64("budget", 100);
+    let budget = budget_arg(args, 100)?;
     let name = target.name().to_string();
 
     let round_size = args.get_usize("round-size", 16);
     let cfg = TuningConfig {
-        budget_tests: budget,
+        budget,
         optimizer: args.get("optimizer", "rrs"),
         seed,
         round_size,
@@ -177,10 +211,11 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
         out.speedup()
     );
     println!(
-        "budget: {} tests ({} failed), staging time {}",
+        "budget: {} tests ({} failed), staging time {}, stopped by {}",
         out.tests_used,
         out.failures,
-        fmt_duration(out.sim_seconds)
+        fmt_duration(out.sim_seconds),
+        out.stopped
     );
     if args.has("curve") {
         for r in &out.records {
@@ -203,8 +238,9 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
     };
     let seed = args.get_u64("seed", 1);
     let n_seeds = args.get_u64("seeds", 1).max(1);
+    let lanes = lanes_arg(args);
     let base = TuningConfig {
-        budget_tests: args.get_u64("budget", 40),
+        budget: budget_arg(args, 40)?,
         seed,
         round_size: args.get_usize("round-size", 8),
         backend: backend_arg(args)?,
@@ -215,22 +251,26 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         workloads: split(args.get("workloads", &args.get("workload", "zipfian-rw"))),
         deployments: split(args.get("deployments", &args.get("deployment", "standalone"))),
         optimizers: split(args.get("optimizers", &args.get("optimizer", "rrs"))),
+        budgets: split(args.get("budgets", "")),
         seeds: (0..n_seeds).map(|i| seed + i).collect(),
         base: base.clone(),
         sim: SimulationOpts::default(),
     };
     println!(
-        "fleet: {} cells ({} suts x {} workloads x {} deployments x {} optimizers x {} seeds)",
+        "fleet: {} cells ({} suts x {} workloads x {} deployments x {} optimizers x {} budgets x {} seeds), {} lanes",
         matrix.cells(),
         matrix.suts.len(),
         matrix.workloads.len(),
         matrix.deployments.len(),
         matrix.optimizers.len(),
-        matrix.seeds.len()
+        matrix.budgets.len().max(1),
+        matrix.seeds.len(),
+        lanes
     );
     let specs = matrix.expand()?;
     let lab = Lab::for_config(&base)?;
-    let report = Fleet::compile(&lab, specs)?.run();
+    let report =
+        Fleet::compile_with_mode(&lab, specs, SchedulerMode::Pipelined { lanes })?.run();
 
     print!("{}", report.table().markdown());
     let agg = report.aggregate();
@@ -248,6 +288,13 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
     if let Some(best) = report.best_cell() {
         println!("best cell: {}", best.label);
     }
+    // which budget dimension (or the failure cap) ended each cell
+    let mut by_cause = std::collections::BTreeMap::<String, usize>::new();
+    for (_, o) in report.ok_cells() {
+        *by_cause.entry(o.stopped.to_string()).or_insert(0) += 1;
+    }
+    let causes: Vec<String> = by_cause.iter().map(|(k, n)| format!("{n} x {k}")).collect();
+    println!("exhaustion: {}", causes.join(", "));
     let c = report.coalescing;
     println!(
         "engine coalescing: {} requests -> {} executes ({} rows requested, {} executed)",
@@ -257,6 +304,52 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         std::fs::write(path, report.json().to_string())
             .map_err(|e| acts::ActsError::io(path, e))?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `acts fleet-diff old.json new.json` — diff two fleet-report (or
+/// `BENCH_*.json`) dumps taken at different commits: per-cell
+/// best-throughput deltas, added/removed cells, regressions flagged
+/// (relative drop beyond `--tol`, or a cell flipping ok -> failed).
+/// Exit code 3 with `--fail-on-regression` when anything regressed.
+fn cmd_fleet_diff(args: &Args) -> acts::Result<()> {
+    let [old_path, new_path] = args.positional.as_slice() else {
+        return Err(acts::ActsError::InvalidArg(
+            "usage: acts fleet-diff <old.json> <new.json> [--tol 0.05] [--json out.json] [--fail-on-regression]".into(),
+        ));
+    };
+    let tol: f64 = {
+        let raw = args.get("tol", "0.05");
+        let tol: f64 = raw.parse().map_err(|_| {
+            acts::ActsError::InvalidArg(format!("--tol expects a fraction, got `{raw}`"))
+        })?;
+        if !tol.is_finite() || tol < 0.0 {
+            return Err(acts::ActsError::InvalidArg(format!(
+                "--tol expects a non-negative fraction, got `{raw}`"
+            )));
+        }
+        tol
+    };
+    let diff = scenario::diff_files(old_path, new_path, tol)?;
+    print!("{}", diff.table().markdown());
+    let (best, worst) = diff.extremes();
+    println!(
+        "diff: {} rows, {} regressions (metric: {}, tolerance {:.1}%) | best {:+.1}% | worst {:+.1}%",
+        diff.rows.len(),
+        diff.regressions(),
+        diff.metric,
+        tol * 100.0,
+        best * 100.0,
+        worst * 100.0
+    );
+    if let Some(path) = args.get_opt("json") {
+        std::fs::write(path, diff.json().to_string())
+            .map_err(|e| acts::ActsError::io(path, e))?;
+        println!("wrote {path}");
+    }
+    if args.has("fail-on-regression") && diff.regressions() > 0 {
+        std::process::exit(3);
     }
     Ok(())
 }
@@ -362,15 +455,19 @@ USAGE:
 
 COMMANDS:
     list [kind]  show registered SUTs, workloads, deployments, optimizers;
-                 `acts list suts` (workloads|deployments|optimizers|samplers)
-                 prints one registry, one name per line
+                 `acts list suts` (workloads|deployments|optimizers|
+                 samplers|budgets) prints one registry, one name per line
     tune         run a tuning session (batched rounds; --round-size 1
                  for the sequential reference protocol)
                    --sut <name|a+b>   (mysql)        --workload <name> (zipfian-rw)
                    --deployment <d>   (standalone)   --optimizer <o>   (rrs)
-                   --budget <n>       (100)          --seed <n>        (1)
+                   --budget <b>       (100)          --seed <n>        (1)
                    --round-size <n>   (16)           --sessions <n>    (1)
                    --backend <b>      (auto)         auto | pjrt | native
+                   --budget takes a test count (200) or a named composite
+                   budget: tests-200, simsec-3600, cost-900, joined with
+                   `+` (tests-200+simsec-900) — exhausted when ANY
+                   dimension is
                    --sessions N runs N concurrent sessions (seeds
                    seed..seed+N) through the pipelined multi-session
                    scheduler, coalescing their rounds into shared engine
@@ -384,14 +481,24 @@ COMMANDS:
                    --workloads w,..      (zipfian-rw)   comma-separated axis
                    --deployments d,..    (standalone)   comma-separated axis
                    --optimizers o,..     (rrs)          comma-separated axis
+                   --budgets b,..        (none)         resource-limit axis,
+                                                        e.g. tests-100,simsec-600
                    --seeds <n>           (1)            seeds seed..seed+n
                    --seed <n>            (1)            first seed
-                   --budget <n>          (40)           per cell
+                   --budget <b>          (40)           per cell (when no --budgets)
                    --round-size <n>      (8)            per cell
+                   --lanes <n>           (ACTS_LANES|2) pipeline lanes
                    --backend <b>         (auto)
                    --json <file>         dump the fleet report as JSON
                  deployments are registry names: standalone, arm-vm,
-                 cluster-<n>, <deployment>-interference-<f>
+                 cluster-<n>, <deployment>-interference-<f>; workloads
+                 include recorded traces (trace:hot-reads, ...); the
+                 report names each cell's exhausted budget dimension
+    fleet-diff   diff two fleet/bench JSON dumps across commits
+                   acts fleet-diff old.json new.json
+                   --tol <f>             (0.05)  relative drop tolerated
+                   --json <file>         dump the diff as JSON
+                   --fail-on-regression  exit 3 if anything regressed
     surface      dump a 2-knob grid sweep as CSV
                    --sut --workload --deployment --x <knob> --y <knob> --side <n>
                    --backend <b>
@@ -406,4 +513,8 @@ Backends: `pjrt` executes the AOT artifacts (loaded from ./artifacts,
 override: ACTS_ARTIFACTS); `native` is the pure-std CPU evaluator of the
 same surface and runs anywhere; `auto` (default, also via ACTS_BACKEND)
 prefers pjrt and falls back to native.
+
+Scheduler: sessions run on an N-lane work-stealing pipeline (lanes via
+--lanes / ACTS_LANES, default 2); per-session results are bit-identical
+for any lane count.
 ";

@@ -5,9 +5,38 @@
 //! Cycles through dimensions; for each, probes a fixed ladder of values
 //! holding everything else at the incumbent, keeps the argmax, moves on.
 //! Each full sweep halves the ladder span around the incumbent value.
+//!
+//! # The round protocol
+//!
+//! Unlike the stochastic optimizers, coordinate descent is strictly
+//! ask/tell-coupled — it re-reads the same ladder rung until told — so
+//! the default loop-over-`ask` batch would propose `n` duplicates. Its
+//! native [`Optimizer::ask_batch`] instead *plans* the next `n` rungs
+//! of the ladder walk (finishing the current dimension's ladder, then
+//! the following dimensions', one probe per rung up to the round
+//! size), each probe varying exactly one coordinate of the round-start
+//! incumbent. [`Optimizer::tell_batch`] folds the planned round back
+//! sequentially: every rung's value lands in its dimension's sweep, a
+//! completed sweep commits the dimension's argmax to the incumbent,
+//! and spans halve on full passes exactly as the sequential walk does.
+//! The one batching tradeoff (shared with every round optimizer):
+//! rungs of later dimensions in the round were planned against the
+//! round-start incumbent, so a mid-round incumbent move takes effect
+//! one round late. `ask_batch(rng, 1)` takes the plain `ask` path and
+//! stays bit-identical to the sequential protocol (tested).
 
 use super::{BestTracker, Observation, Optimizer};
 use crate::util::rng::Rng64;
+use std::collections::VecDeque;
+
+/// One planned probe of a batched round (see the module docs).
+#[derive(Clone, Copy, Debug)]
+enum Planned {
+    /// The start-point probe (the incumbent itself).
+    Start,
+    /// One ladder rung of dimension `dim` at position `pos`.
+    Rung { dim: usize, pos: f64 },
+}
 
 /// One-knob-at-a-time ladder search.
 pub struct CoordinateDescent {
@@ -24,6 +53,9 @@ pub struct CoordinateDescent {
     span: f64,
     rungs: usize,
     started: bool,
+    /// Planned probes of the batched round in flight (empty between
+    /// rounds and on the sequential path).
+    pending: VecDeque<Planned>,
     best: BestTracker,
 }
 
@@ -40,18 +72,13 @@ impl CoordinateDescent {
             span: 0.5,
             rungs: 5,
             started: false,
+            pending: VecDeque::new(),
             best: BestTracker::default(),
         }
     }
 
     fn fill_ladder(&mut self) {
-        let c = self.incumbent[self.d];
-        let lo = (c - self.span).max(0.0);
-        let hi = (c + self.span).min(1.0);
-        self.ladder = (0..self.rungs)
-            .map(|i| lo + (hi - lo) * i as f64 / (self.rungs - 1) as f64)
-            .rev()
-            .collect();
+        self.ladder = ladder_positions(self.incumbent[self.d], self.span, self.rungs);
         self.dim_best = None;
     }
 
@@ -109,9 +136,109 @@ impl Optimizer for CoordinateDescent {
         }
     }
 
+    /// Plan one evaluation round: the remaining rungs of the current
+    /// dimension's ladder, then the following dimensions' ladders
+    /// (centered at the round-start incumbent), one probe per rung up
+    /// to `n`. `n <= 1` takes the plain `ask` path, which keeps the
+    /// batched tuner at round size 1 bit-identical to the sequential
+    /// protocol.
+    fn ask_batch(&mut self, rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
+        if n <= 1 {
+            return (0..n).map(|_| self.ask(rng)).collect();
+        }
+        debug_assert!(self.pending.is_empty(), "previous planned round was never told");
+        self.pending.clear();
+        let mut probes = Vec::with_capacity(n);
+        if !self.started {
+            self.started = true;
+            probes.push(self.incumbent.clone());
+            self.pending.push_back(Planned::Start);
+        }
+        // walk the ladder cursor in simulation: real state advances at
+        // tell_batch, rung by rung, exactly like the sequential fold
+        let mut sim_d = self.d;
+        let mut sim_span = self.span;
+        let mut sim_ladder = self.ladder.clone();
+        while probes.len() < n {
+            if sim_ladder.is_empty() {
+                sim_ladder = ladder_positions(self.incumbent[sim_d], sim_span, self.rungs);
+            }
+            let pos = sim_ladder.pop().expect("freshly filled ladder");
+            let mut u = self.incumbent.clone();
+            u[sim_d] = pos;
+            probes.push(u);
+            self.pending.push_back(Planned::Rung { dim: sim_d, pos });
+            if sim_ladder.is_empty() {
+                sim_d += 1;
+                if sim_d >= self.dim {
+                    sim_d = 0;
+                    sim_span = (sim_span * 0.5).max(0.01);
+                }
+            }
+        }
+        probes
+    }
+
+    /// Fold a round back. A planned round (see
+    /// [`CoordinateDescent::ask_batch`]) replays the sequential fold
+    /// rung by rung — values attribute to their planned (dim, pos),
+    /// completed sweeps commit through `advance_dim` — so the cursor
+    /// state after the round is exactly where a sequential walk over
+    /// the same rungs would stand. Without a plan in flight (round
+    /// size 1, or externally driven rounds) this is the default
+    /// sequential fold.
+    fn tell_batch(&mut self, units: &[Vec<f64>], values: &[f64]) {
+        debug_assert_eq!(units.len(), values.len());
+        if self.pending.is_empty() {
+            for (u, &v) in units.iter().zip(values) {
+                self.tell(u, v);
+            }
+            return;
+        }
+        debug_assert_eq!(self.pending.len(), values.len(), "told a different round than planned");
+        for (u, &v) in units.iter().zip(values) {
+            let Some(tag) = self.pending.pop_front() else {
+                // more results than planned probes: fall back to the
+                // sequential fold for the excess
+                self.tell(u, v);
+                continue;
+            };
+            self.best.update(u, v);
+            match tag {
+                Planned::Start => {
+                    self.incumbent_value = v;
+                    self.fill_ladder();
+                }
+                Planned::Rung { dim, pos } => {
+                    debug_assert_eq!(dim, self.d, "planned walk desynced from the cursor");
+                    // the real ladder is the rung countdown; the planned
+                    // position is authoritative for attribution
+                    let _ = self.ladder.pop();
+                    let better = self.dim_best.map(|(bv, _)| v > bv).unwrap_or(true);
+                    if better {
+                        self.dim_best = Some((v, pos));
+                    }
+                    if self.ladder.is_empty() {
+                        self.advance_dim();
+                    }
+                }
+            }
+        }
+        self.pending.clear();
+    }
+
     fn best(&self) -> Option<&Observation> {
         self.best.get()
     }
+}
+
+/// The rung positions of one dimension's ladder around `c` (descending
+/// pop order: the lowest rung is probed first, exactly as the
+/// sequential walk fills it).
+fn ladder_positions(c: f64, span: f64, rungs: usize) -> Vec<f64> {
+    let lo = (c - span).max(0.0);
+    let hi = (c + span).min(1.0);
+    (0..rungs).map(|i| lo + (hi - lo) * i as f64 / (rungs - 1) as f64).rev().collect()
 }
 
 #[cfg(test)]
@@ -158,6 +285,69 @@ mod tests {
             cd.tell(&u, v);
         }
         assert_eq!(cd.best().unwrap().value, best);
+    }
+
+    #[test]
+    fn batched_rounds_probe_one_coordinate_each_and_cross_dimensions() {
+        let mut rng = Rng64::new(15);
+        let mut cd = CoordinateDescent::new(3);
+        // round 1: start probe + 7 rungs (5 of dim 0, 2 of dim 1)
+        let batch = cd.ask_batch(&mut rng, 8);
+        assert_eq!(batch.len(), 8);
+        assert_eq!(batch[0], vec![0.5; 3], "first probe is the start point");
+        for (i, u) in batch.iter().enumerate().skip(1) {
+            let moved: Vec<usize> =
+                (0..3).filter(|&d| (u[d] - 0.5).abs() > 1e-12).collect();
+            assert!(moved.len() <= 1, "probe {i} varies more than one knob: {u:?}");
+        }
+        // rungs 1..=5 sweep dim 0; rungs 6..=7 move into dim 1
+        let dim1_probes = batch[6..].iter().filter(|u| (u[1] - 0.5).abs() > 1e-12).count();
+        assert!(dim1_probes >= 1, "the round must cross into the next dimension: {batch:?}");
+        let values: Vec<f64> = batch.iter().map(|u| separable(u)).collect();
+        cd.tell_batch(&batch, &values);
+
+        // round 2 resumes mid-sweep without duplicating the start probe
+        let batch2 = cd.ask_batch(&mut rng, 4);
+        assert_eq!(batch2.len(), 4);
+        assert!(batch2.iter().all(|u| u.len() == 3));
+        let values2: Vec<f64> = batch2.iter().map(|u| separable(u)).collect();
+        cd.tell_batch(&batch2, &values2);
+        assert!(cd.best().is_some());
+    }
+
+    #[test]
+    fn batched_rounds_nail_separable_objectives() {
+        // the §5.3 heuristic keeps working when driven in rounds: same
+        // budget as the sequential test, rounds of 8
+        let mut rng = Rng64::new(16);
+        let mut cd = CoordinateDescent::new(4);
+        for _ in 0..25 {
+            let batch = cd.ask_batch(&mut rng, 8);
+            assert_eq!(batch.len(), 8);
+            let values: Vec<f64> = batch.iter().map(|u| separable(u)).collect();
+            cd.tell_batch(&batch, &values);
+        }
+        assert!(cd.best().unwrap().value > -0.01, "{}", cd.best().unwrap().value);
+    }
+
+    #[test]
+    fn batch_of_one_replays_the_sequential_walk() {
+        let mut rng_a = Rng64::new(17);
+        let mut rng_b = Rng64::new(17);
+        let mut seq = CoordinateDescent::new(3);
+        let mut bat = CoordinateDescent::new(3);
+        for _ in 0..40 {
+            let a = seq.ask(&mut rng_a);
+            let b = bat.ask_batch(&mut rng_b, 1);
+            assert_eq!(a, b[0]);
+            let v = separable(&a);
+            seq.tell(&a, v);
+            bat.tell_batch(&b, &[v]);
+        }
+        assert_eq!(seq.best().unwrap().unit, bat.best().unwrap().unit);
+        assert_eq!(seq.incumbent, bat.incumbent);
+        assert_eq!(seq.ladder, bat.ladder);
+        assert_eq!(seq.d, bat.d);
     }
 
     #[test]

@@ -18,10 +18,11 @@
 //! round of proposals is generated against the round-start state,
 //! evaluated in one bucketed engine call, and folded back in test
 //! order. The defaults loop over `ask`/`tell`; RRS, LHS screening,
-//! random search and the GP surrogate provide native round
-//! implementations (a fresh LHS design sized to the round, a single
-//! surrogate fit scoring every proposal), and RRS additionally folds a
-//! whole exploitation round into ONE re-align/shrink decision
+//! random search, the GP surrogate and coordinate descent provide
+//! native round implementations (a fresh LHS design sized to the
+//! round, a single surrogate fit scoring every proposal, a planned
+//! walk of ladder rungs across coordinates), and RRS additionally
+//! folds a whole exploitation round into ONE re-align/shrink decision
 //! (`tell_batch`) instead of the per-observation sequential fold.
 
 mod anneal;
@@ -73,10 +74,12 @@ pub trait Optimizer: Send {
     /// exactly.
     ///
     /// Caveat for strictly ask/tell-coupled optimizers: if `ask` only
-    /// advances its internal cursor on `tell` (coordinate descent
-    /// re-reads the same ladder rung until told), the default produces
-    /// a round of duplicates whose values the fold then misattributes.
-    /// Such optimizers should be driven at round size 1.
+    /// advances its internal cursor on `tell`, the default produces a
+    /// round of duplicates whose values the fold then misattributes —
+    /// such optimizers need a native plan-ahead implementation.
+    /// Coordinate descent provides one (it plans the next `n` ladder
+    /// rungs across coordinates and folds them back rung by rung);
+    /// hill-climbing and annealing remain round-size-1 optimizers.
     fn ask_batch(&mut self, rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
         (0..n).map(|_| self.ask(rng)).collect()
     }

@@ -1,0 +1,422 @@
+//! Cross-PR report differ — the `acts fleet-diff` subcommand.
+//!
+//! Diffs two machine-readable dumps of the same experiment taken at
+//! different commits: either two [`super::FleetReport`] JSON files
+//! (`acts fleet --json`, CI's `FLEET_smoke.json`) or two
+//! [`crate::benchkit::Bench::json`] dumps (`BENCH_*.json`). Rows are
+//! matched by cell label (fleet) or result name (bench); the compared
+//! metric is per-cell best throughput (fleet) or the `units_per_s`
+//! rate, falling back to `1/mean_s` (bench) — higher is better for
+//! both. Cells present on only one side are reported as added/removed;
+//! a relative drop beyond the tolerance, or an ok→failed flip, is
+//! flagged as a **regression**. The differ only reads the dumps — it
+//! never re-runs anything — so it works across PRs on CI artifacts.
+
+use crate::error::{ActsError, Result};
+use crate::report::{Json, Table};
+
+/// What kind of dumps were diffed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiffKind {
+    /// Two `FleetReport::json` dumps (matched by cell label).
+    Fleet,
+    /// Two `Bench::json` dumps (matched by result name).
+    Bench,
+}
+
+/// One matched (or one-sided) row of the diff.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    /// Cell label / bench result name.
+    pub key: String,
+    /// Old metric (`None`: the row is new).
+    pub old: Option<f64>,
+    /// New metric (`None`: the row was removed).
+    pub new: Option<f64>,
+    /// Whether the old dump contains this row at all.
+    pub old_present: bool,
+    /// Whether the new dump contains this row at all.
+    pub new_present: bool,
+    /// Whether the old cell completed (bench rows: always true).
+    pub old_ok: bool,
+    /// Whether the new cell completed.
+    pub new_ok: bool,
+    /// Relative change `(new - old) / |old|`, when both sides have a
+    /// metric.
+    pub delta_frac: Option<f64>,
+    /// True when this row regressed (relative drop beyond the
+    /// tolerance, or ok → failed).
+    pub regression: bool,
+}
+
+/// The diff of two dumps (see the module docs).
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    /// What was diffed.
+    pub kind: DiffKind,
+    /// Human name of the compared metric.
+    pub metric: &'static str,
+    /// One row per union key, old-dump order first, added rows last.
+    pub rows: Vec<DiffRow>,
+    /// Relative-drop tolerance used for flagging.
+    pub tol: f64,
+}
+
+impl DiffReport {
+    /// Number of regressed rows.
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.regression).count()
+    }
+
+    /// The `(best, worst)` relative deltas across matched rows — the
+    /// actual extremes, not clamped at zero, so an all-regressed diff
+    /// reports a negative best and an all-improved one a positive
+    /// worst. `(0.0, 0.0)` only when no row matched at all.
+    pub fn extremes(&self) -> (f64, f64) {
+        let mut deltas = self.rows.iter().filter_map(|r| r.delta_frac);
+        match deltas.next() {
+            None => (0.0, 0.0),
+            Some(first) => deltas.fold((first, first), |(best, worst), d| {
+                (best.max(d), worst.min(d))
+            }),
+        }
+    }
+
+    /// Render the per-row table.
+    pub fn table(&self) -> Table {
+        let title = match self.kind {
+            DiffKind::Fleet => "Fleet diff (per-cell best throughput, new vs old)",
+            DiffKind::Bench => "Bench diff (per-row rate, new vs old)",
+        };
+        let mut t = Table::new(title, &["row", "old", "new", "delta", "flag"]);
+        let side = |present: bool, v: Option<f64>, ok: bool| -> String {
+            if !present {
+                "-".into()
+            } else if !ok {
+                "FAILED".into()
+            } else {
+                v.map(|x| format!("{x:.1}")).unwrap_or_else(|| "?".into())
+            }
+        };
+        for r in &self.rows {
+            let delta = match r.delta_frac {
+                Some(d) => format!("{:+.1}%", d * 100.0),
+                None if !r.old_present => "added".into(),
+                None if !r.new_present => "removed".into(),
+                None => "-".into(),
+            };
+            let flag = if r.regression { "REGRESSION" } else { "" };
+            t.row(&[
+                r.key.clone(),
+                side(r.old_present, r.old, r.old_ok),
+                side(r.new_present, r.new, r.new_ok),
+                delta,
+                flag.into(),
+            ]);
+        }
+        t
+    }
+
+    /// Machine-readable dump of the diff itself (uploadable from CI
+    /// next to the inputs it compared).
+    pub fn json(&self) -> Json {
+        let (best, worst) = self.extremes();
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("key", Json::Str(r.key.clone())),
+                    ("old", r.old.map(Json::Num).unwrap_or(Json::Null)),
+                    ("new", r.new.map(Json::Num).unwrap_or(Json::Null)),
+                    (
+                        "delta_frac",
+                        r.delta_frac.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+                    ("old_present", Json::Bool(r.old_present)),
+                    ("new_present", Json::Bool(r.new_present)),
+                    ("old_ok", Json::Bool(r.old_ok)),
+                    ("new_ok", Json::Bool(r.new_ok)),
+                    ("regression", Json::Bool(r.regression)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "kind",
+                Json::Str(
+                    match self.kind {
+                        DiffKind::Fleet => "fleet",
+                        DiffKind::Bench => "bench",
+                    }
+                    .into(),
+                ),
+            ),
+            ("metric", Json::Str(self.metric.into())),
+            ("tol", Json::Num(self.tol)),
+            ("rows", Json::Num(self.rows.len() as f64)),
+            ("regressions", Json::Num(self.regressions() as f64)),
+            ("best_delta_frac", Json::Num(best)),
+            ("worst_delta_frac", Json::Num(worst)),
+            ("cells", Json::Arr(rows)),
+        ])
+    }
+}
+
+/// One comparable row of a dump: (key, metric, completed).
+type MetricRow = (String, Option<f64>, bool);
+
+/// The comparable rows of one dump.
+fn extract(dump: &Json) -> Result<(DiffKind, Vec<MetricRow>)> {
+    if let Some(cells) = dump.get("cells").and_then(Json::as_arr) {
+        let rows = cells
+            .iter()
+            .map(|c| {
+                let key = c
+                    .get("label")
+                    .and_then(Json::as_str)
+                    .unwrap_or("<unlabelled>")
+                    .to_string();
+                let ok = c.get("ok").and_then(Json::as_bool).unwrap_or(false);
+                let best = c.get("best").and_then(Json::as_f64);
+                (key, best, ok)
+            })
+            .collect();
+        return Ok((DiffKind::Fleet, rows));
+    }
+    if let Some(results) = dump.get("results").and_then(Json::as_arr) {
+        let rows = results
+            .iter()
+            .map(|r| {
+                let key = r
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .unwrap_or("<unnamed>")
+                    .to_string();
+                // prefer the units/s rate; fall back to 1/mean_s so
+                // "higher is better" holds for timing-only rows
+                let rate = r
+                    .get("units_per_s")
+                    .and_then(Json::as_f64)
+                    .or_else(|| {
+                        r.get("mean_s")
+                            .and_then(Json::as_f64)
+                            .filter(|&m| m > 0.0)
+                            .map(|m| 1.0 / m)
+                    });
+                (key, rate, true)
+            })
+            .collect();
+        return Ok((DiffKind::Bench, rows));
+    }
+    Err(ActsError::InvalidArg(
+        "unrecognised dump: expected a fleet report (`cells`) or a bench dump (`results`)".into(),
+    ))
+}
+
+/// Diff two parsed dumps. `tol` is the relative drop (fraction of the
+/// old metric) tolerated before a matched row is flagged as a
+/// regression; an ok → failed flip is always one.
+pub fn diff_dumps(old: &Json, new: &Json, tol: f64) -> Result<DiffReport> {
+    let (old_kind, old_rows) = extract(old)?;
+    let (new_kind, new_rows) = extract(new)?;
+    if old_kind != new_kind {
+        return Err(ActsError::InvalidArg(
+            "cannot diff a fleet report against a bench dump".into(),
+        ));
+    }
+    let metric = match old_kind {
+        DiffKind::Fleet => "best throughput",
+        DiffKind::Bench => "rate (units/s, else 1/mean_s)",
+    };
+    let mut rows: Vec<DiffRow> = Vec::new();
+    for (key, old_v, old_ok) in &old_rows {
+        let matched = new_rows.iter().find(|(k, _, _)| k == key);
+        let (new_v, new_ok) = match matched {
+            Some((_, v, ok)) => (*v, *ok),
+            None => (None, false),
+        };
+        let delta_frac = match (old_v, new_v) {
+            (Some(o), Some(n)) if *old_ok && new_ok && o.abs() > 0.0 => {
+                Some((n - o) / o.abs())
+            }
+            _ => None,
+        };
+        let regression = match matched {
+            // removed rows are reported but not flagged: a renamed
+            // cell shows up as removed + added, not as a failure
+            None => false,
+            Some(_) => {
+                (*old_ok && !new_ok) || delta_frac.map(|d| d < -tol).unwrap_or(false)
+            }
+        };
+        rows.push(DiffRow {
+            key: key.clone(),
+            old: *old_v,
+            new: new_v,
+            old_present: true,
+            new_present: matched.is_some(),
+            old_ok: *old_ok,
+            new_ok,
+            delta_frac,
+            regression,
+        });
+    }
+    for (key, new_v, new_ok) in &new_rows {
+        if !old_rows.iter().any(|(k, _, _)| k == key) {
+            rows.push(DiffRow {
+                key: key.clone(),
+                old: None,
+                new: *new_v,
+                old_present: false,
+                new_present: true,
+                old_ok: false,
+                new_ok: *new_ok,
+                delta_frac: None,
+                regression: false,
+            });
+        }
+    }
+    Ok(DiffReport { kind: old_kind, metric, rows, tol })
+}
+
+/// Diff two dump files (the CLI entry point).
+pub fn diff_files(old_path: &str, new_path: &str, tol: f64) -> Result<DiffReport> {
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path).map_err(|e| ActsError::io(path, e))?;
+        Json::parse(&text)
+            .map_err(|e| ActsError::InvalidArg(format!("{path}: not valid JSON: {e}")))
+    };
+    diff_dumps(&read(old_path)?, &read(new_path)?, tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet_dump(cells: &[(&str, Option<f64>)]) -> Json {
+        Json::obj(vec![
+            ("aggregate", Json::obj(vec![("cells_ok", Json::Num(1.0))])),
+            (
+                "cells",
+                Json::Arr(
+                    cells
+                        .iter()
+                        .map(|(label, best)| match best {
+                            Some(b) => Json::obj(vec![
+                                ("label", Json::Str((*label).into())),
+                                ("ok", Json::Bool(true)),
+                                ("best", Json::Num(*b)),
+                            ]),
+                            None => Json::obj(vec![
+                                ("label", Json::Str((*label).into())),
+                                ("ok", Json::Bool(false)),
+                                ("error", Json::Str("dead".into())),
+                            ]),
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn fleet_diff_flags_regressions_and_reports_deltas() {
+        let old = fleet_dump(&[("a", Some(100.0)), ("b", Some(200.0)), ("gone", Some(5.0))]);
+        let new = fleet_dump(&[("a", Some(120.0)), ("b", Some(150.0)), ("fresh", Some(9.0))]);
+        let d = diff_dumps(&old, &new, 0.05).unwrap();
+        assert_eq!(d.kind, DiffKind::Fleet);
+        assert_eq!(d.rows.len(), 4);
+        let row = |k: &str| d.rows.iter().find(|r| r.key == k).unwrap();
+        assert!((row("a").delta_frac.unwrap() - 0.2).abs() < 1e-12);
+        assert!(!row("a").regression, "improvement is not a regression");
+        assert!((row("b").delta_frac.unwrap() + 0.25).abs() < 1e-12);
+        assert!(row("b").regression, "-25% beats the 5% tolerance");
+        assert!(row("gone").new.is_none() && !row("gone").regression);
+        assert!(row("fresh").old.is_none() && !row("fresh").regression);
+        assert_eq!(d.regressions(), 1);
+        let (best, worst) = d.extremes();
+        assert!((best - 0.2).abs() < 1e-12);
+        assert!((worst + 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extremes_track_actual_deltas_even_when_one_sided() {
+        // every matched row regressed: best must be the least-bad
+        // NEGATIVE delta, not a clamped 0.0
+        let old = fleet_dump(&[("a", Some(100.0)), ("b", Some(200.0))]);
+        let new = fleet_dump(&[("a", Some(70.0)), ("b", Some(176.0))]);
+        let d = diff_dumps(&old, &new, 0.05).unwrap();
+        let (best, worst) = d.extremes();
+        assert!((best + 0.12).abs() < 1e-12, "best {best} must not clamp at zero");
+        assert!((worst + 0.3).abs() < 1e-12, "worst {worst}");
+        // and no matched rows at all -> neutral zeros
+        let empty = diff_dumps(&fleet_dump(&[]), &fleet_dump(&[]), 0.05).unwrap();
+        assert_eq!(empty.extremes(), (0.0, 0.0));
+    }
+
+    #[test]
+    fn small_drops_within_tolerance_are_not_flagged() {
+        let old = fleet_dump(&[("a", Some(100.0))]);
+        let new = fleet_dump(&[("a", Some(97.0))]);
+        assert_eq!(diff_dumps(&old, &new, 0.05).unwrap().regressions(), 0);
+        assert_eq!(diff_dumps(&old, &new, 0.01).unwrap().regressions(), 1);
+    }
+
+    #[test]
+    fn ok_to_failed_is_always_a_regression() {
+        let old = fleet_dump(&[("a", Some(100.0))]);
+        let new = fleet_dump(&[("a", None)]);
+        let d = diff_dumps(&old, &new, 0.5).unwrap();
+        assert_eq!(d.regressions(), 1);
+        // and the table renders the flip
+        let md = d.table().markdown();
+        assert!(md.contains("FAILED"), "{md}");
+        assert!(md.contains("REGRESSION"), "{md}");
+    }
+
+    #[test]
+    fn bench_dumps_diff_by_rate_with_mean_fallback() {
+        let bench = |mean_s: f64, units: Option<f64>| {
+            Json::obj(vec![
+                ("group", Json::Str("g".into())),
+                (
+                    "results",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("name", Json::Str("hot loop".into())),
+                        ("mean_s", Json::Num(mean_s)),
+                        ("units_per_s", units.map(Json::Num).unwrap_or(Json::Null)),
+                    ])]),
+                ),
+            ])
+        };
+        // units/s present: compared directly
+        let d = diff_dumps(&bench(1.0, Some(100.0)), &bench(1.0, Some(80.0)), 0.1).unwrap();
+        assert_eq!(d.kind, DiffKind::Bench);
+        assert_eq!(d.regressions(), 1);
+        // no units: 1/mean_s (bigger mean = slower = regression)
+        let d = diff_dumps(&bench(1.0, None), &bench(2.0, None), 0.1).unwrap();
+        assert_eq!(d.regressions(), 1);
+        let d = diff_dumps(&bench(2.0, None), &bench(1.0, None), 0.1).unwrap();
+        assert_eq!(d.regressions(), 0);
+    }
+
+    #[test]
+    fn mismatched_or_unknown_dumps_error() {
+        let fleet = fleet_dump(&[("a", Some(1.0))]);
+        let bench = Json::obj(vec![("results", Json::Arr(vec![]))]);
+        assert!(diff_dumps(&fleet, &bench, 0.05).is_err());
+        assert!(diff_dumps(&Json::obj(vec![]), &fleet, 0.05).is_err());
+    }
+
+    #[test]
+    fn diff_json_is_well_formed() {
+        let old = fleet_dump(&[("a", Some(100.0))]);
+        let new = fleet_dump(&[("a", Some(90.0))]);
+        let d = diff_dumps(&old, &new, 0.05).unwrap();
+        let text = d.json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("regressions").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(parsed.get("kind").and_then(Json::as_str), Some("fleet"));
+    }
+}

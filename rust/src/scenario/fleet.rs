@@ -34,6 +34,7 @@ struct CellMeta {
     workload: String,
     deployment: String,
     optimizer: String,
+    budget: String,
     seed: u64,
 }
 
@@ -111,6 +112,7 @@ impl Fleet {
                 sut: target.name().to_string(),
                 workload: workload.name,
                 deployment: deployment.name,
+                budget: tuning.budget.name(),
                 optimizer: tuning.optimizer,
                 seed: tuning.seed,
             };
@@ -150,6 +152,7 @@ impl Fleet {
                     workload: m.workload,
                     deployment: m.deployment,
                     optimizer: m.optimizer,
+                    budget: m.budget,
                     seed: m.seed,
                     outcome,
                 }
@@ -182,6 +185,8 @@ pub struct FleetCell {
     /// Optimizer name ([`crate::tuner::TuningConfig::optimizer`];
     /// custom-factory cells keep the config's name).
     pub optimizer: String,
+    /// Canonical budget name ([`crate::budget::Budget::name`]).
+    pub budget: String,
     /// Tuning seed.
     pub seed: u64,
     /// The session's outcome, records included.
@@ -275,24 +280,31 @@ impl FleetReport {
     pub fn table(&self) -> Table {
         let mut t = Table::new(
             "Fleet report (one row per scenario cell)",
-            &["cell", "baseline", "best", "gain", "tests", "failures", "sim time"],
+            &[
+                "cell", "budget", "baseline", "best", "gain", "tests", "failures", "sim time",
+                "stopped",
+            ],
         );
         for cell in &self.cells {
             match &cell.outcome {
                 Ok(o) => t.row(&[
                     cell.label.clone(),
+                    cell.budget.clone(),
                     format!("{:.0}", o.baseline.throughput),
                     format!("{:.0}", o.best.throughput),
                     format!("{:+.1}%", o.improvement * 100.0),
                     format!("{}", o.tests_used),
                     format!("{}", o.failures),
                     crate::report::fmt_duration(o.sim_seconds),
+                    o.stopped.to_string(),
                 ]),
                 Err(e) => t.row(&[
                     cell.label.clone(),
+                    cell.budget.clone(),
                     "-".into(),
                     "-".into(),
                     format!("FAILED: {e}"),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -317,6 +329,7 @@ impl FleetReport {
                     ("workload", Json::Str(cell.workload.clone())),
                     ("deployment", Json::Str(cell.deployment.clone())),
                     ("optimizer", Json::Str(cell.optimizer.clone())),
+                    ("budget", Json::Str(cell.budget.clone())),
                     ("seed", Json::Num(cell.seed as f64)),
                 ];
                 match &cell.outcome {
@@ -329,6 +342,7 @@ impl FleetReport {
                         kvs.push(("tests_used", Json::Num(o.tests_used as f64)));
                         kvs.push(("failures", Json::Num(o.failures as f64)));
                         kvs.push(("sim_seconds", Json::Num(o.sim_seconds)));
+                        kvs.push(("stopped", Json::Str(o.stopped.to_string())));
                         kvs.push(("best_curve", Json::nums(&o.best_curve())));
                     }
                     Err(e) => {

@@ -27,10 +27,13 @@
 //! scheduler sessions; the `acts fleet` CLI subcommand exposes the
 //! same path as comma-separated axis flags.
 
+pub mod diff;
 pub mod fleet;
 
+pub use diff::{diff_dumps, diff_files, DiffKind, DiffReport, DiffRow};
 pub use fleet::{Fleet, FleetAggregate, FleetCell, FleetReport};
 
+use crate::budget::Budget;
 use crate::error::{ActsError, Result};
 use crate::experiment::Lab;
 use crate::manipulator::{SimulatedSut, SimulationOpts, Target};
@@ -198,7 +201,7 @@ impl ScenarioSpec {
 }
 
 /// Cartesian scenario axes: expands suts × workloads × deployments ×
-/// optimizers × seeds (seeds innermost, suts outermost) into
+/// optimizers × budgets × seeds (seeds innermost, suts outermost) into
 /// [`ScenarioSpec`]s sharing one base [`TuningConfig`] and one set of
 /// simulation options.
 #[derive(Clone, Debug)]
@@ -211,10 +214,16 @@ pub struct Matrix {
     pub deployments: Vec<String>,
     /// Optimizer registry names.
     pub optimizers: Vec<String>,
+    /// Resource-limit axis: named budgets ([`Budget::by_name`] —
+    /// `tests-100`, `simsec-600`, `tests-200+simsec-900`, ...) that
+    /// override `base.budget` per cell, with the budget name folded
+    /// into the cell label. Empty = no extra axis: every cell inherits
+    /// `base.budget` and labels are unchanged.
+    pub budgets: Vec<String>,
     /// Tuning seeds (one session per seed per cell).
     pub seeds: Vec<u64>,
-    /// Base tuning configuration; `optimizer` and `seed` are
-    /// overridden per cell.
+    /// Base tuning configuration; `optimizer`, `seed` (and `budget`,
+    /// when the budgets axis is non-empty) are overridden per cell.
     pub base: TuningConfig,
     /// Simulation options applied to every cell.
     pub sim: SimulationOpts,
@@ -228,6 +237,7 @@ impl Default for Matrix {
             workloads: vec!["zipfian-rw".into()],
             deployments: vec!["standalone".into()],
             optimizers: vec!["rrs".into()],
+            budgets: vec![],
             seeds: vec![1],
             base: TuningConfig::default(),
             sim: SimulationOpts::default(),
@@ -242,33 +252,63 @@ impl Matrix {
             * self.workloads.len()
             * self.deployments.len()
             * self.optimizers.len()
+            * self.budgets.len().max(1)
             * self.seeds.len()
     }
 
     /// Expand into one [`ScenarioSpec`] per cell, in row-major axis
     /// order (suts outermost, seeds innermost). Errors on empty axes
-    /// and unknown registry names.
+    /// and unknown registry names (unknown budget names included).
     pub fn expand(&self) -> Result<Vec<ScenarioSpec>> {
         if self.cells() == 0 {
             return Err(ActsError::InvalidArg(
                 "scenario matrix has an empty axis (zero cells)".into(),
             ));
         }
+        // resolve the budget axis up front so unknown names fail the
+        // whole expansion, like any other axis; `None` = inherit base.
+        // Labels use the CANONICAL name (`Budget::name`), not the raw
+        // spelling, so cell labels always match `FleetCell::budget`
+        // and two dumps of the same budget diff as the same row.
+        let budget_axis: Vec<Option<(String, Budget)>> = if self.budgets.is_empty() {
+            vec![None]
+        } else {
+            self.budgets
+                .iter()
+                .map(|name| {
+                    Budget::by_name(name)
+                        .map(|b| Some((b.name(), b)))
+                        .ok_or_else(|| {
+                            ActsError::InvalidArg(format!("unknown budget `{name}`"))
+                        })
+                })
+                .collect::<Result<_>>()?
+        };
         let mut specs = Vec::with_capacity(self.cells());
         for sut in &self.suts {
             for workload in &self.workloads {
                 for deployment in &self.deployments {
                     for optimizer in &self.optimizers {
-                        for &seed in &self.seeds {
-                            let tuning = TuningConfig {
-                                optimizer: optimizer.clone(),
-                                seed,
-                                ..self.base.clone()
-                            };
-                            specs.push(
-                                ScenarioSpec::from_names(sut, workload, deployment, tuning)?
-                                    .with_sim(self.sim.clone()),
-                            );
+                        for budget in &budget_axis {
+                            for &seed in &self.seeds {
+                                let mut tuning = TuningConfig {
+                                    optimizer: optimizer.clone(),
+                                    seed,
+                                    ..self.base.clone()
+                                };
+                                if let Some((_, b)) = budget {
+                                    tuning.budget = b.clone();
+                                }
+                                let mut spec =
+                                    ScenarioSpec::from_names(sut, workload, deployment, tuning)?
+                                        .with_sim(self.sim.clone());
+                                if let Some((name, _)) = budget {
+                                    spec = spec.with_label(format!(
+                                        "{sut}/{workload}/{deployment}/{optimizer}/{name}/s{seed}"
+                                    ));
+                                }
+                                specs.push(spec);
+                            }
                         }
                     }
                 }
@@ -325,8 +365,9 @@ mod tests {
             workloads: vec!["uniform-read".into(), "zipfian-rw".into()],
             deployments: vec!["standalone".into()],
             optimizers: vec!["rrs".into(), "gp".into()],
+            budgets: vec![],
             seeds: vec![1, 2],
-            base: TuningConfig { budget_tests: 9, ..Default::default() },
+            base: TuningConfig { budget: Budget::tests(9), ..Default::default() },
             sim: SimulationOpts::ideal(),
         };
         assert_eq!(m.cells(), 16);
@@ -338,7 +379,7 @@ mod tests {
         assert_eq!(specs[2].label, "mysql/uniform-read/standalone/gp/s1");
         assert_eq!(specs[15].label, "tomcat/zipfian-rw/standalone/gp/s2");
         for s in &specs {
-            assert_eq!(s.tuning.budget_tests, 9);
+            assert_eq!(s.tuning.budget, Budget::tests(9));
             assert_eq!(s.sut_seed, s.tuning.seed);
             assert_eq!(s.sim.noise_sigma, 0.0, "sim opts must propagate");
         }
@@ -348,6 +389,56 @@ mod tests {
     fn empty_axis_is_an_error() {
         let m = Matrix { seeds: vec![], ..Default::default() };
         assert_eq!(m.cells(), 0);
+        assert!(m.expand().is_err());
+    }
+
+    #[test]
+    fn budgets_axis_sweeps_resource_limits_like_any_other_axis() {
+        let m = Matrix {
+            budgets: vec!["tests-100".into(), "simsec-600".into()],
+            seeds: vec![1, 2],
+            ..Default::default()
+        };
+        assert_eq!(m.cells(), 4);
+        let specs = m.expand().unwrap();
+        assert_eq!(specs.len(), 4);
+        // budgets outside seeds: budget-major, seed-minor
+        assert_eq!(specs[0].label, "mysql/zipfian-rw/standalone/rrs/tests-100/s1");
+        assert_eq!(specs[1].label, "mysql/zipfian-rw/standalone/rrs/tests-100/s2");
+        assert_eq!(specs[2].label, "mysql/zipfian-rw/standalone/rrs/simsec-600/s1");
+        assert_eq!(specs[0].tuning.budget, Budget::tests(100));
+        assert_eq!(specs[2].tuning.budget, Budget::sim_seconds(600.0));
+        assert_eq!(specs[3].tuning.seed, 2);
+    }
+
+    #[test]
+    fn empty_budgets_axis_inherits_the_base_budget() {
+        let m = Matrix {
+            base: TuningConfig { budget: Budget::tests(7), ..Default::default() },
+            ..Default::default()
+        };
+        assert_eq!(m.cells(), 1);
+        let specs = m.expand().unwrap();
+        assert_eq!(specs[0].tuning.budget, Budget::tests(7));
+        // no axis, no label suffix
+        assert_eq!(specs[0].label, "mysql/zipfian-rw/standalone/rrs/s1");
+    }
+
+    #[test]
+    fn budget_labels_use_the_canonical_name() {
+        // a non-canonical spelling resolves, but the label carries the
+        // canonical name so it always matches `FleetCell::budget`
+        let m = Matrix { budgets: vec!["simsec-600.50".into()], ..Default::default() };
+        let specs = m.expand().unwrap();
+        assert_eq!(specs[0].label, "mysql/zipfian-rw/standalone/rrs/simsec-600.5/s1");
+        assert_eq!(specs[0].tuning.budget, Budget::sim_seconds(600.5));
+    }
+
+    #[test]
+    fn unknown_budget_name_fails_the_expansion() {
+        let m = Matrix { budgets: vec!["tests-0".into()], ..Default::default() };
+        assert!(m.expand().is_err());
+        let m = Matrix { budgets: vec!["hours-3".into()], ..Default::default() };
         assert!(m.expand().is_err());
     }
 

@@ -1,7 +1,8 @@
 //! The tuner — the third component of the paper's architecture (Fig. 2)
 //! and the ACTS problem's solver (§3): find, within a **resource limit**
-//! (number of staged tests), a configuration optimizing the SUT's
-//! deployment under a workload.
+//! (a composite [`crate::budget::Budget`] over staged tests, simulated
+//! wall-clock and abstract cost units), a configuration optimizing the
+//! SUT's deployment under a workload.
 //!
 //! # Session = policy, scheduler = mechanism
 //!
@@ -58,9 +59,10 @@
 pub mod scheduler;
 pub mod session;
 
-pub use scheduler::{Scheduler, SchedulerMode};
+pub use scheduler::{default_lanes, Scheduler, SchedulerMode};
 pub use session::{ProposedTest, Round, TuningSession};
 
+use crate::budget::{Budget, StopCause};
 use crate::error::Result;
 use crate::manipulator::{Measurement, SystemManipulator};
 use crate::optimizer::{self, Optimizer};
@@ -69,8 +71,11 @@ use crate::runtime::BackendKind;
 /// Session parameters (the ACTS problem instance).
 #[derive(Clone, Debug)]
 pub struct TuningConfig {
-    /// Resource limit: staged tests allowed (baseline test included).
-    pub budget_tests: u64,
+    /// Composite resource limit (see [`crate::budget`]): staged tests,
+    /// simulated wall-clock seconds and/or abstract cost units —
+    /// exhausted when ANY bounded dimension is. `Budget::tests(n)`
+    /// replays the historical `budget_tests: n` counting bit-for-bit.
+    pub budget: Budget,
     /// Optimizer registry name (`rrs`, `random`, `shc`, ...).
     pub optimizer: String,
     /// Master seed (optimizer randomness; the manipulator has its own).
@@ -92,7 +97,7 @@ pub struct TuningConfig {
 impl Default for TuningConfig {
     fn default() -> Self {
         TuningConfig {
-            budget_tests: 100,
+            budget: Budget::tests(100),
             optimizer: "rrs".into(),
             seed: 0xAC75,
             max_consecutive_failures: 10,
@@ -134,6 +139,9 @@ pub struct TuningOutcome {
     pub failures: u64,
     /// Simulated staging-environment seconds consumed.
     pub sim_seconds: f64,
+    /// Why the session stopped: which budget dimension exhausted, or
+    /// the consecutive-failure cap.
+    pub stopped: StopCause,
 }
 
 impl TuningOutcome {
@@ -314,6 +322,12 @@ mod tests {
                 duration_s: 60.0,
             })
         }
+        fn est_test_cost(&self) -> f64 {
+            // exactly the simulated cost of one staged test (10s restart
+            // + 60s test), so time/cost budget trajectories in the
+            // tests below are deterministic
+            70.0
+        }
         fn sim_seconds(&self) -> f64 {
             self.seconds
         }
@@ -328,7 +342,7 @@ mod tests {
     #[test]
     fn budget_is_respected_exactly() {
         let mut sut = FakeSut::new(4);
-        let cfg = TuningConfig { budget_tests: 25, ..Default::default() };
+        let cfg = TuningConfig { budget: Budget::tests(25), ..Default::default() };
         let out = tune(&mut sut, &cfg).unwrap();
         assert_eq!(out.tests_used, 25);
         assert_eq!(out.records.len(), 25); // no failures -> all recorded
@@ -338,8 +352,12 @@ mod tests {
     fn answer_never_worse_than_baseline() {
         for seed in 0..5 {
             let mut sut = FakeSut::new(6);
-            let cfg =
-                TuningConfig { budget_tests: 10, seed, optimizer: "random".into(), ..Default::default() };
+            let cfg = TuningConfig {
+                budget: Budget::tests(10),
+                seed,
+                optimizer: "random".into(),
+                ..Default::default()
+            };
             let out = tune(&mut sut, &cfg).unwrap();
             assert!(out.best.throughput >= out.baseline.throughput);
             assert!(out.improvement >= 0.0);
@@ -359,7 +377,8 @@ mod tests {
     fn more_budget_never_hurts() {
         let run = |budget| {
             let mut sut = FakeSut::new(5);
-            let cfg = TuningConfig { budget_tests: budget, seed: 42, ..Default::default() };
+            let cfg =
+                TuningConfig { budget: Budget::tests(budget), seed: 42, ..Default::default() };
             tune(&mut sut, &cfg).unwrap().best.throughput
         };
         assert!(run(200) >= run(20));
@@ -369,7 +388,7 @@ mod tests {
     fn failures_consume_budget_but_produce_no_records() {
         let mut sut = FakeSut::new(4);
         sut.fail_every = Some(3); // every 3rd run_test fails
-        let cfg = TuningConfig { budget_tests: 30, ..Default::default() };
+        let cfg = TuningConfig { budget: Budget::tests(30), ..Default::default() };
         let out = tune(&mut sut, &cfg).unwrap();
         assert_eq!(out.tests_used, 30);
         assert!(out.failures >= 8, "failures {}", out.failures);
@@ -382,7 +401,7 @@ mod tests {
         sut.fail_every = Some(1); // everything fails (after baseline? no: baseline too)
         // baseline itself failing is a hard error — use fail_every=1 but
         // baseline is call 1 -> fails. Expect Err.
-        let cfg = TuningConfig { budget_tests: 100, ..Default::default() };
+        let cfg = TuningConfig { budget: Budget::tests(100), ..Default::default() };
         assert!(tune(&mut sut, &cfg).is_err());
     }
 
@@ -391,7 +410,7 @@ mod tests {
         let mut sut = FakeSut::new(4);
         sut.fail_after = Some(1); // baseline (call 1) passes, everything after fails
         let cfg = TuningConfig {
-            budget_tests: 1000,
+            budget: Budget::tests(1000),
             max_consecutive_failures: 5,
             ..Default::default()
         };
@@ -413,7 +432,7 @@ mod tests {
         let mut sut = FakeSut::new(4);
         sut.fail_every = Some(2);
         let cfg = TuningConfig {
-            budget_tests: 60,
+            budget: Budget::tests(60),
             max_consecutive_failures: 5,
             ..Default::default()
         };
@@ -459,13 +478,13 @@ mod tests {
     /// failure injection.
     #[test]
     fn batched_round_size_one_is_bit_identical_to_sequential() {
-        for optimizer in ["rrs", "random", "lhs-screen", "gp"] {
+        for optimizer in ["rrs", "random", "lhs-screen", "gp", "coord"] {
             for fail_every in [None, Some(3)] {
                 let run = |batched: bool| {
                     let mut sut = FakeSut::new(4);
                     sut.fail_every = fail_every;
                     let cfg = TuningConfig {
-                        budget_tests: 30,
+                        budget: Budget::tests(30),
                         optimizer: optimizer.into(),
                         seed: 99,
                         round_size: 1,
@@ -529,7 +548,7 @@ mod tests {
     fn batched_budget_is_respected_exactly_at_any_round_size() {
         for round_size in [1usize, 4, 7, 16, 64] {
             let mut sut = FakeSut::new(4);
-            let cfg = TuningConfig { budget_tests: 25, round_size, ..Default::default() };
+            let cfg = TuningConfig { budget: Budget::tests(25), round_size, ..Default::default() };
             let out = tune_batched(&mut sut, &cfg).unwrap();
             assert_eq!(out.tests_used, 25, "round_size {round_size}");
             assert_eq!(out.records.len(), 25, "round_size {round_size}");
@@ -543,7 +562,7 @@ mod tests {
         for seed in 0..5 {
             let mut sut = FakeSut::new(6);
             let cfg = TuningConfig {
-                budget_tests: 20,
+                budget: Budget::tests(20),
                 seed,
                 optimizer: "random".into(),
                 round_size: 8,
@@ -569,7 +588,7 @@ mod tests {
         let mut sut = FakeSut::new(4);
         sut.fail_after = Some(1); // baseline passes, everything after fails
         let cfg = TuningConfig {
-            budget_tests: 1000,
+            budget: Budget::tests(1000),
             max_consecutive_failures: 5,
             round_size: 8,
             ..Default::default()
@@ -587,7 +606,7 @@ mod tests {
     fn batched_failures_consume_budget_but_produce_no_records() {
         let mut sut = FakeSut::new(4);
         sut.fail_every = Some(3);
-        let cfg = TuningConfig { budget_tests: 30, round_size: 8, ..Default::default() };
+        let cfg = TuningConfig { budget: Budget::tests(30), round_size: 8, ..Default::default() };
         let out = tune_batched(&mut sut, &cfg).unwrap();
         assert_eq!(out.tests_used, 30);
         assert!(out.failures >= 8, "failures {}", out.failures);
@@ -614,7 +633,10 @@ mod tests {
         config: &TuningConfig,
     ) -> crate::Result<TuningOutcome> {
         use crate::util::rng::Rng64;
-        assert!(config.budget_tests >= 1);
+        // the frozen loop predates the budget layer: it counts staged
+        // tests against a plain u64, exactly as `budget_tests: N` did
+        let budget_tests = config.budget.tests.expect("reference semantics need a tests budget");
+        assert!(budget_tests >= 1);
         assert!(config.round_size >= 1);
         let mut rng = Rng64::new(config.seed);
         let mut records: Vec<TestRecord> = Vec::new();
@@ -629,7 +651,7 @@ mod tests {
                 Err(ActsError::TestFailed(msg)) => {
                     failures += 1;
                     if failures > config.max_consecutive_failures as u64
-                        || tests_used >= config.budget_tests
+                        || tests_used >= budget_tests
                     {
                         return Err(ActsError::TestFailed(format!(
                             "baseline never completed: {msg}"
@@ -650,8 +672,8 @@ mod tests {
         opt.tell(&baseline_unit, baseline.throughput);
 
         let mut consecutive_failures = 0u32;
-        while tests_used < config.budget_tests {
-            let n = ((config.budget_tests - tests_used) as usize).min(config.round_size);
+        while tests_used < budget_tests {
+            let n = ((budget_tests - tests_used) as usize).min(config.round_size);
             let proposals = opt.ask_batch(&mut rng, n);
             let staged: Vec<Vec<f64>> = proposals.iter().map(|p| sut.space().snap(p)).collect();
             let outcomes = sut.run_tests_batch(&proposals);
@@ -691,6 +713,11 @@ mod tests {
             }
         }
 
+        let stopped = if consecutive_failures > config.max_consecutive_failures {
+            crate::budget::StopCause::FailureCap
+        } else {
+            crate::budget::StopCause::Exhausted(crate::budget::BudgetDim::Tests)
+        };
         Ok(TuningOutcome {
             records,
             baseline,
@@ -700,6 +727,7 @@ mod tests {
             tests_used,
             failures,
             sim_seconds: sut.sim_seconds(),
+            stopped,
         })
     }
 
@@ -711,6 +739,7 @@ mod tests {
         assert_eq!(a.best, b.best, "{ctx}");
         assert_eq!(a.baseline, b.baseline, "{ctx}");
         assert_eq!(a.sim_seconds, b.sim_seconds, "{ctx}");
+        assert_eq!(a.stopped, b.stopped, "{ctx}: stop cause diverged");
     }
 
     /// The tentpole's equivalence guarantee: a 1-session scheduler (the
@@ -719,11 +748,11 @@ mod tests {
     /// without failure injection.
     #[test]
     fn single_session_scheduler_replays_reference_bit_for_bit() {
-        for optimizer in ["rrs", "random", "lhs-screen", "gp"] {
+        for optimizer in ["rrs", "random", "lhs-screen", "gp", "coord"] {
             for round_size in [1usize, 4, 16] {
                 for fail_every in [None, Some(3)] {
                     let cfg = TuningConfig {
-                        budget_tests: 30,
+                        budget: Budget::tests(30),
                         optimizer: optimizer.into(),
                         seed: 4242,
                         round_size,
@@ -763,13 +792,18 @@ mod tests {
         }
         let cases = [
             Case {
-                cfg: TuningConfig { budget_tests: 25, seed: 1, round_size: 8, ..Default::default() },
+                cfg: TuningConfig {
+                    budget: Budget::tests(25),
+                    seed: 1,
+                    round_size: 8,
+                    ..Default::default()
+                },
                 dim: 4,
                 fail_every: None,
             },
             Case {
                 cfg: TuningConfig {
-                    budget_tests: 40,
+                    budget: Budget::tests(40),
                     optimizer: "random".into(),
                     seed: 2,
                     round_size: 16,
@@ -780,7 +814,7 @@ mod tests {
             },
             Case {
                 cfg: TuningConfig {
-                    budget_tests: 9,
+                    budget: Budget::tests(9),
                     optimizer: "gp".into(),
                     seed: 3,
                     round_size: 1,
@@ -791,7 +825,7 @@ mod tests {
             },
             Case {
                 cfg: TuningConfig {
-                    budget_tests: 33,
+                    budget: Budget::tests(33),
                     optimizer: "lhs-screen".into(),
                     seed: 4,
                     round_size: 32,
@@ -835,12 +869,12 @@ mod tests {
         // slot 0: dead environment — the baseline never completes
         let mut dead = FakeSut::new(3);
         dead.fail_every = Some(1);
-        let cfg = TuningConfig { budget_tests: 50, ..Default::default() };
+        let cfg = TuningConfig { budget: Budget::tests(50), ..Default::default() };
         let session = TuningSession::from_registry(dead.space().clone(), &cfg).unwrap();
         scheduler.add(session, dead);
         // slot 1: healthy session
         let healthy = FakeSut::new(3);
-        let cfg2 = TuningConfig { budget_tests: 20, round_size: 8, ..Default::default() };
+        let cfg2 = TuningConfig { budget: Budget::tests(20), round_size: 8, ..Default::default() };
         let session2 = TuningSession::from_registry(healthy.space().clone(), &cfg2).unwrap();
         scheduler.add(session2, healthy);
 
@@ -868,7 +902,7 @@ mod tests {
         let cases: Vec<Case> = (0..8u64)
             .map(|i| Case {
                 cfg: TuningConfig {
-                    budget_tests: 12 + 7 * i,
+                    budget: Budget::tests(12 + 7 * i),
                     optimizer: optimizers[i as usize % optimizers.len()].into(),
                     seed: 1000 + i,
                     round_size: [1usize, 4, 8, 16][i as usize % 4],
@@ -890,7 +924,7 @@ mod tests {
             scheduler.run()
         };
         let sequential = build(SchedulerMode::Sequential);
-        let pipelined = build(SchedulerMode::Pipelined);
+        let pipelined = build(SchedulerMode::Pipelined { lanes: 2 });
 
         let solo: Vec<TuningOutcome> = cases
             .iter()
@@ -916,15 +950,19 @@ mod tests {
     /// healthy sessions in either buffer.
     #[test]
     fn pipelined_scheduler_isolates_per_session_failures() {
-        let mut scheduler = Scheduler::with_mode(SchedulerMode::Pipelined);
+        let mut scheduler = Scheduler::with_mode(SchedulerMode::Pipelined { lanes: 2 });
         for i in 0..4u64 {
             let mut sut = FakeSut::new(3);
             if i == 1 {
                 // slot 1 (odd buffer): the baseline never completes
                 sut.fail_every = Some(1);
             }
-            let cfg =
-                TuningConfig { budget_tests: 20, seed: i, round_size: 8, ..Default::default() };
+            let cfg = TuningConfig {
+                budget: Budget::tests(20),
+                seed: i,
+                round_size: 8,
+                ..Default::default()
+            };
             let session = TuningSession::from_registry(sut.space().clone(), &cfg).unwrap();
             scheduler.add(session, sut);
         }
@@ -944,7 +982,7 @@ mod tests {
     #[test]
     fn session_state_machine_protocol() {
         let sut = FakeSut::new(3);
-        let cfg = TuningConfig { budget_tests: 6, round_size: 4, ..Default::default() };
+        let cfg = TuningConfig { budget: Budget::tests(6), round_size: 4, ..Default::default() };
         let mut session = TuningSession::from_registry(sut.space().clone(), &cfg).unwrap();
 
         assert!(matches!(session.next_round(), Round::Baseline));
@@ -984,5 +1022,189 @@ mod tests {
         assert_eq!(out.tests_used, 6);
         assert_eq!(out.failures, 1);
         assert_eq!(out.sim_seconds, 123.0);
+        assert_eq!(out.stopped, StopCause::Exhausted(BudgetDim::Tests));
+    }
+
+    // --- composite budgets ------------------------------------------
+
+    use crate::budget::BudgetDim;
+
+    /// The tentpole's budget guarantee: a session under
+    /// `Budget::by_name("tests-N")` replays the frozen pre-refactor
+    /// `budget_tests: N` loop bit-for-bit — every optimizer, several
+    /// round sizes, with and without failure injection.
+    #[test]
+    fn named_tests_budget_replays_the_frozen_reference_bit_for_bit() {
+        for optimizer in ["rrs", "random", "lhs-screen", "gp", "coord"] {
+            for round_size in [1usize, 8] {
+                for fail_every in [None, Some(3)] {
+                    let cfg = TuningConfig {
+                        budget: Budget::by_name("tests-30").expect("registered budget"),
+                        optimizer: optimizer.into(),
+                        seed: 777,
+                        round_size,
+                        ..Default::default()
+                    };
+                    let mut ref_sut = FakeSut::new(4);
+                    ref_sut.fail_every = fail_every;
+                    let mut ref_opt = optimizer::by_name(optimizer, 4).unwrap();
+                    let reference =
+                        reference_tune_batched(&mut ref_sut, ref_opt.as_mut(), &cfg).unwrap();
+
+                    let mut sut = FakeSut::new(4);
+                    sut.fail_every = fail_every;
+                    let named = tune_batched(&mut sut, &cfg).unwrap();
+                    assert_outcomes_identical(
+                        &reference,
+                        &named,
+                        &format!("{optimizer} round={round_size} fail={fail_every:?}"),
+                    );
+                    assert_eq!(named.stopped, StopCause::Exhausted(BudgetDim::Tests));
+                }
+            }
+        }
+    }
+
+    /// A time budget stops the session at the manipulator clock, the
+    /// final rounds shrink to the remaining seconds, and the outcome
+    /// names the exhausted dimension. FakeSut costs exactly 70s per
+    /// staged test (10s restart + 60s test; baseline 60s) and reports
+    /// that via `est_test_cost`, so the trajectory is deterministic.
+    #[test]
+    fn simsec_budget_stops_at_the_clock_and_shrinks_rounds() {
+        let mut sut = FakeSut::new(4);
+        let cfg = TuningConfig {
+            budget: Budget::by_name("simsec-500").expect("registered budget"),
+            round_size: 4,
+            seed: 5,
+            ..Default::default()
+        };
+        let out = tune_batched(&mut sut, &cfg).unwrap();
+        // baseline 60s -> round of 4 (280s, clock 340) -> the remaining
+        // 160s fit ceil(160/70) = 3 tests, NOT a full round of 4 ->
+        // clock 550 >= 500 and the session stops
+        assert_eq!(out.tests_used, 8, "rounds must shrink to the remaining seconds");
+        assert_eq!(out.sim_seconds, 550.0);
+        assert_eq!(out.stopped, StopCause::Exhausted(BudgetDim::SimSeconds));
+    }
+
+    /// A cost budget charges per staged test at the driver's estimate.
+    #[test]
+    fn cost_budget_charges_per_test_at_the_estimate() {
+        let mut sut = FakeSut::new(3);
+        let cfg = TuningConfig {
+            budget: Budget::by_name("cost-300").expect("registered budget"),
+            round_size: 8,
+            ..Default::default()
+        };
+        let out = tune_batched(&mut sut, &cfg).unwrap();
+        // baseline charges 70 cost units; the remaining 230 fit
+        // ceil(230/70) = 4 more tests
+        assert_eq!(out.tests_used, 5);
+        assert_eq!(out.stopped, StopCause::Exhausted(BudgetDim::CostUnits));
+    }
+
+    /// A composite budget is exhausted by whichever dimension binds
+    /// first, and the outcome reports that dimension.
+    #[test]
+    fn composite_budget_exhausts_on_any_dimension() {
+        let run = |name: &str| {
+            let mut sut = FakeSut::new(4);
+            let cfg = TuningConfig {
+                budget: Budget::by_name(name).expect("registered budget"),
+                round_size: 4,
+                seed: 5,
+                ..Default::default()
+            };
+            tune_batched(&mut sut, &cfg).unwrap()
+        };
+        // generous test count, tight clock: time binds (8 tests, as in
+        // the pure simsec run)
+        let timed = run("tests-50+simsec-500");
+        assert_eq!(timed.tests_used, 8);
+        assert_eq!(timed.stopped, StopCause::Exhausted(BudgetDim::SimSeconds));
+        // tight test count, generous clock: tests bind
+        let counted = run("tests-5+simsec-100000");
+        assert_eq!(counted.tests_used, 5);
+        assert_eq!(counted.stopped, StopCause::Exhausted(BudgetDim::Tests));
+    }
+
+    /// The failure cap reports itself as the stop cause.
+    #[test]
+    fn failure_cap_is_reported_as_the_stop_cause() {
+        let mut sut = FakeSut::new(4);
+        sut.fail_after = Some(1);
+        let cfg = TuningConfig {
+            budget: Budget::tests(1000),
+            max_consecutive_failures: 5,
+            round_size: 8,
+            ..Default::default()
+        };
+        let out = tune_batched(&mut sut, &cfg).unwrap();
+        assert_eq!(out.stopped, StopCause::FailureCap);
+    }
+
+    // --- N-lane pipeline --------------------------------------------
+
+    /// The ISSUE's lane-invariance acceptance criterion, as a property
+    /// test: heterogeneous 8-session fleets (random budgets, optimizers,
+    /// round sizes, dims and failure patterns) produce per-session
+    /// records bit-identical across `lanes ∈ {1, 2, 4, 8}` — and
+    /// identical to the sequential scheduler. Lanes only move whole
+    /// rounds between executes; they never touch what a round computes.
+    #[test]
+    fn pipelined_records_are_bit_identical_across_lane_counts() {
+        use crate::testkit::prop;
+        let optimizers = ["rrs", "random", "lhs-screen", "gp"];
+        prop::check(4, 0x1A9E5, |g| {
+            struct Case {
+                cfg: TuningConfig,
+                dim: usize,
+                fail_every: Option<u64>,
+            }
+            let cases: Vec<Case> = (0..8usize)
+                .map(|i| Case {
+                    cfg: TuningConfig {
+                        budget: Budget::tests(5 + g.below(25)),
+                        optimizer: (*g.choose(&optimizers)).into(),
+                        seed: 1000 + g.below(1_000_000),
+                        round_size: *g.choose(&[1usize, 3, 8, 16]),
+                        ..Default::default()
+                    },
+                    dim: 3 + (i % 4),
+                    // >= 2 so the baseline (call 1) always completes
+                    fail_every: g.bool(0.3).then(|| 2 + g.below(4)),
+                })
+                .collect();
+            let build = |mode: SchedulerMode| {
+                let mut scheduler = Scheduler::with_mode(mode);
+                for c in &cases {
+                    let mut sut = FakeSut::new(c.dim);
+                    sut.fail_every = c.fail_every;
+                    let session =
+                        TuningSession::from_registry(sut.space().clone(), &c.cfg).unwrap();
+                    scheduler.add(session, sut);
+                }
+                scheduler.run()
+            };
+            let sequential = build(SchedulerMode::Sequential);
+            for lanes in [1usize, 2, 4, 8] {
+                let pipelined = build(SchedulerMode::Pipelined { lanes });
+                for (i, (seq, pip)) in sequential.iter().zip(&pipelined).enumerate() {
+                    let seq = seq.as_ref().expect("baseline always completes");
+                    let pip = pip.as_ref().expect("baseline always completes");
+                    if seq.records != pip.records
+                        || seq.tests_used != pip.tests_used
+                        || seq.failures != pip.failures
+                        || seq.best_unit != pip.best_unit
+                        || seq.sim_seconds != pip.sim_seconds
+                        || seq.stopped != pip.stopped
+                    {
+                        return Err(format!("lanes={lanes}: session {i} diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -14,36 +14,53 @@
 //! results are identical either way, so every session's records match a
 //! solo run of that session (order independence — tested).
 //!
-//! # The double-buffered tick pipeline
+//! # The N-lane work-stealing tick pipeline
 //!
 //! [`Scheduler::run`] (the production path, [`Scheduler::run_pipelined`])
-//! overlaps staging with execution: the sessions are split into two
-//! buffers that tick out of phase — balanced by **estimated round
-//! cost** (round size × the manipulator's
+//! overlaps staging with execution across **N lanes**
+//! ([`SchedulerMode::Pipelined`]`{ lanes }`, default 2, `ACTS_LANES` /
+//! `acts fleet --lanes`): the sessions are seeded across the lanes by
+//! **estimated round cost** (round size × the manipulator's
 //! [`SystemManipulator::est_test_cost`] estimate, greedy
-//! longest-processing-time), so a heterogeneous fleet (one 16-wide
-//! round next to round-size-1 sessions) does not stall one buffer
-//! behind the other. Buffer assignment is purely a scheduling choice:
-//! per-session records are independent of it (tested). While buffer A's
-//! coalesced execute runs on a dedicated worker thread, buffer B's
-//! `ask_batch` + `stage_tests` staging — and the demuxed absorb of the
-//! round that just finished — proceed on the scheduler thread; the two
-//! meet at the demux barrier and swap roles:
+//! longest-processing-time — `partition_by_cost_n`), so a
+//! heterogeneous fleet (one 16-wide round next to round-size-1
+//! sessions) does not stall one lane behind the others. Lane
+//! assignment is purely a scheduling choice: per-session records are
+//! independent of it (tested across lane counts 1/2/4/8).
+//!
+//! Lanes tick round-robin on the scheduler thread: a lane's sessions
+//! are staged (`ask_batch` + `stage_tests`) and the staged rounds
+//! pooled into one coalesced job, which is handed to a pool of
+//! `lanes - 1` execute workers draining a **shared job queue** — an
+//! idle worker takes whichever lane's pool is oldest, so a lane whose
+//! own sessions have finished steals other lanes' staged rounds
+//! instead of going idle. Stealing moves **whole staged rounds**
+//! between physical executes and happens only between the stage and
+//! the demux barrier — never mid-execute, never mid-round — so it can
+//! only change *where* a round runs, never what it computes:
 //!
 //! ```text
-//! scheduler thread: stage A0 │ stage B0 · absorb A0 │ stage A1 · absorb B0 │ …
-//! worker thread:             │ execute A0           │ execute B0           │ …
+//! scheduler thread: stage L0 │ stage L1 │ stage L2 · absorb L0 │ stage L0 · absorb L1 │ …
+//! exec workers:              │ execute L0 ║ execute L1 (stolen by an idle worker) ║ …  │
 //! ```
 //!
-//! Every session still runs its own strict stage → execute → absorb →
-//! stage cycle (a session is only ever polled with no round in flight),
-//! and per-row results are independent of what shares an execute, so a
-//! pipelined run produces per-session records **bit-identical** to the
-//! sequential scheduler and to solo runs (tested). Only the engine's
-//! physical call pattern differs: rounds coalesce within a buffer
-//! rather than across all sessions. [`Scheduler::run_sequential`] keeps
-//! the single-threaded stage-all/execute-once/absorb-all tick for
+//! A lane is restaged only after its previous pool has been absorbed
+//! (the demux barrier), so every session still runs its own strict
+//! stage → execute → absorb → stage cycle, and per-row results are
+//! independent of what shares an execute: a pipelined run produces
+//! per-session records **bit-identical** to the sequential scheduler
+//! and to solo runs, for any lane count (tested). Only the engine's
+//! physical call pattern differs: rounds coalesce within a lane rather
+//! than across all sessions. [`Scheduler::run_sequential`] keeps the
+//! single-threaded stage-all/execute-once/absorb-all tick for
 //! reference, equivalence tests and benchmarking.
+//!
+//! The scheduler also feeds each session's budget ledger
+//! ([`crate::budget`]): [`Scheduler::add`] installs the manipulator's
+//! per-test cost estimate, and the manipulator clock is folded into
+//! the ledger after every baseline attempt and absorbed round, so
+//! time/cost budget dimensions charge real elapsed staging time at
+//! round boundaries.
 //!
 //! Sessions advance independently: a session whose budget or failure
 //! cap ends it simply stops being polled while the others keep going,
@@ -62,7 +79,7 @@ use crate::manipulator::{EngineRequest, StagedRound, SystemManipulator};
 use crate::runtime::engine::{group_by_key, EvalRequest, Perf};
 use crate::runtime::shapes::D_PAD;
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 struct Slot<'a, M: SystemManipulator> {
     session: TuningSession<'a>,
@@ -85,16 +102,37 @@ type Pool = Vec<PooledRound>;
 /// round, plus the per-round engine failure (if its group died).
 type PoolResults = (Vec<Vec<Vec<Perf>>>, Vec<Option<String>>);
 
+/// Default lane count for the pipelined scheduler: the `ACTS_LANES`
+/// environment variable (clamped to >= 1), else 2 — the historical
+/// double buffer.
+pub fn default_lanes() -> usize {
+    std::env::var("ACTS_LANES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(2)
+}
+
 /// How [`Scheduler::run`] drives its sessions.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedulerMode {
-    /// Double-buffered tick pipeline: staging overlaps execution on a
-    /// worker thread (the production default; see the module docs).
-    #[default]
-    Pipelined,
+    /// N-lane tick pipeline: staging overlaps execution on a shared
+    /// worker pool, idle lanes steal whole staged rounds (the
+    /// production default at [`default_lanes`] lanes; see the module
+    /// docs). Lane count is clamped to the session count.
+    Pipelined {
+        /// Number of session lanes ticking out of phase.
+        lanes: usize,
+    },
     /// Single-threaded reference: stage every session, execute one
     /// coalesced pass, absorb, repeat.
     Sequential,
+}
+
+impl Default for SchedulerMode {
+    fn default() -> Self {
+        SchedulerMode::Pipelined { lanes: default_lanes() }
+    }
 }
 
 /// Runs many tuning sessions concurrently against shared engines (see
@@ -125,7 +163,12 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
 
     /// Add a session and the manipulator it tunes. Returns the slot
     /// index ([`Scheduler::run`] reports outcomes in this order).
-    pub fn add(&mut self, session: TuningSession<'a>, sut: M) -> usize {
+    /// Installs the manipulator's per-test cost estimate and current
+    /// clock into the session's budget ledger (advisory for a pure
+    /// tests budget; the binding inputs for time/cost dimensions).
+    pub fn add(&mut self, mut session: TuningSession<'a>, sut: M) -> usize {
+        session.set_cost_estimate(sut.est_test_cost());
+        session.observe_sim_seconds(sut.sim_seconds());
         self.slots.push(Slot { session, sut, live: true });
         self.slots.len() - 1
     }
@@ -141,7 +184,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
     /// the other sessions.
     pub fn run(self) -> Vec<crate::Result<TuningOutcome>> {
         match self.mode {
-            SchedulerMode::Pipelined => self.run_pipelined(),
+            SchedulerMode::Pipelined { lanes } => self.run_pipelined(lanes),
             SchedulerMode::Sequential => self.run_sequential(),
         }
     }
@@ -167,72 +210,112 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
         self.into_outcomes()
     }
 
-    /// The double-buffered pipeline driver (see the module docs): two
-    /// session buffers tick out of phase, staging and absorbing on this
-    /// thread while the other buffer's coalesced execute runs on a
-    /// worker thread. Degenerates to [`Scheduler::run_sequential`]
-    /// below two sessions (one buffer has nothing to overlap with).
-    pub fn run_pipelined(mut self) -> Vec<crate::Result<TuningOutcome>> {
+    /// The N-lane pipeline driver (see the module docs): session lanes
+    /// tick round-robin, staging and absorbing on this thread while
+    /// other lanes' coalesced executes run on a shared pool of
+    /// `lanes - 1` worker threads (min 1) draining one job queue — an
+    /// idle worker picks up whichever lane's pool is oldest, i.e.
+    /// lanes steal each other's whole staged rounds between the stage
+    /// and the demux barrier. Degenerates to
+    /// [`Scheduler::run_sequential`] below two sessions (nothing to
+    /// overlap with).
+    pub fn run_pipelined(mut self, lanes: usize) -> Vec<crate::Result<TuningOutcome>> {
         if self.slots.len() < 2 {
             return self.run_sequential();
         }
+        let lanes = lanes.clamp(1, self.slots.len());
         let costs: Vec<f64> = self
             .slots
             .iter()
             .map(|s| s.session.config().round_size as f64 * s.sut.est_test_cost())
             .collect();
-        let groups = partition_by_cost(&costs);
+        let groups = partition_by_cost_n(&costs, lanes);
 
-        let (job_tx, job_rx) = mpsc::channel::<Pool>();
-        let (res_tx, res_rx) = mpsc::channel::<(Pool, PoolResults)>();
-        let worker = std::thread::Builder::new()
-            .name("acts-exec".into())
-            .spawn(move || {
-                while let Ok(pool) = job_rx.recv() {
-                    let results = execute_pool(&pool);
-                    if res_tx.send((pool, results)).is_err() {
-                        break;
-                    }
-                }
+        // one shared job queue: workers pull from it behind a mutex, so
+        // whichever worker is idle executes the oldest pending pool
+        // regardless of which lane staged it (round-granular stealing)
+        let (job_tx, job_rx) = mpsc::channel::<(usize, Pool)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Pool, PoolResults)>();
+        let workers: Vec<_> = (0..lanes.saturating_sub(1).max(1))
+            .map(|w| {
+                let job_rx = Arc::clone(&job_rx);
+                let res_tx = res_tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("acts-exec-{w}"))
+                    .spawn(move || loop {
+                        // hold the lock only across the blocking pop;
+                        // execution itself runs unlocked, concurrently
+                        // with the other workers
+                        let job = { job_rx.lock().expect("job queue poisoned").recv() };
+                        let Ok((lane, pool)) = job else { break };
+                        // a panicking execute must still answer: with
+                        // several workers alive, losing this pool's
+                        // result would leave its lane inflight forever
+                        // (the old single-worker pipeline failed fast by
+                        // closing the channel; here we fail the pool's
+                        // rounds instead and keep the fleet going)
+                        let results =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                execute_pool(&pool)
+                            }))
+                            .unwrap_or_else(|_| {
+                                let member: Vec<Vec<Vec<Perf>>> = pool
+                                    .iter()
+                                    .map(|round| vec![Vec::new(); round.requests.len()])
+                                    .collect();
+                                let failed: Vec<Option<String>> =
+                                    vec![Some("execute worker panicked".into()); pool.len()];
+                                (member, failed)
+                            });
+                        if res_tx.send((lane, pool, results)).is_err() {
+                            break;
+                        }
+                    })
+                    .expect("spawn an execute worker")
             })
-            .expect("spawn the execute worker");
+            .collect();
+        drop(res_tx);
 
-        let mut inflight = false; // the *other* buffer's pool is executing
-        let mut idle = 0usize; // consecutive buffers with nothing to do
+        let mut inflight = vec![false; lanes]; // lane has a pool executing
+        let mut idle = 0usize; // consecutive lanes with nothing to do
         let mut g = 0usize;
         loop {
-            // Stage this buffer's rounds — concurrently with the other
-            // buffer's execute (if one is in flight).
+            // The demux barrier: this lane's previous pool must be
+            // absorbed before its sessions can be restaged. Results
+            // from other lanes may arrive first — absorb them too, so
+            // their lanes are free by the time round-robin reaches
+            // them.
+            while inflight[g] {
+                let (lane, pool, results) = res_rx.recv().expect("execute worker died");
+                self.absorb_pool(pool, results);
+                inflight[lane] = false;
+            }
+
+            // Stage this lane's rounds — concurrently with every other
+            // lane's execute still in flight.
             let (pool, did_work) = self.stage_group(&groups[g]);
             if did_work || !pool.is_empty() {
                 idle = 0;
             } else {
                 idle += 1;
             }
-
-            if inflight {
-                // The demux barrier: wait for the other buffer's
-                // results, hand the worker this buffer's pool before
-                // absorbing so it never idles through the absorb.
-                let (done, results) = res_rx.recv().expect("execute worker died");
-                if pool.is_empty() {
-                    inflight = false;
-                } else {
-                    job_tx.send(pool).expect("execute worker died");
-                }
-                self.absorb_pool(done, results);
-            } else if !pool.is_empty() {
-                job_tx.send(pool).expect("execute worker died");
-                inflight = true;
+            if !pool.is_empty() {
+                job_tx.send((g, pool)).expect("execute worker died");
+                inflight[g] = true;
             }
 
-            g = 1 - g;
-            if !inflight && idle >= 2 {
+            g = (g + 1) % lanes;
+            // a full round-robin pass staged nothing and every lane's
+            // pool is home: the fleet is done
+            if idle >= lanes && inflight.iter().all(|&f| !f) {
                 break;
             }
         }
         drop(job_tx);
-        worker.join().expect("execute worker panicked");
+        for worker in workers {
+            worker.join().expect("execute worker panicked");
+        }
         self.into_outcomes()
     }
 
@@ -255,6 +338,10 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                     did_work = true;
                     let unit = slot.sut.current_unit().to_vec();
                     let outcome = slot.sut.run_test();
+                    // clock first: a failed attempt's exhaustion check
+                    // inside absorb_baseline must see the time this
+                    // very attempt consumed, not one attempt stale
+                    slot.session.observe_sim_seconds(slot.sut.sim_seconds());
                     slot.session.absorb_baseline(&unit, outcome);
                 }
                 Round::Staged(tests) => {
@@ -268,6 +355,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                         let results =
                             staged.resolve_pending_with(|| unreachable!("no pending rows"));
                         slot.session.absorb(results);
+                        slot.session.observe_sim_seconds(slot.sut.sim_seconds());
                     } else {
                         match slot.sut.engine_requests(&pending) {
                             // malformed rows would fail the whole shared
@@ -285,6 +373,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                                     )
                                 });
                                 slot.session.absorb(results);
+                                slot.session.observe_sim_seconds(slot.sut.sim_seconds());
                             }
                             Some(Ok(requests)) => {
                                 pool.push(PooledRound { slot: i, staged, requests })
@@ -294,6 +383,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                                 let results =
                                     staged.resolve_pending_with(|| ActsError::Xla(msg.clone()));
                                 slot.session.absorb(results);
+                                slot.session.observe_sim_seconds(slot.sut.sim_seconds());
                             }
                             None => {
                                 // stage_tests left rows pending but there
@@ -305,6 +395,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                                     )
                                 });
                                 slot.session.absorb(results);
+                                slot.session.observe_sim_seconds(slot.sut.sim_seconds());
                             }
                         }
                     }
@@ -329,6 +420,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                 }
             };
             slot.session.absorb(results);
+            slot.session.observe_sim_seconds(slot.sut.sim_seconds());
         }
     }
 
@@ -345,24 +437,30 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
     }
 }
 
-/// Split sessions across the two pipeline buffers by estimated round
+/// Split sessions across `lanes` pipeline lanes by estimated round
 /// cost (greedy longest-processing-time: sessions sorted by cost
-/// descending — index ascending on ties — each join the lighter
-/// buffer), so heterogeneous fleets with very uneven round costs
-/// balance instead of stalling one buffer. Deterministic; with ≥ 2
-/// sessions both buffers are non-empty (every cost is floored to a
-/// positive load). Buffer membership never affects per-session
-/// results — only where rounds execute (the equivalence tests pin
-/// this).
-fn partition_by_cost(costs: &[f64]) -> [Vec<usize>; 2] {
+/// descending — index ascending on ties — each join the lightest lane,
+/// lowest index on ties), so heterogeneous fleets with very uneven
+/// round costs balance instead of stalling one lane. Deterministic;
+/// with `lanes <= sessions` every lane is non-empty (every cost is
+/// floored to a positive load). Lane membership never affects
+/// per-session results — only where rounds execute (the lane-
+/// invariance tests pin this). At `lanes = 2` this is exactly the
+/// historical double-buffer partition.
+fn partition_by_cost_n(costs: &[f64], lanes: usize) -> Vec<Vec<usize>> {
+    let lanes = lanes.clamp(1, costs.len().max(1));
     let mut order: Vec<usize> = (0..costs.len()).collect();
     order.sort_by(|&a, &b| {
         costs[b].partial_cmp(&costs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
     });
-    let mut groups: [Vec<usize>; 2] = [Vec::new(), Vec::new()];
-    let mut load = [0.0f64; 2];
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); lanes];
+    let mut load = vec![0.0f64; lanes];
     for i in order {
-        let g = usize::from(load[0] > load[1]);
+        let g = (0..lanes)
+            .min_by(|&a, &b| {
+                load[a].partial_cmp(&load[b]).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("at least one lane");
         groups[g].push(i);
         load[g] += costs[i].max(f64::MIN_POSITIVE);
     }
@@ -423,7 +521,7 @@ fn execute_pool(pool: &Pool) -> PoolResults {
 
 #[cfg(test)]
 mod tests {
-    use super::partition_by_cost;
+    use super::{default_lanes, partition_by_cost_n};
 
     fn load(costs: &[f64], group: &[usize]) -> f64 {
         group.iter().map(|&i| costs[i]).sum()
@@ -432,46 +530,87 @@ mod tests {
     #[test]
     fn cost_partition_covers_every_index_once() {
         let costs = [3.0, 1.0, 4.0, 1.0, 5.0];
-        let groups = partition_by_cost(&costs);
-        let mut all: Vec<usize> = groups.iter().flatten().copied().collect();
-        all.sort_unstable();
-        assert_eq!(all, vec![0, 1, 2, 3, 4]);
-        assert!(!groups[0].is_empty() && !groups[1].is_empty());
+        for lanes in [1usize, 2, 3, 5] {
+            let groups = partition_by_cost_n(&costs, lanes);
+            assert_eq!(groups.len(), lanes);
+            let mut all: Vec<usize> = groups.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![0, 1, 2, 3, 4], "lanes {lanes}");
+            assert!(groups.iter().all(|g| !g.is_empty()), "lanes {lanes}: {groups:?}");
+        }
     }
 
     #[test]
-    fn heavy_sessions_split_across_buffers() {
+    fn heavy_sessions_split_across_lanes() {
         // index parity would put both heavy sessions (0 and 4) in the
-        // even buffer and stall the odd one; cost balancing must not
+        // even lane and stall the odd one; cost balancing must not
         let costs = [160.0, 1.0, 1.0, 1.0, 160.0, 1.0];
-        let groups = partition_by_cost(&costs);
+        let groups = partition_by_cost_n(&costs, 2);
         assert_ne!(
             groups[0].contains(&0),
             groups[0].contains(&4),
-            "the two heavy sessions must land in different buffers: {groups:?}"
+            "the two heavy sessions must land in different lanes: {groups:?}"
         );
         let (a, b) = (load(&costs, &groups[0]), load(&costs, &groups[1]));
-        assert!((a - b).abs() <= 2.0, "buffer loads {a} vs {b} not balanced");
+        assert!((a - b).abs() <= 2.0, "lane loads {a} vs {b} not balanced");
     }
 
     #[test]
     fn equal_costs_alternate_like_parity() {
         let costs = [7.0; 8];
-        let groups = partition_by_cost(&costs);
+        let groups = partition_by_cost_n(&costs, 2);
         assert_eq!(groups[0], vec![0, 2, 4, 6]);
         assert_eq!(groups[1], vec![1, 3, 5, 7]);
+        // and deal round-robin at any lane count
+        let groups = partition_by_cost_n(&costs, 4);
+        assert_eq!(groups, vec![vec![0, 4], vec![1, 5], vec![2, 6], vec![3, 7]]);
     }
 
     #[test]
-    fn zero_costs_still_fill_both_buffers() {
-        let groups = partition_by_cost(&[0.0, 0.0, 0.0]);
+    fn four_lanes_balance_a_skewed_fleet() {
+        let costs = [512.0, 1.0, 1.0, 1.0, 256.0, 256.0, 1.0, 1.0];
+        let groups = partition_by_cost_n(&costs, 4);
+        // the heaviest session gets a lane (mostly) to itself; the two
+        // 256s must not share one
+        let lane_of = |i: usize| groups.iter().position(|g| g.contains(&i)).unwrap();
+        assert_ne!(lane_of(4), lane_of(5), "{groups:?}");
+        assert_ne!(lane_of(0), lane_of(4), "{groups:?}");
+        // greedy LPT: each heavy session owns its lane, the light ones
+        // pool in the remaining lane
+        assert_eq!(groups[lane_of(0)], vec![0], "{groups:?}");
+        assert_eq!(groups[lane_of(4)], vec![4], "{groups:?}");
+        assert_eq!(groups[lane_of(5)], vec![5], "{groups:?}");
+        let light: Vec<f64> = groups.iter().map(|g| load(&costs, g)).collect();
+        assert!(light.iter().all(|&l| l >= 1.0), "{light:?}");
+    }
+
+    #[test]
+    fn zero_costs_still_fill_every_lane() {
+        let groups = partition_by_cost_n(&[0.0, 0.0, 0.0], 2);
         assert!(!groups[0].is_empty() && !groups[1].is_empty());
         assert_eq!(groups.iter().map(Vec::len).sum::<usize>(), 3);
     }
 
     #[test]
+    fn lanes_clamp_to_session_count() {
+        let groups = partition_by_cost_n(&[1.0, 2.0], 8);
+        assert_eq!(groups.len(), 2);
+        assert!(groups.iter().all(|g| g.len() == 1));
+    }
+
+    #[test]
     fn deterministic_for_equal_inputs() {
         let costs = [2.0, 9.0, 9.0, 2.0, 5.0];
-        assert_eq!(partition_by_cost(&costs), partition_by_cost(&costs));
+        for lanes in [2usize, 3] {
+            assert_eq!(partition_by_cost_n(&costs, lanes), partition_by_cost_n(&costs, lanes));
+        }
+    }
+
+    #[test]
+    fn default_lane_count_is_the_double_buffer() {
+        // ACTS_LANES is unset in the test environment
+        if std::env::var("ACTS_LANES").is_err() {
+            assert_eq!(default_lanes(), 2);
+        }
     }
 }

@@ -25,8 +25,24 @@
 //! passed or failed (§2.3), results land at round granularity, the
 //! failure cap stops the session only at a round boundary, and the
 //! answer is never worse than the baseline.
+//!
+//! # The budget ledger
+//!
+//! The resource limit is a composite [`crate::budget::Budget`]
+//! ([`TuningConfig::budget`]): staged tests, simulated wall-clock
+//! seconds and abstract cost units, exhausted when ANY dimension is.
+//! The session charges its [`crate::budget::Ledger`] per executed row
+//! (tests + cost units at the driver-supplied per-test estimate,
+//! [`TuningSession::set_cost_estimate`]) and folds in the
+//! manipulator's clock at every round boundary
+//! ([`TuningSession::observe_sim_seconds`]); each round shrinks to the
+//! tightest remaining dimension, and the outcome records which
+//! dimension ended the run ([`TuningOutcome::stopped`]). A pure
+//! `tests-N` budget replays the historical `budget_tests: N` counting
+//! bit-for-bit: the estimate and the clock never influence it.
 
 use super::{relative_gain, TestRecord, TuningConfig, TuningOutcome};
+use crate::budget::{BudgetDim, Ledger, StopCause};
 use crate::error::ActsError;
 use crate::manipulator::Measurement;
 use crate::optimizer::{self, Optimizer};
@@ -73,7 +89,13 @@ pub struct TuningSession<'a> {
     rng: Rng64,
     state: State,
     records: Vec<TestRecord>,
-    tests_used: u64,
+    ledger: Ledger,
+    /// Advisory per-test cost estimate (simulated seconds / cost
+    /// units), used only to clamp rounds against time/cost budget
+    /// dimensions; a pure tests budget ignores it.
+    cost_estimate: f64,
+    /// Why the session stopped, once halted without a fatal error.
+    stop: Option<StopCause>,
     failures: u64,
     consecutive_failures: u32,
     baseline: Option<Measurement>,
@@ -88,9 +110,14 @@ pub struct TuningSession<'a> {
 impl<'a> TuningSession<'a> {
     /// New session over `space` with a caller-supplied optimizer.
     pub fn new(space: ConfigSpace, opt: Box<dyn Optimizer + 'a>, config: TuningConfig) -> Self {
-        assert!(config.budget_tests >= 1, "budget must allow the baseline test");
+        assert!(config.budget.is_bounded(), "budget must bound at least one dimension");
+        assert!(
+            config.budget.is_valid(),
+            "budget limits must be usable (tests >= 1, finite positive time/cost)"
+        );
         assert!(config.round_size >= 1, "round size must be at least 1");
         let rng = Rng64::new(config.seed);
+        let ledger = config.budget.ledger();
         TuningSession {
             space,
             config,
@@ -98,7 +125,9 @@ impl<'a> TuningSession<'a> {
             rng,
             state: State::Baseline,
             records: Vec::new(),
-            tests_used: 0,
+            ledger,
+            cost_estimate: 1.0,
+            stop: None,
             failures: 0,
             consecutive_failures: 0,
             baseline: None,
@@ -129,7 +158,26 @@ impl<'a> TuningSession<'a> {
 
     /// Budget consumed so far (baseline and failures included).
     pub fn tests_used(&self) -> u64 {
-        self.tests_used
+        self.ledger.tests_spent()
+    }
+
+    /// Set the advisory per-test cost estimate (simulated seconds per
+    /// staged test, also charged as abstract cost units) used to shrink
+    /// rounds against the time/cost budget dimensions. Drivers take it
+    /// from [`crate::manipulator::SystemManipulator::est_test_cost`];
+    /// it never influences a pure tests budget, and never influences
+    /// *results* — only how many proposals a round carries.
+    pub fn set_cost_estimate(&mut self, est_test_cost: f64) {
+        self.cost_estimate = est_test_cost.max(0.0);
+    }
+
+    /// Fold the manipulator's simulated clock into the ledger (drivers
+    /// call this after every baseline attempt and absorbed round, so a
+    /// time budget charges real elapsed staging time, restarts
+    /// included). Monotone; a no-op for budgets without a time
+    /// dimension.
+    pub fn observe_sim_seconds(&mut self, clock: f64) {
+        self.ledger.observe_sim_seconds(clock);
     }
 
     /// True once [`TuningSession::next_round`] would return
@@ -151,12 +199,15 @@ impl<'a> TuningSession<'a> {
             State::Baseline => Round::Baseline,
             State::Halted => Round::Done,
             State::Running => {
-                if self.tests_used >= self.config.budget_tests {
+                if let Some(dim) = self.ledger.exhaustion() {
+                    self.stop = Some(StopCause::Exhausted(dim));
                     self.state = State::Halted;
                     return Round::Done;
                 }
-                let n = ((self.config.budget_tests - self.tests_used) as usize)
-                    .min(self.config.round_size);
+                // the round shrinks to the tightest remaining budget
+                // dimension (>= 1 here: the ledger is not exhausted)
+                let n = (self.ledger.remaining_tests(self.cost_estimate))
+                    .min(self.config.round_size as u64) as usize;
                 let proposals = self.opt.ask_batch(&mut self.rng, n);
                 debug_assert_eq!(proposals.len(), n);
                 let tests = proposals.iter().map(|u| ProposedTest { unit: u.clone() }).collect();
@@ -177,14 +228,14 @@ impl<'a> TuningSession<'a> {
             matches!(self.state, State::Baseline),
             "absorb_baseline outside the baseline state"
         );
-        self.tests_used += 1;
+        self.ledger.charge_test(self.cost_estimate);
         match outcome {
             Ok(m) => {
                 self.baseline = Some(m);
                 self.best_unit = unit.to_vec();
                 self.best = Some(m);
                 self.records.push(TestRecord {
-                    test_no: self.tests_used,
+                    test_no: self.ledger.tests_spent(),
                     unit: unit.to_vec(),
                     measurement: m,
                     best_so_far: m.throughput,
@@ -196,7 +247,7 @@ impl<'a> TuningSession<'a> {
             Err(ActsError::TestFailed(msg)) => {
                 self.failures += 1;
                 if self.failures > self.config.max_consecutive_failures as u64
-                    || self.tests_used >= self.config.budget_tests
+                    || self.ledger.exhausted()
                 {
                     self.halt(ActsError::TestFailed(format!("baseline never completed: {msg}")));
                 }
@@ -224,7 +275,7 @@ impl<'a> TuningSession<'a> {
             let staged_unit = self.space.snap(proposal);
             match outcome {
                 Ok(m) => {
-                    self.tests_used += 1;
+                    self.ledger.charge_test(self.cost_estimate);
                     self.consecutive_failures = 0;
                     let best_throughput =
                         self.best.map(|b| b.throughput).unwrap_or(f64::NEG_INFINITY);
@@ -235,14 +286,14 @@ impl<'a> TuningSession<'a> {
                     told_values.push(m.throughput);
                     told_units.push(staged_unit.clone());
                     self.records.push(TestRecord {
-                        test_no: self.tests_used,
+                        test_no: self.ledger.tests_spent(),
                         unit: staged_unit,
                         measurement: m,
                         best_so_far: self.best.expect("just set").throughput,
                     });
                 }
                 Err(ActsError::TestFailed(_)) => {
-                    self.tests_used += 1;
+                    self.ledger.charge_test(self.cost_estimate);
                     self.failures += 1;
                     self.consecutive_failures += 1;
                     // a crashed config is informative: tell the optimizer
@@ -262,6 +313,7 @@ impl<'a> TuningSession<'a> {
         // the cap is tracked per row but can only stop the session at a
         // round boundary
         if self.consecutive_failures > self.config.max_consecutive_failures {
+            self.stop = Some(StopCause::FailureCap);
             self.state = State::Halted;
         }
     }
@@ -282,15 +334,21 @@ impl<'a> TuningSession<'a> {
             ActsError::InvalidArg("session finished without a baseline measurement".into())
         })?;
         let best = self.best.expect("baseline implies a best");
+        // a cleanly-finished session always records its stop; collecting
+        // early (tests only) falls back to the ledger's current state
+        let stopped = self.stop.unwrap_or_else(|| {
+            StopCause::Exhausted(self.ledger.exhaustion().unwrap_or(BudgetDim::Tests))
+        });
         Ok(TuningOutcome {
             records: self.records,
             baseline,
             best_unit: self.best_unit,
             best,
             improvement: relative_gain(best.throughput, baseline.throughput),
-            tests_used: self.tests_used,
+            tests_used: self.ledger.tests_spent(),
             failures: self.failures,
             sim_seconds,
+            stopped,
         })
     }
 }

@@ -85,6 +85,39 @@ impl OpStreamGenerator {
     }
 }
 
+/// Built-in recorded traces, nameable as scenarios (`trace:<name>` via
+/// [`WorkloadSpec::by_name`], so `acts fleet --workloads
+/// trace:hot-reads` sweeps a log-replay workload like any declared
+/// one). Each name replays a fixed recorded op stream (deterministic
+/// generator seed) and *measures* its features through
+/// [`TraceWorkload::from_ops`] — the §4.2 log-replay path end to end,
+/// rather than a hand-declared feature vector.
+pub const TRACE_NAMES: &[&str] = &["trace:hot-reads", "trace:flash-sale", "trace:nightly-etl"];
+
+/// Ops per built-in recorded trace (enough for stable feature
+/// estimates; generation is deterministic and cheap).
+const TRACE_OPS: usize = 40_000;
+
+/// Resolve a built-in recorded trace by `trace:<name>` (see
+/// [`TRACE_NAMES`]); `None` for unknown names.
+pub fn trace_by_name(name: &str) -> Option<WorkloadSpec> {
+    // (underlying "production" mix the trace was recorded from,
+    //  keyspace, recording seed, staged-test duration)
+    let (features, keyspace, seed, duration_s) = match name {
+        // a read-mostly cache-hot service: heavy zipfian point reads
+        "trace:hot-reads" => ([0.92, 0.08, 0.0, 0.97, 0.25, 0.55, 0.1, 1.0], 50_000, 0x7A1, 120.0),
+        // a checkout burst: write-heavy, hot SKUs, high concurrency
+        "trace:flash-sale" => ([0.55, 0.42, 0.03, 0.85, 0.4, 0.95, 0.15, 1.0], 20_000, 0x7A2, 60.0),
+        // a reporting batch: long scans over a cold, unskewed keyspace
+        "trace:nightly-etl" => ([0.08, 0.12, 0.8, 0.02, 0.9, 0.3, 0.6, 1.0], 10_000, 0x7A3, 1800.0),
+        _ => return None,
+    };
+    let recorded = WorkloadSpec::from_features("recorded", features);
+    let mut gen = OpStreamGenerator::new(recorded, keyspace, seed);
+    let ops = gen.take(TRACE_OPS);
+    Some(TraceWorkload::from_ops(name, &ops, keyspace).with_duration(duration_s))
+}
+
 /// A workload derived from a recorded trace (measured features).
 pub struct TraceWorkload;
 
@@ -175,6 +208,42 @@ mod tests {
         let est = TraceWorkload::from_ops("est", &ops, 10_000);
         assert!(est.features()[feat::SKEW] < 0.1);
         assert!(est.features()[feat::READ] > 0.95);
+    }
+
+    #[test]
+    fn trace_registry_resolves_measured_workloads() {
+        for name in TRACE_NAMES {
+            let w = trace_by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(&w.name, name, "trace name must round-trip");
+            assert_eq!(w.features()[feat::BIAS], 1.0);
+            // measured features are fractions: in bounds, mix sums to 1
+            let f = w.features();
+            assert!(f.iter().all(|&x| (0.0..=1.0).contains(&x)), "{name}: {f:?}");
+            let mix = f[feat::READ] + f[feat::WRITE] + f[feat::SCAN];
+            assert!((0.99..=1.01).contains(&mix), "{name}: mix {mix}");
+        }
+        assert!(trace_by_name("trace:nope").is_none());
+        assert!(trace_by_name("hot-reads").is_none(), "the prefix is part of the name");
+    }
+
+    #[test]
+    fn traces_measure_their_recorded_character() {
+        let hot = trace_by_name("trace:hot-reads").unwrap();
+        assert!(hot.features()[feat::READ] > 0.85, "{:?}", hot.features());
+        assert!(hot.features()[feat::SKEW] > 0.4, "skew {:?}", hot.features()[feat::SKEW]);
+        let etl = trace_by_name("trace:nightly-etl").unwrap();
+        assert!(etl.features()[feat::SCAN] > 0.7, "{:?}", etl.features());
+        assert!(etl.features()[feat::SKEW] < 0.1, "{:?}", etl.features()[feat::SKEW]);
+        assert_eq!(etl.duration_s, 1800.0, "trace duration must stick");
+        let sale = trace_by_name("trace:flash-sale").unwrap();
+        assert!(sale.features()[feat::WRITE] > 0.3, "{:?}", sale.features());
+    }
+
+    #[test]
+    fn trace_resolution_is_deterministic() {
+        let a = trace_by_name("trace:hot-reads").unwrap();
+        let b = trace_by_name("trace:hot-reads").unwrap();
+        assert_eq!(a, b, "same recorded stream, same measured features");
     }
 
     #[test]

@@ -110,8 +110,16 @@ impl WorkloadSpec {
             .with_duration(900.0)
     }
 
-    /// All built-in workloads (CLI registry).
+    /// All built-in workloads (CLI registry). `trace:<name>` resolves a
+    /// recorded operation trace through the log-replay path
+    /// ([`generator::trace_by_name`]): the op stream is replayed and
+    /// its features *measured* rather than declared, so trace-derived
+    /// workloads are nameable scenarios like any other (`acts fleet
+    /// --workloads trace:hot-reads`).
     pub fn by_name(name: &str) -> Option<WorkloadSpec> {
+        if name.starts_with("trace:") {
+            return generator::trace_by_name(name);
+        }
         match name {
             "uniform-read" => Some(Self::uniform_read()),
             "zipfian-rw" => Some(Self::zipfian_read_write()),
@@ -123,7 +131,8 @@ impl WorkloadSpec {
         }
     }
 
-    /// Registry names.
+    /// Registry names (declared workloads first, then the built-in
+    /// recorded traces — [`generator::TRACE_NAMES`]).
     pub const NAMES: &'static [&'static str] = &[
         "uniform-read",
         "zipfian-rw",
@@ -131,6 +140,9 @@ impl WorkloadSpec {
         "scan-heavy",
         "page-mix",
         "batch-analytics",
+        "trace:hot-reads",
+        "trace:flash-sale",
+        "trace:nightly-etl",
     ];
 }
 
@@ -236,6 +248,16 @@ mod tests {
             assert_eq!(w.features()[feat::BIAS], 1.0, "{name} bias");
         }
         assert!(WorkloadSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn trace_names_are_registered() {
+        for name in generator::TRACE_NAMES {
+            assert!(WorkloadSpec::NAMES.contains(name), "{name} missing from NAMES");
+            let w = WorkloadSpec::by_name(name).unwrap_or_else(|| panic!("{name} must resolve"));
+            assert_eq!(&w.name, name);
+        }
+        assert!(WorkloadSpec::by_name("trace:nope").is_none());
     }
 
     #[test]

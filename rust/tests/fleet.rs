@@ -9,6 +9,7 @@
 //! different bucket shapes, so its per-row f32 drift would feed the
 //! optimizers and legitimately diverge later rounds).
 
+use acts::budget::Budget;
 use acts::experiment::Lab;
 use acts::manipulator::{SimulationOpts, Target};
 use acts::runtime::BackendKind;
@@ -33,8 +34,13 @@ fn fleet_cells_match_solo_runs_bit_for_bit() {
         workloads: vec!["uniform-read".into(), "zipfian-rw".into()],
         deployments: vec!["standalone".into()],
         optimizers: vec!["rrs".into(), "gp".into()],
+        budgets: vec![],
         seeds: vec![11, 12],
-        base: TuningConfig { budget_tests: BUDGET, round_size: ROUND, ..Default::default() },
+        base: TuningConfig {
+            budget: Budget::tests(BUDGET),
+            round_size: ROUND,
+            ..Default::default()
+        },
         sim: SimulationOpts::default(),
     };
     assert_eq!(matrix.cells(), 16);
@@ -52,7 +58,7 @@ fn fleet_cells_match_solo_runs_bit_for_bit() {
             cell.seed,
         );
         let cfg = TuningConfig {
-            budget_tests: BUDGET,
+            budget: Budget::tests(BUDGET),
             optimizer: cell.optimizer.clone(),
             seed: cell.seed,
             round_size: ROUND,
@@ -94,7 +100,7 @@ fn fleet_report_json_is_well_formed() {
         suts: vec!["mysql".into()],
         optimizers: vec!["rrs".into()],
         seeds: vec![1, 2],
-        base: TuningConfig { budget_tests: 5, round_size: 2, ..Default::default() },
+        base: TuningConfig { budget: Budget::tests(5), round_size: 2, ..Default::default() },
         ..Default::default()
     };
     let report = Fleet::compile(&lab, matrix.expand().unwrap()).unwrap().run();
@@ -123,7 +129,7 @@ fn fleet_isolates_per_cell_failures() {
     // dead staging environment: every restart crash-loops, so the
     // baseline never completes and the cell dies; the healthy cell
     // finishes its whole budget
-    let cfg = TuningConfig { budget_tests: 8, round_size: 2, ..Default::default() };
+    let cfg = TuningConfig { budget: Budget::tests(8), round_size: 2, ..Default::default() };
     let dead = ScenarioSpec::from_names("mysql", "zipfian-rw", "standalone", cfg.clone())
         .unwrap()
         .with_sim(SimulationOpts { restart_failure_p: 1.0, test_failure_p: 1.0, ..SimulationOpts::default() })
@@ -155,6 +161,79 @@ fn fleet_isolates_per_cell_failures() {
 }
 
 #[test]
+fn budgets_axis_sweeps_resource_limits_end_to_end() {
+    // the ISSUE's acceptance scenario in miniature: a budgets axis
+    // mixing a test-count and a time limit, swept like any other axis,
+    // with the per-cell exhaustion cause reported
+    let lab = native_lab();
+    let matrix = Matrix {
+        budgets: vec!["tests-5".into(), "simsec-2000".into()],
+        seeds: vec![3, 4],
+        base: TuningConfig { round_size: 2, ..Default::default() },
+        ..Default::default()
+    };
+    assert_eq!(matrix.cells(), 4);
+    let report = Fleet::compile(&lab, matrix.expand().unwrap()).unwrap().run();
+    assert_eq!(report.cells.len(), 4);
+    for cell in &report.cells {
+        let out = cell.outcome.as_ref().unwrap_or_else(|e| panic!("{}: {e}", cell.label));
+        match cell.budget.as_str() {
+            "tests-5" => {
+                assert_eq!(out.tests_used, 5, "{}", cell.label);
+                assert_eq!(out.stopped.to_string(), "budget:tests", "{}", cell.label);
+            }
+            "simsec-2000" => {
+                // ~342s per staged test: the clock binds long before
+                // the default 100-test count would
+                assert!(out.sim_seconds >= 2000.0, "{}: {}", cell.label, out.sim_seconds);
+                assert!(out.tests_used < 12, "{}: {}", cell.label, out.tests_used);
+                assert_eq!(out.stopped.to_string(), "budget:simsec", "{}", cell.label);
+            }
+            other => panic!("unexpected cell budget `{other}`"),
+        }
+        assert!(cell.label.contains(&cell.budget), "budget axis must label cells: {}", cell.label);
+    }
+    // the dump carries the cause for the cross-PR differ
+    let json = report.json().to_string();
+    assert!(json.contains("\"stopped\":\"budget:simsec\""), "{json}");
+    assert!(json.contains("\"budget\":\"tests-5\""), "{json}");
+}
+
+#[test]
+fn fleet_cells_are_lane_invariant_on_the_real_surface() {
+    // compile the same mixed matrix at 1 and 4 lanes: per-cell records
+    // must be bit-identical (the scheduler's lane-invariance guarantee,
+    // here through the whole scenario layer on the native backend)
+    let lab = native_lab();
+    let matrix = Matrix {
+        suts: vec!["mysql".into(), "tomcat".into()],
+        optimizers: vec!["rrs".into(), "gp".into()],
+        seeds: vec![21, 22],
+        base: TuningConfig { budget: Budget::tests(9), round_size: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let run = |lanes: usize| {
+        Fleet::compile_with_mode(
+            &lab,
+            matrix.expand().unwrap(),
+            acts::tuner::SchedulerMode::Pipelined { lanes },
+        )
+        .unwrap()
+        .run()
+    };
+    let one = run(1);
+    let four = run(4);
+    for (a, b) in one.cells.iter().zip(&four.cells) {
+        assert_eq!(a.label, b.label);
+        let (a, b) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+        assert_eq!(a.records, b.records, "lane count changed a cell's records");
+        assert_eq!(a.tests_used, b.tests_used);
+        assert_eq!(a.sim_seconds, b.sim_seconds);
+        assert_eq!(a.stopped, b.stopped);
+    }
+}
+
+#[test]
 fn initial_unit_spec_starts_from_that_configuration() {
     let lab = native_lab();
     let spec = sut::mysql();
@@ -162,7 +241,7 @@ fn initial_unit_spec_starts_from_that_configuration() {
     // a non-default starting unit (snapped by set_config)
     let unit: Vec<f64> = (0..space.dim()).map(|i| ((i % 4) as f64 + 0.5) / 4.0).collect();
     let snapped = space.snap(&unit);
-    let cfg = TuningConfig { budget_tests: 1, ..Default::default() };
+    let cfg = TuningConfig { budget: Budget::tests(1), ..Default::default() };
     let scenario = ScenarioSpec::new(
         Target::Single(spec),
         WorkloadSpec::zipfian_read_write(),

@@ -6,6 +6,7 @@
 //! artifacts, the native CPU backend otherwise), so this suite executes
 //! — it does not skip — on machines without the XLA toolchain.
 
+use acts::budget::Budget;
 use acts::experiment::{mysql_gain, Lab};
 use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
 use acts::sut::{self, Composed};
@@ -48,7 +49,7 @@ fn session_is_deterministic_given_seeds() {
             SimulationOpts::default(),
             99,
         );
-        let cfg = TuningConfig { budget_tests: 40, seed: 7, ..Default::default() };
+        let cfg = TuningConfig { budget: Budget::tests(40), seed: 7, ..Default::default() };
         tuner::tune(&mut sut, &cfg).unwrap()
     };
     let a = run();
@@ -73,7 +74,7 @@ fn failure_injection_is_survived() {
         opts,
         3,
     );
-    let cfg = TuningConfig { budget_tests: 80, seed: 3, ..Default::default() };
+    let cfg = TuningConfig { budget: Budget::tests(80), seed: 3, ..Default::default() };
     let out = tuner::tune(&mut sut, &cfg).unwrap();
     assert!(out.failures > 0, "no failures injected?");
     assert_eq!(out.tests_used, 80);
@@ -94,7 +95,7 @@ fn stack_tuning_works_end_to_end() {
         5,
     );
     assert_eq!(sut.space().dim(), dim);
-    let cfg = TuningConfig { budget_tests: 30, seed: 5, ..Default::default() };
+    let cfg = TuningConfig { budget: Budget::tests(30), seed: 5, ..Default::default() };
     let out = tuner::tune(&mut sut, &cfg).unwrap();
     assert!(out.best.throughput >= out.baseline.throughput);
     // the stack's throughput is capped by the front-end tier
@@ -114,7 +115,7 @@ fn budget_scalability_on_the_real_surface() {
             SimulationOpts { noise_sigma: 0.0, ..SimulationOpts::default() },
             11,
         );
-        let cfg = TuningConfig { budget_tests: budget, seed: 11, ..Default::default() };
+        let cfg = TuningConfig { budget: Budget::tests(budget), seed: 11, ..Default::default() };
         tuner::tune(&mut sut, &cfg).unwrap().best.throughput
     };
     let b30 = run(30);
@@ -134,7 +135,7 @@ fn restart_and_settle_time_are_charged() {
         opts,
         13,
     );
-    let cfg = TuningConfig { budget_tests: 5, seed: 13, ..Default::default() };
+    let cfg = TuningConfig { budget: Budget::tests(5), seed: 13, ..Default::default() };
     let out = tuner::tune(&mut sut, &cfg).unwrap();
     // 5 tests x 100s + 4 restarts x (10+20)s = 620s
     assert!((out.sim_seconds - 620.0).abs() < 1e-6, "sim time {}", out.sim_seconds);
@@ -191,7 +192,8 @@ fn batched_round_size_one_matches_sequential_on_the_real_surface() {
             23,
         )
     };
-    let cfg = TuningConfig { budget_tests: 40, seed: 23, round_size: 1, ..Default::default() };
+    let cfg =
+        TuningConfig { budget: Budget::tests(40), seed: 23, round_size: 1, ..Default::default() };
     let mut seq_sut = deploy();
     let seq = tuner::tune(&mut seq_sut, &cfg).unwrap();
     let mut bat_sut = deploy();
@@ -219,12 +221,22 @@ fn batched_session_issues_far_fewer_engine_calls() {
     let budget = 33; // baseline + 32 staged tests
 
     let c0 = lab.engine.stats().execute_calls;
-    let cfg = TuningConfig { budget_tests: budget, seed: 31, round_size: 1, ..Default::default() };
+    let cfg = TuningConfig {
+        budget: Budget::tests(budget),
+        seed: 31,
+        round_size: 1,
+        ..Default::default()
+    };
     let seq = tuner::tune(&mut deploy(31), &cfg).unwrap();
     let c1 = lab.engine.stats().execute_calls;
     let seq_calls = c1 - c0;
 
-    let cfg = TuningConfig { budget_tests: budget, seed: 31, round_size: 16, ..Default::default() };
+    let cfg = TuningConfig {
+        budget: Budget::tests(budget),
+        seed: 31,
+        round_size: 16,
+        ..Default::default()
+    };
     let bat = tuner::tune_batched(&mut deploy(31), &cfg).unwrap();
     let c2 = lab.engine.stats().execute_calls;
     let bat_calls = c2 - c1;
@@ -260,7 +272,7 @@ fn scheduler_coalesces_eight_sessions_into_shared_executes() {
             100 + s,
         );
         let cfg = TuningConfig {
-            budget_tests: budget,
+            budget: Budget::tests(budget),
             seed: 100 + s,
             round_size: 32,
             ..Default::default()
@@ -320,7 +332,7 @@ fn pipelined_scheduler_matches_sequential_on_the_real_surface() {
                 300 + s,
             );
             let cfg = TuningConfig {
-                budget_tests: 20 + 5 * s,
+                budget: Budget::tests(20 + 5 * s),
                 optimizer: optimizers[s as usize % optimizers.len()].into(),
                 seed: 300 + s,
                 round_size: [1usize, 4, 8, 16][s as usize % 4],
@@ -332,7 +344,7 @@ fn pipelined_scheduler_matches_sequential_on_the_real_surface() {
         scheduler.run()
     };
     let sequential = run(SchedulerMode::Sequential);
-    let pipelined = run(SchedulerMode::Pipelined);
+    let pipelined = run(SchedulerMode::Pipelined { lanes: 2 });
     for (i, (seq, pip)) in sequential.iter().zip(&pipelined).enumerate() {
         let seq = seq.as_ref().unwrap();
         let pip = pip.as_ref().unwrap();
@@ -354,7 +366,7 @@ fn pipelined_scheduler_coalesces_within_buffers() {
     let Some(lab) = lab_or_skip() else { return };
     let n_sessions = 8u64;
     let budget = 33; // baseline + one full round of 32
-    let mut scheduler = tuner::Scheduler::with_mode(SchedulerMode::Pipelined);
+    let mut scheduler = tuner::Scheduler::with_mode(SchedulerMode::Pipelined { lanes: 2 });
     for s in 0..n_sessions {
         let sut = lab.deploy(
             Target::Single(sut::mysql()),
@@ -364,7 +376,7 @@ fn pipelined_scheduler_coalesces_within_buffers() {
             200 + s,
         );
         let cfg = TuningConfig {
-            budget_tests: budget,
+            budget: Budget::tests(budget),
             seed: 200 + s,
             round_size: 32,
             ..Default::default()
@@ -406,7 +418,7 @@ fn scheduled_sessions_match_solo_runs_on_the_real_surface() {
         )
     };
     let cfg_for = |seed| TuningConfig {
-        budget_tests: 17, // baseline + one round of 16
+        budget: Budget::tests(17), // baseline + one round of 16
         seed,
         round_size: 16,
         ..Default::default()
@@ -441,6 +453,76 @@ fn scheduled_sessions_match_solo_runs_on_the_real_surface() {
 }
 
 #[test]
+fn named_tests_budget_is_bit_identical_on_the_real_surface() {
+    // the budget refactor's acceptance criterion, end-to-end on the
+    // real engine: `Budget::by_name("tests-N")` runs exactly as the
+    // pre-refactor `budget_tests: N` counting did — the unit suite
+    // pins that against the frozen reference loop; here we pin the
+    // whole real-surface path (noise + failure injection included) and
+    // the reported exhaustion cause
+    let Some(lab) = lab_or_skip() else { return };
+    let opts = SimulationOpts {
+        restart_failure_p: 0.1,
+        test_failure_p: 0.05,
+        ..SimulationOpts::default()
+    };
+    let run = |budget: Budget| {
+        let mut sut = lab.deploy(
+            Target::Single(sut::mysql()),
+            WorkloadSpec::zipfian_read_write(),
+            DeploymentEnv::standalone(),
+            opts.clone(),
+            29,
+        );
+        let cfg = TuningConfig { budget, seed: 29, round_size: 8, ..Default::default() };
+        tuner::tune_batched(&mut sut, &cfg).unwrap()
+    };
+    let by_ctor = run(Budget::tests(40));
+    let by_name = run(Budget::by_name("tests-40").expect("registered budget"));
+    assert_eq!(by_ctor.records, by_name.records, "named budget diverged from Budget::tests");
+    assert_eq!(by_ctor.tests_used, 40);
+    assert_eq!(by_name.tests_used, 40);
+    assert_eq!(by_ctor.sim_seconds, by_name.sim_seconds);
+    assert_eq!(by_ctor.stopped, by_name.stopped);
+    assert_eq!(
+        by_name.stopped,
+        acts::budget::StopCause::Exhausted(acts::budget::BudgetDim::Tests)
+    );
+}
+
+#[test]
+fn simsec_budget_stops_a_real_session_at_the_clock() {
+    // a time budget on the real surface: the session must stop at the
+    // first round boundary past the simulated-seconds limit and name
+    // the time dimension as its stop cause
+    let Some(lab) = lab_or_skip() else { return };
+    let mut sut = lab.deploy(
+        Target::Single(sut::mysql()),
+        WorkloadSpec::zipfian_read_write(), // 300s test window + restart/settle
+        DeploymentEnv::standalone(),
+        SimulationOpts::default(),
+        31,
+    );
+    let limit = 4000.0;
+    let cfg = TuningConfig {
+        budget: Budget::by_name("simsec-4000").expect("registered budget"),
+        seed: 31,
+        round_size: 4,
+        ..Default::default()
+    };
+    let out = tuner::tune_batched(&mut sut, &cfg).unwrap();
+    assert_eq!(
+        out.stopped,
+        acts::budget::StopCause::Exhausted(acts::budget::BudgetDim::SimSeconds)
+    );
+    assert!(out.sim_seconds >= limit, "stopped early: {}", out.sim_seconds);
+    // ~342s per staged test: the clock, not a test count, ended it —
+    // with at most one shrunk round of overshoot past the limit
+    assert!(out.tests_used < 20, "ran far past the time budget: {} tests", out.tests_used);
+    assert!(out.tests_used >= 10, "stopped far before the time budget: {} tests", out.tests_used);
+}
+
+#[test]
 fn gp_surrogate_competes_at_tiny_budgets() {
     // the model-based baseline must function end-to-end on the real
     // surface and beat pure random at a small budget (its sweet spot)
@@ -454,7 +536,7 @@ fn gp_surrogate_competes_at_tiny_budgets() {
             21,
         );
         let cfg = TuningConfig {
-            budget_tests: 30,
+            budget: Budget::tests(30),
             optimizer: opt.into(),
             seed: 21,
             ..Default::default()
