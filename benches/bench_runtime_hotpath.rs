@@ -7,6 +7,10 @@
 //! * per-bucket `evaluate` throughput, unprepared (constants uploaded
 //!   every call) vs prepared (device-resident constants);
 //! * odd/chunked batches through the greedy bucket decomposition;
+//! * fault-free retry-policy overhead: prepared B=256 evaluates with
+//!   the engine `RetryPolicy` off vs on (the policy engages only on
+//!   `Err`, so its hot-path cost is a policy read plus stat bumps),
+//!   gated at <= 5% and recorded as `retry_overhead_frac`;
 //! * whole tuning sessions, sequential (`tune`, one B=1 engine call per
 //!   staged test) vs batched (`tune_batched`, one bucketed call per
 //!   round) — the batched-pipeline acceptance gate (backend-scaled: the
@@ -88,6 +92,38 @@ fn main() {
         b.bench_units("evaluate B=4096 (2 chunks)", Some(4096.0), || {
             black_box(engine.evaluate(&params, &w, &e, &big).unwrap());
         });
+    }
+
+    // fault-free retry-policy overhead: same prepared B=256 evaluate
+    // with the engine RetryPolicy off vs on; the policy engages only on
+    // Err, so the on-path must cost no more than a policy read and two
+    // stat bumps per call (gated <= 5% after the json dump)
+    let retry_overhead_frac;
+    {
+        let (c256, w, e, params) = golden::pattern_call(256);
+        let prepared = engine.prepare(&params, &w, &e).unwrap();
+        b.bench_units("evaluate B=256 (retry policy off)", Some(256.0), || {
+            black_box(engine.evaluate_prepared(&prepared, &c256).unwrap());
+        });
+        engine.set_retry_policy(Some(acts::runtime::RetryPolicy::default()));
+        b.bench_units("evaluate B=256 (retry policy on, fault-free)", Some(256.0), || {
+            black_box(engine.evaluate_prepared(&prepared, &c256).unwrap());
+        });
+        engine.set_retry_policy(None);
+        let rate = |needle: &str| {
+            b.results()
+                .iter()
+                .find(|r| r.name.contains(needle))
+                .and_then(|r| r.units_per_sec())
+                .unwrap_or(0.0)
+        };
+        let off = rate("retry policy off");
+        let on = rate("retry policy on");
+        retry_overhead_frac = if on > 0.0 { (off / on - 1.0).max(0.0) } else { 0.0 };
+        println!(
+            "fault-free retry-policy overhead: {:.2}% (off {off:.0} -> on {on:.0} configs/s, gate <= 5%)",
+            retry_overhead_frac * 100.0
+        );
     }
 
     // whole tuning sessions on the simulated MySQL: the sequential
@@ -290,6 +326,7 @@ fn main() {
             "pipeline_lanes8_speedup_vs_2",
             Json::Num(if fleet_pipe > 0.0 { fleet_pipe8 / fleet_pipe } else { 0.0 }),
         ),
+        ("retry_overhead_frac", Json::Num(retry_overhead_frac)),
     ]);
     let out_path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime_hotpath.json");
@@ -309,5 +346,10 @@ fn main() {
     assert!(
         pipeline_speedup >= 1.3,
         "pipelined scheduler speedup {pipeline_speedup:.2}x below the 1.3x acceptance gate"
+    );
+    assert!(
+        retry_overhead_frac <= 0.05,
+        "fault-free retry-policy overhead {:.2}% above the 5% acceptance gate",
+        retry_overhead_frac * 100.0
     );
 }

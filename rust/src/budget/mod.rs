@@ -63,6 +63,11 @@ pub enum StopCause {
     Exhausted(BudgetDim),
     /// The consecutive-failure cap tripped at a round boundary.
     FailureCap,
+    /// The scheduler quarantined the session after it crash-looped
+    /// (consecutive execute-worker panics poisoned its rounds) — the
+    /// session keeps its records but proposes no further rounds, and
+    /// its fleet-mates run on undisturbed.
+    Quarantined,
 }
 
 impl fmt::Display for StopCause {
@@ -70,6 +75,7 @@ impl fmt::Display for StopCause {
         match self {
             StopCause::Exhausted(dim) => write!(f, "budget:{dim}"),
             StopCause::FailureCap => f.write_str("failure-cap"),
+            StopCause::Quarantined => f.write_str("quarantined"),
         }
     }
 }
@@ -441,5 +447,6 @@ mod tests {
         assert_eq!(StopCause::Exhausted(BudgetDim::SimSeconds).to_string(), "budget:simsec");
         assert_eq!(StopCause::Exhausted(BudgetDim::CostUnits).to_string(), "budget:cost");
         assert_eq!(StopCause::FailureCap.to_string(), "failure-cap");
+        assert_eq!(StopCause::Quarantined.to_string(), "quarantined");
     }
 }

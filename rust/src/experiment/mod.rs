@@ -35,7 +35,7 @@ impl Lab {
     /// CPU backend otherwise — so experiments, benches and engine-backed
     /// tests run anywhere).
     pub fn new() -> Result<Lab> {
-        Lab::with_backend(BackendKind::from_env())
+        Lab::with_backend(BackendKind::from_env()?)
     }
 
     /// Build the lab with an explicit backend choice.
@@ -48,7 +48,7 @@ impl Lab {
     /// defers to the environment ([`BackendKind::from_env`]).
     pub fn for_config(cfg: &TuningConfig) -> Result<Lab> {
         let kind = match cfg.backend {
-            BackendKind::Auto => BackendKind::from_env(),
+            BackendKind::Auto => BackendKind::from_env()?,
             explicit => explicit,
         };
         Lab::with_backend(kind)

@@ -15,17 +15,18 @@ use acts::experiment::{self, Lab};
 use acts::manipulator::{SimulationOpts, SystemManipulator};
 use acts::optimizer::OPTIMIZER_NAMES;
 use acts::report::fmt_duration;
-use acts::runtime::BackendKind;
+use acts::runtime::{BackendKind, ChaosBackend, Engine, FaultPlan, NativeBackend, RetryPolicy};
 use acts::scenario::{self, resolve_target, Fleet, Matrix};
 use acts::sut::SUT_NAMES;
 use acts::tuner::{self, SchedulerMode, TuningConfig};
 use acts::workload::{DeploymentEnv, WorkloadSpec};
+use std::sync::Arc;
 
 /// Resolve the `--backend` flag (default: the `ACTS_BACKEND` env var,
 /// then auto).
 fn backend_arg(args: &Args) -> acts::Result<BackendKind> {
     match args.get_opt("backend") {
-        None => Ok(BackendKind::from_env()),
+        None => BackendKind::from_env(),
         Some(s) => BackendKind::parse(s).ok_or_else(|| {
             acts::ActsError::InvalidArg(format!("unknown backend `{s}` (auto|pjrt|native)"))
         }),
@@ -61,6 +62,61 @@ fn lanes_arg(args: &Args) -> usize {
     args.get_usize("lanes", tuner::default_lanes()).max(1)
 }
 
+/// Build the fleet's lab: `--chaos-transient-p` wraps the native
+/// evaluator in a seeded [`ChaosBackend`] (fault-injection drills);
+/// `--retry-attempts` installs an engine [`RetryPolicy`] (deterministic
+/// exponential backoff, optional `--retry-deadline-ms` per-execute
+/// deadline).
+fn fleet_lab(args: &Args, base: &TuningConfig) -> acts::Result<Lab> {
+    let chaos_p = match args.get_opt("chaos-transient-p") {
+        None => None,
+        Some(raw) => {
+            let p: f64 = raw.parse().ok().filter(|p| (0.0..=1.0).contains(p)).ok_or_else(
+                || {
+                    acts::ActsError::InvalidArg(format!(
+                        "--chaos-transient-p expects a probability in [0, 1], got `{raw}`"
+                    ))
+                },
+            )?;
+            Some(p)
+        }
+    };
+    let lab = match chaos_p {
+        None => Lab::for_config(base)?,
+        Some(p) => {
+            // fault injection sits between the engine and a
+            // deterministic evaluator: native only
+            if matches!(base.backend, BackendKind::Pjrt) {
+                return Err(acts::ActsError::InvalidArg(
+                    "--chaos-transient-p runs on the native backend (drop --backend pjrt)"
+                        .into(),
+                ));
+            }
+            let plan = FaultPlan::transient(args.get_u64("chaos-seed", 1), p);
+            let chaos = ChaosBackend::new(Box::new(NativeBackend::new()), plan);
+            Lab { engine: Arc::new(Engine::from_backend(Box::new(chaos))) }
+        }
+    };
+    if let Some(raw) = args.get_opt("retry-attempts") {
+        let attempts: u32 = raw.parse().ok().filter(|n| *n >= 1).ok_or_else(|| {
+            acts::ActsError::InvalidArg(format!(
+                "--retry-attempts expects an integer >= 1, got `{raw}`"
+            ))
+        })?;
+        let mut policy = RetryPolicy { max_attempts: attempts, ..RetryPolicy::default() };
+        if let Some(raw) = args.get_opt("retry-deadline-ms") {
+            let ms: u64 = raw.parse().ok().filter(|n| *n >= 1).ok_or_else(|| {
+                acts::ActsError::InvalidArg(format!(
+                    "--retry-deadline-ms expects an integer >= 1, got `{raw}`"
+                ))
+            })?;
+            policy.deadline = Some(std::time::Duration::from_millis(ms));
+        }
+        lab.engine.set_retry_policy(Some(policy));
+    }
+    Ok(lab)
+}
+
 fn main() {
     let args = Args::from_env();
     let code = match run(&args) {
@@ -74,6 +130,12 @@ fn main() {
 }
 
 fn run(args: &Args) -> acts::Result<()> {
+    // fail fast on malformed environment knobs — every error names the
+    // variable and its accepted values, instead of a silent fallback
+    // surprising a whole campaign later
+    BackendKind::from_env()?;
+    tuner::lanes_from_env()?;
+    acts::runtime::native::native_threads_from_env()?;
     match args.command.as_str() {
         "" | "help" => {
             print!("{}", HELP);
@@ -268,9 +330,16 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         lanes
     );
     let specs = matrix.expand()?;
-    let lab = Lab::for_config(&base)?;
-    let report =
-        Fleet::compile_with_mode(&lab, specs, SchedulerMode::Pipelined { lanes })?.run();
+    let lab = fleet_lab(args, &base)?;
+    let mode = SchedulerMode::Pipelined { lanes };
+    let fleet = match args.get_opt("checkpoint-dir") {
+        Some(dir) => {
+            println!("checkpointing rounds under {dir} (rerun with the same flags to resume)");
+            Fleet::compile_with_checkpoint(&lab, specs, mode, std::path::Path::new(dir))?
+        }
+        None => Fleet::compile_with_mode(&lab, specs, mode)?,
+    };
+    let report = fleet.run();
 
     print!("{}", report.table().markdown());
     let agg = report.aggregate();
@@ -299,6 +368,10 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
     println!(
         "engine coalescing: {} requests -> {} executes ({} rows requested, {} executed)",
         c.requests, c.execute_calls, c.rows_requested, c.rows_executed
+    );
+    println!(
+        "engine faults: {} attempts ({} retries, {} deadline kills)",
+        c.attempts, c.retries, c.deadline_kills
     );
     if let Some(path) = args.get_opt("json") {
         std::fs::write(path, report.json().to_string())
@@ -490,6 +563,19 @@ COMMANDS:
                    --lanes <n>           (ACTS_LANES|2) pipeline lanes
                    --backend <b>         (auto)
                    --json <file>         dump the fleet report as JSON
+                   --checkpoint-dir <d>  journal every round to <d>; rerun
+                                         with the same flags and directory
+                                         to resume a killed fleet
+                                         bit-identically
+                   --retry-attempts <n>  engine retry policy: up to n
+                                         attempts per execute, seeded
+                                         exponential backoff
+                   --retry-deadline-ms <n>  per-execute deadline (kills a
+                                         hung execute, retries it)
+                   --chaos-transient-p <f>  fault-injection drill: seeded
+                                         transient faults on the native
+                                         backend at probability f
+                   --chaos-seed <n>      (1)            fault-plan seed
                  deployments are registry names: standalone, arm-vm,
                  cluster-<n>, <deployment>-interference-<f>; workloads
                  include recorded traces (trace:hot-reads, ...); the
@@ -516,5 +602,11 @@ prefers pjrt and falls back to native.
 
 Scheduler: sessions run on an N-lane work-stealing pipeline (lanes via
 --lanes / ACTS_LANES, default 2); per-session results are bit-identical
-for any lane count.
+for any lane count. A panicking execute poisons only the rounds sharing
+that execute; a session poisoned 3 rounds running is quarantined
+(`stopped by quarantined`) while its fleet-mates continue undisturbed.
+
+Environment: malformed ACTS_BACKEND / ACTS_LANES / ACTS_NATIVE_THREADS
+values fail at startup with an error naming the variable and its
+accepted values.
 ";

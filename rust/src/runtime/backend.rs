@@ -29,7 +29,7 @@
 //! artifacts load, native otherwise).
 
 use super::engine::{Perf, SurfaceParams};
-use crate::error::Result;
+use crate::error::{ActsError, Result};
 use std::any::Any;
 
 /// Backend-resident prepared constants, type-erased so the engine can
@@ -111,15 +111,18 @@ impl BackendKind {
         }
     }
 
-    /// Resolve from the `ACTS_BACKEND` environment variable (unset or
-    /// unparsable means [`BackendKind::Auto`]).
-    pub fn from_env() -> BackendKind {
+    /// Resolve from the `ACTS_BACKEND` environment variable. Unset
+    /// means [`BackendKind::Auto`]; a value that does not parse is a
+    /// startup error naming the variable and the accepted values — a
+    /// typo must not silently fall back to a different backend.
+    pub fn from_env() -> Result<BackendKind> {
         match std::env::var("ACTS_BACKEND") {
-            Ok(v) => BackendKind::parse(&v).unwrap_or_else(|| {
-                eprintln!("acts: ACTS_BACKEND=`{v}` not recognised (auto|pjrt|native); using auto");
-                BackendKind::Auto
+            Ok(v) => BackendKind::parse(&v).ok_or_else(|| {
+                ActsError::InvalidArg(format!(
+                    "ACTS_BACKEND=`{v}` is not a recognised backend (accepted: auto, pjrt, native)"
+                ))
             }),
-            Err(_) => BackendKind::Auto,
+            Err(_) => Ok(BackendKind::Auto),
         }
     }
 

@@ -1,0 +1,342 @@
+//! Deterministic fault injection: a [`ChaosBackend`] wrapper that
+//! perturbs any inner [`ExecBackend`] according to a seeded
+//! [`FaultPlan`].
+//!
+//! This is the test harness for the whole fault-tolerance stack: the
+//! engine's retry/deadline policy, the scheduler's poisoned-round
+//! degradation and session quarantine, and the chaos CI smoke all drive
+//! their failures through here. Fault decisions are **deterministic per
+//! execute index**: the wrapper numbers every `execute` call with a
+//! monotone counter and derives an independent [`Rng64`] stream from
+//! `plan.seed ^ index`, so two runs with the same plan, the same seed
+//! and the same call sequence inject byte-identical faults — which is
+//! what makes retry-counter assertions and chaos e2e tests repeatable.
+//!
+//! Because each *retry* issues a fresh `execute` (a new index), a
+//! transient fault at index `i` does not condemn the retried call at
+//! index `i+1`: with `transient_p = 0.1` and 4 attempts the chance a
+//! row round is lost is `1e-4`, the behaviour real flaky substrates
+//! show and the one the engine's [`crate::runtime::engine::RetryPolicy`]
+//! is built to absorb.
+//!
+//! Fault classes, in priority order when several fire on one index:
+//!
+//! 1. **panic** — the execute unwinds, modelling a crashing worker; the
+//!    scheduler's `catch_unwind` degradation path owns this.
+//! 2. **hang** — the execute sleeps far past any sane deadline; the
+//!    engine's per-execute deadline kills the call instead of wedging
+//!    the lane.
+//! 3. **persistent** — every execute from `persistent_after` onward
+//!    fails, modelling a dead device that no retry cures.
+//! 4. **transient** — this execute fails, the next may succeed; the
+//!    retry policy's bread and butter.
+//! 5. **latency** — the execute succeeds after an injected stall,
+//!    exercising backoff/deadline interplay without failing anything.
+
+use super::backend::{ExecBackend, Execution, PreparedData};
+use super::engine::SurfaceParams;
+use crate::error::{ActsError, Result};
+use crate::util::rng::Rng64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Seeded description of which faults a [`ChaosBackend`] injects and
+/// how often. Probabilities are per execute call, drawn independently
+/// per fault class from the call's own derived rng stream.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Root seed; same seed + same call sequence = same faults.
+    pub seed: u64,
+    /// Probability an execute fails transiently (retryable).
+    pub transient_p: f64,
+    /// If set, every execute with index >= this fails persistently.
+    pub persistent_after: Option<u64>,
+    /// Probability an execute is delayed by [`FaultPlan::latency`].
+    pub latency_p: f64,
+    /// Injected stall for latency faults.
+    pub latency: Duration,
+    /// Probability an execute hangs for [`FaultPlan::hang`].
+    pub hang_p: f64,
+    /// Injected stall for hang faults — pick this far above the
+    /// engine's deadline so the deadline, not the sleep, ends the call.
+    pub hang: Duration,
+    /// Probability an execute panics (models a crashing worker).
+    pub panic_p: f64,
+    /// If set, every execute with index >= this panics — the
+    /// crash-looping device the scheduler's quarantine exists for.
+    /// Point it past a session's baseline executes so the crash loop
+    /// starts once tuning rounds are under way.
+    pub panic_after: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            transient_p: 0.0,
+            persistent_after: None,
+            latency_p: 0.0,
+            latency: Duration::from_millis(1),
+            hang_p: 0.0,
+            hang: Duration::from_secs(3600),
+            panic_p: 0.0,
+            panic_after: None,
+        }
+    }
+}
+
+/// What a [`FaultPlan`] decided for one execute index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Pass through untouched.
+    None,
+    /// Unwind the execute.
+    Panic,
+    /// Sleep for the plan's hang duration, then fail.
+    Hang,
+    /// Fail: the device is gone, retries cannot cure it.
+    Persistent,
+    /// Fail this call only.
+    Transient,
+    /// Sleep for the plan's latency, then pass through.
+    Latency,
+}
+
+impl FaultPlan {
+    /// A quiet plan with only a seed set — builder-style starting point.
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Transient-only plan: the CI chaos smoke's shape.
+    pub fn transient(seed: u64, p: f64) -> FaultPlan {
+        FaultPlan { seed, transient_p: p, ..FaultPlan::default() }
+    }
+
+    /// The (deterministic) fault decision for execute number `index`.
+    ///
+    /// Each index gets an independent rng stream derived from the plan
+    /// seed, so decisions do not depend on thread interleaving — only
+    /// on how many executes preceded this one. Draws happen in a fixed
+    /// class order (panic, hang, persistent, transient, latency) and
+    /// the highest-priority hit wins.
+    pub fn fault_for(&self, index: u64) -> Fault {
+        let mut rng = Rng64::new(self.seed ^ index.wrapping_mul(0x9E3779B97F4A7C15));
+        let panic = (self.panic_p > 0.0 && rng.bool(self.panic_p))
+            || self.panic_after.is_some_and(|after| index >= after);
+        let hang = self.hang_p > 0.0 && rng.bool(self.hang_p);
+        let persistent = self.persistent_after.is_some_and(|after| index >= after);
+        let transient = self.transient_p > 0.0 && rng.bool(self.transient_p);
+        let latency = self.latency_p > 0.0 && rng.bool(self.latency_p);
+        if panic {
+            Fault::Panic
+        } else if hang {
+            Fault::Hang
+        } else if persistent {
+            Fault::Persistent
+        } else if transient {
+            Fault::Transient
+        } else if latency {
+            Fault::Latency
+        } else {
+            Fault::None
+        }
+    }
+}
+
+/// Counts of faults a [`ChaosBackend`] actually injected.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// Execute calls that reached the wrapper.
+    pub executes: u64,
+    /// Transient failures injected.
+    pub transient: u64,
+    /// Persistent failures injected.
+    pub persistent: u64,
+    /// Latency stalls injected.
+    pub latency: u64,
+    /// Hangs injected.
+    pub hangs: u64,
+    /// Panics injected.
+    pub panics: u64,
+}
+
+/// An [`ExecBackend`] wrapper that injects the faults a [`FaultPlan`]
+/// prescribes into an inner backend. `prepare` passes straight through
+/// (constant upload is not the failure surface under test); `execute`
+/// numbers the call, consults the plan, and either injects or
+/// delegates.
+pub struct ChaosBackend {
+    inner: Box<dyn ExecBackend>,
+    plan: FaultPlan,
+    executes: AtomicU64,
+    transient: AtomicU64,
+    persistent: AtomicU64,
+    latency: AtomicU64,
+    hangs: AtomicU64,
+    panics: AtomicU64,
+}
+
+impl ChaosBackend {
+    /// Wrap `inner` under `plan`.
+    pub fn new(inner: Box<dyn ExecBackend>, plan: FaultPlan) -> ChaosBackend {
+        ChaosBackend {
+            inner,
+            plan,
+            executes: AtomicU64::new(0),
+            transient: AtomicU64::new(0),
+            persistent: AtomicU64::new(0),
+            latency: AtomicU64::new(0),
+            hangs: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+        }
+    }
+
+    /// The active plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Injection counters so far.
+    pub fn stats(&self) -> ChaosStats {
+        ChaosStats {
+            executes: self.executes.load(Ordering::Relaxed),
+            transient: self.transient.load(Ordering::Relaxed),
+            persistent: self.persistent.load(Ordering::Relaxed),
+            latency: self.latency.load(Ordering::Relaxed),
+            hangs: self.hangs.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl ExecBackend for ChaosBackend {
+    fn name(&self) -> &'static str {
+        // keep the inner backend's registry identity: the wrapper is a
+        // test harness, not a distinct execution substrate
+        self.inner.name()
+    }
+
+    fn platform(&self) -> String {
+        format!("chaos(seed={}) over {}", self.plan.seed, self.inner.platform())
+    }
+
+    fn prepare(
+        &self,
+        params: &SurfaceParams,
+        w: &[f32],
+        e: &[f32],
+    ) -> Result<Box<dyn PreparedData>> {
+        self.inner.prepare(params, w, e)
+    }
+
+    fn execute(&self, prepared: &dyn PreparedData, rows: &[&[f32]]) -> Result<Execution> {
+        let index = self.executes.fetch_add(1, Ordering::Relaxed);
+        match self.plan.fault_for(index) {
+            Fault::None => self.inner.execute(prepared, rows),
+            Fault::Panic => {
+                self.panics.fetch_add(1, Ordering::Relaxed);
+                panic!("chaos: injected panic at execute {index}");
+            }
+            Fault::Hang => {
+                self.hangs.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.plan.hang);
+                Err(ActsError::Xla(format!("chaos: injected hang at execute {index}")))
+            }
+            Fault::Persistent => {
+                self.persistent.fetch_add(1, Ordering::Relaxed);
+                Err(ActsError::Xla(format!(
+                    "chaos: injected persistent fault at execute {index}"
+                )))
+            }
+            Fault::Transient => {
+                self.transient.fetch_add(1, Ordering::Relaxed);
+                Err(ActsError::Xla(format!(
+                    "chaos: injected transient fault at execute {index}"
+                )))
+            }
+            Fault::Latency => {
+                self.latency.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.plan.latency);
+                self.inner.execute(prepared, rows)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::engine::Engine;
+    use crate::runtime::native::NativeBackend;
+
+    #[test]
+    fn fault_decisions_are_deterministic_per_index() {
+        let plan = FaultPlan {
+            transient_p: 0.3,
+            latency_p: 0.2,
+            hang_p: 0.05,
+            panic_p: 0.05,
+            ..FaultPlan::seeded(42)
+        };
+        let a: Vec<Fault> = (0..256).map(|i| plan.fault_for(i)).collect();
+        let b: Vec<Fault> = (0..256).map(|i| plan.fault_for(i)).collect();
+        assert_eq!(a, b);
+        // decisions are a pure function of index, not of call order
+        assert_eq!(plan.fault_for(17), a[17]);
+    }
+
+    #[test]
+    fn quiet_plan_injects_nothing() {
+        let plan = FaultPlan::seeded(7);
+        assert!((0..1000).all(|i| plan.fault_for(i) == Fault::None));
+    }
+
+    #[test]
+    fn transient_rate_tracks_probability() {
+        let plan = FaultPlan::transient(9, 0.1);
+        let hits = (0..10_000).filter(|&i| plan.fault_for(i) == Fault::Transient).count();
+        assert!((800..1200).contains(&hits), "hits {hits}");
+    }
+
+    #[test]
+    fn persistent_after_condemns_every_later_execute() {
+        let plan = FaultPlan { persistent_after: Some(5), ..FaultPlan::seeded(3) };
+        assert!((0..5).all(|i| plan.fault_for(i) == Fault::None));
+        assert!((5..50).all(|i| plan.fault_for(i) == Fault::Persistent));
+    }
+
+    #[test]
+    fn panic_after_condemns_every_later_execute() {
+        let plan = FaultPlan { panic_after: Some(3), ..FaultPlan::seeded(2) };
+        assert!((0..3).all(|i| plan.fault_for(i) == Fault::None));
+        assert!((3..20).all(|i| plan.fault_for(i) == Fault::Panic));
+    }
+
+    #[test]
+    fn chaos_backend_passes_clean_executes_through_bitwise() {
+        let clean = Engine::native();
+        let chaotic =
+            Engine::from_backend(Box::new(ChaosBackend::new(
+                Box::new(NativeBackend::new()),
+                FaultPlan::seeded(1),
+            )));
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(8);
+        let want = clean.evaluate(&params, &w, &e, &configs).unwrap();
+        let got = chaotic.evaluate(&params, &w, &e, &configs).unwrap();
+        assert_eq!(want, got, "a quiet chaos wrapper must be invisible");
+    }
+
+    #[test]
+    fn chaos_backend_injects_and_counts_transients() {
+        let plan = FaultPlan::transient(11, 1.0); // every execute fails
+        let backend = ChaosBackend::new(Box::new(NativeBackend::new()), plan);
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(2);
+        let prepared = backend.prepare(&params, &w, &e).unwrap();
+        let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+        let err = backend.execute(prepared.as_ref(), &rows).unwrap_err();
+        assert!(err.to_string().contains("transient"), "{err}");
+        assert_eq!(backend.stats().executes, 1);
+        assert_eq!(backend.stats().transient, 1);
+    }
+}

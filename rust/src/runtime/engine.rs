@@ -29,13 +29,15 @@
 //! `Arc<Engine>` and the scheduler's pipelined tick executes on a
 //! worker thread while staging continues on the scheduler thread.
 
-use super::backend::{BackendKind, ExecBackend, PreparedData};
+use super::backend::{BackendKind, ExecBackend, Execution, PreparedData};
 use super::shapes::{self, D_PAD, E_DIM, W_DIM};
 use crate::error::{ActsError, Result};
+use crate::util::rng::Rng64;
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::Duration;
 
 /// Per-SUT surface parameter blocks, flattened row-major (f32), in the
 /// artifact's input order minus the per-call inputs (`u`, `w`, `e`).
@@ -184,6 +186,55 @@ pub struct EngineStats {
     pub requests: u64,
     /// Source rows requested, before planning and padding.
     pub rows_requested: u64,
+    /// Backend execute attempts issued by the engine front-end,
+    /// including retries. On a fault-free run `attempts` equals the
+    /// number of front-end execute invocations and `retries` is zero.
+    pub attempts: u64,
+    /// Attempts beyond the first for a call — each one is a transient
+    /// backend fault the [`RetryPolicy`] absorbed.
+    pub retries: u64,
+    /// Executes killed by the [`RetryPolicy`] per-call deadline instead
+    /// of being allowed to hang the calling lane.
+    pub deadline_kills: u64,
+}
+
+/// Retry/deadline policy for backend executes (see
+/// [`Engine::set_retry_policy`]). Attempts are spaced by exponential
+/// backoff with deterministic seeded jitter, so a faulted run retries
+/// on an identical schedule every time; `deadline`, when set, bounds
+/// each attempt's wall-clock and fails the call instead of wedging the
+/// calling lane on a hung backend.
+///
+/// The policy only engages on `Err` from the backend: a fault-free run
+/// takes the exact same single-execute path as a policy-less engine,
+/// which is what keeps records bit-identical when retries are enabled
+/// but nothing faults.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per call (first try included); min 1.
+    pub max_attempts: u32,
+    /// Sleep before the first retry; doubles per further retry.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Seed for the deterministic backoff jitter stream.
+    pub jitter_seed: u64,
+    /// Per-attempt wall-clock bound. `None` runs the backend inline
+    /// (zero overhead); `Some` runs it on a helper thread and abandons
+    /// it on timeout.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+            jitter_seed: 0,
+            deadline: None,
+        }
+    }
 }
 
 /// Backend-resident constant inputs for one (params, w, e) binding —
@@ -191,7 +242,9 @@ pub struct EngineStats {
 /// `Send + Sync` by the [`PreparedData`] trait obligation, so prepared
 /// constants cross into the scheduler's execute worker thread.
 pub struct PreparedCall {
-    data: Box<dyn PreparedData>,
+    // Arc (not Box) so the deadline path can hand the payload to a
+    // helper thread that may outlive the call it was spawned for.
+    data: Arc<dyn PreparedData>,
 }
 
 impl PreparedCall {
@@ -199,12 +252,19 @@ impl PreparedCall {
     pub(crate) fn data(&self) -> &dyn PreparedData {
         self.data.as_ref()
     }
+
+    /// Shared handle for the deadline helper thread.
+    fn data_arc(&self) -> Arc<dyn PreparedData> {
+        Arc::clone(&self.data)
+    }
 }
 
 /// Compile-once (or premix-once), execute-many engine front-end over a
 /// pluggable [`ExecBackend`].
 pub struct Engine {
-    backend: Box<dyn ExecBackend>,
+    // Arc (not Box) so the deadline path can clone a handle into a
+    // helper thread that may outlive the call it was spawned for.
+    backend: Arc<dyn ExecBackend>,
     /// Number of physical execute calls issued (hot-path telemetry).
     calls: AtomicU64,
     /// Number of config rows evaluated (incl. padding).
@@ -213,6 +273,15 @@ pub struct Engine {
     requests: AtomicU64,
     /// Number of source rows requested (pre-padding).
     rows_requested: AtomicU64,
+    /// Backend execute attempts, retries included.
+    attempts: AtomicU64,
+    /// Attempts beyond the first per call (absorbed transient faults).
+    retries: AtomicU64,
+    /// Executes killed by the per-call deadline.
+    deadline_kills: AtomicU64,
+    /// Retry/deadline policy for backend executes (None = fail fast,
+    /// the historical behaviour).
+    retry: RwLock<Option<RetryPolicy>>,
     /// Content-keyed prepared-constant cache ([`Engine::prepare_cached`]):
     /// equal (params, w, e) bindings share one backend-resident set, which
     /// is what makes their requests coalescible by pointer identity.
@@ -223,11 +292,15 @@ impl Engine {
     /// Engine over an explicit backend.
     pub fn from_backend(backend: Box<dyn ExecBackend>) -> Engine {
         Engine {
-            backend,
+            backend: Arc::from(backend),
             calls: AtomicU64::new(0),
             rows: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             rows_requested: AtomicU64::new(0),
+            attempts: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            deadline_kills: AtomicU64::new(0),
+            retry: RwLock::new(None),
             prepare_cache: Mutex::new(HashMap::new()),
         }
     }
@@ -282,7 +355,23 @@ impl Engine {
             rows_executed: self.rows.load(Ordering::Relaxed),
             requests: self.requests.load(Ordering::Relaxed),
             rows_requested: self.rows_requested.load(Ordering::Relaxed),
+            attempts: self.attempts.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            deadline_kills: self.deadline_kills.load(Ordering::Relaxed),
         }
+    }
+
+    /// Install (or clear) the retry/deadline policy for every
+    /// subsequent backend execute. Takes `&self` so the policy can be
+    /// set on a shared `Arc<Engine>` after labs and fleets have been
+    /// built around it.
+    pub fn set_retry_policy(&self, policy: Option<RetryPolicy>) {
+        *self.retry.write().expect("retry policy") = policy;
+    }
+
+    /// The currently installed retry/deadline policy.
+    pub fn retry_policy(&self) -> Option<RetryPolicy> {
+        *self.retry.read().expect("retry policy")
     }
 
     /// Evaluate `configs` (each a padded `[f32; D_PAD]` unit vector) for
@@ -318,7 +407,7 @@ impl Engine {
             )));
         }
         params.validate()?;
-        Ok(PreparedCall { data: self.backend.prepare(params, w, e)? })
+        Ok(PreparedCall { data: Arc::from(self.backend.prepare(params, w, e)?) })
     }
 
     /// As [`Engine::prepare`], but content-cached: equal (params, w, e)
@@ -420,11 +509,93 @@ impl Engine {
                 )));
             }
         }
-        let execution = self.backend.execute(prepared.data(), rows)?;
+        let execution = match self.retry_policy() {
+            None => {
+                self.attempts.fetch_add(1, Ordering::Relaxed);
+                self.backend.execute(prepared.data(), rows)?
+            }
+            Some(policy) => self.execute_with_policy(prepared, rows, &policy)?,
+        };
         debug_assert_eq!(execution.perfs.len(), rows.len(), "backend must answer every row");
         self.calls.fetch_add(execution.execute_calls, Ordering::Relaxed);
         self.rows.fetch_add(execution.rows_executed, Ordering::Relaxed);
         Ok(execution.perfs)
+    }
+
+    /// Drive one backend execute under a [`RetryPolicy`]: up to
+    /// `max_attempts` tries, exponential backoff with deterministic
+    /// seeded jitter between them, the per-attempt deadline applied to
+    /// each try. Only `Err` engages the machinery — a clean first
+    /// attempt is indistinguishable from the policy-less path.
+    fn execute_with_policy(
+        &self,
+        prepared: &PreparedCall,
+        rows: &[&[f32]],
+        policy: &RetryPolicy,
+    ) -> Result<Execution> {
+        let max_attempts = policy.max_attempts.max(1);
+        let mut backoff = policy.base_backoff.min(policy.max_backoff);
+        let mut last_err = None;
+        for attempt in 0..max_attempts {
+            self.attempts.fetch_add(1, Ordering::Relaxed);
+            if attempt > 0 {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            match self.execute_once(prepared, rows, policy.deadline) {
+                Ok(execution) => return Ok(execution),
+                Err(err) => last_err = Some(err),
+            }
+            if attempt + 1 < max_attempts && !backoff.is_zero() {
+                // jitter is seeded per attempt ordinal, not from any
+                // global counter, so the schedule never depends on how
+                // threads interleave
+                let mut rng = Rng64::new(
+                    policy.jitter_seed ^ (attempt as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                );
+                std::thread::sleep(backoff.mul_f64(1.0 + 0.5 * rng.f64()));
+                backoff = (backoff * 2).min(policy.max_backoff);
+            }
+        }
+        Err(last_err.expect("at least one attempt ran"))
+    }
+
+    /// One attempt, optionally bounded by a wall-clock deadline. With a
+    /// deadline the backend runs on a helper thread holding only `Arc`
+    /// handles; on timeout the attempt fails (counted in
+    /// `deadline_kills`) and the thread is abandoned to finish or hang
+    /// on its own — the calling lane moves on either way.
+    fn execute_once(
+        &self,
+        prepared: &PreparedCall,
+        rows: &[&[f32]],
+        deadline: Option<Duration>,
+    ) -> Result<Execution> {
+        let Some(deadline) = deadline else {
+            return self.backend.execute(prepared.data(), rows);
+        };
+        let backend = Arc::clone(&self.backend);
+        let data = prepared.data_arc();
+        let owned: Vec<Vec<f32>> = rows.iter().map(|r| r.to_vec()).collect();
+        let (tx, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            let rows: Vec<&[f32]> = owned.iter().map(|r| r.as_slice()).collect();
+            let _ = tx.send(backend.execute(data.as_ref(), &rows));
+        });
+        match rx.recv_timeout(deadline) {
+            Ok(result) => result,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.deadline_kills.fetch_add(1, Ordering::Relaxed);
+                Err(ActsError::Xla(format!(
+                    "execute exceeded its {}ms deadline",
+                    deadline.as_millis()
+                )))
+            }
+            // the helper died without answering (it panicked): surface
+            // that as a failed attempt rather than unwinding the lane
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(ActsError::Xla("execute thread died before answering".into()))
+            }
+        }
     }
 }
 
@@ -577,5 +748,93 @@ mod tests {
         // its own; native never pads
         assert_eq!(s1.execute_calls - s0.execute_calls, 2);
         assert_eq!(s1.rows_executed - s0.rows_executed, 28);
+    }
+
+    // --- retry/deadline policy --------------------------------------
+
+    use crate::runtime::chaos::{ChaosBackend, Fault, FaultPlan};
+    use crate::runtime::native::NativeBackend;
+
+    fn chaos_engine(plan: FaultPlan) -> Engine {
+        Engine::from_backend(Box::new(ChaosBackend::new(Box::new(NativeBackend::new()), plan)))
+    }
+
+    #[test]
+    fn fault_free_retry_policy_is_bitwise_invisible() {
+        let plain = native_engine();
+        let retrying = native_engine();
+        retrying.set_retry_policy(Some(RetryPolicy::default()));
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(16);
+        let want = plain.evaluate(&params, &w, &e, &configs).unwrap();
+        let got = retrying.evaluate(&params, &w, &e, &configs).unwrap();
+        assert_eq!(want, got, "a fault-free retried run must stay bit-identical");
+        let stats = retrying.stats();
+        assert_eq!(stats.attempts, 1);
+        assert_eq!(stats.retries, 0);
+        assert_eq!(stats.deadline_kills, 0);
+    }
+
+    #[test]
+    fn retry_policy_absorbs_a_transient_fault() {
+        // pick a seed whose fault sequence starts Transient, then None:
+        // the first attempt fails, the retry lands clean
+        let seed = (0..u64::MAX)
+            .find(|&s| {
+                let p = FaultPlan::transient(s, 0.5);
+                p.fault_for(0) == Fault::Transient && p.fault_for(1) == Fault::None
+            })
+            .unwrap();
+        let engine = chaos_engine(FaultPlan::transient(seed, 0.5));
+        engine.set_retry_policy(Some(RetryPolicy::default()));
+        let clean = native_engine();
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(4);
+        let want = clean.evaluate(&params, &w, &e, &configs).unwrap();
+        let got = engine.evaluate(&params, &w, &e, &configs).unwrap();
+        assert_eq!(want, got, "the retried result must match a clean run bitwise");
+        let stats = engine.stats();
+        assert_eq!(stats.attempts, 2);
+        assert_eq!(stats.retries, 1);
+    }
+
+    #[test]
+    fn retry_policy_gives_up_after_max_attempts() {
+        let engine = chaos_engine(FaultPlan::transient(5, 1.0)); // every execute fails
+        engine.set_retry_policy(Some(RetryPolicy { max_attempts: 3, ..RetryPolicy::default() }));
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(2);
+        let err = engine.evaluate(&params, &w, &e, &configs).unwrap_err();
+        assert!(err.to_string().contains("transient"), "{err}");
+        let stats = engine.stats();
+        assert_eq!(stats.attempts, 3);
+        assert_eq!(stats.retries, 2);
+    }
+
+    #[test]
+    fn deadline_kills_a_hung_execute_instead_of_wedging() {
+        let plan = FaultPlan {
+            hang_p: 1.0,
+            hang: Duration::from_secs(2),
+            ..FaultPlan::seeded(8)
+        };
+        let engine = chaos_engine(plan);
+        engine.set_retry_policy(Some(RetryPolicy {
+            max_attempts: 1,
+            deadline: Some(Duration::from_millis(50)),
+            ..RetryPolicy::default()
+        }));
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(2);
+        let start = std::time::Instant::now();
+        let err = engine.evaluate(&params, &w, &e, &configs).unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(2), "deadline must not wait out the hang");
+        assert!(err.to_string().contains("deadline"), "{err}");
+        assert_eq!(engine.stats().deadline_kills, 1);
+    }
+
+    #[test]
+    fn retry_policy_can_be_cleared() {
+        let engine = native_engine();
+        engine.set_retry_policy(Some(RetryPolicy::default()));
+        assert!(engine.retry_policy().is_some());
+        engine.set_retry_policy(None);
+        assert!(engine.retry_policy().is_none());
     }
 }

@@ -14,7 +14,14 @@
 //!   f32, parallelised with `std::thread::scope` — no artifacts, no
 //!   vendor binding, runs anywhere.
 //! * [`engine`] — the backend-agnostic front-end: validation, the
-//!   prepared-constant cache, cross-request coalescing, telemetry.
+//!   prepared-constant cache, cross-request coalescing, telemetry, and
+//!   the [`engine::RetryPolicy`] retry/deadline layer that absorbs
+//!   transient backend faults below the session layer.
+//! * [`chaos`] — deterministic fault injection: a
+//!   [`chaos::ChaosBackend`] wrapper that perturbs any inner backend
+//!   according to a seeded [`chaos::FaultPlan`] (transient/persistent
+//!   errors, latency spikes, hangs, panics) — the harness behind the
+//!   fault-tolerance tests and the CI chaos smoke.
 //! * [`shapes`] — the artifact input table, mirroring
 //!   `python/compile/model.py::INPUT_SPEC` (kept in sync by the golden
 //!   integration test).
@@ -23,6 +30,7 @@
 //!   both backends.
 
 pub mod backend;
+pub mod chaos;
 pub mod engine;
 pub mod golden;
 pub mod native;
@@ -30,6 +38,9 @@ pub mod pjrt;
 pub mod shapes;
 
 pub use backend::{BackendKind, ExecBackend};
-pub use engine::{Engine, EngineStats, EvalRequest, Perf, PreparedCall, SurfaceParams};
+pub use chaos::{ChaosBackend, ChaosStats, Fault, FaultPlan};
+pub use engine::{
+    Engine, EngineStats, EvalRequest, Perf, PreparedCall, RetryPolicy, SurfaceParams,
+};
 pub use native::NativeBackend;
 pub use shapes::{BUCKETS, D_PAD, E_DIM, G, J, R, RG, W_DIM};

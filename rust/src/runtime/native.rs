@@ -39,6 +39,27 @@ use std::any::Any;
 /// Batches below this stay on the calling thread.
 const PARALLEL_THRESHOLD_ROWS: usize = 64;
 
+/// Parse an `ACTS_NATIVE_THREADS` spelling: an integer >= 1.
+/// Unit-testable without mutating the process environment.
+pub fn parse_native_threads(value: &str) -> Result<usize> {
+    value.trim().parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| {
+        ActsError::InvalidArg(format!(
+            "ACTS_NATIVE_THREADS=`{value}` is not a valid thread count \
+             (accepted: an integer >= 1)"
+        ))
+    })
+}
+
+/// Resolve the `ACTS_NATIVE_THREADS` environment variable: `None` when
+/// unset, a startup error when set to something unusable — a typo must
+/// not silently run at a different parallelism.
+pub fn native_threads_from_env() -> Result<Option<usize>> {
+    match std::env::var("ACTS_NATIVE_THREADS") {
+        Ok(v) => parse_native_threads(&v).map(Some),
+        Err(_) => Ok(None),
+    }
+}
+
 /// Pure-`std` CPU backend (see the module docs).
 pub struct NativeBackend {
     threads: usize,
@@ -46,15 +67,14 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     /// Backend with the default worker count (`ACTS_NATIVE_THREADS`,
-    /// else `available_parallelism` capped at 8).
+    /// else `available_parallelism` capped at 8). Constructors have no
+    /// error channel, so an unusable variable falls back to the default
+    /// here; the CLI validates it at startup
+    /// ([`native_threads_from_env`]) and rejects it with a clear error.
     pub fn new() -> NativeBackend {
-        let threads = std::env::var("ACTS_NATIVE_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&n| n >= 1)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
-            });
+        let threads = native_threads_from_env().ok().flatten().unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+        });
         NativeBackend { threads }
     }
 
@@ -306,6 +326,17 @@ impl ExecBackend for NativeBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn thread_spellings_parse_or_name_the_variable() {
+        assert_eq!(parse_native_threads("8").unwrap(), 8);
+        assert_eq!(parse_native_threads(" 1 ").unwrap(), 1);
+        for bad in ["0", "-4", "many", "", "2.5"] {
+            let err = parse_native_threads(bad).unwrap_err().to_string();
+            assert!(err.contains("ACTS_NATIVE_THREADS"), "{bad}: {err}");
+            assert!(err.contains("integer >= 1"), "{bad}: {err}");
+        }
+    }
 
     fn prepared_for(
         params: &SurfaceParams,

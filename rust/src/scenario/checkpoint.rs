@@ -1,0 +1,295 @@
+//! Session checkpoint/resume: journal every absorbed round to disk,
+//! replay the journal to rebuild a killed campaign bit-for-bit.
+//!
+//! # What gets recorded
+//!
+//! One JSONL file per fleet cell (`<dir>/<sanitized-label>.jsonl`),
+//! one line per **absorbed staged round**, appended at the round
+//! boundary by the scheduler's round observer
+//! ([`crate::tuner::Scheduler::set_round_observer`]):
+//!
+//! * `{"event":"executed","perfs":[[thr,lat],...]}` — the round's
+//!   combined engine results, one `[throughput, latency]` pair per
+//!   pending row (empty when every row resolved during staging);
+//! * `{"event":"poisoned","msg":"..."}` — the round's execute was
+//!   panic-poisoned.
+//!
+//! Baselines and fatal rounds are deliberately **not** recorded.
+//!
+//! # Why rounds, not session state
+//!
+//! A session's state (optimizer internals, rng streams, the
+//! manipulator's clock and noise draws) is large, private and
+//! entangled; serialising it would freeze every internal
+//! representation into a format. But the whole stack is deterministic
+//! from its seeds: state is a pure function of *what the engine
+//! answered each round*. So the journal records exactly that, and
+//! resume **replays** it — re-running staging (which re-draws the
+//! manipulator's rng identically), feeding the recorded perfs back
+//! through `collect_results` (which re-draws measurement noise
+//! identically), and re-absorbing. Every rng stream, ledger charge and
+//! record lands exactly where the killed run had it, and the fleet
+//! continues live from the first unrecorded round. Baselines re-run
+//! live for the same reason — they cost no engine round-trip to
+//! reproduce. Numbers survive the disk round-trip exactly: the JSON
+//! writer prints f64 via Rust's shortest round-trip formatting.
+//!
+//! Replay assumes the resumed fleet is *the same campaign* (same
+//! specs, seeds and backend). A journal that stops lining up with the
+//! session's proposals — a foreign log, a changed spec — fails that
+//! cell loudly at the mismatched round rather than guessing. A torn
+//! final line (the kill landed mid-write) is discarded and its round
+//! re-runs live.
+
+use crate::error::{ActsError, Result};
+use crate::manipulator::SystemManipulator;
+use crate::report::Json;
+use crate::runtime::Perf;
+use crate::tuner::{Round, TuningSession};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// One journalled round, as read back from a cell's log.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RoundRecord {
+    /// The round's combined engine results (one per pending row).
+    Executed(Vec<Perf>),
+    /// The round was panic-poisoned with this message.
+    Poisoned(String),
+}
+
+impl RoundRecord {
+    /// Serialise to one JSONL line's value.
+    pub fn to_json(&self) -> Json {
+        match self {
+            RoundRecord::Executed(perfs) => Json::obj(vec![
+                ("event", Json::Str("executed".into())),
+                (
+                    "perfs",
+                    Json::Arr(
+                        perfs.iter().map(|p| Json::nums(&[p.throughput, p.latency])).collect(),
+                    ),
+                ),
+            ]),
+            RoundRecord::Poisoned(msg) => Json::obj(vec![
+                ("event", Json::Str("poisoned".into())),
+                ("msg", Json::Str(msg.clone())),
+            ]),
+        }
+    }
+
+    /// Parse one line's value; `None` for anything malformed.
+    pub fn from_json(j: &Json) -> Option<RoundRecord> {
+        match j.get("event")?.as_str()? {
+            "executed" => {
+                let perfs = j.get("perfs")?.as_arr()?;
+                let mut out = Vec::with_capacity(perfs.len());
+                for p in perfs {
+                    let xs = p.as_arr()?;
+                    if xs.len() != 2 {
+                        return None;
+                    }
+                    out.push(Perf { throughput: xs[0].as_f64()?, latency: xs[1].as_f64()? });
+                }
+                Some(RoundRecord::Executed(out))
+            }
+            "poisoned" => Some(RoundRecord::Poisoned(j.get("msg")?.as_str()?.to_string())),
+            _ => None,
+        }
+    }
+}
+
+/// Flatten a cell label into a filename: anything outside
+/// `[A-Za-z0-9._-]` becomes `_` (fleet labels are slash-separated).
+pub fn sanitize_label(label: &str) -> String {
+    label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || "-._".contains(c) { c } else { '_' })
+        .collect()
+}
+
+/// Appends round records to per-cell JSONL logs under one directory.
+/// Each append opens, writes and closes the file, so every completed
+/// round is durable the moment it is absorbed — a kill loses at most
+/// the line being written, which resume discards as torn.
+pub struct CheckpointWriter {
+    dir: PathBuf,
+}
+
+impl CheckpointWriter {
+    /// Writer over `dir`, creating it if needed. Existing cell logs are
+    /// appended to — that is what makes resume-then-continue extend one
+    /// journal across kills.
+    pub fn create(dir: impl AsRef<Path>) -> Result<CheckpointWriter> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| ActsError::io(dir.display().to_string(), e))?;
+        Ok(CheckpointWriter { dir })
+    }
+
+    /// The journal path for a cell label.
+    pub fn log_path(&self, label: &str) -> PathBuf {
+        self.dir.join(format!("{}.jsonl", sanitize_label(label)))
+    }
+
+    /// Append one record to a cell's journal. Checkpointing is
+    /// best-effort by design: an unwritable journal must not kill the
+    /// campaign it exists to protect, so IO errors are reported to
+    /// stderr and swallowed.
+    pub fn append(&self, label: &str, record: &RoundRecord) {
+        let path = self.log_path(label);
+        let result = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .and_then(|mut f| writeln!(f, "{}", record.to_json().to_string()));
+        if let Err(e) = result {
+            eprintln!("acts: checkpoint write to {} failed: {e}", path.display());
+        }
+    }
+}
+
+/// Read a cell's journal back. A missing file is an empty journal (a
+/// fresh cell); a malformed line ends the journal there — the torn
+/// tail of a mid-write kill — and the rounds after it re-run live.
+pub fn load_log(path: &Path) -> Vec<RoundRecord> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some(record) = Json::parse(line).ok().and_then(|j| RoundRecord::from_json(&j))
+        else {
+            break;
+        };
+        out.push(record);
+    }
+    out
+}
+
+/// Replay a journal into a fresh session/manipulator pair (see the
+/// module docs): baselines re-run live, each `Executed` record
+/// re-stages its round and feeds the recorded perfs back through
+/// `collect_results`, each `Poisoned` record re-stages and absorbs the
+/// poisoning (quarantining at the same `quarantine_after` streak the
+/// scheduler uses). Returns how many records were applied; the caller
+/// hands the pair to a scheduler to continue live. A record that does
+/// not line up with the session's proposals fails the session loudly
+/// at that round.
+pub fn replay_session<M: SystemManipulator>(
+    session: &mut TuningSession<'_>,
+    sut: &mut M,
+    records: &[RoundRecord],
+    quarantine_after: u32,
+) -> usize {
+    session.set_cost_estimate(sut.est_test_cost());
+    session.observe_sim_seconds(sut.sim_seconds());
+    let mut applied = 0usize;
+    let mut streak = 0u32;
+    for record in records {
+        // drive to the next staged round, re-running baseline attempts
+        // live (deterministic, engine-cheap, never journalled)
+        let units: Vec<Vec<f64>> = loop {
+            match session.next_round() {
+                Round::Baseline => {
+                    let unit = sut.current_unit().to_vec();
+                    let outcome = sut.run_test();
+                    session.observe_sim_seconds(sut.sim_seconds());
+                    session.absorb_baseline(&unit, outcome);
+                }
+                Round::Staged(tests) => break tests.into_iter().map(|t| t.unit).collect(),
+                Round::Done => return applied,
+            }
+        };
+        let staged = sut.stage_tests(&units);
+        match record {
+            RoundRecord::Executed(perfs) => {
+                streak = 0;
+                let pending = staged.pending_units();
+                if pending.len() != perfs.len() {
+                    // foreign or stale journal: fail the cell loudly
+                    // rather than resume into a diverged state
+                    let results = staged.resolve_pending_with(|| {
+                        ActsError::InvalidArg(
+                            "checkpoint journal does not match this session's rounds".into(),
+                        )
+                    });
+                    session.absorb(results);
+                    session.observe_sim_seconds(sut.sim_seconds());
+                    return applied;
+                }
+                let outcomes = sut.collect_results(staged, perfs.clone());
+                session.absorb(outcomes);
+            }
+            RoundRecord::Poisoned(msg) => {
+                drop(staged);
+                streak += 1;
+                if streak >= quarantine_after {
+                    session.quarantine();
+                } else {
+                    session.absorb_poisoned(msg);
+                }
+            }
+        }
+        session.observe_sim_seconds(sut.sim_seconds());
+        applied += 1;
+    }
+    applied
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_records_round_trip_through_json() {
+        let records = vec![
+            RoundRecord::Executed(vec![
+                Perf { throughput: 1234.5678901234567, latency: 0.1 },
+                Perf { throughput: 0.30000000000000004, latency: 99.0 },
+            ]),
+            RoundRecord::Executed(Vec::new()),
+            RoundRecord::Poisoned("execute worker panicked mid-execute".into()),
+        ];
+        for record in &records {
+            let line = record.to_json().to_string();
+            let back = RoundRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(*record, back, "{line}");
+        }
+    }
+
+    #[test]
+    fn labels_sanitize_to_safe_filenames() {
+        assert_eq!(sanitize_label("mysql/zipfian-rw/standalone/rrs/s1"),
+            "mysql_zipfian-rw_standalone_rrs_s1");
+        assert_eq!(sanitize_label("tests-5 (a?b)"), "tests-5__a_b_");
+    }
+
+    #[test]
+    fn torn_tail_ends_the_journal() {
+        let dir = std::env::temp_dir().join(format!("acts-ckpt-{}", std::process::id()));
+        let writer = CheckpointWriter::create(&dir).unwrap();
+        let record = RoundRecord::Executed(vec![Perf { throughput: 5.0, latency: 1.0 }]);
+        writer.append("cell", &record);
+        writer.append("cell", &RoundRecord::Poisoned("boom".into()));
+        let path = writer.log_path("cell");
+        // simulate a kill mid-write: append half a line
+        {
+            use std::io::Write;
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"event\":\"exec").unwrap();
+        }
+        let loaded = load_log(&path);
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0], record);
+        assert_eq!(loaded[1], RoundRecord::Poisoned("boom".into()));
+        // a missing file is an empty journal
+        assert!(load_log(&dir.join("never-written.jsonl")).is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

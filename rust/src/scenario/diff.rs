@@ -280,10 +280,13 @@ pub fn diff_dumps(old: &Json, new: &Json, tol: f64) -> Result<DiffReport> {
     Ok(DiffReport { kind: old_kind, metric, rows, tol })
 }
 
-/// Diff two dump files (the CLI entry point).
+/// Diff two dump files (the CLI entry point). A missing or unreadable
+/// file is its own distinct error ("cannot read <path>"), not a JSON
+/// parse failure at position 0.
 pub fn diff_files(old_path: &str, new_path: &str, tol: f64) -> Result<DiffReport> {
     let read = |path: &str| -> Result<Json> {
-        let text = std::fs::read_to_string(path).map_err(|e| ActsError::io(path, e))?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ActsError::InvalidArg(format!("cannot read {path}: {e}")))?;
         Json::parse(&text)
             .map_err(|e| ActsError::InvalidArg(format!("{path}: not valid JSON: {e}")))
     };
@@ -293,6 +296,15 @@ pub fn diff_files(old_path: &str, new_path: &str, tol: f64) -> Result<DiffReport
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn missing_dump_file_reports_cannot_read() {
+        let err = diff_files("/nonexistent/acts-fleet-dump.json", "/also/missing.json", 0.01)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot read /nonexistent/acts-fleet-dump.json"), "{err}");
+        assert!(!err.contains("not valid JSON"), "must not surface a parse error: {err}");
+    }
 
     fn fleet_dump(cells: &[(&str, Option<f64>)]) -> Json {
         Json::obj(vec![

@@ -17,14 +17,16 @@
 //! the scheduler's order-independence guarantee, asserted end-to-end
 //! by `rust/tests/fleet.rs`.
 
+use super::checkpoint::{self, CheckpointWriter, RoundRecord};
 use super::{OptimizerSel, ScenarioSpec};
 use crate::error::{ActsError, Result};
 use crate::experiment::Lab;
 use crate::manipulator::{SimulatedSut, SystemManipulator};
 use crate::report::{Json, Table};
 use crate::runtime::Engine;
-use crate::tuner::{Scheduler, SchedulerMode, TuningOutcome, TuningSession};
+use crate::tuner::{RoundEvent, Scheduler, SchedulerMode, TuningOutcome, TuningSession};
 use crate::util::stats::Summary;
+use std::path::Path;
 use std::sync::Arc;
 
 /// Per-cell identity carried from spec to report.
@@ -70,8 +72,36 @@ impl Fleet {
         specs: Vec<ScenarioSpec>,
         mode: SchedulerMode,
     ) -> Result<Fleet> {
+        Fleet::compile_inner(lab, specs, mode, None)
+    }
+
+    /// Compile with round-boundary checkpointing under `dir` (the
+    /// `acts fleet --checkpoint-dir` path). Existing journals in `dir`
+    /// are **resumed**: each cell's recorded rounds are replayed into
+    /// its fresh session before the scheduler starts, so a killed
+    /// campaign restarted with the same specs and the same directory
+    /// continues from its last round boundary and finishes with
+    /// bit-identical records (see [`super::checkpoint`]).
+    pub fn compile_with_checkpoint(
+        lab: &Lab,
+        specs: Vec<ScenarioSpec>,
+        mode: SchedulerMode,
+        dir: &Path,
+    ) -> Result<Fleet> {
+        let writer = Arc::new(CheckpointWriter::create(dir)?);
+        Fleet::compile_inner(lab, specs, mode, Some(writer))
+    }
+
+    fn compile_inner(
+        lab: &Lab,
+        specs: Vec<ScenarioSpec>,
+        mode: SchedulerMode,
+        writer: Option<Arc<CheckpointWriter>>,
+    ) -> Result<Fleet> {
         let mut scheduler = Scheduler::with_mode(mode);
         let mut cells = Vec::with_capacity(specs.len());
+        // live-slot labels, in scheduler.add order, for the observer
+        let mut live_labels: Vec<String> = Vec::new();
         for spec in specs {
             let mut sut = spec.deploy(lab);
             // the session first: a spec the registries cannot resolve
@@ -117,9 +147,37 @@ impl Fleet {
                 seed: tuning.seed,
             };
             if install_err.is_none() {
+                let mut session = session;
+                let mut sut = sut;
+                if let Some(writer) = &writer {
+                    // resume: replay this cell's journal (if any) before
+                    // handing the pair to the scheduler
+                    let records = checkpoint::load_log(&writer.log_path(&meta.label));
+                    if !records.is_empty() {
+                        checkpoint::replay_session(
+                            &mut session,
+                            &mut sut,
+                            &records,
+                            Scheduler::<SimulatedSut>::DEFAULT_QUARANTINE_AFTER,
+                        );
+                    }
+                }
+                live_labels.push(meta.label.clone());
                 scheduler.add(session, sut);
             }
             cells.push((meta, install_err));
+        }
+        if let Some(writer) = writer {
+            // journal every absorbed round; replayed rounds were
+            // applied before add() and are never re-reported, so
+            // appending extends one journal across kills
+            scheduler.set_round_observer(move |slot, event| {
+                let record = match event {
+                    RoundEvent::Executed(perfs) => RoundRecord::Executed(perfs.to_vec()),
+                    RoundEvent::Poisoned(msg) => RoundRecord::Poisoned(msg.to_string()),
+                };
+                writer.append(&live_labels[slot], &record);
+            });
         }
         Ok(Fleet { cells, scheduler, engine: lab.engine.clone() })
     }
@@ -165,6 +223,9 @@ impl Fleet {
                 execute_calls: after.execute_calls - before.execute_calls,
                 rows_requested: after.rows_requested - before.rows_requested,
                 rows_executed: after.rows_executed - before.rows_executed,
+                attempts: after.attempts - before.attempts,
+                retries: after.retries - before.retries,
+                deadline_kills: after.deadline_kills - before.deadline_kills,
             },
         }
     }
@@ -205,6 +266,14 @@ pub struct Coalescing {
     pub rows_requested: u64,
     /// Rows executed, bucket padding included.
     pub rows_executed: u64,
+    /// Backend execute attempts, retries included (equals
+    /// `execute_calls` on a fault-free run).
+    pub attempts: u64,
+    /// Attempts beyond each call's first — the faults the engine's
+    /// [`crate::runtime::RetryPolicy`] absorbed below the sessions.
+    pub retries: u64,
+    /// Executes killed by the retry policy's per-execute deadline.
+    pub deadline_kills: u64,
 }
 
 /// Aggregate statistics over a fleet's completed cells.
@@ -375,6 +444,9 @@ impl FleetReport {
                     ("execute_calls", Json::Num(self.coalescing.execute_calls as f64)),
                     ("rows_requested", Json::Num(self.coalescing.rows_requested as f64)),
                     ("rows_executed", Json::Num(self.coalescing.rows_executed as f64)),
+                    ("attempts", Json::Num(self.coalescing.attempts as f64)),
+                    ("retries", Json::Num(self.coalescing.retries as f64)),
+                    ("deadline_kills", Json::Num(self.coalescing.deadline_kills as f64)),
                 ]),
             ),
             ("cells", Json::Arr(cells)),

@@ -16,6 +16,9 @@
 //! * [`Matrix`] expands cartesian axes — suts × workloads ×
 //!   deployments × optimizers × seeds — into a `Vec<ScenarioSpec>`,
 //!   the declarative form of "run this experiment over that grid".
+//! * `checkpoint` journals every absorbed round to per-cell JSONL
+//!   logs and replays them on resume, so a killed campaign restarts
+//!   from its last round boundary with bit-identical state.
 //! * [`Fleet`] (`fleet`) compiles a `Vec<ScenarioSpec>` into ready
 //!   [`crate::tuner::Scheduler`] sessions sharing one engine — so
 //!   cross-scenario coalescing keeps working — runs them, and demuxes
@@ -27,9 +30,11 @@
 //! scheduler sessions; the `acts fleet` CLI subcommand exposes the
 //! same path as comma-separated axis flags.
 
+pub mod checkpoint;
 pub mod diff;
 pub mod fleet;
 
+pub use checkpoint::{load_log, replay_session, CheckpointWriter, RoundRecord};
 pub use diff::{diff_dumps, diff_files, DiffKind, DiffReport, DiffRow};
 pub use fleet::{Fleet, FleetAggregate, FleetCell, FleetReport};
 

@@ -59,7 +59,9 @@
 pub mod scheduler;
 pub mod session;
 
-pub use scheduler::{default_lanes, Scheduler, SchedulerMode};
+pub use scheduler::{
+    default_lanes, lanes_from_env, parse_lanes, RoundEvent, Scheduler, SchedulerMode,
+};
 pub use session::{ProposedTest, Round, TuningSession};
 
 use crate::budget::{Budget, StopCause};

@@ -71,6 +71,33 @@
 //! dying under a coalesced execute: every session that contributed a
 //! request to that execute aborts its round, exactly as each would
 //! have had it issued the call alone.
+//!
+//! # Degradation under panics, and quarantine
+//!
+//! A panicking execute is contained at two levels. Each engine group's
+//! `evaluate_coalesced` runs under `catch_unwind` inside
+//! [`execute_pool`]: a panic **poisons** only the rounds whose requests
+//! shared that execute, while the pool's other engine groups still run
+//! — the blast radius is the poisoned execute, not the lane. (A worker-
+//! level `catch_unwind` backstop still poisons the whole pool if a
+//! panic escapes the per-group fence.) A poisoned round is absorbed via
+//! [`TuningSession::absorb_poisoned`]: budget charged, proposals told
+//! to the optimizer at zero, but the session's consecutive-failure cap
+//! untouched — a panic says nothing about the configurations.
+//!
+//! Instead, the scheduler tracks a per-session **poison streak**: N
+//! consecutive poisoned rounds (default
+//! [`Scheduler::DEFAULT_QUARANTINE_AFTER`], tunable with
+//! [`Scheduler::set_quarantine_after`]) quarantine the session —
+//! [`crate::budget::StopCause::Quarantined`], records kept, fleet-mates
+//! undisturbed — instead of letting a crash-looping device spin the
+//! fleet forever. Any cleanly absorbed round resets the streak.
+//!
+//! Round boundaries can be observed with
+//! [`Scheduler::set_round_observer`] — the hook the checkpoint layer
+//! ([`crate::scenario::checkpoint`]) uses to journal every absorbed
+//! round for crash recovery. The observer runs on the scheduler thread
+//! in both modes.
 
 use super::session::{Round, TuningSession};
 use super::TuningOutcome;
@@ -85,6 +112,9 @@ struct Slot<'a, M: SystemManipulator> {
     session: TuningSession<'a>,
     sut: M,
     live: bool,
+    /// Consecutive poisoned (panic-killed) rounds; quarantine trips at
+    /// the scheduler's threshold, any clean round resets it.
+    poison_streak: u32,
 }
 
 /// One staged round awaiting a (possibly shared) engine execute:
@@ -98,19 +128,63 @@ struct PooledRound {
 
 type Pool = Vec<PooledRound>;
 
+/// How one pooled round's execute went wrong, when it did.
+#[derive(Clone, Debug)]
+enum RoundFailure {
+    /// The engine returned an error: the round aborts fatally for its
+    /// session, exactly as if the session had issued the call alone.
+    Fatal(String),
+    /// The execute panicked: the round's rows are failed (not fatal)
+    /// and the session's poison streak advances toward quarantine.
+    Poisoned(String),
+}
+
 /// Per-pool execute results: one `Vec<Perf>` per request per pooled
-/// round, plus the per-round engine failure (if its group died).
-type PoolResults = (Vec<Vec<Vec<Perf>>>, Vec<Option<String>>);
+/// round, plus the per-round failure (if its execute group died).
+type PoolResults = (Vec<Vec<Vec<Perf>>>, Vec<Option<RoundFailure>>);
+
+/// A round-boundary event reported to the scheduler's observer (see
+/// [`Scheduler::set_round_observer`]): what the slot's staged round
+/// absorbed. Baselines and fatal rounds are not reported — a resumed
+/// replay re-runs the former live and re-discovers the latter.
+pub enum RoundEvent<'e> {
+    /// A staged round absorbed cleanly with these combined perfs, one
+    /// per pending row (empty when every row resolved during staging).
+    Executed(&'e [Perf]),
+    /// A staged round poisoned by a panicking execute.
+    Poisoned(&'e str),
+}
+
+type RoundObserver<'a> = Box<dyn FnMut(usize, RoundEvent<'_>) + 'a>;
+
+/// Parse an `ACTS_LANES` spelling: an integer >= 1. Unit-testable
+/// without mutating the process environment.
+pub fn parse_lanes(value: &str) -> crate::Result<usize> {
+    value.trim().parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| {
+        ActsError::InvalidArg(format!(
+            "ACTS_LANES=`{value}` is not a valid lane count (accepted: an integer >= 1)"
+        ))
+    })
+}
+
+/// Resolve the `ACTS_LANES` environment variable: `None` when unset, a
+/// startup error when set to something unusable — a typo must not
+/// silently run at a different concurrency.
+pub fn lanes_from_env() -> crate::Result<Option<usize>> {
+    match std::env::var("ACTS_LANES") {
+        Ok(v) => parse_lanes(&v).map(Some),
+        Err(_) => Ok(None),
+    }
+}
 
 /// Default lane count for the pipelined scheduler: the `ACTS_LANES`
-/// environment variable (clamped to >= 1), else 2 — the historical
-/// double buffer.
+/// environment variable, else 2 — the historical double buffer. Used
+/// by [`SchedulerMode::default`], which has no error channel, so an
+/// unusable value falls back to the default here; the CLI validates
+/// the variable at startup ([`lanes_from_env`]) and rejects it with a
+/// clear error before any scheduler is built.
 pub fn default_lanes() -> usize {
-    std::env::var("ACTS_LANES")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or(2)
+    lanes_from_env().ok().flatten().unwrap_or(2)
 }
 
 /// How [`Scheduler::run`] drives its sessions.
@@ -142,15 +216,29 @@ impl Default for SchedulerMode {
 pub struct Scheduler<'a, M: SystemManipulator> {
     slots: Vec<Slot<'a, M>>,
     mode: SchedulerMode,
+    /// Consecutive poisoned rounds before a session is quarantined.
+    quarantine_after: u32,
+    /// Round-boundary hook (checkpointing); runs on the scheduler
+    /// thread in both modes.
+    observer: Option<RoundObserver<'a>>,
 }
 
 impl<'a, M: SystemManipulator> Default for Scheduler<'a, M> {
     fn default() -> Self {
-        Scheduler { slots: Vec::new(), mode: SchedulerMode::default() }
+        Scheduler {
+            slots: Vec::new(),
+            mode: SchedulerMode::default(),
+            quarantine_after: Self::DEFAULT_QUARANTINE_AFTER,
+            observer: None,
+        }
     }
 }
 
 impl<'a, M: SystemManipulator> Scheduler<'a, M> {
+    /// Default poison-streak threshold for quarantine: three
+    /// consecutive panic-killed rounds mark a session as crash-looping.
+    pub const DEFAULT_QUARANTINE_AFTER: u32 = 3;
+
     /// Empty scheduler in the default (pipelined) mode.
     pub fn new() -> Self {
         Self::default()
@@ -158,7 +246,21 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
 
     /// Empty scheduler with an explicit [`SchedulerMode`].
     pub fn with_mode(mode: SchedulerMode) -> Self {
-        Scheduler { slots: Vec::new(), mode }
+        Scheduler { mode, ..Self::default() }
+    }
+
+    /// Set how many consecutive poisoned rounds quarantine a session
+    /// (clamped to >= 1).
+    pub fn set_quarantine_after(&mut self, rounds: u32) {
+        self.quarantine_after = rounds.max(1);
+    }
+
+    /// Install a round-boundary observer: called with the slot index
+    /// and a [`RoundEvent`] for every absorbed staged round, on the
+    /// scheduler thread, in each session's round order. The checkpoint
+    /// layer journals these to disk for crash recovery.
+    pub fn set_round_observer(&mut self, observer: impl FnMut(usize, RoundEvent<'_>) + 'a) {
+        self.observer = Some(Box::new(observer));
     }
 
     /// Add a session and the manipulator it tunes. Returns the slot
@@ -169,7 +271,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
     pub fn add(&mut self, mut session: TuningSession<'a>, sut: M) -> usize {
         session.set_cost_estimate(sut.est_test_cost());
         session.observe_sim_seconds(sut.sim_seconds());
-        self.slots.push(Slot { session, sut, live: true });
+        self.slots.push(Slot { session, sut, live: true, poison_streak: 0 });
         self.slots.len() - 1
     }
 
@@ -254,7 +356,10 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                         // result would leave its lane inflight forever
                         // (the old single-worker pipeline failed fast by
                         // closing the channel; here we fail the pool's
-                        // rounds instead and keep the fleet going)
+                        // rounds instead and keep the fleet going).
+                        // execute_pool fences each engine group with its
+                        // own catch_unwind, so this backstop only fires
+                        // if a panic escapes that per-group fence
                         let results =
                             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                                 execute_pool(&pool)
@@ -264,8 +369,12 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                                     .iter()
                                     .map(|round| vec![Vec::new(); round.requests.len()])
                                     .collect();
-                                let failed: Vec<Option<String>> =
-                                    vec![Some("execute worker panicked".into()); pool.len()];
+                                let failed: Vec<Option<RoundFailure>> = vec![
+                                    Some(RoundFailure::Poisoned(
+                                        "execute worker panicked".into()
+                                    ));
+                                    pool.len()
+                                ];
                                 (member, failed)
                             });
                         if res_tx.send((lane, pool, results)).is_err() {
@@ -337,7 +446,15 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                 Round::Baseline => {
                     did_work = true;
                     let unit = slot.sut.current_unit().to_vec();
-                    let outcome = slot.sut.run_test();
+                    // baselines run on the scheduler thread, so a
+                    // panicking execute here must be fenced per session
+                    // or it would tear down the whole fleet
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        slot.sut.run_test()
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(ActsError::Xla("execute panicked during the baseline".into()))
+                    });
                     // clock first: a failed attempt's exhaustion check
                     // inside absorb_baseline must see the time this
                     // very attempt consumed, not one attempt stale
@@ -354,6 +471,9 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                         // manipulators, or a round of pure failures)
                         let results =
                             staged.resolve_pending_with(|| unreachable!("no pending rows"));
+                        if let Some(obs) = self.observer.as_mut() {
+                            obs(i, RoundEvent::Executed(&[]));
+                        }
                         slot.session.absorb(results);
                         slot.session.observe_sim_seconds(slot.sut.sim_seconds());
                     } else {
@@ -406,20 +526,43 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
     }
 
     /// Demultiplex executed results and absorb them, in pool (= slot)
-    /// order.
+    /// order. Fatal failures abort the round's session (as ever);
+    /// poisoned rounds advance the slot's poison streak and quarantine
+    /// the session once it crosses the threshold; clean rounds reset
+    /// the streak and are journalled to the observer before the
+    /// manipulator consumes them.
     fn absorb_pool(&mut self, pool: Pool, results: PoolResults) {
         let (mut member_perfs, failed) = results;
         for (pi, round) in pool.into_iter().enumerate() {
             let slot = &mut self.slots[round.slot];
-            let results = match &failed[pi] {
-                Some(msg) => round.staged.resolve_pending_with(|| ActsError::Xla(msg.clone())),
+            match &failed[pi] {
+                Some(RoundFailure::Fatal(msg)) => {
+                    let results =
+                        round.staged.resolve_pending_with(|| ActsError::Xla(msg.clone()));
+                    slot.session.absorb(results);
+                }
+                Some(RoundFailure::Poisoned(msg)) => {
+                    slot.poison_streak += 1;
+                    if let Some(obs) = self.observer.as_mut() {
+                        obs(round.slot, RoundEvent::Poisoned(msg));
+                    }
+                    if slot.poison_streak >= self.quarantine_after {
+                        slot.session.quarantine();
+                    } else {
+                        slot.session.absorb_poisoned(msg);
+                    }
+                }
                 None => {
+                    slot.poison_streak = 0;
                     let perfs =
                         slot.sut.combine_member_perfs(std::mem::take(&mut member_perfs[pi]));
-                    slot.sut.collect_results(round.staged, perfs)
+                    if let Some(obs) = self.observer.as_mut() {
+                        obs(round.slot, RoundEvent::Executed(&perfs));
+                    }
+                    let results = slot.sut.collect_results(round.staged, perfs);
+                    slot.session.absorb(results);
                 }
-            };
-            slot.session.absorb(results);
+            }
             slot.session.observe_sim_seconds(slot.sut.sim_seconds());
         }
     }
@@ -479,7 +622,7 @@ fn partition_by_cost_n(costs: &[f64], lanes: usize) -> Vec<Vec<usize>> {
 fn execute_pool(pool: &Pool) -> PoolResults {
     let mut member_perfs: Vec<Vec<Vec<Perf>>> =
         pool.iter().map(|round| vec![Vec::new(); round.requests.len()]).collect();
-    let mut failed: Vec<Option<String>> = vec![None; pool.len()];
+    let mut failed: Vec<Option<RoundFailure>> = vec![None; pool.len()];
     let flat: Vec<(usize, usize)> = pool
         .iter()
         .enumerate()
@@ -499,19 +642,33 @@ fn execute_pool(pool: &Pool) -> PoolResults {
                 EvalRequest { prepared: &r.prepared, configs: &r.configs }
             })
             .collect();
-        match engine.evaluate_coalesced(&evals) {
-            Ok(outs) => {
+        // fence each engine group: a panicking execute poisons only the
+        // rounds that shared it, while the pool's other groups run on
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.evaluate_coalesced(&evals)
+        }));
+        match result {
+            Ok(Ok(outs)) => {
                 for (&(pi, ri), out) in items.iter().zip(outs) {
                     member_perfs[pi][ri] = out;
                 }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 // the engine died under this group: every session
                 // that contributed a request aborts its round, the
                 // other groups are unaffected
                 let msg = format!("batched evaluation failed: {e}");
                 for &(pi, _) in &items {
-                    failed[pi] = Some(msg.clone());
+                    failed[pi] = Some(RoundFailure::Fatal(msg.clone()));
+                }
+            }
+            Err(_) => {
+                // the execute panicked: the group's rounds are poisoned
+                // (failed rows, quarantine streak), never fatal
+                for &(pi, _) in &items {
+                    failed[pi] = Some(RoundFailure::Poisoned(
+                        "execute worker panicked mid-execute".into(),
+                    ));
                 }
             }
         }
@@ -521,7 +678,7 @@ fn execute_pool(pool: &Pool) -> PoolResults {
 
 #[cfg(test)]
 mod tests {
-    use super::{default_lanes, partition_by_cost_n};
+    use super::{default_lanes, parse_lanes, partition_by_cost_n};
 
     fn load(costs: &[f64], group: &[usize]) -> f64 {
         group.iter().map(|&i| costs[i]).sum()
@@ -611,6 +768,17 @@ mod tests {
         // ACTS_LANES is unset in the test environment
         if std::env::var("ACTS_LANES").is_err() {
             assert_eq!(default_lanes(), 2);
+        }
+    }
+
+    #[test]
+    fn lane_spellings_parse_or_name_the_variable() {
+        assert_eq!(parse_lanes("4").unwrap(), 4);
+        assert_eq!(parse_lanes(" 1 ").unwrap(), 1);
+        for bad in ["0", "-2", "two", "", "1.5"] {
+            let err = parse_lanes(bad).unwrap_err().to_string();
+            assert!(err.contains("ACTS_LANES"), "{bad}: {err}");
+            assert!(err.contains("integer >= 1"), "{bad}: {err}");
         }
     }
 }

@@ -318,6 +318,39 @@ impl<'a> TuningSession<'a> {
         }
     }
 
+    /// Fold in a round whose execute was poisoned (its worker panicked
+    /// mid-execute): every proposal is treated as a failed staged test
+    /// — budget charged, told to the optimizer at zero — exactly like
+    /// [`TuningSession::absorb`]'s `TestFailed` path, except the
+    /// consecutive-failure cap is NOT advanced. Poisoned rounds are an
+    /// infrastructure fault, not evidence about the configurations, so
+    /// they must race the scheduler's quarantine streak, not the
+    /// session's failure cap (a single poisoned 16-row round would
+    /// otherwise trip the cap instantly).
+    pub fn absorb_poisoned(&mut self, _msg: &str) {
+        let proposals = self.in_flight.take().expect("absorb_poisoned without a round in flight");
+        let mut told_units: Vec<Vec<f64>> = Vec::with_capacity(proposals.len());
+        let mut told_values: Vec<f64> = Vec::with_capacity(proposals.len());
+        for proposal in &proposals {
+            let staged_unit = self.space.snap(proposal);
+            self.ledger.charge_test(self.cost_estimate);
+            self.failures += 1;
+            told_values.push(0.0);
+            told_units.push(staged_unit);
+        }
+        self.opt.tell_batch(&told_units, &told_values);
+    }
+
+    /// Quarantine the session: it stops proposing rounds and finishes
+    /// with [`StopCause::Quarantined`], keeping every record absorbed
+    /// so far. Called by the scheduler when the session's executes
+    /// crash-loop; not a fatal error — `into_outcome` still succeeds.
+    pub fn quarantine(&mut self) {
+        self.in_flight = None;
+        self.stop = Some(StopCause::Quarantined);
+        self.state = State::Halted;
+    }
+
     fn halt(&mut self, e: ActsError) {
         self.fatal = Some(e);
         self.state = State::Halted;

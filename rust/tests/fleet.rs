@@ -9,14 +9,15 @@
 //! different bucket shapes, so its per-row f32 drift would feed the
 //! optimizers and legitimately diverge later rounds).
 
-use acts::budget::Budget;
+use acts::budget::{Budget, StopCause};
 use acts::experiment::Lab;
-use acts::manipulator::{SimulationOpts, Target};
-use acts::runtime::BackendKind;
+use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
+use acts::runtime::{BackendKind, ChaosBackend, Engine, FaultPlan, NativeBackend, RetryPolicy};
 use acts::scenario::{Fleet, Matrix, ScenarioSpec};
 use acts::sut;
-use acts::tuner::{self, TuningConfig};
+use acts::tuner::{self, Scheduler, SchedulerMode, TuningConfig, TuningSession};
 use acts::workload::{DeploymentEnv, WorkloadSpec};
+use std::sync::Arc;
 
 const BUDGET: u64 = 9; // baseline + two rounds of 4
 const ROUND: usize = 4;
@@ -255,4 +256,216 @@ fn initial_unit_spec_starts_from_that_configuration() {
     // budget 1 = baseline only, measured at the installed configuration
     assert_eq!(out.records.len(), 1);
     assert_eq!(out.best_unit, snapped, "baseline must run at the installed unit");
+}
+
+/// A lab whose engine runs the native evaluator behind a seeded
+/// chaos-injection wrapper.
+fn chaos_lab(plan: FaultPlan) -> Lab {
+    let chaos = ChaosBackend::new(Box::new(NativeBackend::new()), plan);
+    Lab { engine: Arc::new(Engine::from_backend(Box::new(chaos))) }
+}
+
+#[test]
+fn chaos_fleet_retries_to_bit_identical_results() {
+    // seeded ~10% transient execute faults, absorbed by the engine's
+    // retry policy: zero lost cells, per-cell records bit-identical to
+    // the fault-free run, retry counters reproducible for a fixed
+    // seed. Chaos seed 7 is load-bearing: its plan faults execute
+    // index 0 (so retries >= 1 whatever the execute count) and never
+    // faults 4 consecutive indices within the first 400 (so 4 attempts
+    // always succeed) — checked against the xoshiro256++ reference.
+    let matrix = || Matrix {
+        suts: vec!["mysql".into(), "tomcat".into()],
+        optimizers: vec!["rrs".into()],
+        seeds: vec![41, 42],
+        base: TuningConfig {
+            budget: Budget::tests(BUDGET),
+            round_size: ROUND,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    // sequential mode: one execute at a time in one deterministic
+    // order, so the plan's per-index decisions land identically on
+    // every run (pipelined workers would race for execute indices)
+    let clean =
+        Fleet::compile_with_mode(&native_lab(), matrix().expand().unwrap(), SchedulerMode::Sequential)
+            .unwrap()
+            .run();
+    let chaos_run = || {
+        let lab = chaos_lab(FaultPlan::transient(7, 0.1));
+        lab.engine
+            .set_retry_policy(Some(RetryPolicy { max_attempts: 4, ..RetryPolicy::default() }));
+        Fleet::compile_with_mode(&lab, matrix().expand().unwrap(), SchedulerMode::Sequential)
+            .unwrap()
+            .run()
+    };
+    let a = chaos_run();
+    let b = chaos_run();
+    for (cell, clean_cell) in a.cells.iter().zip(&clean.cells) {
+        let out = cell
+            .outcome
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{}: cell lost under chaos: {e}", cell.label));
+        let clean_out = clean_cell.outcome.as_ref().unwrap();
+        assert_eq!(out.records, clean_out.records, "{}: absorbed faults must be invisible", cell.label);
+        assert_eq!(out.sim_seconds, clean_out.sim_seconds, "{}", cell.label);
+        assert_eq!(out.stopped, clean_out.stopped, "{}", cell.label);
+    }
+    assert!(a.coalescing.retries >= 1, "the drill injected nothing");
+    assert_eq!(a.coalescing.deadline_kills, 0);
+    assert_eq!(
+        (a.coalescing.attempts, a.coalescing.retries),
+        (b.coalescing.attempts, b.coalescing.retries),
+        "same seed, same faults, same counters"
+    );
+}
+
+#[test]
+fn panicking_execute_quarantines_its_session_across_all_modes() {
+    // one session's engine panics on every post-baseline execute; in
+    // every scheduler mode the victim must be quarantined after 3
+    // poisoned rounds while its fleet-mates finish bit-identical to
+    // running alone
+    let clean = native_lab();
+    let deploy = |lab: &Lab, seed: u64| {
+        lab.deploy(
+            Target::Single(sut::mysql()),
+            WorkloadSpec::zipfian_read_write(),
+            DeploymentEnv::standalone(),
+            SimulationOpts::default(),
+            seed,
+        )
+    };
+    let cfg = |seed: u64| TuningConfig {
+        budget: Budget::tests(17), // baseline + 4 rounds: quarantine (at 3) strikes first
+        round_size: ROUND,
+        seed,
+        ..Default::default()
+    };
+    let solo: Vec<_> = [31u64, 32]
+        .iter()
+        .map(|&s| {
+            let mut sut = deploy(&clean, s);
+            tuner::tune_batched(&mut sut, &cfg(s)).unwrap()
+        })
+        .collect();
+    for mode in [
+        SchedulerMode::Sequential,
+        SchedulerMode::Pipelined { lanes: 1 },
+        SchedulerMode::Pipelined { lanes: 2 },
+        SchedulerMode::Pipelined { lanes: 4 },
+        SchedulerMode::Pipelined { lanes: 8 },
+    ] {
+        // fresh victim engine per mode: execute 0 (the baseline) is
+        // clean, every later execute panics mid-call
+        let victim_lab = chaos_lab(FaultPlan { panic_after: Some(1), ..FaultPlan::seeded(1) });
+        let mut scheduler = Scheduler::with_mode(mode);
+        let vsut = deploy(&victim_lab, 30);
+        let vsession = TuningSession::from_registry(vsut.space().clone(), &cfg(30)).unwrap();
+        scheduler.add(vsession, vsut);
+        for &s in &[31u64, 32] {
+            let sut = deploy(&clean, s);
+            let session = TuningSession::from_registry(sut.space().clone(), &cfg(s)).unwrap();
+            scheduler.add(session, sut);
+        }
+        let outcomes = scheduler.run();
+        let victim = outcomes[0].as_ref().unwrap_or_else(|e| panic!("{mode:?}: {e}"));
+        assert_eq!(victim.stopped, StopCause::Quarantined, "{mode:?}");
+        assert_eq!(victim.stopped.to_string(), "quarantined");
+        assert_eq!(victim.records.len(), 1, "{mode:?}: only the baseline measured");
+        assert_eq!(victim.failures, 2 * ROUND as u64, "{mode:?}: 2 poisoned rounds absorbed");
+        for (out, solo) in outcomes[1..].iter().zip(&solo) {
+            let out = out.as_ref().unwrap();
+            assert_eq!(out.records, solo.records, "{mode:?}: survivor records diverged");
+            assert_eq!(out.tests_used, solo.tests_used, "{mode:?}");
+            assert_eq!(out.sim_seconds, solo.sim_seconds, "{mode:?}");
+            assert_eq!(out.stopped, solo.stopped, "{mode:?}");
+        }
+    }
+}
+
+#[test]
+fn checkpoint_resume_replays_to_bit_identical_records() {
+    let matrix = || Matrix {
+        suts: vec!["mysql".into(), "tomcat".into()],
+        optimizers: vec!["rrs".into()],
+        seeds: vec![51, 52],
+        base: TuningConfig {
+            budget: Budget::tests(13), // baseline + 3 rounds -> 3 journal lines per cell
+            round_size: ROUND,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let lab = native_lab();
+    let mode = SchedulerMode::Pipelined { lanes: 2 };
+    let tmp = std::env::temp_dir().join(format!("acts-fleet-ckpt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let full = tmp.join("full");
+    let cut = tmp.join("cut");
+
+    // reference: no checkpointing at all
+    let reference = Fleet::compile_with_mode(&lab, matrix().expand().unwrap(), mode).unwrap().run();
+
+    // journalled run: checkpointing must not perturb a single bit
+    let journalled =
+        Fleet::compile_with_checkpoint(&lab, matrix().expand().unwrap(), mode, &full)
+            .unwrap()
+            .run();
+    let assert_matches = |report: &acts::scenario::FleetReport, what: &str| {
+        assert_eq!(report.cells.len(), reference.cells.len());
+        for (cell, reference_cell) in report.cells.iter().zip(&reference.cells) {
+            let out = cell.outcome.as_ref().unwrap_or_else(|e| panic!("{}: {e}", cell.label));
+            let want = reference_cell.outcome.as_ref().unwrap();
+            assert_eq!(out.records, want.records, "{what}: {} records diverged", cell.label);
+            assert_eq!(out.tests_used, want.tests_used, "{what}: {}", cell.label);
+            assert_eq!(out.best_unit, want.best_unit, "{what}: {}", cell.label);
+            assert_eq!(out.sim_seconds, want.sim_seconds, "{what}: {}", cell.label);
+            assert_eq!(out.stopped, want.stopped, "{what}: {}", cell.label);
+        }
+    };
+    assert_matches(&journalled, "journalled run");
+
+    // simulate a kill after the first absorbed round: copy each cell's
+    // journal truncated to its first line into a fresh directory
+    std::fs::create_dir_all(&cut).unwrap();
+    let mut journals = 0;
+    for entry in std::fs::read_dir(&full).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("jsonl") {
+            continue;
+        }
+        journals += 1;
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3, "{}: one line per staged round", path.display());
+        let first = text.lines().next().unwrap();
+        std::fs::write(cut.join(path.file_name().unwrap()), format!("{first}\n")).unwrap();
+    }
+    assert_eq!(journals, 4, "one journal per cell");
+
+    // resume from the truncated journals: round 1 replays, the rest
+    // runs live — and the final records must not care
+    let resumed = Fleet::compile_with_checkpoint(&lab, matrix().expand().unwrap(), mode, &cut)
+        .unwrap()
+        .run();
+    assert_matches(&resumed, "resumed run");
+    // the live continuation extended the truncated journals back to
+    // one line per round
+    for entry in std::fs::read_dir(&cut).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) == Some("jsonl") {
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(text.lines().count(), 3, "{}", path.display());
+        }
+    }
+
+    // resume from complete journals: everything replays, nothing runs
+    // live, same records
+    let replayed = Fleet::compile_with_checkpoint(&lab, matrix().expand().unwrap(), mode, &full)
+        .unwrap()
+        .run();
+    assert_matches(&replayed, "fully replayed run");
+
+    let _ = std::fs::remove_dir_all(&tmp);
 }
