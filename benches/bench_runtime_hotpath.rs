@@ -22,7 +22,14 @@
 //!   pipelined scheduler at 2/4/8 lanes (staging overlaps execution on
 //!   a shared worker pool) — with the 2-lane
 //!   ≥1.3x-over-sequential-scheduler acceptance gate and lane-scaling
-//!   rows recorded in the json.
+//!   rows recorded in the json;
+//! * streaming vs the round barrier: a *mixed* 8-session fleet (half
+//!   round-32, half round-4 — the shape where barriers bite) through
+//!   the pipelined scheduler vs the continuously-draining streaming
+//!   scheduler, gated ≥1.3x streaming-over-pipelined, plus
+//!   in-flight concurrency scaling at 1/2/4/8 executor workers and
+//!   the drainer's flush-cause/peak-in-flight telemetry, all in the
+//!   json.
 //!
 //! Runs on whatever backend `Lab::new` resolves (PJRT with artifacts,
 //! the native CPU backend anywhere else), so the perf trajectory is
@@ -179,6 +186,9 @@ fn main() {
     // opts so the staging/absorb half carries its production cost.
     let n_sessions: u64 = 8;
     let sched_budget: u64 = 129; // baseline + 4 rounds of 32 per session
+    let streaming_flushes_by_size;
+    let streaming_flushes_by_timeout;
+    let streaming_peak_inflight;
     {
         let deploy = |seed| {
             lab.deploy(
@@ -235,6 +245,76 @@ fn main() {
                 },
             );
         }
+
+        // streaming vs the barriered pipeline on a *mixed* fleet:
+        // heterogeneous round sizes (4 sessions of round 32, 4 of
+        // round 4) are where the round barrier actually bites — every
+        // barriered tick the light sessions wait for the heavy rounds
+        // to clear before restaging. The streaming scheduler resubmits
+        // each session the moment its own round absorbs, so the
+        // round-4 sessions cycle through their 32 rounds while the
+        // round-32 executes are still in flight. flush_rows=1 keeps
+        // the drainer latency-free (every round flushes by size,
+        // never by timeout): on the native backend there is almost no
+        // per-call dispatch for bigger flushes to amortise, so this
+        // measures pure barrier removal.
+        let mixed_cfg = |seed: u64| TuningConfig {
+            budget: Budget::tests(sched_budget),
+            seed,
+            round_size: if seed % 2 == 0 { 32 } else { 4 },
+            ..Default::default()
+        };
+        let schedule_mixed = |mode: SchedulerMode| {
+            let mut scheduler = Scheduler::with_mode(mode);
+            for s in 0..n_sessions {
+                let sut = deploy(70 + s);
+                let session =
+                    TuningSession::from_registry(sut.space().clone(), &mixed_cfg(70 + s)).unwrap();
+                scheduler.add(session, sut);
+            }
+            scheduler.run()
+        };
+        let stream_mode = |workers: usize| SchedulerMode::Streaming {
+            flush_rows: 1,
+            flush_timeout: std::time::Duration::from_millis(1),
+            workers,
+        };
+        b.bench_units(
+            format!("{n_sessions} sessions mixed pipelined (4 lanes)"),
+            Some(aggregate),
+            || {
+                black_box(schedule_mixed(SchedulerMode::Pipelined { lanes: 4 }));
+            },
+        );
+        // in-flight concurrency scaling: the same mixed fleet with the
+        // executor pool clamped to 1, 2, 4 and 8 workers — the scaling
+        // trajectory is recorded in the json; the 8-worker row is the
+        // gated streaming headline
+        for w in [1usize, 2, 4, 8] {
+            b.bench_units(
+                format!("{n_sessions} sessions mixed streaming ({w} workers)"),
+                Some(aggregate),
+                || {
+                    black_box(schedule_mixed(stream_mode(w)));
+                },
+            );
+        }
+
+        // one instrumented streaming run for the drainer telemetry:
+        // flush-cause counters are engine deltas around this run; peak
+        // in-flight is a lifetime high-water gauge, so it covers the
+        // scaling rows above too (the deepest pool that ran)
+        let before = engine.stats();
+        let _ = black_box(schedule_mixed(stream_mode(8)));
+        let after = engine.stats();
+        streaming_flushes_by_size = after.flushes_by_size - before.flushes_by_size;
+        streaming_flushes_by_timeout = after.flushes_by_timeout - before.flushes_by_timeout;
+        streaming_peak_inflight = after.peak_inflight;
+        println!(
+            "streaming drainer: {streaming_flushes_by_size} size flushes, \
+             {streaming_flushes_by_timeout} timeout flushes, \
+             peak {streaming_peak_inflight} rounds in flight"
+        );
 
         // one instrumented run per scheduler mode for the coalescing
         // confirmation lines
@@ -311,6 +391,21 @@ fn main() {
     println!("scheduler speedup: {sched_speedup:.1}x (target >= {sched_gate}x)");
     println!("pipelined speedup over sequential scheduler: {pipeline_speedup:.2}x (target >= 1.3x)");
 
+    // the streaming gate: the mixed (round-32 + round-4) fleet through
+    // the continuously-draining queue vs the same fleet behind the
+    // 4-lane round barrier, plus the worker-count scaling trajectory
+    let mixed_pipe = session_rate("sessions mixed pipelined (4 lanes)");
+    let stream_w1 = session_rate("mixed streaming (1 workers)");
+    let stream_w2 = session_rate("mixed streaming (2 workers)");
+    let stream_w4 = session_rate("mixed streaming (4 workers)");
+    let stream_w8 = session_rate("mixed streaming (8 workers)");
+    let streaming_speedup = if mixed_pipe > 0.0 { stream_w8 / mixed_pipe } else { 0.0 };
+    println!(
+        "mixed-fleet aggregate config-evals/s: pipelined(4) {mixed_pipe:.1}, streaming \
+         {stream_w1:.1} / {stream_w2:.1} / {stream_w4:.1} / {stream_w8:.1} at 1/2/4/8 workers"
+    );
+    println!("streaming speedup over pipelined: {streaming_speedup:.2}x (target >= 1.3x)");
+
     // machine-readable dump for cross-PR tracking
     let json = b.json(vec![
         ("platform", Json::Str(engine.platform())),
@@ -327,6 +422,22 @@ fn main() {
             Json::Num(if fleet_pipe > 0.0 { fleet_pipe8 / fleet_pipe } else { 0.0 }),
         ),
         ("retry_overhead_frac", Json::Num(retry_overhead_frac)),
+        ("streaming_speedup_vs_pipelined", Json::Num(streaming_speedup)),
+        (
+            "streaming_workers2_speedup_vs_1",
+            Json::Num(if stream_w1 > 0.0 { stream_w2 / stream_w1 } else { 0.0 }),
+        ),
+        (
+            "streaming_workers4_speedup_vs_1",
+            Json::Num(if stream_w1 > 0.0 { stream_w4 / stream_w1 } else { 0.0 }),
+        ),
+        (
+            "streaming_workers8_speedup_vs_1",
+            Json::Num(if stream_w1 > 0.0 { stream_w8 / stream_w1 } else { 0.0 }),
+        ),
+        ("streaming_flushes_by_size", Json::Num(streaming_flushes_by_size as f64)),
+        ("streaming_flushes_by_timeout", Json::Num(streaming_flushes_by_timeout as f64)),
+        ("streaming_peak_inflight", Json::Num(streaming_peak_inflight as f64)),
     ]);
     let out_path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime_hotpath.json");
@@ -351,5 +462,9 @@ fn main() {
         retry_overhead_frac <= 0.05,
         "fault-free retry-policy overhead {:.2}% above the 5% acceptance gate",
         retry_overhead_frac * 100.0
+    );
+    assert!(
+        streaming_speedup >= 1.3,
+        "streaming speedup {streaming_speedup:.2}x over the pipelined scheduler below the 1.3x acceptance gate"
     );
 }

@@ -18,7 +18,7 @@ use crate::error::Result;
 use crate::manipulator::{SimulationOpts, Target};
 use crate::report::Table;
 use crate::scenario::{Fleet, ScenarioSpec};
-use crate::tuner::{TuningConfig, TuningOutcome};
+use crate::tuner::{SchedulerMode, TuningConfig, TuningOutcome};
 use crate::util::stats::Summary;
 use crate::workload::{DeploymentEnv, WorkloadSpec};
 
@@ -92,6 +92,24 @@ pub fn run_seeds(
     cfg: &TuningConfig,
     seeds: &[u64],
 ) -> Result<SeedSweep> {
+    let mode = SchedulerMode::default();
+    run_seeds_with_mode(lab, target, workload, deployment, opts, cfg, seeds, mode)
+}
+
+/// As [`run_seeds`], with an explicit [`SchedulerMode`] (`acts tune
+/// --sessions N --sched-mode streaming` arrives here); per-seed records
+/// are mode-invariant, only the engine's call pattern changes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_seeds_with_mode(
+    lab: &Lab,
+    target: Target,
+    workload: WorkloadSpec,
+    deployment: DeploymentEnv,
+    opts: SimulationOpts,
+    cfg: &TuningConfig,
+    seeds: &[u64],
+    mode: SchedulerMode,
+) -> Result<SeedSweep> {
     let specs: Vec<ScenarioSpec> = seeds
         .iter()
         .map(|&seed| {
@@ -100,7 +118,7 @@ pub fn run_seeds(
                 .with_sim(opts.clone())
         })
         .collect();
-    let report = Fleet::compile(lab, specs)?.run();
+    let report = Fleet::compile_with_mode(lab, specs, mode)?.run();
     let mut paired = Vec::with_capacity(seeds.len());
     for (&seed, cell) in seeds.iter().zip(report.cells) {
         paired.push((seed, cell.outcome?));

@@ -62,6 +62,21 @@ fn lanes_arg(args: &Args) -> usize {
     args.get_usize("lanes", tuner::default_lanes()).max(1)
 }
 
+/// Resolve the `--sched-mode` flag (default: `ACTS_SCHED_MODE`, then
+/// the N-lane pipeline at the resolved lane count). The flag accepts
+/// the same spellings as the environment variable.
+fn sched_mode_arg(args: &Args, lanes: usize) -> acts::Result<SchedulerMode> {
+    match args.get_opt("sched-mode") {
+        Some(s) => tuner::parse_sched_mode(s).map_err(|_| {
+            acts::ActsError::InvalidArg(format!(
+                "--sched-mode `{s}` is not a recognised scheduler mode \
+                 (accepted: sequential, pipelined, pipelined:<lanes>, streaming)"
+            ))
+        }),
+        None => Ok(tuner::sched_mode_from_env()?.unwrap_or(SchedulerMode::Pipelined { lanes })),
+    }
+}
+
 /// Build the fleet's lab: `--chaos-transient-p` wraps the native
 /// evaluator in a seeded [`ChaosBackend`] (fault-injection drills);
 /// `--retry-attempts` installs an engine [`RetryPolicy`] (deterministic
@@ -135,6 +150,7 @@ fn run(args: &Args) -> acts::Result<()> {
     // surprising a whole campaign later
     BackendKind::from_env()?;
     tuner::lanes_from_env()?;
+    tuner::sched_mode_from_env()?;
     acts::runtime::native::native_threads_from_env()?;
     match args.command.as_str() {
         "" | "help" => {
@@ -216,6 +232,10 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
     // the multi-session scheduler, coalescing their rounds into shared
     // bucket executes on the one engine
     let sessions = args.get_usize("sessions", 1);
+    // resolved up front so a malformed --sched-mode fails fast even in
+    // the single-session path (where the mode is moot: one session
+    // degenerates to the sequential driver in every mode)
+    let mode = sched_mode_arg(args, tuner::default_lanes())?;
     if sessions > 1 {
         if args.has("curve") {
             eprintln!("acts: note: --curve prints a single session's progress; ignored with --sessions (use --seed to replay one)");
@@ -223,7 +243,7 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
         let space = target.space().clone();
         let seeds: Vec<u64> = (0..sessions as u64).map(|i| seed + i).collect();
         let before = lab.engine.stats();
-        let sweep = experiment::sweep::run_seeds(
+        let sweep = experiment::sweep::run_seeds_with_mode(
             &lab,
             target,
             workload.clone(),
@@ -231,6 +251,7 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
             SimulationOpts::default(),
             &cfg,
             &seeds,
+            mode,
         )?;
         let after = lab.engine.stats();
         print!(
@@ -318,8 +339,9 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         base: base.clone(),
         sim: SimulationOpts::default(),
     };
+    let mode = sched_mode_arg(args, lanes)?;
     println!(
-        "fleet: {} cells ({} suts x {} workloads x {} deployments x {} optimizers x {} budgets x {} seeds), {} lanes",
+        "fleet: {} cells ({} suts x {} workloads x {} deployments x {} optimizers x {} budgets x {} seeds), {}",
         matrix.cells(),
         matrix.suts.len(),
         matrix.workloads.len(),
@@ -327,11 +349,10 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         matrix.optimizers.len(),
         matrix.budgets.len().max(1),
         matrix.seeds.len(),
-        lanes
+        mode.describe()
     );
     let specs = matrix.expand()?;
     let lab = fleet_lab(args, &base)?;
-    let mode = SchedulerMode::Pipelined { lanes };
     let fleet = match args.get_opt("checkpoint-dir") {
         Some(dir) => {
             println!("checkpointing rounds under {dir} (rerun with the same flags to resume)");
@@ -372,6 +393,10 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
     println!(
         "engine faults: {} attempts ({} retries, {} deadline kills)",
         c.attempts, c.retries, c.deadline_kills
+    );
+    println!(
+        "engine streaming: {} size flushes, {} timeout flushes, peak {} rounds in flight",
+        c.flushes_by_size, c.flushes_by_timeout, c.peak_inflight
     );
     if let Some(path) = args.get_opt("json") {
         std::fs::write(path, report.json().to_string())
@@ -545,6 +570,9 @@ COMMANDS:
                    seed..seed+N) through the pipelined multi-session
                    scheduler, coalescing their rounds into shared engine
                    executes while the next tick stages
+                   --sched-mode <m>   (ACTS_SCHED_MODE|pipelined)
+                                      sequential | pipelined |
+                                      pipelined:<lanes> | streaming
                    --curve            print per-test progress
                    --config           print the best configuration found
     fleet        expand a scenario matrix (cartesian axes) and run every
@@ -561,6 +589,9 @@ COMMANDS:
                    --budget <b>          (40)           per cell (when no --budgets)
                    --round-size <n>      (8)            per cell
                    --lanes <n>           (ACTS_LANES|2) pipeline lanes
+                   --sched-mode <m>      (ACTS_SCHED_MODE|pipelined)
+                                         sequential | pipelined |
+                                         pipelined:<lanes> | streaming
                    --backend <b>         (auto)
                    --json <file>         dump the fleet report as JSON
                    --checkpoint-dir <d>  journal every round to <d>; rerun
@@ -602,11 +633,16 @@ prefers pjrt and falls back to native.
 
 Scheduler: sessions run on an N-lane work-stealing pipeline (lanes via
 --lanes / ACTS_LANES, default 2); per-session results are bit-identical
-for any lane count. A panicking execute poisons only the rounds sharing
-that execute; a session poisoned 3 rounds running is quarantined
-(`stopped by quarantined`) while its fleet-mates continue undisturbed.
+for any lane count. `--sched-mode streaming` (or ACTS_SCHED_MODE)
+replaces the lane barrier with a continuously-draining submission
+queue: staged rounds flush to the engine on batch-size-or-timeout and
+every session resubmits the instant its round absorbs — same
+per-session records, more executes in flight. A panicking execute
+poisons only the rounds sharing that execute; a session poisoned 3
+rounds running is quarantined (`stopped by quarantined`) while its
+fleet-mates continue undisturbed.
 
-Environment: malformed ACTS_BACKEND / ACTS_LANES / ACTS_NATIVE_THREADS
-values fail at startup with an error naming the variable and its
-accepted values.
+Environment: malformed ACTS_BACKEND / ACTS_LANES / ACTS_SCHED_MODE /
+ACTS_NATIVE_THREADS values fail at startup with an error naming the
+variable and its accepted values.
 ";

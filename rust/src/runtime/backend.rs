@@ -56,13 +56,39 @@ pub struct Execution {
     pub rows_executed: u64,
 }
 
+/// A submitted-but-not-yet-synced execute: the handle returned by
+/// [`ExecBackend::submit`]. Dropping it without calling
+/// [`PendingExecution::wait`] abandons the work (backends must not
+/// leak device state on drop).
+///
+/// `Send` is a trait obligation: the streaming scheduler submits from
+/// an executor worker and may wait from another, so the handle crosses
+/// threads between submit and sync.
+pub trait PendingExecution: Send {
+    /// Block until the execute's outputs are host-visible and return
+    /// them. Consumes the handle: an execute syncs exactly once.
+    fn wait(self: Box<Self>) -> Result<Execution>;
+}
+
+/// The trivial pending handle the default [`ExecBackend::submit`]
+/// returns: the execute already ran synchronously at submit time, so
+/// `wait` just hands back the stored result.
+struct ReadyExecution(Result<Execution>);
+
+impl PendingExecution for ReadyExecution {
+    fn wait(self: Box<Self>) -> Result<Execution> {
+        self.0
+    }
+}
+
 /// An execution substrate for the golden performance surface.
 ///
 /// `Send + Sync` is a trait obligation: backends are shared across
 /// session threads behind one `Arc<Engine>` (the scheduler's pipelined
 /// tick executes on a worker thread while staging continues on the
-/// scheduler thread), so every implementation must be safe to call
-/// concurrently from multiple threads through `&self`.
+/// scheduler thread, and the streaming mode keeps several submitted
+/// executes in flight at once), so every implementation must be safe
+/// to call concurrently from multiple threads through `&self`.
 pub trait ExecBackend: Send + Sync {
     /// Registry name (`"pjrt"`, `"native"`).
     fn name(&self) -> &'static str;
@@ -85,6 +111,30 @@ pub trait ExecBackend: Send + Sync {
     /// this backend prepared. Fails if `prepared` came from a different
     /// backend.
     fn execute(&self, prepared: &dyn PreparedData, rows: &[&[f32]]) -> Result<Execution>;
+
+    /// Asynchronous submission: issue the execute and return a handle
+    /// whose [`PendingExecution::wait`] syncs the outputs. The point is
+    /// overlap — a backend whose dispatch is async underneath (PJRT:
+    /// device execution proceeds while the host does other work, output
+    /// sync deferred to `wait`) can have several submitted executes in
+    /// flight at once.
+    ///
+    /// The handle borrows `prepared` (and the backend), so the caller
+    /// provably keeps the device-resident constants alive until the
+    /// outputs are synced — an in-flight execute reads them. `rows` are
+    /// consumed at submit time and may be dropped immediately after.
+    ///
+    /// The default impl runs today's synchronous [`ExecBackend::execute`]
+    /// at submit time and returns an already-ready handle, so purely
+    /// synchronous backends (native, chaos) keep their exact semantics
+    /// — including fault-injection order — with no changes.
+    fn submit<'a>(
+        &'a self,
+        prepared: &'a dyn PreparedData,
+        rows: &[&[f32]],
+    ) -> Result<Box<dyn PendingExecution + 'a>> {
+        Ok(Box::new(ReadyExecution(self.execute(prepared, rows))))
+    }
 }
 
 /// Which execution backend to use (see the module docs).

@@ -33,7 +33,7 @@
 //! 5. **latency** — the execute succeeds after an injected stall,
 //!    exercising backoff/deadline interplay without failing anything.
 
-use super::backend::{ExecBackend, Execution, PreparedData};
+use super::backend::{ExecBackend, Execution, PendingExecution, PreparedData};
 use super::engine::SurfaceParams;
 use crate::error::{ActsError, Result};
 use crate::util::rng::Rng64;
@@ -262,6 +262,49 @@ impl ExecBackend for ChaosBackend {
             }
         }
     }
+
+    /// Async submission keeps the same fault semantics as `execute`:
+    /// the call is numbered and the fault injected **at submit time**
+    /// (indices stay a pure function of submission order, so chaos
+    /// drills are as repeatable under streaming as under the barriered
+    /// modes); only a clean or latency-stalled call reaches the inner
+    /// backend's own `submit`, preserving its overlap.
+    fn submit<'a>(
+        &'a self,
+        prepared: &'a dyn PreparedData,
+        rows: &[&[f32]],
+    ) -> Result<Box<dyn PendingExecution + 'a>> {
+        let index = self.executes.fetch_add(1, Ordering::Relaxed);
+        match self.plan.fault_for(index) {
+            Fault::None => self.inner.submit(prepared, rows),
+            Fault::Panic => {
+                self.panics.fetch_add(1, Ordering::Relaxed);
+                panic!("chaos: injected panic at execute {index}");
+            }
+            Fault::Hang => {
+                self.hangs.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.plan.hang);
+                Err(ActsError::Xla(format!("chaos: injected hang at execute {index}")))
+            }
+            Fault::Persistent => {
+                self.persistent.fetch_add(1, Ordering::Relaxed);
+                Err(ActsError::Xla(format!(
+                    "chaos: injected persistent fault at execute {index}"
+                )))
+            }
+            Fault::Transient => {
+                self.transient.fetch_add(1, Ordering::Relaxed);
+                Err(ActsError::Xla(format!(
+                    "chaos: injected transient fault at execute {index}"
+                )))
+            }
+            Fault::Latency => {
+                self.latency.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.plan.latency);
+                self.inner.submit(prepared, rows)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -338,5 +381,34 @@ mod tests {
         assert!(err.to_string().contains("transient"), "{err}");
         assert_eq!(backend.stats().executes, 1);
         assert_eq!(backend.stats().transient, 1);
+    }
+
+    #[test]
+    fn chaos_submit_numbers_and_injects_exactly_like_execute() {
+        let plan = FaultPlan::transient(11, 1.0); // every call fails
+        let backend = ChaosBackend::new(Box::new(NativeBackend::new()), plan);
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(2);
+        let prepared = backend.prepare(&params, &w, &e).unwrap();
+        let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+        // submit injects at submit time (before any wait) and advances
+        // the same execute counter the sync path uses
+        let err = backend.submit(prepared.as_ref(), &rows).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("transient fault at execute 0"), "{err}");
+        assert_eq!(backend.stats().executes, 1);
+        assert_eq!(backend.stats().transient, 1);
+    }
+
+    #[test]
+    fn chaos_submit_passes_clean_calls_through_bitwise() {
+        let backend =
+            ChaosBackend::new(Box::new(NativeBackend::new()), FaultPlan::seeded(1));
+        let clean = NativeBackend::new();
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(4);
+        let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+        let chaos_prep = backend.prepare(&params, &w, &e).unwrap();
+        let clean_prep = clean.prepare(&params, &w, &e).unwrap();
+        let want = clean.execute(clean_prep.as_ref(), &rows).unwrap();
+        let got = backend.submit(chaos_prep.as_ref(), &rows).unwrap().wait().unwrap();
+        assert_eq!(got.perfs, want.perfs, "a quiet chaos submit must be invisible");
     }
 }

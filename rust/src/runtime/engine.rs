@@ -29,7 +29,7 @@
 //! `Arc<Engine>` and the scheduler's pipelined tick executes on a
 //! worker thread while staging continues on the scheduler thread.
 
-use super::backend::{BackendKind, ExecBackend, Execution, PreparedData};
+use super::backend::{BackendKind, ExecBackend, Execution, PendingExecution, PreparedData};
 use super::shapes::{self, D_PAD, E_DIM, W_DIM};
 use crate::error::{ActsError, Result};
 use crate::util::rng::Rng64;
@@ -196,6 +196,20 @@ pub struct EngineStats {
     /// Executes killed by the [`RetryPolicy`] per-call deadline instead
     /// of being allowed to hang the calling lane.
     pub deadline_kills: u64,
+    /// Streaming-mode submission flushes triggered by the batch-size
+    /// threshold (the queue filled a full flush before the timeout).
+    pub flushes_by_size: u64,
+    /// Streaming-mode submission flushes triggered by the flush timeout
+    /// (a partial batch aged out — latency bound, not width bound).
+    pub flushes_by_timeout: u64,
+    /// Peak number of submitted-but-not-absorbed rounds observed at
+    /// once (a high-water gauge, not a delta: streaming concurrency
+    /// depth). Barriered modes leave it at 0.
+    pub peak_inflight: u64,
+    /// Deadline-killed helper threads whose abandoned execute is still
+    /// running at the time of the [`Engine::stats`] read (a live gauge,
+    /// not a cumulative counter). Bounded by the engine's orphan cap.
+    pub live_orphans: u64,
 }
 
 /// Retry/deadline policy for backend executes (see
@@ -279,6 +293,15 @@ pub struct Engine {
     retries: AtomicU64,
     /// Executes killed by the per-call deadline.
     deadline_kills: AtomicU64,
+    /// Streaming flushes by cause (size threshold vs timeout).
+    flushes_by_size: AtomicU64,
+    flushes_by_timeout: AtomicU64,
+    /// High-water mark of concurrently in-flight submitted rounds.
+    peak_inflight: AtomicU64,
+    /// Deadline-killed helper threads abandoned mid-execute: kept so
+    /// finished ones can be reaped (joined) instead of leaking, and so
+    /// the live count can be capped and reported.
+    orphans: Mutex<Vec<std::thread::JoinHandle<()>>>,
     /// Retry/deadline policy for backend executes (None = fail fast,
     /// the historical behaviour).
     retry: RwLock<Option<RetryPolicy>>,
@@ -300,6 +323,10 @@ impl Engine {
             attempts: AtomicU64::new(0),
             retries: AtomicU64::new(0),
             deadline_kills: AtomicU64::new(0),
+            flushes_by_size: AtomicU64::new(0),
+            flushes_by_timeout: AtomicU64::new(0),
+            peak_inflight: AtomicU64::new(0),
+            orphans: Mutex::new(Vec::new()),
             retry: RwLock::new(None),
             prepare_cache: Mutex::new(HashMap::new()),
         }
@@ -358,7 +385,34 @@ impl Engine {
             attempts: self.attempts.load(Ordering::Relaxed),
             retries: self.retries.load(Ordering::Relaxed),
             deadline_kills: self.deadline_kills.load(Ordering::Relaxed),
+            flushes_by_size: self.flushes_by_size.load(Ordering::Relaxed),
+            flushes_by_timeout: self.flushes_by_timeout.load(Ordering::Relaxed),
+            peak_inflight: self.peak_inflight.load(Ordering::Relaxed),
+            live_orphans: self
+                .orphans
+                .lock()
+                .expect("orphan registry")
+                .iter()
+                .filter(|h| !h.is_finished())
+                .count() as u64,
         }
+    }
+
+    /// Record one streaming-mode submission flush and its cause (the
+    /// batch-size threshold vs the flush timeout). Called by the
+    /// streaming scheduler's drainer for each engine appearing in a
+    /// flushed batch.
+    pub(crate) fn note_flush(&self, by_size: bool) {
+        if by_size {
+            self.flushes_by_size.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.flushes_by_timeout.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Fold a momentary in-flight round count into the peak gauge.
+    pub(crate) fn note_inflight(&self, depth: u64) {
+        self.peak_inflight.fetch_max(depth, Ordering::Relaxed);
     }
 
     /// Install (or clear) the retry/deadline policy for every
@@ -498,6 +552,115 @@ impl Engine {
         Ok(out)
     }
 
+    /// As [`Engine::evaluate_coalesced`], but *overlapped*: every
+    /// prepared-group is submitted through the backend's async path
+    /// ([`ExecBackend::submit`]) before any output is synced, so a
+    /// backend whose dispatch is async underneath (PJRT) has all the
+    /// groups' executes in flight at once and pays one output sync per
+    /// group instead of serialising dispatch behind sync. Results,
+    /// telemetry accounting and retry semantics are identical to the
+    /// synchronous path — for backends whose default `submit` wraps
+    /// `execute`, this *is* the synchronous path, group by group.
+    ///
+    /// A [`RetryPolicy`] retries a failed group synchronously after its
+    /// `wait` (same attempt counting, backoff and jitter schedule as
+    /// [`Engine::execute_with_policy`]). A policy with a `deadline`
+    /// falls back to the synchronous path wholesale: the deadline's
+    /// helper-thread bound is incompatible with deferred sync.
+    pub fn evaluate_coalesced_overlapped(
+        &self,
+        requests: &[EvalRequest<'_>],
+    ) -> Result<Vec<Vec<Perf>>> {
+        let policy = self.retry_policy();
+        if policy.is_some_and(|p| p.deadline.is_some()) {
+            return self.evaluate_coalesced(requests);
+        }
+        self.requests.fetch_add(requests.len() as u64, Ordering::Relaxed);
+        let requested: u64 = requests.iter().map(|r| r.configs.len() as u64).sum();
+        self.rows_requested.fetch_add(requested, Ordering::Relaxed);
+        let keys: Vec<usize> =
+            requests.iter().map(|r| r.prepared as *const PreparedCall as usize).collect();
+        let mut out: Vec<Vec<Perf>> = requests.iter().map(|_| Vec::new()).collect();
+        // phase 1: validate and submit every non-empty group
+        let mut in_flight: Vec<(Vec<usize>, Result<Box<dyn PendingExecution + '_>>)> = Vec::new();
+        for group in group_by_key(&keys) {
+            let rows: Vec<&[f32]> = group
+                .iter()
+                .flat_map(|&i| requests[i].configs.iter().map(|c| c.as_slice()))
+                .collect();
+            if rows.is_empty() {
+                continue;
+            }
+            for (i, r) in rows.iter().enumerate() {
+                if r.len() != D_PAD {
+                    return Err(ActsError::InvalidArg(format!(
+                        "config {i} has {} lanes, want {D_PAD}",
+                        r.len()
+                    )));
+                }
+            }
+            self.attempts.fetch_add(1, Ordering::Relaxed);
+            let pending = self.backend.submit(requests[group[0]].prepared.data(), &rows);
+            in_flight.push((group, pending));
+        }
+        // phase 2: sync outputs in submission order; a failed group
+        // retries synchronously (the overlap is already spent)
+        for (group, pending) in in_flight {
+            let first = pending.and_then(|p| p.wait());
+            let execution = match first {
+                Ok(execution) => execution,
+                Err(err) => self.retry_group(&group, requests, policy, err)?,
+            };
+            let rows_n: usize = group.iter().map(|&i| requests[i].configs.len()).sum();
+            debug_assert_eq!(execution.perfs.len(), rows_n, "backend must answer every row");
+            self.calls.fetch_add(execution.execute_calls, Ordering::Relaxed);
+            self.rows.fetch_add(execution.rows_executed, Ordering::Relaxed);
+            let mut offset = 0usize;
+            for &i in &group {
+                let n = requests[i].configs.len();
+                out[i] = execution.perfs[offset..offset + n].to_vec();
+                offset += n;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Synchronous retry tail for one overlapped group whose first
+    /// (submitted) attempt failed: replays the remaining attempts on
+    /// the exact [`Engine::execute_with_policy`] schedule — same
+    /// attempt/retry counting, same seeded backoff jitter.
+    fn retry_group(
+        &self,
+        group: &[usize],
+        requests: &[EvalRequest<'_>],
+        policy: Option<RetryPolicy>,
+        first_err: ActsError,
+    ) -> Result<Execution> {
+        let Some(policy) = policy else { return Err(first_err) };
+        let mut backoff = policy.base_backoff.min(policy.max_backoff);
+        let mut last_err = first_err;
+        for attempt in 1..policy.max_attempts.max(1) {
+            if !backoff.is_zero() {
+                let mut rng = Rng64::new(
+                    policy.jitter_seed ^ ((attempt - 1) as u64).wrapping_mul(0x9E3779B97F4A7C15),
+                );
+                std::thread::sleep(backoff.mul_f64(1.0 + 0.5 * rng.f64()));
+                backoff = (backoff * 2).min(policy.max_backoff);
+            }
+            self.attempts.fetch_add(1, Ordering::Relaxed);
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            let rows: Vec<&[f32]> = group
+                .iter()
+                .flat_map(|&i| requests[i].configs.iter().map(|c| c.as_slice()))
+                .collect();
+            match self.backend.execute(requests[group[0]].prepared.data(), &rows) {
+                Ok(execution) => return Ok(execution),
+                Err(err) => last_err = err,
+            }
+        }
+        Err(last_err)
+    }
+
     /// Shared core of the evaluate paths: validate, hand to the
     /// backend, fold the physical cost into the telemetry.
     fn evaluate_rows(&self, prepared: &PreparedCall, rows: &[&[f32]]) -> Result<Vec<Perf>> {
@@ -559,11 +722,22 @@ impl Engine {
         Err(last_err.expect("at least one attempt ran"))
     }
 
+    /// Most deadline-killed helper threads that may run concurrently
+    /// before the engine refuses to spawn more. A hung backend that
+    /// eats every deadline would otherwise accumulate one live thread
+    /// per killed attempt; at the cap the attempt fails fast (a
+    /// retryable error naming the cap) instead of stacking another.
+    const MAX_LIVE_ORPHANS: usize = 8;
+
     /// One attempt, optionally bounded by a wall-clock deadline. With a
     /// deadline the backend runs on a helper thread holding only `Arc`
     /// handles; on timeout the attempt fails (counted in
-    /// `deadline_kills`) and the thread is abandoned to finish or hang
-    /// on its own — the calling lane moves on either way.
+    /// `deadline_kills`) and the thread is *orphaned* — registered, not
+    /// leaked: finished orphans are reaped (joined) before the next
+    /// deadline spawn, the live count is capped at
+    /// [`Engine::MAX_LIVE_ORPHANS`] and reported as
+    /// [`EngineStats::live_orphans`]. The calling lane moves on either
+    /// way.
     fn execute_once(
         &self,
         prepared: &PreparedCall,
@@ -573,18 +747,45 @@ impl Engine {
         let Some(deadline) = deadline else {
             return self.backend.execute(prepared.data(), rows);
         };
+        {
+            // reap finished orphans, then enforce the live cap
+            let mut orphans = self.orphans.lock().expect("orphan registry");
+            let mut i = 0;
+            while i < orphans.len() {
+                if orphans[i].is_finished() {
+                    let _ = orphans.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
+            if orphans.len() >= Self::MAX_LIVE_ORPHANS {
+                return Err(ActsError::Xla(format!(
+                    "deadline-kill orphan cap reached ({} live orphaned executes); \
+                     refusing to spawn another helper thread",
+                    Self::MAX_LIVE_ORPHANS
+                )));
+            }
+        }
         let backend = Arc::clone(&self.backend);
         let data = prepared.data_arc();
         let owned: Vec<Vec<f32>> = rows.iter().map(|r| r.to_vec()).collect();
         let (tx, rx) = mpsc::channel();
-        std::thread::spawn(move || {
-            let rows: Vec<&[f32]> = owned.iter().map(|r| r.as_slice()).collect();
-            let _ = tx.send(backend.execute(data.as_ref(), &rows));
-        });
+        let handle = std::thread::Builder::new()
+            .name("acts-deadline-exec".into())
+            .spawn(move || {
+                let rows: Vec<&[f32]> = owned.iter().map(|r| r.as_slice()).collect();
+                let _ = tx.send(backend.execute(data.as_ref(), &rows));
+            })
+            .map_err(|e| ActsError::Xla(format!("could not spawn deadline helper: {e}")))?;
         match rx.recv_timeout(deadline) {
-            Ok(result) => result,
+            Ok(result) => {
+                // the helper already sent its answer; joining is instant
+                let _ = handle.join();
+                result
+            }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 self.deadline_kills.fetch_add(1, Ordering::Relaxed);
+                self.orphans.lock().expect("orphan registry").push(handle);
                 Err(ActsError::Xla(format!(
                     "execute exceeded its {}ms deadline",
                     deadline.as_millis()
@@ -593,6 +794,7 @@ impl Engine {
             // the helper died without answering (it panicked): surface
             // that as a failed attempt rather than unwinding the lane
             Err(mpsc::RecvTimeoutError::Disconnected) => {
+                let _ = handle.join();
                 Err(ActsError::Xla("execute thread died before answering".into()))
             }
         }
@@ -836,5 +1038,150 @@ mod tests {
         assert!(engine.retry_policy().is_some());
         engine.set_retry_policy(None);
         assert!(engine.retry_policy().is_none());
+    }
+
+    // --- overlapped submission + streaming telemetry ----------------
+
+    #[test]
+    fn overlapped_coalescing_matches_the_synchronous_path_bitwise() {
+        let engine = native_engine();
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(16);
+        let prepared = engine.prepare_cached(&params, &w, &e).unwrap();
+        let mut w2 = w.clone();
+        w2[0] += 0.25;
+        let prepared2 = engine.prepare_cached(&params, &w2, &e).unwrap();
+        let empty: Vec<Vec<f32>> = Vec::new();
+        let reqs = [
+            EvalRequest { prepared: &prepared, configs: &configs },
+            EvalRequest { prepared: &prepared, configs: &configs[..7] },
+            EvalRequest { prepared: &prepared2, configs: &configs[..5] },
+            EvalRequest { prepared: &prepared2, configs: &empty },
+        ];
+        let sync = engine.evaluate_coalesced(&reqs).unwrap();
+        let s0 = engine.stats();
+        let overlapped = engine.evaluate_coalesced_overlapped(&reqs).unwrap();
+        let s1 = engine.stats();
+        assert_eq!(sync, overlapped, "overlap must not change any per-row result");
+        // same funnel accounting as the synchronous path
+        assert_eq!(s1.requests - s0.requests, 4);
+        assert_eq!(s1.rows_requested - s0.rows_requested, 28);
+        assert_eq!(s1.execute_calls - s0.execute_calls, 2);
+        assert_eq!(s1.rows_executed - s0.rows_executed, 28);
+        assert_eq!(s1.attempts - s0.attempts, 2);
+    }
+
+    #[test]
+    fn overlapped_retry_absorbs_a_transient_fault_on_the_same_schedule() {
+        let seed = (0..u64::MAX)
+            .find(|&s| {
+                let p = FaultPlan::transient(s, 0.5);
+                p.fault_for(0) == Fault::Transient && p.fault_for(1) == Fault::None
+            })
+            .unwrap();
+        let engine = chaos_engine(FaultPlan::transient(seed, 0.5));
+        engine.set_retry_policy(Some(RetryPolicy::default()));
+        let clean = native_engine();
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(4);
+        let want = clean.evaluate(&params, &w, &e, &configs).unwrap();
+        let prepared = engine.prepare_cached(&params, &w, &e).unwrap();
+        let reqs = [EvalRequest { prepared: &prepared, configs: &configs }];
+        let got = engine.evaluate_coalesced_overlapped(&reqs).unwrap();
+        assert_eq!(got[0], want, "the retried overlapped result must match a clean run bitwise");
+        let stats = engine.stats();
+        assert_eq!(stats.attempts, 2);
+        assert_eq!(stats.retries, 1);
+    }
+
+    #[test]
+    fn overlapped_path_with_a_deadline_falls_back_to_synchronous() {
+        let plan = FaultPlan {
+            hang_p: 1.0,
+            hang: Duration::from_secs(2),
+            ..FaultPlan::seeded(8)
+        };
+        let engine = chaos_engine(plan);
+        engine.set_retry_policy(Some(RetryPolicy {
+            max_attempts: 1,
+            deadline: Some(Duration::from_millis(50)),
+            ..RetryPolicy::default()
+        }));
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(2);
+        let prepared = engine.prepare_cached(&params, &w, &e).unwrap();
+        let start = std::time::Instant::now();
+        let reqs = [EvalRequest { prepared: &prepared, configs: &configs }];
+        let err = engine.evaluate_coalesced_overlapped(&reqs).unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(2), "the deadline must still apply");
+        assert!(err.to_string().contains("deadline"), "{err}");
+        assert_eq!(engine.stats().deadline_kills, 1);
+    }
+
+    #[test]
+    fn flush_and_inflight_telemetry_lands_in_stats() {
+        let engine = native_engine();
+        engine.note_flush(true);
+        engine.note_flush(false);
+        engine.note_flush(false);
+        engine.note_inflight(3);
+        engine.note_inflight(7);
+        engine.note_inflight(2);
+        let s = engine.stats();
+        assert_eq!(s.flushes_by_size, 1);
+        assert_eq!(s.flushes_by_timeout, 2);
+        assert_eq!(s.peak_inflight, 7, "the gauge keeps the high-water mark");
+    }
+
+    // --- orphan accounting for deadline-killed executes -------------
+
+    #[test]
+    fn deadline_kill_orphans_are_counted_then_reaped() {
+        let plan = FaultPlan {
+            hang_p: 1.0,
+            hang: Duration::from_millis(300),
+            ..FaultPlan::seeded(8)
+        };
+        let engine = chaos_engine(plan);
+        engine.set_retry_policy(Some(RetryPolicy {
+            max_attempts: 1,
+            deadline: Some(Duration::from_millis(30)),
+            ..RetryPolicy::default()
+        }));
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(2);
+        assert!(engine.evaluate(&params, &w, &e, &configs).is_err());
+        let stats = engine.stats();
+        assert_eq!(stats.deadline_kills, 1);
+        assert_eq!(stats.live_orphans, 1, "the killed helper is still hung");
+        // once the injected hang elapses the orphan finishes and the
+        // live gauge drops — nothing leaks past the hang itself
+        std::thread::sleep(Duration::from_millis(600));
+        assert_eq!(engine.stats().live_orphans, 0);
+    }
+
+    #[test]
+    fn orphan_cap_stops_runaway_deadline_spawns() {
+        let plan = FaultPlan {
+            hang_p: 1.0,
+            hang: Duration::from_secs(2),
+            ..FaultPlan::seeded(8)
+        };
+        let engine = chaos_engine(plan);
+        engine.set_retry_policy(Some(RetryPolicy {
+            max_attempts: 1,
+            deadline: Some(Duration::from_millis(5)),
+            ..RetryPolicy::default()
+        }));
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(1);
+        for i in 0..Engine::MAX_LIVE_ORPHANS {
+            let err = engine.evaluate(&params, &w, &e, &configs).unwrap_err();
+            assert!(err.to_string().contains("deadline"), "kill {i}: {err}");
+        }
+        assert_eq!(engine.stats().live_orphans, Engine::MAX_LIVE_ORPHANS as u64);
+        // at the cap the next attempt fails fast instead of spawning
+        let err = engine.evaluate(&params, &w, &e, &configs).unwrap_err();
+        assert!(err.to_string().contains("orphan cap"), "{err}");
+        assert_eq!(
+            engine.stats().deadline_kills,
+            Engine::MAX_LIVE_ORPHANS as u64,
+            "the capped attempt never spawned a helper"
+        );
     }
 }

@@ -14,9 +14,11 @@
 //!   f32, parallelised with `std::thread::scope` — no artifacts, no
 //!   vendor binding, runs anywhere.
 //! * [`engine`] — the backend-agnostic front-end: validation, the
-//!   prepared-constant cache, cross-request coalescing, telemetry, and
-//!   the [`engine::RetryPolicy`] retry/deadline layer that absorbs
-//!   transient backend faults below the session layer.
+//!   prepared-constant cache, cross-request coalescing (synchronous
+//!   and overlapped via the backend [`backend::ExecBackend::submit`]
+//!   path), telemetry, and the [`engine::RetryPolicy`] retry/deadline
+//!   layer that absorbs transient backend faults below the session
+//!   layer.
 //! * [`chaos`] — deterministic fault injection: a
 //!   [`chaos::ChaosBackend`] wrapper that perturbs any inner backend
 //!   according to a seeded [`chaos::FaultPlan`] (transient/persistent
@@ -37,7 +39,7 @@ pub mod native;
 pub mod pjrt;
 pub mod shapes;
 
-pub use backend::{BackendKind, ExecBackend};
+pub use backend::{BackendKind, ExecBackend, PendingExecution};
 pub use chaos::{ChaosBackend, ChaosStats, Fault, FaultPlan};
 pub use engine::{
     Engine, EngineStats, EvalRequest, Perf, PreparedCall, RetryPolicy, SurfaceParams,

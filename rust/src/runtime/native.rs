@@ -296,6 +296,14 @@ impl ExecBackend for NativeBackend {
     /// Evaluate every row; large batches are chunked across scoped
     /// worker threads. One batch is one logical execute call and never
     /// pads — the native backend has no static shapes.
+    ///
+    /// This backend deliberately keeps the default [`ExecBackend::
+    /// submit`]: execution is synchronous CPU work with nothing to
+    /// overlap against, so "submit" completing the work on the spot is
+    /// both correct and the fastest option. Streaming-mode concurrency
+    /// over this backend comes from the scheduler's executor workers
+    /// running whole flushed batches in parallel, not from deferred
+    /// syncs.
     fn execute(&self, prepared: &dyn PreparedData, rows: &[&[f32]]) -> Result<Execution> {
         let prepared = prepared.as_any().downcast_ref::<NativePrepared>().ok_or_else(|| {
             ActsError::InvalidArg("prepared constants do not belong to the native backend".into())

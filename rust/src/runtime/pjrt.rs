@@ -12,7 +12,7 @@
 //! telemetry) lives in [`super::engine::Engine`]; this module is purely
 //! the XLA-facing half behind [`super::backend::ExecBackend`].
 
-use super::backend::{ExecBackend, Execution, PreparedData};
+use super::backend::{ExecBackend, Execution, PendingExecution, PreparedData};
 use super::engine::{Perf, SurfaceParams};
 use super::shapes::{self, BUCKETS, D_PAD};
 use crate::error::{ActsError, Result};
@@ -52,9 +52,12 @@ pub struct PjrtBackend {
 //       state behind those four types before swapping the path entry
 //       in Cargo.toml (the rust bindings around `xla_extension` keep
 //       raw `*mut` handles — fine — but verify the exact revision).
-//     Per-call wrapper objects (literals, buffers) are created, used
-//     and dropped within a single `execute` call on one thread and
-//     never cross threads.
+//     Per-call wrapper objects (literals, buffers) are created and
+//     used within a single `execute` call on one thread — EXCEPT on
+//     the `submit` path, where they move into the returned
+//     `PjrtPending` and may cross to the thread that calls `wait`
+//     (see that type's own Send audit below). No per-call object is
+//     ever *shared* between two threads at once on either path.
 unsafe impl Send for PjrtBackend {}
 unsafe impl Sync for PjrtBackend {}
 
@@ -80,6 +83,78 @@ unsafe impl Sync for PjrtPrepared {}
 impl PreparedData for PjrtPrepared {
     fn as_any(&self) -> &dyn Any {
         self
+    }
+}
+
+/// One planned, dispatched, not-yet-synced bucket call of a submitted
+/// execute: the output buffers plus everything that must stay alive
+/// until the output sync (the CPU client's copy worker reads the
+/// uploaded literal; the execution reads the input buffer).
+struct PjrtChunkInFlight {
+    bucket: usize,
+    /// Real (unpadded) rows in this chunk.
+    b: usize,
+    /// `execute_b` output buffers, untouched until [`sync_chunk`].
+    result: Vec<Vec<xla::PjRtBuffer>>,
+    _u_lit: xla::Literal,
+    _u_buf: xla::PjRtBuffer,
+}
+
+/// A submitted-but-unsynced PJRT execute ([`ExecBackend::submit`]):
+/// every planned bucket chunk has been dispatched; [`PendingExecution::
+/// wait`] performs the deferred output syncs in plan order.
+pub struct PjrtPending {
+    chunks: Vec<PjrtChunkInFlight>,
+    calls: u64,
+    rows_executed: u64,
+    n_rows: usize,
+}
+
+// SAFETY: the handle moves (never shared — `wait` consumes it) from
+// the submitting thread to the waiting thread. The PJRT C API allows
+// buffers and their `ToLiteralSync` readback to be used from any
+// thread; the wrapper-side handle audit is the same one documented on
+// `PjrtBackend` above (uninhabited enums in the in-repo STUB — the
+// claim is vacuously true there — and a raw-handle check required for
+// any real binding). The `Literal` held for the async H2D copy is
+// plain owned host memory. Re-audit alongside the impls above whenever
+// the `xla` binding changes.
+unsafe impl Send for PjrtPending {}
+
+/// The deferred half of a chunk execute: sync the output tuple, demux
+/// to per-row [`Perf`]s, and only then drop the chunk's input literal
+/// and buffers (the sync guarantees the device is done reading them).
+fn sync_chunk(chunk: PjrtChunkInFlight) -> Result<Vec<Perf>> {
+    let tuple = chunk.result[0][0].to_literal_sync()?;
+    let (thr_lit, lat_lit) = tuple.to_tuple2()?;
+    let thr = thr_lit.to_vec::<f32>()?;
+    let lat = lat_lit.to_vec::<f32>()?;
+    if thr.len() != chunk.bucket || lat.len() != chunk.bucket {
+        return Err(ActsError::Artifact(format!(
+            "artifact returned {} outputs for bucket {}",
+            thr.len(),
+            chunk.bucket
+        )));
+    }
+    Ok(thr[..chunk.b]
+        .iter()
+        .zip(&lat[..chunk.b])
+        .map(|(&t, &l)| Perf { throughput: t as f64, latency: l as f64 })
+        .collect())
+}
+
+impl PendingExecution for PjrtPending {
+    fn wait(self: Box<Self>) -> Result<Execution> {
+        let this = *self;
+        let mut perfs = Vec::with_capacity(this.n_rows);
+        for chunk in this.chunks {
+            perfs.extend(sync_chunk(chunk)?);
+        }
+        Ok(Execution {
+            perfs,
+            execute_calls: this.calls,
+            rows_executed: this.rows_executed,
+        })
     }
 }
 
@@ -112,16 +187,21 @@ impl PjrtBackend {
         &self.artifacts_dir
     }
 
-    /// Execute one planned call: `configs.len() <= bucket` rows, padded
-    /// up to `bucket` with copies of row 0 (cheap, valid data).
-    fn execute_chunk(
+    /// Dispatch one planned call without syncing its outputs:
+    /// `configs.len() <= bucket` rows, padded up to `bucket` with
+    /// copies of row 0 (cheap, valid data). The input upload is still
+    /// awaited (the CPU client has no other safe completion signal for
+    /// the H2D copy); only the *output* sync is deferred to
+    /// [`sync_chunk`], which is what lets several submitted executes
+    /// proceed on-device concurrently.
+    fn submit_chunk(
         &self,
         prepared: &PjrtPrepared,
         configs: &[&[f32]],
         bucket: usize,
         device: &xla::PjRtDevice,
         scratch: &mut Vec<f32>,
-    ) -> Result<Vec<Perf>> {
+    ) -> Result<PjrtChunkInFlight> {
         let b = configs.len();
         debug_assert!(b >= 1 && b <= bucket);
         let bucket_pos = BUCKETS.iter().position(|&k| k == bucket).expect("planned bucket");
@@ -154,24 +234,28 @@ impl PjrtBackend {
         inputs.extend(consts.iter());
 
         let result = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        // the output sync above also guarantees the input transfer is
-        // done; only now may u_lit drop
-        drop(u_lit);
-        let (thr_lit, lat_lit) = tuple.to_tuple2()?;
-        let thr = thr_lit.to_vec::<f32>()?;
-        let lat = lat_lit.to_vec::<f32>()?;
-        if thr.len() != bucket || lat.len() != bucket {
-            return Err(ActsError::Artifact(format!(
-                "artifact returned {} outputs for bucket {bucket}",
-                thr.len()
-            )));
-        }
-        Ok(thr[..b]
-            .iter()
-            .zip(&lat[..b])
-            .map(|(&t, &l)| Perf { throughput: t as f64, latency: l as f64 })
-            .collect())
+        // u_lit and u_buf ride along in the in-flight chunk: they may
+        // not drop until the output sync proves the device is done
+        Ok(PjrtChunkInFlight { bucket, b, result, _u_lit: u_lit, _u_buf: u_buf })
+    }
+
+    /// Execute one planned call synchronously: dispatch + output sync.
+    fn execute_chunk(
+        &self,
+        prepared: &PjrtPrepared,
+        configs: &[&[f32]],
+        bucket: usize,
+        device: &xla::PjRtDevice,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<Perf>> {
+        sync_chunk(self.submit_chunk(prepared, configs, bucket, device, scratch)?)
+    }
+
+    /// Shared downcast for the execute/submit entry points.
+    fn own_prepared<'p>(&self, prepared: &'p dyn PreparedData) -> Result<&'p PjrtPrepared> {
+        prepared.as_any().downcast_ref::<PjrtPrepared>().ok_or_else(|| {
+            ActsError::InvalidArg("prepared constants do not belong to the pjrt backend".into())
+        })
     }
 }
 
@@ -234,9 +318,7 @@ impl ExecBackend for PjrtBackend {
     /// The device handle is resolved once per batch and one upload
     /// scratch buffer is reused across the plan's calls.
     fn execute(&self, prepared: &dyn PreparedData, rows: &[&[f32]]) -> Result<Execution> {
-        let prepared = prepared.as_any().downcast_ref::<PjrtPrepared>().ok_or_else(|| {
-            ActsError::InvalidArg("prepared constants do not belong to the pjrt backend".into())
-        })?;
+        let prepared = self.own_prepared(prepared)?;
         // one devices() resolution (it allocates a Vec) per batch, not
         // per chunk
         let devices = self.client.devices();
@@ -256,5 +338,36 @@ impl ExecBackend for PjrtBackend {
         }
         debug_assert_eq!(offset, rows.len(), "plan must consume every row");
         Ok(Execution { perfs, execute_calls: calls, rows_executed })
+    }
+
+    /// The async submission path: dispatch every planned bucket chunk
+    /// (input uploads awaited, outputs left on-device) and defer all
+    /// output syncs to the returned handle's `wait`. Between `submit`
+    /// and `wait`, this call's executes overlap with anything else the
+    /// caller submits — the whole point of the streaming scheduler's
+    /// continuously-draining queue.
+    fn submit<'a>(
+        &'a self,
+        prepared: &'a dyn PreparedData,
+        rows: &[&[f32]],
+    ) -> Result<Box<dyn PendingExecution + 'a>> {
+        let prepared = self.own_prepared(prepared)?;
+        let devices = self.client.devices();
+        let device = &devices[0];
+        let mut scratch: Vec<f32> = Vec::new();
+        let mut chunks = Vec::new();
+        let mut offset = 0usize;
+        let mut calls = 0u64;
+        let mut rows_executed = 0u64;
+        for bucket in shapes::plan_buckets(rows.len()) {
+            let take = bucket.min(rows.len() - offset);
+            let chunk = &rows[offset..offset + take];
+            offset += take;
+            chunks.push(self.submit_chunk(prepared, chunk, bucket, device, &mut scratch)?);
+            calls += 1;
+            rows_executed += bucket as u64;
+        }
+        debug_assert_eq!(offset, rows.len(), "plan must consume every row");
+        Ok(Box::new(PjrtPending { chunks, calls, rows_executed, n_rows: rows.len() }))
     }
 }

@@ -226,6 +226,12 @@ impl Fleet {
                 attempts: after.attempts - before.attempts,
                 retries: after.retries - before.retries,
                 deadline_kills: after.deadline_kills - before.deadline_kills,
+                flushes_by_size: after.flushes_by_size - before.flushes_by_size,
+                flushes_by_timeout: after.flushes_by_timeout - before.flushes_by_timeout,
+                // a high-water gauge, not a monotone counter: report
+                // the engine-lifetime peak (0 under the barriered
+                // modes, which never overlap submitted rounds)
+                peak_inflight: after.peak_inflight,
             },
         }
     }
@@ -274,6 +280,15 @@ pub struct Coalescing {
     pub retries: u64,
     /// Executes killed by the retry policy's per-execute deadline.
     pub deadline_kills: u64,
+    /// Streaming flushes triggered by the batch reaching the flush
+    /// row threshold (0 under the barriered scheduler modes).
+    pub flushes_by_size: u64,
+    /// Streaming flushes triggered by the flush timeout (the liveness
+    /// bound), the final shutdown drain included.
+    pub flushes_by_timeout: u64,
+    /// High-water mark of submitted-not-yet-absorbed rounds (engine
+    /// lifetime; 0 under the barriered modes).
+    pub peak_inflight: u64,
 }
 
 /// Aggregate statistics over a fleet's completed cells.
@@ -447,6 +462,12 @@ impl FleetReport {
                     ("attempts", Json::Num(self.coalescing.attempts as f64)),
                     ("retries", Json::Num(self.coalescing.retries as f64)),
                     ("deadline_kills", Json::Num(self.coalescing.deadline_kills as f64)),
+                    ("flushes_by_size", Json::Num(self.coalescing.flushes_by_size as f64)),
+                    (
+                        "flushes_by_timeout",
+                        Json::Num(self.coalescing.flushes_by_timeout as f64),
+                    ),
+                    ("peak_inflight", Json::Num(self.coalescing.peak_inflight as f64)),
                 ]),
             ),
             ("cells", Json::Arr(cells)),

@@ -60,7 +60,8 @@ pub mod scheduler;
 pub mod session;
 
 pub use scheduler::{
-    default_lanes, lanes_from_env, parse_lanes, RoundEvent, Scheduler, SchedulerMode,
+    default_lanes, lanes_from_env, parse_lanes, parse_sched_mode, sched_mode_from_env,
+    RoundEvent, Scheduler, SchedulerMode,
 };
 pub use session::{ProposedTest, Round, TuningSession};
 
@@ -1208,5 +1209,120 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // --- streaming --------------------------------------------------
+
+    /// The streaming tentpole's equivalence guarantee, as a property
+    /// test: heterogeneous 8-session fleets produce per-session records
+    /// bit-identical to the sequential scheduler for every corner of
+    /// the flush grid — immediate per-round flushes, size-triggered
+    /// coalesced flushes, pure timeout flushes, and worker counts from
+    /// a single worker through auto-sizing. (Stronger than the
+    /// set-equality the issue asks for: each session's cycle is strict,
+    /// so even record *order* is preserved.)
+    #[test]
+    fn streaming_records_are_bit_identical_across_flush_knobs() {
+        use crate::testkit::prop;
+        use std::time::Duration;
+        let optimizers = ["rrs", "random", "lhs-screen", "gp"];
+        // (flush_rows, flush_timeout, workers): every flush cause and a
+        // worker-count spread. usize::MAX rows never trips by size, so
+        // the 1ms timeout does all the flushing; 1 row flushes every
+        // round alone; the middle knobs mix both causes.
+        let flush_grid = [
+            (1usize, Duration::ZERO, 1usize),
+            (4, Duration::from_millis(1), 0),
+            (64, Duration::ZERO, 3),
+            (usize::MAX, Duration::from_millis(1), 2),
+        ];
+        prop::check(4, 0x57EA4, |g| {
+            struct Case {
+                cfg: TuningConfig,
+                dim: usize,
+                fail_every: Option<u64>,
+            }
+            let cases: Vec<Case> = (0..8usize)
+                .map(|i| Case {
+                    cfg: TuningConfig {
+                        budget: Budget::tests(5 + g.below(25)),
+                        optimizer: (*g.choose(&optimizers)).into(),
+                        seed: 2000 + g.below(1_000_000),
+                        round_size: *g.choose(&[1usize, 3, 8, 16]),
+                        ..Default::default()
+                    },
+                    dim: 3 + (i % 4),
+                    // >= 2 so the baseline (call 1) always completes
+                    fail_every: g.bool(0.3).then(|| 2 + g.below(4)),
+                })
+                .collect();
+            let build = |mode: SchedulerMode| {
+                let mut scheduler = Scheduler::with_mode(mode);
+                for c in &cases {
+                    let mut sut = FakeSut::new(c.dim);
+                    sut.fail_every = c.fail_every;
+                    let session =
+                        TuningSession::from_registry(sut.space().clone(), &c.cfg).unwrap();
+                    scheduler.add(session, sut);
+                }
+                scheduler.run()
+            };
+            let sequential = build(SchedulerMode::Sequential);
+            for (flush_rows, flush_timeout, workers) in flush_grid {
+                let streaming = build(SchedulerMode::Streaming {
+                    flush_rows,
+                    flush_timeout,
+                    workers,
+                });
+                for (i, (seq, st)) in sequential.iter().zip(&streaming).enumerate() {
+                    let seq = seq.as_ref().expect("baseline always completes");
+                    let st = st.as_ref().expect("baseline always completes");
+                    if seq.records != st.records
+                        || seq.tests_used != st.tests_used
+                        || seq.failures != st.failures
+                        || seq.best_unit != st.best_unit
+                        || seq.sim_seconds != st.sim_seconds
+                        || seq.stopped != st.stopped
+                    {
+                        return Err(format!(
+                            "flush_rows={flush_rows} timeout={flush_timeout:?} \
+                             workers={workers}: session {i} diverged"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Streaming isolates per-session failures exactly like the
+    /// barriered modes: a dead neighbour (its baseline never completes)
+    /// cannot disturb the healthy sessions around it.
+    #[test]
+    fn streaming_scheduler_isolates_per_session_failures() {
+        let mut scheduler = Scheduler::with_mode(SchedulerMode::streaming());
+        for i in 0..4u64 {
+            let mut sut = FakeSut::new(3);
+            if i == 1 {
+                sut.fail_every = Some(1);
+            }
+            let cfg = TuningConfig {
+                budget: Budget::tests(20),
+                seed: i,
+                round_size: 8,
+                ..Default::default()
+            };
+            let session = TuningSession::from_registry(sut.space().clone(), &cfg).unwrap();
+            scheduler.add(session, sut);
+        }
+        let outcomes = scheduler.run();
+        assert!(outcomes[1].is_err(), "dead environment must fail its session");
+        for (i, out) in outcomes.iter().enumerate() {
+            if i != 1 {
+                let out = out.as_ref().unwrap();
+                assert_eq!(out.tests_used, 20, "session {i}");
+                assert!(out.improvement >= 0.0, "session {i}");
+            }
+        }
     }
 }

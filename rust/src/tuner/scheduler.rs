@@ -55,6 +55,41 @@
 //! single-threaded stage-all/execute-once/absorb-all tick for
 //! reference, equivalence tests and benchmarking.
 //!
+//! # Streaming: killing the round barrier
+//!
+//! [`SchedulerMode::Streaming`] removes even the lane-local demux
+//! barrier. Sessions push staged rounds into a shared **submission
+//! queue** the moment `next_round` produces them; a drainer thread
+//! (`acts-stream-drain`) coalesces queued rounds and flushes a batch
+//! to the execute workers when the batch reaches `flush_rows` engine
+//! rows **or** its oldest round has waited `flush_timeout` — whichever
+//! comes first (the timeout is the liveness bound: a lone staged round
+//! never waits longer than `flush_timeout` for company). Completions
+//! demux back to the scheduler thread, which absorbs them and restages
+//! *just those sessions* immediately — no session ever waits at a
+//! barrier for an unrelated session's execute, and many flushed
+//! batches are in flight at once. The engine keeps score: flush causes
+//! land in [`crate::runtime::EngineStats::flushes_by_size`] /
+//! `flushes_by_timeout`, and the submitted-not-yet-absorbed round
+//! depth's high-water mark in
+//! [`crate::runtime::EngineStats::peak_inflight`].
+//!
+//! Staging and absorbing still happen on the scheduler thread
+//! (sessions are not `Send`), and every session still runs its strict
+//! stage → execute → absorb → restage cycle, so per-session records
+//! remain **bit-identical** to the sequential scheduler for any flush
+//! knobs or worker count (tested, including a property test over the
+//! flush grid). Only the engine's physical call pattern changes:
+//! flushed batches mix whichever sessions' rounds were queued when the
+//! flush tripped, and execute workers use the engine's overlapped path
+//! ([`crate::runtime::engine::Engine::evaluate_coalesced_overlapped`]
+//! over [`crate::runtime::ExecBackend::submit`]) so one worker keeps
+//! several backend executes in flight with deferred output sync.
+//! Failure containment is unchanged — per-group `catch_unwind`, poison
+//! streaks, quarantine — but chaos fault *indices* depend on
+//! cross-thread submission order, so chaos runs under streaming assert
+//! containment and completion, not bit-equality.
+//!
 //! The scheduler also feeds each session's budget ledger
 //! ([`crate::budget`]): [`Scheduler::add`] installs the manipulator's
 //! per-test cost estimate, and the manipulator clock is folded into
@@ -107,6 +142,7 @@ use crate::runtime::engine::{group_by_key, EvalRequest, Perf};
 use crate::runtime::shapes::D_PAD;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 struct Slot<'a, M: SystemManipulator> {
     session: TuningSession<'a>,
@@ -187,6 +223,41 @@ pub fn default_lanes() -> usize {
     lanes_from_env().ok().flatten().unwrap_or(2)
 }
 
+/// Parse an `ACTS_SCHED_MODE` / `--sched-mode` spelling: `sequential`,
+/// `pipelined` (at [`default_lanes`] lanes), `pipelined:<lanes>`, or
+/// `streaming` (the default flush point,
+/// [`SchedulerMode::streaming`]). Unit-testable without mutating the
+/// process environment.
+pub fn parse_sched_mode(value: &str) -> crate::Result<SchedulerMode> {
+    let v = value.trim();
+    let mode = match v {
+        "sequential" => Some(SchedulerMode::Sequential),
+        "pipelined" => Some(SchedulerMode::Pipelined { lanes: default_lanes() }),
+        "streaming" => Some(SchedulerMode::streaming()),
+        _ => v
+            .strip_prefix("pipelined:")
+            .and_then(|lanes| lanes.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .map(|lanes| SchedulerMode::Pipelined { lanes }),
+    };
+    mode.ok_or_else(|| {
+        ActsError::InvalidArg(format!(
+            "ACTS_SCHED_MODE=`{value}` is not a recognised scheduler mode \
+             (accepted: sequential, pipelined, pipelined:<lanes>, streaming)"
+        ))
+    })
+}
+
+/// Resolve the `ACTS_SCHED_MODE` environment variable: `None` when
+/// unset, a startup error when set to something unusable — a typo must
+/// not silently run under a different scheduler.
+pub fn sched_mode_from_env() -> crate::Result<Option<SchedulerMode>> {
+    match std::env::var("ACTS_SCHED_MODE") {
+        Ok(v) => parse_sched_mode(&v).map(Some),
+        Err(_) => Ok(None),
+    }
+}
+
 /// How [`Scheduler::run`] drives its sessions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedulerMode {
@@ -201,11 +272,62 @@ pub enum SchedulerMode {
     /// Single-threaded reference: stage every session, execute one
     /// coalesced pass, absorb, repeat.
     Sequential,
+    /// Continuously-draining submission queue: staged rounds flow to a
+    /// drainer that flushes coalesced batches on size-or-timeout, and
+    /// every session restages the instant its own round absorbs — no
+    /// lane barrier, many executes in flight (see the module docs).
+    Streaming {
+        /// Flush the drainer's pending batch once it holds this many
+        /// engine rows (clamped to >= 1).
+        flush_rows: usize,
+        /// Flush whatever is pending once its oldest round has waited
+        /// this long — the liveness bound for a fleet that stages
+        /// slower than `flush_rows`.
+        flush_timeout: Duration,
+        /// Concurrent execute workers; 0 means one per session,
+        /// capped at 8.
+        workers: usize,
+    },
 }
 
+impl SchedulerMode {
+    /// Streaming mode at the default flush point: 256 engine rows or
+    /// 1ms, whichever trips first, with auto-sized workers.
+    pub fn streaming() -> Self {
+        SchedulerMode::Streaming {
+            flush_rows: 256,
+            flush_timeout: Duration::from_millis(1),
+            workers: 0,
+        }
+    }
+
+    /// Human description for CLI headers: `"sequential"`, `"{n} lanes"`
+    /// (pipelined), or the streaming flush point.
+    pub fn describe(&self) -> String {
+        match self {
+            SchedulerMode::Sequential => "sequential".into(),
+            SchedulerMode::Pipelined { lanes } => format!("{lanes} lanes"),
+            SchedulerMode::Streaming { flush_rows, flush_timeout, workers } => {
+                let w = if *workers == 0 { "auto".into() } else { workers.to_string() };
+                format!("streaming (flush: {flush_rows} rows / {flush_timeout:?}, {w} workers)")
+            }
+        }
+    }
+}
+
+/// The default mode is the `ACTS_SCHED_MODE` environment variable when
+/// set to something parseable ([`parse_sched_mode`]), else the N-lane
+/// pipeline at [`default_lanes`] lanes. Like `default_lanes` this has
+/// no error channel: an unusable value falls back to the pipeline
+/// here, and the CLI validates the variable at startup
+/// ([`sched_mode_from_env`]) so a typo is rejected with a clear error
+/// before any scheduler is built.
 impl Default for SchedulerMode {
     fn default() -> Self {
-        SchedulerMode::Pipelined { lanes: default_lanes() }
+        sched_mode_from_env()
+            .ok()
+            .flatten()
+            .unwrap_or(SchedulerMode::Pipelined { lanes: default_lanes() })
     }
 }
 
@@ -288,6 +410,9 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
         match self.mode {
             SchedulerMode::Pipelined { lanes } => self.run_pipelined(lanes),
             SchedulerMode::Sequential => self.run_sequential(),
+            SchedulerMode::Streaming { flush_rows, flush_timeout, workers } => {
+                self.run_streaming(flush_rows, flush_timeout, workers)
+            }
         }
     }
 
@@ -365,17 +490,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
                                 execute_pool(&pool)
                             }))
                             .unwrap_or_else(|_| {
-                                let member: Vec<Vec<Vec<Perf>>> = pool
-                                    .iter()
-                                    .map(|round| vec![Vec::new(); round.requests.len()])
-                                    .collect();
-                                let failed: Vec<Option<RoundFailure>> = vec![
-                                    Some(RoundFailure::Poisoned(
-                                        "execute worker panicked".into()
-                                    ));
-                                    pool.len()
-                                ];
-                                (member, failed)
+                                poisoned_pool_results(&pool, "execute worker panicked")
                             });
                         if res_tx.send((lane, pool, results)).is_err() {
                             break;
@@ -426,6 +541,180 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
             worker.join().expect("execute worker panicked");
         }
         self.into_outcomes()
+    }
+
+    /// The streaming driver (see the module docs): no demux barrier at
+    /// all. Every live session's staged round is pushed into the
+    /// submission queue the moment it forms; the drainer thread flushes
+    /// coalesced batches to `workers` execute workers on
+    /// size-or-timeout; and each completed round's session absorbs and
+    /// restages immediately, independent of every other session.
+    /// Staging and absorbing stay on this thread (sessions are not
+    /// `Send`), so observer/checkpoint and containment semantics match
+    /// the barriered modes. Degenerates to
+    /// [`Scheduler::run_sequential`] below two sessions (nothing to
+    /// overlap with).
+    pub fn run_streaming(
+        mut self,
+        flush_rows: usize,
+        flush_timeout: Duration,
+        workers: usize,
+    ) -> Vec<crate::Result<TuningOutcome>> {
+        if self.slots.len() < 2 {
+            return self.run_sequential();
+        }
+        let flush_rows = flush_rows.max(1);
+        let workers = if workers == 0 { self.slots.len().min(8) } else { workers };
+
+        let (sub_tx, sub_rx) = mpsc::channel::<PooledRound>();
+        let (job_tx, job_rx) = mpsc::channel::<Pool>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = mpsc::channel::<(Pool, PoolResults)>();
+
+        // the drainer owns the job queue's sender: when the submission
+        // side closes it flushes the remainder and exits, closing the
+        // job queue behind it, which in turn winds down the workers
+        let drainer = std::thread::Builder::new()
+            .name("acts-stream-drain".into())
+            .spawn(move || {
+                let mut pending: Pool = Vec::new();
+                let mut pending_rows = 0usize;
+                let mut oldest = Instant::now();
+                // flush cause: reaching `flush_rows` is a size flush;
+                // a timeout expiry or the final shutdown drain is a
+                // timeout flush (size was never reached). Each flush
+                // is scored once per distinct engine in the batch.
+                let flush = |pool: &mut Pool, rows: &mut usize, by_size: bool| {
+                    let batch = std::mem::take(pool);
+                    *rows = 0;
+                    let mut seen: Vec<usize> = Vec::new();
+                    for round in &batch {
+                        for req in &round.requests {
+                            let key = Arc::as_ptr(&req.engine) as usize;
+                            if !seen.contains(&key) {
+                                seen.push(key);
+                                req.engine.note_flush(by_size);
+                            }
+                        }
+                    }
+                    let _ = job_tx.send(batch);
+                };
+                loop {
+                    if pending.is_empty() {
+                        match sub_rx.recv() {
+                            Ok(round) => {
+                                oldest = Instant::now();
+                                pending_rows += round_rows(&round);
+                                pending.push(round);
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    if pending_rows >= flush_rows {
+                        flush(&mut pending, &mut pending_rows, true);
+                        continue;
+                    }
+                    let age = oldest.elapsed();
+                    if age >= flush_timeout {
+                        flush(&mut pending, &mut pending_rows, false);
+                        continue;
+                    }
+                    match sub_rx.recv_timeout(flush_timeout - age) {
+                        Ok(round) => {
+                            pending_rows += round_rows(&round);
+                            pending.push(round);
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            flush(&mut pending, &mut pending_rows, false);
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            flush(&mut pending, &mut pending_rows, false);
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn the stream drainer");
+
+        let exec_workers: Vec<_> = (0..workers)
+            .map(|w| {
+                let job_rx = Arc::clone(&job_rx);
+                let res_tx = res_tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("acts-exec-{w}"))
+                    .spawn(move || loop {
+                        // hold the lock only across the blocking pop;
+                        // flushed batches execute unlocked, concurrently
+                        // with the other workers
+                        let job = { job_rx.lock().expect("job queue poisoned").recv() };
+                        let Ok(pool) = job else { break };
+                        // same backstop as the pipelined workers: a
+                        // panic past the per-group fence fails the
+                        // batch's rounds instead of hanging the fleet
+                        let results =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                execute_pool_overlapped(&pool)
+                            }))
+                            .unwrap_or_else(|_| {
+                                poisoned_pool_results(&pool, "execute worker panicked")
+                            });
+                        if res_tx.send((pool, results)).is_err() {
+                            break;
+                        }
+                    })
+                    .expect("spawn an execute worker")
+            })
+            .collect();
+        drop(res_tx);
+
+        // Prime: push every live session's first pending round, then
+        // absorb completions as they land and resubmit just those
+        // sessions — each session's own stage → execute → absorb →
+        // restage cycle stays strict, so its records match a solo run.
+        let mut in_flight = 0usize;
+        for i in 0..self.slots.len() {
+            if let Some(round) = self.stage_slot_until_pending(i) {
+                in_flight += 1;
+                note_round_inflight(&round, in_flight);
+                sub_tx.send(round).expect("stream drainer died");
+            }
+        }
+        while in_flight > 0 {
+            let (pool, results) = res_rx.recv().expect("execute worker died");
+            in_flight -= pool.len();
+            let owners: Vec<usize> = pool.iter().map(|r| r.slot).collect();
+            self.absorb_pool(pool, results);
+            for i in owners {
+                if let Some(round) = self.stage_slot_until_pending(i) {
+                    in_flight += 1;
+                    note_round_inflight(&round, in_flight);
+                    sub_tx.send(round).expect("stream drainer died");
+                }
+            }
+        }
+
+        drop(sub_tx);
+        drainer.join().expect("stream drainer panicked");
+        for worker in exec_workers {
+            worker.join().expect("execute worker panicked");
+        }
+        self.into_outcomes()
+    }
+
+    /// Re-poll one slot until it either pools a round with pending rows
+    /// (returned for submission) or has nothing left to do — baselines
+    /// and rounds that fully resolve during staging absorb inline, just
+    /// as they do in the barriered modes.
+    fn stage_slot_until_pending(&mut self, i: usize) -> Option<PooledRound> {
+        loop {
+            let (mut pool, did_work) = self.stage_group(&[i]);
+            if let Some(round) = pool.pop() {
+                return Some(round);
+            }
+            if !did_work {
+                return None;
+            }
+        }
     }
 
     /// Poll and stage every listed slot: baselines run inline, staged
@@ -613,6 +902,32 @@ fn partition_by_cost_n(costs: &[f64], lanes: usize) -> Vec<Vec<usize>> {
     groups
 }
 
+/// Engine rows a pooled round contributes to a streaming flush batch
+/// (every request of a round carries one config row per pending test).
+fn round_rows(round: &PooledRound) -> usize {
+    round.requests.iter().map(|r| r.configs.len()).sum()
+}
+
+/// Record the current submitted-not-yet-absorbed round depth on the
+/// round's engine; [`crate::runtime::EngineStats::peak_inflight`]
+/// keeps the high-water mark.
+fn note_round_inflight(round: &PooledRound, depth: usize) {
+    if let Some(req) = round.requests.first() {
+        req.engine.note_inflight(depth as u64);
+    }
+}
+
+/// All-poisoned results for a pool whose execute worker panicked past
+/// the per-group fence: every round's rows are failed (not fatal) and
+/// every owning session's poison streak advances.
+fn poisoned_pool_results(pool: &Pool, msg: &str) -> PoolResults {
+    let member: Vec<Vec<Vec<Perf>>> =
+        pool.iter().map(|round| vec![Vec::new(); round.requests.len()]).collect();
+    let failed: Vec<Option<RoundFailure>> =
+        vec![Some(RoundFailure::Poisoned(msg.into())); pool.len()];
+    (member, failed)
+}
+
 /// Coalesced execute of one pool: flatten every staged round's
 /// requests, group them by engine instance, and let each engine merge
 /// same-binding requests into shared plans. Results come back per
@@ -620,6 +935,18 @@ fn partition_by_cost_n(costs: &[f64], lanes: usize) -> Vec<Vec<usize>> {
 /// (no scheduler state), so the pipelined driver runs it on its worker
 /// thread while staging continues.
 fn execute_pool(pool: &Pool) -> PoolResults {
+    execute_pool_with(pool, false)
+}
+
+/// [`execute_pool`] on the engine's overlapped path
+/// ([`crate::runtime::engine::Engine::evaluate_coalesced_overlapped`]):
+/// the streaming workers use this so one flushed batch keeps several
+/// backend executes in flight with deferred output sync.
+fn execute_pool_overlapped(pool: &Pool) -> PoolResults {
+    execute_pool_with(pool, true)
+}
+
+fn execute_pool_with(pool: &Pool, overlapped: bool) -> PoolResults {
     let mut member_perfs: Vec<Vec<Vec<Perf>>> =
         pool.iter().map(|round| vec![Vec::new(); round.requests.len()]).collect();
     let mut failed: Vec<Option<RoundFailure>> = vec![None; pool.len()];
@@ -645,7 +972,11 @@ fn execute_pool(pool: &Pool) -> PoolResults {
         // fence each engine group: a panicking execute poisons only the
         // rounds that shared it, while the pool's other groups run on
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            engine.evaluate_coalesced(&evals)
+            if overlapped {
+                engine.evaluate_coalesced_overlapped(&evals)
+            } else {
+                engine.evaluate_coalesced(&evals)
+            }
         }));
         match result {
             Ok(Ok(outs)) => {
@@ -678,7 +1009,7 @@ fn execute_pool(pool: &Pool) -> PoolResults {
 
 #[cfg(test)]
 mod tests {
-    use super::{default_lanes, parse_lanes, partition_by_cost_n};
+    use super::{default_lanes, parse_lanes, parse_sched_mode, partition_by_cost_n, SchedulerMode};
 
     fn load(costs: &[f64], group: &[usize]) -> f64 {
         group.iter().map(|&i| costs[i]).sum()
@@ -780,5 +1111,56 @@ mod tests {
             assert!(err.contains("ACTS_LANES"), "{bad}: {err}");
             assert!(err.contains("integer >= 1"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn sched_mode_spellings_parse_or_name_the_variable() {
+        assert_eq!(parse_sched_mode("sequential").unwrap(), SchedulerMode::Sequential);
+        assert_eq!(
+            parse_sched_mode(" pipelined:4 ").unwrap(),
+            SchedulerMode::Pipelined { lanes: 4 }
+        );
+        assert_eq!(parse_sched_mode("streaming").unwrap(), SchedulerMode::streaming());
+        if std::env::var("ACTS_LANES").is_err() {
+            assert_eq!(
+                parse_sched_mode("pipelined").unwrap(),
+                SchedulerMode::Pipelined { lanes: 2 }
+            );
+        }
+        let bads = [
+            "",
+            "stream",
+            "Sequential",
+            "pipelined:",
+            "pipelined:0",
+            "pipelined:two",
+            "streaming:4",
+        ];
+        for bad in bads {
+            let err = parse_sched_mode(bad).unwrap_err().to_string();
+            assert!(err.contains("ACTS_SCHED_MODE"), "{bad}: {err}");
+            assert!(
+                err.contains("sequential, pipelined, pipelined:<lanes>, streaming"),
+                "{bad}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn default_mode_is_the_lane_pipeline_when_env_is_clear() {
+        if std::env::var("ACTS_SCHED_MODE").is_err() && std::env::var("ACTS_LANES").is_err() {
+            assert_eq!(SchedulerMode::default(), SchedulerMode::Pipelined { lanes: 2 });
+        }
+    }
+
+    #[test]
+    fn mode_descriptions_name_the_concurrency() {
+        assert_eq!(SchedulerMode::Sequential.describe(), "sequential");
+        // the fleet header greps for "<n> lanes" in CI: pin the spelling
+        assert_eq!(SchedulerMode::Pipelined { lanes: 4 }.describe(), "4 lanes");
+        let desc = SchedulerMode::streaming().describe();
+        assert!(desc.contains("streaming"), "{desc}");
+        assert!(desc.contains("256 rows"), "{desc}");
+        assert!(desc.contains("auto workers"), "{desc}");
     }
 }

@@ -11,8 +11,13 @@
 //!    baseline test, a round of [`ProposedTest`]s, or nothing
 //!    ([`Round::Done`]).
 //! 2. the driver executes the round against the session's manipulator
-//!    (alone, or coalesced with other sessions' rounds — see
-//!    [`crate::tuner::Scheduler`]);
+//!    (alone, coalesced with other sessions' rounds at a tick barrier,
+//!    or streamed through the continuously-draining submission queue —
+//!    see [`crate::tuner::Scheduler`]; the poll-style protocol is what
+//!    makes all three drivers equivalent: `next_round` is idempotent
+//!    and the rng advances only when a round is actually formed, so a
+//!    session can't observe *when* its round executes, only that its
+//!    own stage → execute → absorb cycle stays strict);
 //! 3. [`TuningSession::absorb`] / [`TuningSession::absorb_baseline`] —
 //!    fold the results back: charge budget, update records/best, tell
 //!    the optimizer, track the failure cap.

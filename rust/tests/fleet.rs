@@ -235,6 +235,50 @@ fn fleet_cells_are_lane_invariant_on_the_real_surface() {
 }
 
 #[test]
+fn streaming_fleet_matches_sequential_on_the_real_surface() {
+    // the streaming tentpole end-to-end: the same mixed matrix through
+    // the continuously-draining submission queue must produce per-cell
+    // records bit-identical to the sequential scheduler on the native
+    // backend — and actually overlap executes (peak in-flight > 1,
+    // every flush accounted by exactly one cause)
+    let lab = native_lab();
+    let matrix = Matrix {
+        suts: vec!["mysql".into(), "tomcat".into()],
+        optimizers: vec!["rrs".into(), "gp".into()],
+        seeds: vec![21, 22],
+        base: TuningConfig { budget: Budget::tests(9), round_size: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let run = |mode: SchedulerMode| {
+        Fleet::compile_with_mode(&lab, matrix.expand().unwrap(), mode).unwrap().run()
+    };
+    let sequential = run(SchedulerMode::Sequential);
+    let streaming = run(SchedulerMode::streaming());
+    for (a, b) in sequential.cells.iter().zip(&streaming.cells) {
+        assert_eq!(a.label, b.label);
+        let (a, b) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+        assert_eq!(a.records, b.records, "streaming changed a cell's records");
+        assert_eq!(a.tests_used, b.tests_used);
+        assert_eq!(a.sim_seconds, b.sim_seconds);
+        assert_eq!(a.stopped, b.stopped);
+    }
+    // the barriered reference run leaves the streaming telemetry at 0
+    assert_eq!(sequential.coalescing.flushes_by_size, 0);
+    assert_eq!(sequential.coalescing.flushes_by_timeout, 0);
+    // the streaming run flushed every round it executed (the shared
+    // native engine is the fleet's only engine, so every flush lands
+    // on its counters) and overlapped submitted rounds
+    let flushes =
+        streaming.coalescing.flushes_by_size + streaming.coalescing.flushes_by_timeout;
+    assert!(flushes >= 1, "streaming executed without recording a flush");
+    assert!(
+        streaming.coalescing.peak_inflight >= 2,
+        "8 sessions streamed with peak in-flight {} — no overlap",
+        streaming.coalescing.peak_inflight
+    );
+}
+
+#[test]
 fn initial_unit_spec_starts_from_that_configuration() {
     let lab = native_lab();
     let spec = sut::mysql();
@@ -322,6 +366,50 @@ fn chaos_fleet_retries_to_bit_identical_results() {
 }
 
 #[test]
+fn chaos_fleet_completes_under_streaming() {
+    // streaming races worker threads for chaos execute indices, so the
+    // per-index fault pattern is not reproducible run-to-run — the
+    // contract here is containment, not bit-identity (that stronger
+    // check stays pinned to sequential mode above): with a generous
+    // retry budget every cell must still finish, the retry machinery
+    // must fire through the overlapped path, and the drill must leave
+    // no deadline-kill orphans behind
+    let matrix = Matrix {
+        suts: vec!["mysql".into(), "tomcat".into()],
+        optimizers: vec!["rrs".into()],
+        seeds: vec![41, 42],
+        base: TuningConfig {
+            budget: Budget::tests(BUDGET),
+            round_size: ROUND,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let lab = chaos_lab(FaultPlan::transient(7, 0.1));
+    lab.engine
+        .set_retry_policy(Some(RetryPolicy { max_attempts: 6, ..RetryPolicy::default() }));
+    let report =
+        Fleet::compile_with_mode(&lab, matrix.expand().unwrap(), SchedulerMode::streaming())
+            .unwrap()
+            .run();
+    for cell in &report.cells {
+        let out = cell
+            .outcome
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{}: cell lost under streaming chaos: {e}", cell.label));
+        assert_eq!(
+            out.stopped,
+            StopCause::Exhausted(acts::budget::BudgetDim::Tests),
+            "{}",
+            cell.label
+        );
+        assert_eq!(out.tests_used, BUDGET, "{}", cell.label);
+    }
+    assert!(report.coalescing.retries >= 1, "the drill injected nothing");
+    assert_eq!(report.coalescing.deadline_kills, 0);
+}
+
+#[test]
 fn panicking_execute_quarantines_its_session_across_all_modes() {
     // one session's engine panics on every post-baseline execute; in
     // every scheduler mode the victim must be quarantined after 3
@@ -356,6 +444,7 @@ fn panicking_execute_quarantines_its_session_across_all_modes() {
         SchedulerMode::Pipelined { lanes: 2 },
         SchedulerMode::Pipelined { lanes: 4 },
         SchedulerMode::Pipelined { lanes: 8 },
+        SchedulerMode::streaming(),
     ] {
         // fresh victim engine per mode: execute 0 (the baseline) is
         // clean, every later execute panics mid-call
