@@ -11,6 +11,10 @@
 //!   the engine `RetryPolicy` off vs on (the policy engages only on
 //!   `Err`, so its hot-path cost is a policy read plus stat bumps),
 //!   gated at <= 5% and recorded as `retry_overhead_frac`;
+//! * native SIMD dispatch: wide-batch (B=1024) row evaluation on
+//!   explicitly pinned single-thread native backends — the scalar loop
+//!   vs the AVX2 f32x8 kernel — gated ≥2x on AVX2 hosts and recorded
+//!   as `simd_speedup_vs_scalar` + `native_simd_dispatch`;
 //! * whole tuning sessions, sequential (`tune`, one B=1 engine call per
 //!   staged test) vs batched (`tune_batched`, one bucketed call per
 //!   round) — the batched-pipeline acceptance gate (backend-scaled: the
@@ -131,6 +135,70 @@ fn main() {
             "fault-free retry-policy overhead: {:.2}% (off {off:.0} -> on {on:.0} configs/s, gate <= 5%)",
             retry_overhead_frac * 100.0
         );
+    }
+
+    // native SIMD dispatch: the same wide batch through two explicitly
+    // pinned single-thread native backends — the scalar loop vs the
+    // AVX2 f32x8 kernel. Single-threaded so this is a pure kernel
+    // comparison; gated >= 2x (after the json dump) on AVX2 hosts.
+    let simd_speedup_vs_scalar;
+    let native_dispatch;
+    {
+        use acts::runtime::{NativeBackend, SimdMode};
+        let wide: usize = 1024;
+        let (c16, w, e, params) = golden::pattern_call(16);
+        let mut big: Vec<Vec<f32>> = Vec::new();
+        while big.len() < wide {
+            big.extend(c16.iter().cloned());
+        }
+        big.truncate(wide);
+        let scalar = Engine::from_backend(Box::new(
+            NativeBackend::with_options(1, SimdMode::Scalar).expect("scalar backend"),
+        ));
+        let p_scalar = scalar.prepare(&params, &w, &e).unwrap();
+        b.bench_units(
+            format!("evaluate B={wide} (native scalar, 1 thread)"),
+            Some(wide as f64),
+            || {
+                black_box(scalar.evaluate_prepared(&p_scalar, &big).unwrap());
+            },
+        );
+        if acts::runtime::simd::avx2_available() {
+            let vector = Engine::from_backend(Box::new(
+                NativeBackend::with_options(1, SimdMode::Avx2).expect("avx2 backend"),
+            ));
+            let p_vector = vector.prepare(&params, &w, &e).unwrap();
+            b.bench_units(
+                format!("evaluate B={wide} (native avx2, 1 thread)"),
+                Some(wide as f64),
+                || {
+                    black_box(vector.evaluate_prepared(&p_vector, &big).unwrap());
+                },
+            );
+            native_dispatch = "avx2";
+        } else {
+            println!("native SIMD: no AVX2+FMA on this host; scalar only (speedup row skipped)");
+            native_dispatch = "scalar";
+        }
+        let rate = |needle: &str| {
+            b.results()
+                .iter()
+                .find(|r| r.name.contains(needle))
+                .and_then(|r| r.units_per_sec())
+                .unwrap_or(0.0)
+        };
+        let scalar_rate = rate("native scalar");
+        let vector_rate = rate("native avx2");
+        simd_speedup_vs_scalar = if scalar_rate > 0.0 && vector_rate > 0.0 {
+            vector_rate / scalar_rate
+        } else {
+            0.0
+        };
+        if native_dispatch == "avx2" {
+            println!(
+                "simd speedup vs scalar at B={wide}: {simd_speedup_vs_scalar:.2}x (gate >= 2x)"
+            );
+        }
     }
 
     // whole tuning sessions on the simulated MySQL: the sequential
@@ -410,6 +478,8 @@ fn main() {
     let json = b.json(vec![
         ("platform", Json::Str(engine.platform())),
         ("backend", Json::Str(engine.backend_name().to_string())),
+        ("native_simd_dispatch", Json::Str(native_dispatch.to_string())),
+        ("simd_speedup_vs_scalar", Json::Num(simd_speedup_vs_scalar)),
         ("session_speedup_batched_vs_sequential", Json::Num(speedup)),
         ("scheduler_speedup_8x32_vs_sequential", Json::Num(sched_speedup)),
         ("pipeline_speedup_vs_sequential_scheduler", Json::Num(pipeline_speedup)),
@@ -467,4 +537,12 @@ fn main() {
         streaming_speedup >= 1.3,
         "streaming speedup {streaming_speedup:.2}x over the pipelined scheduler below the 1.3x acceptance gate"
     );
+    // the SIMD gate only binds where the AVX2 path actually ran;
+    // scalar-only hosts record dispatch=scalar and speedup=0 instead
+    if native_dispatch == "avx2" {
+        assert!(
+            simd_speedup_vs_scalar >= 2.0,
+            "SIMD speedup {simd_speedup_vs_scalar:.2}x below the 2x wide-batch acceptance gate"
+        );
+    }
 }

@@ -108,7 +108,7 @@ fn fleet_lab(args: &Args, base: &TuningConfig) -> acts::Result<Lab> {
                 ));
             }
             let plan = FaultPlan::transient(args.get_u64("chaos-seed", 1), p);
-            let chaos = ChaosBackend::new(Box::new(NativeBackend::new()), plan);
+            let chaos = ChaosBackend::new(Box::new(NativeBackend::new()?), plan);
             Lab { engine: Arc::new(Engine::from_backend(Box::new(chaos))) }
         }
     };
@@ -152,6 +152,7 @@ fn run(args: &Args) -> acts::Result<()> {
     tuner::lanes_from_env()?;
     tuner::sched_mode_from_env()?;
     acts::runtime::native::native_threads_from_env()?;
+    acts::runtime::simd::native_simd_from_env()?;
     match args.command.as_str() {
         "" | "help" => {
             print!("{}", HELP);
@@ -184,17 +185,22 @@ fn cmd_list(args: &Args) -> acts::Result<()> {
             "samplers" => Ok(acts::sampling::SAMPLER_NAMES),
             "budgets" => Ok(Budget::NAME_PATTERNS),
             other => Err(acts::ActsError::InvalidArg(format!(
-                "unknown registry `{other}` (suts|workloads|deployments|optimizers|samplers|budgets)"
+                "unknown registry `{other}` \
+                 (backends|suts|workloads|deployments|optimizers|samplers|budgets)"
             ))),
         }
     };
     match args.positional.first() {
+        Some(kind) if kind.as_str() == "backends" => print_backends(),
         Some(kind) => {
             for name in registry(kind)? {
                 println!("{name}");
             }
         }
         None => {
+            let backend_names: Vec<&str> = BackendKind::ALL.iter().map(|k| k.as_str()).collect();
+            println!("backends:    {}", backend_names.join(", "));
+            println!("             (`acts list backends` probes availability and SIMD)");
             println!("SUTs:        {}", SUT_NAMES.join(", "));
             println!("             (stacks compose with `+`, e.g. --sut frontend+mysql)");
             println!("workloads:   {}", WorkloadSpec::NAMES.join(", "));
@@ -205,6 +211,31 @@ fn cmd_list(args: &Args) -> acts::Result<()> {
         }
     }
     Ok(())
+}
+
+/// `acts list backends` — probe every registered [`BackendKind`] (the
+/// registry const, not a hand-maintained list) and report what it
+/// resolves to on this host: registry name, platform string, SIMD lane
+/// width. Finishes with the detected native SIMD capability.
+fn print_backends() {
+    for kind in BackendKind::ALL {
+        match Lab::with_backend(kind) {
+            Ok(lab) => println!(
+                "{:<8} -> {} [{}] simd_width={}",
+                kind.as_str(),
+                lab.engine.backend_name(),
+                lab.engine.platform(),
+                lab.engine.stats().simd_width
+            ),
+            Err(err) => println!("{:<8} -> unavailable ({err})", kind.as_str()),
+        }
+    }
+    let capability = if acts::runtime::simd::avx2_available() {
+        "avx2+fma detected"
+    } else {
+        "scalar only (no AVX2+FMA)"
+    };
+    println!("native SIMD capability: {capability}; pin with ACTS_NATIVE_SIMD=auto|avx2|scalar");
 }
 
 fn cmd_tune(args: &Args) -> acts::Result<()> {
@@ -398,6 +429,7 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         "engine streaming: {} size flushes, {} timeout flushes, peak {} rounds in flight",
         c.flushes_by_size, c.flushes_by_timeout, c.peak_inflight
     );
+    println!("engine dispatch: {} (simd width {})", lab.engine.platform(), c.simd_width);
     if let Some(path) = args.get_opt("json") {
         std::fs::write(path, report.json().to_string())
             .map_err(|e| acts::ActsError::io(path, e))?;
@@ -554,7 +586,9 @@ USAGE:
 COMMANDS:
     list [kind]  show registered SUTs, workloads, deployments, optimizers;
                  `acts list suts` (workloads|deployments|optimizers|
-                 samplers|budgets) prints one registry, one name per line
+                 samplers|budgets) prints one registry, one name per line;
+                 `acts list backends` probes each backend kind on this
+                 host: availability, platform string, SIMD lane width
     tune         run a tuning session (batched rounds; --round-size 1
                  for the sequential reference protocol)
                    --sut <name|a+b>   (mysql)        --workload <name> (zipfian-rw)
@@ -629,7 +663,11 @@ COMMANDS:
 Backends: `pjrt` executes the AOT artifacts (loaded from ./artifacts,
 override: ACTS_ARTIFACTS); `native` is the pure-std CPU evaluator of the
 same surface and runs anywhere; `auto` (default, also via ACTS_BACKEND)
-prefers pjrt and falls back to native.
+prefers pjrt and falls back to native. The native row evaluator picks
+its SIMD path once at construction — ACTS_NATIVE_SIMD=auto|avx2|scalar
+(default auto: AVX2+FMA when detected). Each path is bitwise
+deterministic and batch-size invariant; pin `scalar` to reproduce the
+committed golden oracle bitwise on any host.
 
 Scheduler: sessions run on an N-lane work-stealing pipeline (lanes via
 --lanes / ACTS_LANES, default 2); per-session results are bit-identical
@@ -643,6 +681,6 @@ rounds running is quarantined (`stopped by quarantined`) while its
 fleet-mates continue undisturbed.
 
 Environment: malformed ACTS_BACKEND / ACTS_LANES / ACTS_SCHED_MODE /
-ACTS_NATIVE_THREADS values fail at startup with an error naming the
-variable and its accepted values.
+ACTS_NATIVE_THREADS / ACTS_NATIVE_SIMD values fail at startup with an
+error naming the variable and its accepted values.
 ";

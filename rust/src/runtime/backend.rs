@@ -96,6 +96,17 @@ pub trait ExecBackend: Send + Sync {
     /// Human-readable platform description (diagnostics).
     fn platform(&self) -> String;
 
+    /// f32 lanes the backend's row evaluator processes per step — a
+    /// property of the backend's construction-time dispatch, not a
+    /// counter. 1 means scalar (the default for every backend that
+    /// doesn't vectorize); the native AVX2 path reports 8. Surfaced in
+    /// [`crate::runtime::engine::EngineStats`] and the fleet JSON so
+    /// numeric drift across runs can be attributed to a dispatch
+    /// change.
+    fn simd_width(&self) -> u64 {
+        1
+    }
+
     /// Upload/premix the constant inputs of one binding. `w` and `e`
     /// are already width-validated by the engine; `params` is
     /// block-validated.
@@ -151,6 +162,11 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Every backend kind, in registry order — the single source the
+    /// CLI's `acts list backends` and the round-trip tests iterate, so
+    /// adding a kind here is the whole registry change.
+    pub const ALL: [BackendKind; 3] = [BackendKind::Auto, BackendKind::Pjrt, BackendKind::Native];
+
     /// Parse a CLI/env spelling.
     pub fn parse(s: &str) -> Option<BackendKind> {
         match s.trim().to_ascii_lowercase().as_str() {
@@ -203,8 +219,33 @@ mod tests {
 
     #[test]
     fn backend_kind_round_trips_registry_names() {
-        for kind in [BackendKind::Auto, BackendKind::Pjrt, BackendKind::Native] {
+        for kind in BackendKind::ALL {
             assert_eq!(BackendKind::parse(kind.as_str()), Some(kind));
         }
+    }
+
+    #[test]
+    fn simd_width_defaults_to_scalar() {
+        struct Plain;
+        impl ExecBackend for Plain {
+            fn name(&self) -> &'static str {
+                "plain"
+            }
+            fn platform(&self) -> String {
+                "plain".into()
+            }
+            fn prepare(
+                &self,
+                _params: &SurfaceParams,
+                _w: &[f32],
+                _e: &[f32],
+            ) -> Result<Box<dyn PreparedData>> {
+                Err(ActsError::InvalidArg("unused".into()))
+            }
+            fn execute(&self, _prepared: &dyn PreparedData, _rows: &[&[f32]]) -> Result<Execution> {
+                Err(ActsError::InvalidArg("unused".into()))
+            }
+        }
+        assert_eq!(Plain.simd_width(), 1);
     }
 }

@@ -221,6 +221,11 @@ impl ExecBackend for ChaosBackend {
         format!("chaos(seed={}) over {}", self.plan.seed, self.inner.platform())
     }
 
+    fn simd_width(&self) -> u64 {
+        // faults don't change the evaluator: report the wrapped path
+        self.inner.simd_width()
+    }
+
     fn prepare(
         &self,
         params: &SurfaceParams,
@@ -358,12 +363,11 @@ mod tests {
 
     #[test]
     fn chaos_backend_passes_clean_executes_through_bitwise() {
-        let clean = Engine::native();
-        let chaotic =
-            Engine::from_backend(Box::new(ChaosBackend::new(
-                Box::new(NativeBackend::new()),
-                FaultPlan::seeded(1),
-            )));
+        let clean = Engine::native().unwrap();
+        let chaotic = Engine::from_backend(Box::new(ChaosBackend::new(
+            Box::new(NativeBackend::new().unwrap()),
+            FaultPlan::seeded(1),
+        )));
         let (configs, w, e, params) = crate::runtime::golden::pattern_call(8);
         let want = clean.evaluate(&params, &w, &e, &configs).unwrap();
         let got = chaotic.evaluate(&params, &w, &e, &configs).unwrap();
@@ -373,7 +377,7 @@ mod tests {
     #[test]
     fn chaos_backend_injects_and_counts_transients() {
         let plan = FaultPlan::transient(11, 1.0); // every execute fails
-        let backend = ChaosBackend::new(Box::new(NativeBackend::new()), plan);
+        let backend = ChaosBackend::new(Box::new(NativeBackend::new().unwrap()), plan);
         let (configs, w, e, params) = crate::runtime::golden::pattern_call(2);
         let prepared = backend.prepare(&params, &w, &e).unwrap();
         let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
@@ -386,7 +390,7 @@ mod tests {
     #[test]
     fn chaos_submit_numbers_and_injects_exactly_like_execute() {
         let plan = FaultPlan::transient(11, 1.0); // every call fails
-        let backend = ChaosBackend::new(Box::new(NativeBackend::new()), plan);
+        let backend = ChaosBackend::new(Box::new(NativeBackend::new().unwrap()), plan);
         let (configs, w, e, params) = crate::runtime::golden::pattern_call(2);
         let prepared = backend.prepare(&params, &w, &e).unwrap();
         let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
@@ -401,8 +405,8 @@ mod tests {
     #[test]
     fn chaos_submit_passes_clean_calls_through_bitwise() {
         let backend =
-            ChaosBackend::new(Box::new(NativeBackend::new()), FaultPlan::seeded(1));
-        let clean = NativeBackend::new();
+            ChaosBackend::new(Box::new(NativeBackend::new().unwrap()), FaultPlan::seeded(1));
+        let clean = NativeBackend::new().unwrap();
         let (configs, w, e, params) = crate::runtime::golden::pattern_call(4);
         let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
         let chaos_prep = backend.prepare(&params, &w, &e).unwrap();

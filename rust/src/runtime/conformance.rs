@@ -1,0 +1,210 @@
+//! The backend conformance suite: the reusable checklist any
+//! [`ExecBackend`] must pass — the paved road for future GPU / real-
+//! PJRT backends, promoted out of the scattered per-backend golden
+//! tests.
+//!
+//! Each check is a standalone function taking a `label` (so a failed
+//! assertion names the backend under test) and the backend; `run_suite`
+//! strings the standard checklist together. The integration harness in
+//! `rust/tests/conformance.rs` instantiates the suite for
+//! native-scalar, native-simd, chaos-wrapping-native (a zero-fault
+//! plan must be transparent) and the PJRT stub (skip-loudly).
+//!
+//! The contracts, in suite order:
+//!
+//! 1. **Golden-oracle parity** — outputs match the committed numpy
+//!    reference within the repo-wide tolerances (`1e-3 * (1 + |want|)`
+//!    by default, the same scheme as `rust/tests/runtime_golden.rs`).
+//! 2. **Bitwise batch-size invariance** — a row's result is identical
+//!    whether evaluated alone, in a prefix, or in a full batch. This is
+//!    what lets the scheduler coalesce, pipeline and stream without
+//!    changing results.
+//! 3. **Bitwise run-to-run determinism** — repeated prepare/execute
+//!    over identical inputs reproduce every bit (checkpoint/resume
+//!    identity depends on it).
+//! 4. **Cost accounting** — `execute_calls` / `rows_executed` are
+//!    populated sanely; backends that promise one-call-no-padding
+//!    batches (native) are held to it exactly.
+//! 5. **Foreign-`PreparedData` rejection** — constants prepared by a
+//!    different backend are an error, never misinterpreted memory.
+//!
+//! Pairwise identity between two *instances* of the same path (solo vs
+//! threaded, bare vs chaos-wrapped) is [`check_pairwise_identity`],
+//! invoked by the harness where the pairing makes sense.
+
+use super::backend::{ExecBackend, PreparedData};
+use super::engine::Perf;
+use super::golden;
+use std::any::Any;
+use std::path::{Path, PathBuf};
+
+/// Knobs for [`run_suite`].
+pub struct SuiteOptions {
+    /// Golden oracle file to check parity against (`None` skips the
+    /// parity check — the other contracts are still enforced).
+    pub golden: Option<PathBuf>,
+    /// Relative tolerance for golden parity, applied as
+    /// `|got - want| < tol * (1 + |want|)`.
+    pub golden_rel_tol: f64,
+    /// Hold the backend to exactly one physical call and zero padding
+    /// per batch (true for native; PJRT's bucket planner may split and
+    /// pad).
+    pub exact_cost: bool,
+}
+
+impl Default for SuiteOptions {
+    fn default() -> Self {
+        SuiteOptions { golden: None, golden_rel_tol: 1e-3, exact_cost: false }
+    }
+}
+
+/// Prepare the patterned binding and execute its `b` rows.
+fn eval_pattern(backend: &dyn ExecBackend, b: usize) -> Vec<Perf> {
+    let (configs, w, e, params) = golden::pattern_call(b);
+    let prepared = backend.prepare(&params, &w, &e).expect("prepare");
+    let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+    backend.execute(prepared.as_ref(), &rows).expect("execute").perfs
+}
+
+/// Contract 1: outputs match the committed golden oracle within
+/// `rel_tol * (1 + |want|)` for every batch size the oracle records.
+pub fn check_golden_parity(label: &str, backend: &dyn ExecBackend, path: &Path, rel_tol: f64) {
+    let cases = golden::parse_golden(path).expect("golden oracle parses");
+    assert!(!cases.is_empty(), "{label}: golden oracle {} is empty", path.display());
+    for case in &cases {
+        let perfs = eval_pattern(backend, case.b);
+        assert_eq!(perfs.len(), case.b, "{label}: row count for b={}", case.b);
+        for (i, p) in perfs.iter().enumerate() {
+            let (wt, wl) = (case.thr[i], case.lat[i]);
+            assert!(
+                (p.throughput - wt).abs() < rel_tol * (1.0 + wt.abs()),
+                "{label}: thr[{i}] at b={}: {} vs oracle {wt}",
+                case.b,
+                p.throughput
+            );
+            assert!(
+                (p.latency - wl).abs() < rel_tol * (1.0 + wl.abs()),
+                "{label}: lat[{i}] at b={}: {} vs oracle {wl}",
+                case.b,
+                p.latency
+            );
+        }
+    }
+}
+
+/// Contract 2: a row's result is bitwise identical alone, in a prefix,
+/// and in a full batch.
+pub fn check_batch_invariance(label: &str, backend: &dyn ExecBackend) {
+    let (configs, w, e, params) = golden::pattern_call(16);
+    let prepared = backend.prepare(&params, &w, &e).expect("prepare");
+    let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+    let all = backend.execute(prepared.as_ref(), &rows).expect("execute").perfs;
+    for (i, row) in rows.iter().enumerate() {
+        let one = backend.execute(prepared.as_ref(), &[row]).expect("execute").perfs;
+        assert_eq!(one[0], all[i], "{label}: row {i} must be batch-size invariant bitwise");
+    }
+    let prefix = backend.execute(prepared.as_ref(), &rows[..7]).expect("execute").perfs;
+    assert_eq!(&prefix[..], &all[..7], "{label}: a prefix batch must match bitwise");
+}
+
+/// Contract 3: independent prepare/execute rounds over identical
+/// inputs reproduce every bit — both the premix and the row loop.
+pub fn check_determinism(label: &str, backend: &dyn ExecBackend) {
+    let (configs, w, e, params) = golden::pattern_call(16);
+    let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+    let p1 = backend.prepare(&params, &w, &e).expect("prepare");
+    let p2 = backend.prepare(&params, &w, &e).expect("prepare");
+    let a = backend.execute(p1.as_ref(), &rows).expect("execute").perfs;
+    let b = backend.execute(p1.as_ref(), &rows).expect("execute").perfs;
+    let c = backend.execute(p2.as_ref(), &rows).expect("execute").perfs;
+    assert_eq!(a, b, "{label}: repeated execute must be bitwise deterministic");
+    assert_eq!(a, c, "{label}: repeated prepare must be bitwise deterministic");
+}
+
+/// Two instances that claim the same evaluation path (solo vs
+/// threaded, bare vs zero-fault chaos wrapper) must agree bitwise,
+/// below and above any internal parallelism threshold.
+pub fn check_pairwise_identity(label: &str, a: &dyn ExecBackend, b: &dyn ExecBackend) {
+    let (configs, w, e, params) = golden::pattern_call(16);
+    let mut big: Vec<Vec<f32>> = Vec::new();
+    while big.len() < 300 {
+        big.extend(configs.iter().cloned());
+    }
+    big.truncate(300);
+    for take in [1usize, 16, 300] {
+        let rows: Vec<&[f32]> = big.iter().take(take).map(|c| c.as_slice()).collect();
+        let pa = a.prepare(&params, &w, &e).expect("prepare");
+        let pb = b.prepare(&params, &w, &e).expect("prepare");
+        let ra = a.execute(pa.as_ref(), &rows).expect("execute").perfs;
+        let rb = b.execute(pb.as_ref(), &rows).expect("execute").perfs;
+        assert_eq!(ra, rb, "{label}: instances diverged at batch size {take}");
+    }
+}
+
+/// Contract 4: the physical-cost report is sane; `exact` additionally
+/// holds the backend to one call and zero padding per batch.
+pub fn check_cost_accounting(label: &str, backend: &dyn ExecBackend, exact: bool) {
+    let (configs, w, e, params) = golden::pattern_call(10);
+    let prepared = backend.prepare(&params, &w, &e).expect("prepare");
+    let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+    let out = backend.execute(prepared.as_ref(), &rows).expect("execute");
+    assert_eq!(out.perfs.len(), 10, "{label}: one Perf per requested row");
+    assert!(out.execute_calls >= 1, "{label}: at least one physical call");
+    assert!(out.rows_executed >= 10, "{label}: padding can only add rows");
+    if exact {
+        assert_eq!(out.execute_calls, 1, "{label}: one batch must be one physical call");
+        assert_eq!(out.rows_executed, 10, "{label}: this backend must never pad");
+    }
+}
+
+/// Contract 5: constants prepared by a different backend are an error.
+pub fn check_foreign_prepared_rejection(label: &str, backend: &dyn ExecBackend) {
+    struct ForeignPrepared;
+    impl PreparedData for ForeignPrepared {
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+    }
+    let (configs, ..) = golden::pattern_call(1);
+    let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+    assert!(
+        backend.execute(&ForeignPrepared, &rows).is_err(),
+        "{label}: foreign PreparedData must be rejected, never misinterpreted"
+    );
+}
+
+/// The standard checklist (contracts 1–5 above, golden parity only
+/// when [`SuiteOptions::golden`] is set).
+pub fn run_suite(label: &str, backend: &dyn ExecBackend, opts: &SuiteOptions) {
+    if let Some(path) = &opts.golden {
+        check_golden_parity(label, backend, path, opts.golden_rel_tol);
+    }
+    check_batch_invariance(label, backend);
+    check_determinism(label, backend);
+    check_cost_accounting(label, backend, opts.exact_cost);
+    check_foreign_prepared_rejection(label, backend);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::NativeBackend;
+    use crate::runtime::simd::SimdMode;
+
+    /// The suite's own plumbing, exercised on the always-available
+    /// scalar backend (the full per-backend instantiations live in the
+    /// conformance integration test).
+    #[test]
+    fn suite_passes_on_native_scalar() {
+        let backend = NativeBackend::with_options(1, SimdMode::Scalar).unwrap();
+        let opts = SuiteOptions { exact_cost: true, ..SuiteOptions::default() };
+        run_suite("native-scalar (unit)", &backend, &opts);
+    }
+
+    #[test]
+    fn pairwise_identity_covers_thread_counts() {
+        let solo = NativeBackend::with_options(1, SimdMode::Scalar).unwrap();
+        let multi = NativeBackend::with_options(4, SimdMode::Scalar).unwrap();
+        check_pairwise_identity("native-scalar solo-vs-threaded (unit)", &solo, &multi);
+    }
+}

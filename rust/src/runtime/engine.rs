@@ -210,6 +210,11 @@ pub struct EngineStats {
     /// running at the time of the [`Engine::stats`] read (a live gauge,
     /// not a cumulative counter). Bounded by the engine's orphan cap.
     pub live_orphans: u64,
+    /// SIMD lane width of the backend's row evaluator (1 = scalar; 8 =
+    /// the native AVX2 f32x8 path). A property of the backend's
+    /// construction-time dispatch, not a counter — surfaced so numeric
+    /// drift across runs can be attributed to a dispatch change.
+    pub simd_width: u64,
 }
 
 /// Retry/deadline policy for backend executes (see
@@ -339,9 +344,12 @@ impl Engine {
     }
 
     /// Engine over the pure-`std` native CPU backend — no artifacts, no
-    /// XLA binding; runs anywhere.
-    pub fn native() -> Engine {
-        Engine::from_backend(Box::new(super::native::NativeBackend::new()))
+    /// XLA binding; runs anywhere. Fails when `ACTS_NATIVE_THREADS` or
+    /// `ACTS_NATIVE_SIMD` is set to something unusable (a typo must not
+    /// silently run at a different parallelism or evaluator path, on
+    /// any construction path — CLI, benches, `Lab::for_config`).
+    pub fn native() -> Result<Engine> {
+        Ok(Engine::from_backend(Box::new(super::native::NativeBackend::new()?)))
     }
 
     /// Resolve a [`BackendKind`] into an engine: `Pjrt` loads the
@@ -351,14 +359,14 @@ impl Engine {
     pub fn from_kind(kind: BackendKind, artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
         match kind {
             BackendKind::Pjrt => Engine::load(artifacts_dir),
-            BackendKind::Native => Ok(Engine::native()),
+            BackendKind::Native => Engine::native(),
             BackendKind::Auto => match Engine::load(artifacts_dir) {
                 Ok(engine) => Ok(engine),
                 Err(err) => {
                     eprintln!(
                         "acts: PJRT backend unavailable ({err}); using the native CPU backend"
                     );
-                    Ok(Engine::native())
+                    Engine::native()
                 }
             },
         }
@@ -395,6 +403,7 @@ impl Engine {
                 .iter()
                 .filter(|h| !h.is_finished())
                 .count() as u64,
+            simd_width: self.backend.simd_width(),
         }
     }
 
@@ -873,7 +882,7 @@ mod tests {
     // everything below runs anywhere.)
 
     fn native_engine() -> Engine {
-        Engine::native()
+        Engine::native().expect("native engine")
     }
 
     #[test]
@@ -958,7 +967,8 @@ mod tests {
     use crate::runtime::native::NativeBackend;
 
     fn chaos_engine(plan: FaultPlan) -> Engine {
-        Engine::from_backend(Box::new(ChaosBackend::new(Box::new(NativeBackend::new()), plan)))
+        let native = NativeBackend::new().expect("native backend");
+        Engine::from_backend(Box::new(ChaosBackend::new(Box::new(native), plan)))
     }
 
     #[test]

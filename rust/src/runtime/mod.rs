@@ -24,6 +24,14 @@
 //!   according to a seeded [`chaos::FaultPlan`] (transient/persistent
 //!   errors, latency spikes, hangs, panics) — the harness behind the
 //!   fault-tolerance tests and the CI chaos smoke.
+//! * [`simd`] — SIMD dispatch for the native backend: the AVX2+FMA
+//!   f32x8 row kernel, `ACTS_NATIVE_SIMD` mode parsing, and the
+//!   construction-time [`simd::Dispatch`] resolution that keeps
+//!   per-row results bitwise batch-invariant and deterministic.
+//! * [`conformance`] — the reusable backend conformance suite: the
+//!   checklist (golden parity, bitwise invariance/determinism, cost
+//!   accounting, foreign-prepared rejection) any [`backend::ExecBackend`]
+//!   — including future GPU/real-PJRT ones — must pass.
 //! * [`shapes`] — the artifact input table, mirroring
 //!   `python/compile/model.py::INPUT_SPEC` (kept in sync by the golden
 //!   integration test).
@@ -33,16 +41,20 @@
 
 pub mod backend;
 pub mod chaos;
+pub mod conformance;
 pub mod engine;
 pub mod golden;
 pub mod native;
 pub mod pjrt;
 pub mod shapes;
+pub mod simd;
 
 pub use backend::{BackendKind, ExecBackend, PendingExecution};
 pub use chaos::{ChaosBackend, ChaosStats, Fault, FaultPlan};
+pub use conformance::SuiteOptions;
 pub use engine::{
     Engine, EngineStats, EvalRequest, Perf, PreparedCall, RetryPolicy, SurfaceParams,
 };
 pub use native::NativeBackend;
 pub use shapes::{BUCKETS, D_PAD, E_DIM, G, J, R, RG, W_DIM};
+pub use simd::{Dispatch, SimdMode};

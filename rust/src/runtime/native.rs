@@ -20,8 +20,18 @@
 //!   `lat = lat0 + lat1 / (1 + thr / t_sat)`.
 //!
 //! Per-row results are exactly batch-size independent (each row is a
-//! separate scalar computation), which is what the scheduler's
-//! coalescing and pipelining equivalence tests rely on bitwise.
+//! separate computation), which is what the scheduler's coalescing and
+//! pipelining equivalence tests rely on bitwise.
+//!
+//! # SIMD dispatch
+//!
+//! The row evaluator comes in two flavours: the portable scalar loop
+//! and an AVX2+FMA f32x8 kernel ([`super::simd`]). The path is chosen
+//! **once at construction** from `ACTS_NATIVE_SIMD` (auto | avx2 |
+//! scalar, default auto) plus feature detection, and is immutable for
+//! the backend's lifetime, so each backend instance keeps the bitwise
+//! batch-invariance and determinism contracts on whichever path it
+//! runs. `platform()` names the dispatch so drift is attributable.
 //!
 //! # Parallelism
 //!
@@ -33,6 +43,7 @@
 use super::backend::{ExecBackend, Execution, PreparedData};
 use super::engine::{Perf, SurfaceParams};
 use super::shapes::{D_PAD, E_DIM, G, R, RG, W_DIM};
+use super::simd::{self, Dispatch, SimdMode};
 use crate::error::{ActsError, Result};
 use std::any::Any;
 
@@ -60,70 +71,96 @@ pub fn native_threads_from_env() -> Result<Option<usize>> {
     }
 }
 
+/// Default worker count: `available_parallelism` capped at 8.
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
 /// Pure-`std` CPU backend (see the module docs).
 pub struct NativeBackend {
     threads: usize,
+    dispatch: Dispatch,
 }
 
 impl NativeBackend {
-    /// Backend with the default worker count (`ACTS_NATIVE_THREADS`,
-    /// else `available_parallelism` capped at 8). Constructors have no
-    /// error channel, so an unusable variable falls back to the default
-    /// here; the CLI validates it at startup
-    /// ([`native_threads_from_env`]) and rejects it with a clear error.
-    pub fn new() -> NativeBackend {
-        let threads = native_threads_from_env().ok().flatten().unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
-        });
-        NativeBackend { threads }
+    /// Backend with env-resolved options: worker count from
+    /// `ACTS_NATIVE_THREADS` (default [`default_threads`]) and SIMD
+    /// dispatch from `ACTS_NATIVE_SIMD` (default auto). An unusable
+    /// variable is an **error** on every construction path — the CLI,
+    /// the benches and `Lab::for_config` all come through here, so a
+    /// typo cannot silently run at a different parallelism or on a
+    /// different evaluator path.
+    pub fn new() -> Result<NativeBackend> {
+        let threads = native_threads_from_env()?.unwrap_or_else(default_threads);
+        let mode = simd::native_simd_from_env()?.unwrap_or_default();
+        NativeBackend::with_options(threads, mode)
     }
 
-    /// Backend with an explicit worker count (>= 1).
+    /// Backend with an explicit worker count (>= 1) and auto SIMD
+    /// dispatch (the environment is deliberately not consulted here —
+    /// explicit construction means explicit options).
     pub fn with_threads(threads: usize) -> NativeBackend {
-        NativeBackend { threads: threads.max(1) }
+        NativeBackend {
+            threads: threads.max(1),
+            dispatch: simd::resolve(SimdMode::Auto).expect("auto SIMD resolution cannot fail"),
+        }
+    }
+
+    /// Backend with an explicit worker count (>= 1) and an explicit
+    /// SIMD mode. Fails when the mode pins a path this host lacks.
+    pub fn with_options(threads: usize, mode: SimdMode) -> Result<NativeBackend> {
+        Ok(NativeBackend { threads: threads.max(1), dispatch: simd::resolve(mode)? })
     }
 
     /// Worker threads used for large batches.
     pub fn threads(&self) -> usize {
         self.threads
     }
-}
 
-impl Default for NativeBackend {
-    fn default() -> Self {
-        NativeBackend::new()
+    /// The construction-time row-evaluator dispatch.
+    pub fn dispatch(&self) -> Dispatch {
+        self.dispatch
     }
 }
 
 /// Workload/deployment-premixed constants — the native form of
-/// [`PreparedData`]. Mirrors `model.py::premix`.
-struct NativePrepared {
-    /// Basis weights, `(4, D)` row-major: `basis[c * D + d]`.
-    basis: Vec<f32>,
+/// [`PreparedData`]. Mirrors `model.py::premix`. `pub(crate)` (with
+/// block fields) so the SIMD kernel in [`super::simd`] can read the
+/// same premixed blocks the scalar loop does.
+pub(crate) struct NativePrepared {
+    /// Linear basis weights `(D,)` (split from the `(4, D)` premix at
+    /// prepare time so the row loop never re-slices).
+    pub(crate) b_lin: Vec<f32>,
+    /// Quadratic basis weights `(D,)`.
+    pub(crate) b_quad: Vec<f32>,
+    /// Hump (`sin(pi u)`) basis weights `(D,)`.
+    pub(crate) b_hump: Vec<f32>,
+    /// Step basis weights `(D,)`.
+    pub(crate) b_step: Vec<f32>,
     /// Step-basis slopes `(D,)`.
-    step_s: Vec<f32>,
+    pub(crate) step_s: Vec<f32>,
     /// Step-basis thresholds `(D,)`.
-    step_t: Vec<f32>,
+    pub(crate) step_t: Vec<f32>,
     /// Premixed interaction matrix `(D, D)` row-major.
-    q: Vec<f32>,
+    pub(crate) q: Vec<f32>,
     /// RBF centers `(J, D)` row-major.
-    centers: Vec<f32>,
+    pub(crate) centers: Vec<f32>,
     /// Per-bump squared center norms `(J,)` (hoisted out of the row loop).
-    center_norm2: Vec<f32>,
+    pub(crate) center_norm2: Vec<f32>,
     /// RBF inverse widths `(J,)`.
-    inv_rho2: Vec<f32>,
+    pub(crate) inv_rho2: Vec<f32>,
     /// Premixed bump amplitudes `(J,)`.
-    amps: Vec<f32>,
+    pub(crate) amps: Vec<f32>,
     /// Stacked cliff + gate directions `(R+G, D)` row-major.
-    dirs: Vec<f32>,
-    cliff_tau: Vec<f32>,
-    cliff_kappa: Vec<f32>,
+    pub(crate) dirs: Vec<f32>,
+    pub(crate) cliff_tau: Vec<f32>,
+    pub(crate) cliff_kappa: Vec<f32>,
     /// Premixed cliff gains `(R,)` (workload + deployment terms).
-    cliff_gain: Vec<f32>,
-    gate_tau: Vec<f32>,
-    gate_kappa: Vec<f32>,
+    pub(crate) cliff_gain: Vec<f32>,
+    pub(crate) gate_tau: Vec<f32>,
+    pub(crate) gate_kappa: Vec<f32>,
     /// Premixed gate floors `(G,)`, each in (0, 1).
-    gate_floor: Vec<f32>,
+    pub(crate) gate_floor: Vec<f32>,
     /// Deployment headroom `2 * sigmoid(e . dep_w)`, in (0, 2).
     dep: f32,
     /// Head constants [t_scale, lat0, lat1, t_sat].
@@ -137,7 +174,7 @@ impl PreparedData for NativePrepared {
 }
 
 #[inline]
-fn sigmoid(x: f32) -> f32 {
+pub(crate) fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
@@ -154,23 +191,30 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 }
 
 impl NativePrepared {
+    /// Apply the throughput/latency heads to a row's assembled score
+    /// and gate product. Shared by the scalar and SIMD paths — the
+    /// heads are scalar either way, so this block is bitwise-common.
+    pub(crate) fn heads(&self, score: f32, gate: f32) -> Perf {
+        let [t_scale, lat0, lat1, t_sat] = self.consts;
+        let thr = t_scale * softplus(score) * gate * self.dep;
+        let lat = lat0 + lat1 / (1.0 + thr / t_sat);
+        Perf { throughput: thr as f64, latency: lat as f64 }
+    }
+
     /// Evaluate one padded `[f32; D_PAD]` unit row — the scalar mirror
     /// of `kernels/ref.py::surface_core_ref` plus the model heads.
-    fn eval_row(&self, u: &[f32]) -> Perf {
+    fn eval_row_scalar(&self, u: &[f32]) -> Perf {
         let d = D_PAD;
 
         // base: per-knob basis response phi(u) . w with components
         // [u, u^2, sin(pi u), sigmoid(s (u - t))]
-        let (b_lin, rest) = self.basis.split_at(d);
-        let (b_quad, rest) = rest.split_at(d);
-        let (b_hump, b_step) = rest.split_at(d);
         let mut base = 0.0f32;
         for k in 0..d {
             let x = u[k];
-            base += x * b_lin[k]
-                + x * x * b_quad[k]
-                + (std::f32::consts::PI * x).sin() * b_hump[k]
-                + sigmoid(self.step_s[k] * (x - self.step_t[k])) * b_step[k];
+            base += x * self.b_lin[k]
+                + x * x * self.b_quad[k]
+                + (std::f32::consts::PI * x).sin() * self.b_hump[k]
+                + sigmoid(self.step_s[k] * (x - self.step_t[k])) * self.b_step[k];
         }
 
         // inter: u q u^T, one premixed (D, D) matrix
@@ -205,11 +249,20 @@ impl NativePrepared {
                 + (1.0 - floor) * sigmoid(self.gate_kappa[g] * (proj[R + g] - self.gate_tau[g]));
         }
 
-        let score = base + inter + bumps + cliffs;
-        let [t_scale, lat0, lat1, t_sat] = self.consts;
-        let thr = t_scale * softplus(score) * gate * self.dep;
-        let lat = lat0 + lat1 / (1.0 + thr / t_sat);
-        Perf { throughput: thr as f64, latency: lat as f64 }
+        self.heads(base + inter + bumps + cliffs, gate)
+    }
+
+    /// Evaluate one row on the given construction-time dispatch.
+    fn eval_row(&self, u: &[f32], dispatch: Dispatch) -> Perf {
+        match dispatch {
+            Dispatch::Scalar => self.eval_row_scalar(u),
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Dispatch::Avx2 is only constructible through
+            // simd::resolve on a host that reported AVX2+FMA support.
+            Dispatch::Avx2 => unsafe { simd::avx2::eval_row(self, u) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Dispatch::Avx2 => unreachable!("Dispatch::Avx2 is never resolved off x86_64"),
+        }
     }
 }
 
@@ -219,7 +272,11 @@ impl ExecBackend for NativeBackend {
     }
 
     fn platform(&self) -> String {
-        format!("native-cpu ({} threads)", self.threads)
+        format!("native-cpu ({} threads, simd={})", self.threads, self.dispatch.as_str())
+    }
+
+    fn simd_width(&self) -> u64 {
+        self.dispatch.lanes()
     }
 
     /// Premix the binding (`model.py::premix` in f32): fold `w` into
@@ -235,11 +292,16 @@ impl ExecBackend for NativeBackend {
         debug_assert_eq!(e.len(), E_DIM);
         let d = D_PAD;
 
-        // basis_w = tensordot(m, w): (4, D, W) . (W,) -> (4, D)
+        // basis_w = tensordot(m, w): (4, D, W) . (W,) -> (4, D), split
+        // into its four (D,) blocks here so the row loop never slices
         let mut basis = vec![0.0f32; 4 * d];
         for (out, m_row) in basis.iter_mut().zip(params.m.chunks_exact(W_DIM)) {
             *out = dot(m_row, w);
         }
+        let mut b_lin = basis;
+        let mut b_quad = b_lin.split_off(d);
+        let mut b_hump = b_quad.split_off(d);
+        let b_step = b_hump.split_off(d);
 
         // q = tensordot(w, qs): (W,) . (W, D, D) -> (D, D)
         let mut q = vec![0.0f32; d * d];
@@ -273,7 +335,10 @@ impl ExecBackend for NativeBackend {
         let dep = 2.0 * sigmoid(dot(e, &params.dep_w));
 
         Ok(Box::new(NativePrepared {
-            basis,
+            b_lin,
+            b_quad,
+            b_hump,
+            b_step,
             step_s: params.step_s.clone(),
             step_t: params.step_t.clone(),
             q,
@@ -295,7 +360,10 @@ impl ExecBackend for NativeBackend {
 
     /// Evaluate every row; large batches are chunked across scoped
     /// worker threads. One batch is one logical execute call and never
-    /// pads — the native backend has no static shapes.
+    /// pads — the native backend has no static shapes. Results are
+    /// collected directly (no zero-initialized output buffer); the
+    /// threaded path joins workers in chunk order, so row order — and
+    /// every bit of every row — matches the solo path.
     ///
     /// This backend deliberately keeps the default [`ExecBackend::
     /// submit`]: execution is synchronous CPU work with nothing to
@@ -309,24 +377,31 @@ impl ExecBackend for NativeBackend {
             ActsError::InvalidArg("prepared constants do not belong to the native backend".into())
         })?;
         let n = rows.len();
-        let mut perfs = vec![Perf { throughput: 0.0, latency: 0.0 }; n];
+        let dispatch = self.dispatch;
         let workers = self.threads.min(n);
-        if workers <= 1 || n < PARALLEL_THRESHOLD_ROWS {
-            for (out, row) in perfs.iter_mut().zip(rows) {
-                *out = prepared.eval_row(row);
-            }
+        let perfs: Vec<Perf> = if workers <= 1 || n < PARALLEL_THRESHOLD_ROWS {
+            rows.iter().map(|row| prepared.eval_row(row, dispatch)).collect()
         } else {
-            let chunk = (n + workers - 1) / workers;
+            let chunk = n.div_ceil(workers);
+            let mut perfs = Vec::with_capacity(n);
             std::thread::scope(|s| {
-                for (row_chunk, out_chunk) in rows.chunks(chunk).zip(perfs.chunks_mut(chunk)) {
-                    s.spawn(move || {
-                        for (out, row) in out_chunk.iter_mut().zip(row_chunk) {
-                            *out = prepared.eval_row(row);
-                        }
-                    });
+                let handles: Vec<_> = rows
+                    .chunks(chunk)
+                    .map(|row_chunk| {
+                        s.spawn(move || {
+                            row_chunk
+                                .iter()
+                                .map(|row| prepared.eval_row(row, dispatch))
+                                .collect::<Vec<Perf>>()
+                        })
+                    })
+                    .collect();
+                for handle in handles {
+                    perfs.extend(handle.join().expect("native execute worker panicked"));
                 }
             });
-        }
+            perfs
+        };
         Ok(Execution { perfs, execute_calls: 1, rows_executed: n as u64 })
     }
 }
@@ -344,6 +419,16 @@ mod tests {
             assert!(err.contains("ACTS_NATIVE_THREADS"), "{bad}: {err}");
             assert!(err.contains("integer >= 1"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn platform_names_threads_and_dispatch() {
+        let scalar = NativeBackend::with_options(3, SimdMode::Scalar).unwrap();
+        assert_eq!(scalar.platform(), "native-cpu (3 threads, simd=scalar)");
+        assert_eq!(scalar.simd_width(), 1);
+        let auto = NativeBackend::with_threads(2);
+        assert!(auto.platform().contains("simd="), "{}", auto.platform());
+        assert_eq!(auto.simd_width(), auto.dispatch().lanes());
     }
 
     fn prepared_for(
@@ -403,6 +488,8 @@ mod tests {
 
     /// Per-row results must be exactly batch-size independent — the
     /// bitwise guarantee behind coalescing and pipelining equivalence.
+    /// (Holds on whichever path auto dispatch resolved, by the fixed
+    /// per-row reduction order.)
     #[test]
     fn rows_are_batch_size_invariant_bitwise() {
         let (configs, w, e, params) = crate::runtime::golden::pattern_call(16);
@@ -416,7 +503,8 @@ mod tests {
     }
 
     /// Threaded execution must produce bitwise-identical results to the
-    /// single-threaded path (same per-row scalar computation).
+    /// single-threaded path (same per-row computation, same dispatch,
+    /// chunk-ordered join).
     #[test]
     fn threaded_execution_is_bitwise_identical() {
         let (configs, w, e, params) = crate::runtime::golden::pattern_call(16);

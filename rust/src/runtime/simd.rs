@@ -1,0 +1,467 @@
+//! SIMD dispatch for the native backend: an AVX2+FMA f32x8 row
+//! evaluator with the scalar loop as the portable fallback.
+//!
+//! # Dispatch contract
+//!
+//! The path is resolved **once, at backend construction** — never per
+//! batch — from a requested [`SimdMode`] (`ACTS_NATIVE_SIMD`, default
+//! auto) plus runtime feature detection. A constructed backend
+//! therefore evaluates every row of its lifetime on one fixed kernel,
+//! which keeps per-row results exactly batch-size invariant and
+//! run-to-run deterministic — the bitwise contract the scheduler's
+//! coalescing / pipelining / streaming equivalence tests rely on.
+//!
+//! The two paths are each individually bitwise-stable but are **not**
+//! bitwise-identical to each other: the vector kernel accumulates in a
+//! different (fixed) order and evaluates `exp`/`sin` with polynomial
+//! approximations (Cephes-style, ~1e-7 relative error) instead of libm.
+//! Scalar and AVX2 agree to well within the golden-oracle tolerances
+//! (property-tested at 1e-5 relative), and the chosen path is surfaced
+//! through `platform()`, `EngineStats::simd_width` and the fleet JSON
+//! so `acts fleet-diff` can attribute numeric drift to a dispatch
+//! change.
+//!
+//! # Why AVX2+FMA and nothing else
+//!
+//! `D_PAD = 64` is exactly eight f32x8 lanes, so every per-row loop
+//! (basis accumulation, the `u·q·uᵀ` interaction, RBF bump distances,
+//! stacked cliff/gate projections) vectorizes with no remainder
+//! handling. The kernel uses `core::arch` intrinsics behind
+//! `is_x86_feature_detected!` — no new dependencies, and non-x86_64
+//! hosts simply resolve to the scalar path.
+
+use crate::error::{ActsError, Result};
+
+/// Requested SIMD mode — the `ACTS_NATIVE_SIMD` spelling. Resolved
+/// into a [`Dispatch`] exactly once, at backend construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdMode {
+    /// AVX2+FMA when the host supports it, scalar otherwise. Default.
+    #[default]
+    Auto,
+    /// Require the AVX2 path; constructing a backend on a host without
+    /// AVX2+FMA is an error — pinning must not silently change paths.
+    Avx2,
+    /// Force the portable scalar loop everywhere.
+    Scalar,
+}
+
+impl SimdMode {
+    /// Registry spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Avx2 => "avx2",
+            SimdMode::Scalar => "scalar",
+        }
+    }
+}
+
+/// Parse an `ACTS_NATIVE_SIMD` spelling. Unit-testable without
+/// mutating the process environment.
+pub fn parse_native_simd(value: &str) -> Result<SimdMode> {
+    match value.trim().to_ascii_lowercase().as_str() {
+        "auto" => Ok(SimdMode::Auto),
+        "avx2" => Ok(SimdMode::Avx2),
+        "scalar" => Ok(SimdMode::Scalar),
+        _ => Err(ActsError::InvalidArg(format!(
+            "ACTS_NATIVE_SIMD=`{value}` is not a recognised SIMD mode \
+             (accepted: auto, avx2, scalar)"
+        ))),
+    }
+}
+
+/// Resolve the `ACTS_NATIVE_SIMD` environment variable: `None` when
+/// unset, a startup error when set to something unusable — a typo must
+/// not silently run a different evaluator path.
+pub fn native_simd_from_env() -> Result<Option<SimdMode>> {
+    match std::env::var("ACTS_NATIVE_SIMD") {
+        Ok(v) => parse_native_simd(&v).map(Some),
+        Err(_) => Ok(None),
+    }
+}
+
+/// The resolved row-evaluator path a backend was constructed with.
+/// [`Dispatch::Avx2`] is only ever constructed through [`resolve`] on
+/// a host where [`avx2_available`] returned true.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// The portable scalar loop.
+    Scalar,
+    /// The AVX2+FMA f32x8 kernel.
+    Avx2,
+}
+
+impl Dispatch {
+    /// Diagnostic spelling (`platform()`, fleet JSON, bench dump).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx2 => "avx2",
+        }
+    }
+
+    /// f32 lanes the row evaluator processes per step (1 = scalar).
+    pub fn lanes(&self) -> u64 {
+        match self {
+            Dispatch::Scalar => 1,
+            Dispatch::Avx2 => 8,
+        }
+    }
+}
+
+/// Host support for the AVX2 path. FMA is required alongside AVX2: the
+/// kernel is built from fused multiply-adds, and determinism demands
+/// the fused path be decided up front, not left to codegen.
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Host support for the AVX2 path (never, off x86_64).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+/// Resolve a requested mode into the construction-time dispatch.
+/// `Auto` never fails; `Avx2` fails fast on hosts without AVX2+FMA.
+pub fn resolve(mode: SimdMode) -> Result<Dispatch> {
+    match mode {
+        SimdMode::Scalar => Ok(Dispatch::Scalar),
+        SimdMode::Auto => {
+            if avx2_available() {
+                Ok(Dispatch::Avx2)
+            } else {
+                Ok(Dispatch::Scalar)
+            }
+        }
+        SimdMode::Avx2 => {
+            if avx2_available() {
+                Ok(Dispatch::Avx2)
+            } else {
+                Err(ActsError::InvalidArg(
+                    "ACTS_NATIVE_SIMD=avx2 is pinned but this host has no AVX2+FMA \
+                     (accepted here: auto, scalar)"
+                        .into(),
+                ))
+            }
+        }
+    }
+}
+
+/// The AVX2+FMA row kernel. Everything here is gated to x86_64 at
+/// compile time and to [`avx2_available`] hosts at construction time
+/// (see [`resolve`]); [`eval_row`] is only reachable through a
+/// [`Dispatch::Avx2`] backend.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::excessive_precision, clippy::approx_constant)]
+pub(crate) mod avx2 {
+    use super::super::engine::Perf;
+    use super::super::native::{sigmoid, NativePrepared};
+    use super::super::shapes::{D_PAD, G, J, R, RG};
+    use core::arch::x86_64::*;
+
+    /// f32x8 chunks per padded row.
+    const NC: usize = D_PAD / 8;
+
+    /// Horizontal sum with a fixed reduction tree (deterministic).
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let lo = _mm256_castps256_ps128(v);
+        let q = _mm_add_ps(lo, hi);
+        let h = _mm_add_ps(q, _mm_movehl_ps(q, q));
+        let s = _mm_add_ss(h, _mm_shuffle_ps::<1>(h, h));
+        _mm_cvtss_f32(s)
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn neg(v: __m256) -> __m256 {
+        _mm256_xor_ps(v, _mm256_set1_ps(-0.0))
+    }
+
+    /// Vectorized `exp` (Cephes `expf` polynomial, ~1e-7 relative).
+    /// Inputs are clamped to ±87.3, far past every finite use here
+    /// (sigmoid saturates, bump exponents are <= 0).
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn exp_ps(x: __m256) -> __m256 {
+        let one = _mm256_set1_ps(1.0);
+        let x = _mm256_min_ps(x, _mm256_set1_ps(87.3));
+        let x = _mm256_max_ps(x, _mm256_set1_ps(-87.3));
+        // n = floor(x / ln2 + 1/2); r = x - n ln2 (split constant)
+        let fx = _mm256_fmadd_ps(x, _mm256_set1_ps(std::f32::consts::LOG2_E), _mm256_set1_ps(0.5));
+        let fx = _mm256_floor_ps(fx);
+        let x = _mm256_fmadd_ps(fx, _mm256_set1_ps(-0.693359375), x);
+        let x = _mm256_fmadd_ps(fx, _mm256_set1_ps(2.1219444e-4), x);
+        let z = _mm256_mul_ps(x, x);
+        let mut y = _mm256_set1_ps(1.9875691e-4);
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.3981999e-3));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(8.3334519e-3));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(4.1665795e-2));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(1.6666665e-1));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(5.0000001e-1));
+        y = _mm256_fmadd_ps(y, z, x);
+        y = _mm256_add_ps(y, one);
+        // scale by 2^n through the exponent bits
+        let n = _mm256_cvttps_epi32(fx);
+        let n = _mm256_add_epi32(n, _mm256_set1_epi32(0x7f));
+        let pow2n = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(n));
+        _mm256_mul_ps(y, pow2n)
+    }
+
+    /// Vectorized `sin` (Cephes `sinf` with 4/pi range reduction,
+    /// ~1e-7 absolute on the basis arguments `pi * u`, u in [0, 1]).
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn sin_ps(x: __m256) -> __m256 {
+        let sign_mask = _mm256_set1_ps(-0.0);
+        let mut sign_bit = _mm256_and_ps(x, sign_mask);
+        let x = _mm256_andnot_ps(sign_mask, x);
+        // octant index j, rounded to the even reduction the sinf
+        // algorithm wants
+        let y = _mm256_mul_ps(x, _mm256_set1_ps(1.27323954)); // 4/pi
+        let mut j = _mm256_cvttps_epi32(y);
+        j = _mm256_add_epi32(j, _mm256_set1_epi32(1));
+        j = _mm256_and_si256(j, _mm256_set1_epi32(!1));
+        let y = _mm256_cvtepi32_ps(j);
+        // octants 4..7 flip the sign; octants 2,3 use the cosine poly
+        let swap_sign =
+            _mm256_castsi256_ps(_mm256_slli_epi32::<29>(_mm256_and_si256(j, _mm256_set1_epi32(4))));
+        let poly_mask = _mm256_castsi256_ps(_mm256_cmpeq_epi32(
+            _mm256_and_si256(j, _mm256_set1_epi32(2)),
+            _mm256_setzero_si256(),
+        ));
+        sign_bit = _mm256_xor_ps(sign_bit, swap_sign);
+        // extended-precision modular reduction: x - j * pi/4 in three
+        // steps (split constant)
+        let x = _mm256_fmadd_ps(y, _mm256_set1_ps(-0.78515625), x);
+        let x = _mm256_fmadd_ps(y, _mm256_set1_ps(-2.4187565e-4), x);
+        let x = _mm256_fmadd_ps(y, _mm256_set1_ps(-3.7748950e-8), x);
+        let z = _mm256_mul_ps(x, x);
+        // cosine polynomial (octants 2, 3)
+        let mut yc = _mm256_set1_ps(2.4433157e-5);
+        yc = _mm256_fmadd_ps(yc, z, _mm256_set1_ps(-1.3887316e-3));
+        yc = _mm256_fmadd_ps(yc, z, _mm256_set1_ps(4.1666646e-2));
+        yc = _mm256_mul_ps(yc, _mm256_mul_ps(z, z));
+        yc = _mm256_fmadd_ps(z, _mm256_set1_ps(-0.5), yc);
+        yc = _mm256_add_ps(yc, _mm256_set1_ps(1.0));
+        // sine polynomial (octants 0, 1)
+        let mut ys = _mm256_set1_ps(-1.9515296e-4);
+        ys = _mm256_fmadd_ps(ys, z, _mm256_set1_ps(8.3321609e-3));
+        ys = _mm256_fmadd_ps(ys, z, _mm256_set1_ps(-1.6666655e-1));
+        ys = _mm256_mul_ps(ys, _mm256_mul_ps(z, x));
+        ys = _mm256_add_ps(ys, x);
+        let y = _mm256_or_ps(_mm256_and_ps(poly_mask, ys), _mm256_andnot_ps(poly_mask, yc));
+        _mm256_xor_ps(y, sign_bit)
+    }
+
+    /// Vectorized logistic sigmoid via [`exp_ps`].
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn sigmoid_ps(x: __m256) -> __m256 {
+        let one = _mm256_set1_ps(1.0);
+        _mm256_div_ps(one, _mm256_add_ps(one, exp_ps(neg(x))))
+    }
+
+    /// Evaluate one padded `[f32; D_PAD]` unit row — the f32x8 mirror
+    /// of `NativePrepared::eval_row_scalar`, same blocks, fixed lane
+    /// order.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee the host supports AVX2+FMA (enforced
+    /// by constructing [`super::Dispatch::Avx2`] through
+    /// [`super::resolve`]). The raw loads rely on `prepare` having
+    /// built every block of `p` at its documented length; `u`'s width
+    /// is asserted here.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(crate) unsafe fn eval_row(p: &NativePrepared, u: &[f32]) -> Perf {
+        assert_eq!(u.len(), D_PAD, "padded row width");
+        debug_assert_eq!(p.b_lin.len(), D_PAD);
+        debug_assert_eq!(p.q.len(), D_PAD * D_PAD);
+        debug_assert_eq!(p.centers.len(), J * D_PAD);
+        debug_assert_eq!(p.dirs.len(), RG * D_PAD);
+        let up = u.as_ptr();
+        let mut uc = [_mm256_setzero_ps(); NC];
+        for c in 0..NC {
+            uc[c] = _mm256_loadu_ps(up.add(8 * c));
+        }
+
+        // base: per-knob basis response phi(u) . w, all four components
+        // fused per chunk
+        let pi = _mm256_set1_ps(std::f32::consts::PI);
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..NC {
+            let x = uc[c];
+            acc = _mm256_fmadd_ps(x, _mm256_loadu_ps(p.b_lin.as_ptr().add(8 * c)), acc);
+            let xx = _mm256_mul_ps(x, x);
+            acc = _mm256_fmadd_ps(xx, _mm256_loadu_ps(p.b_quad.as_ptr().add(8 * c)), acc);
+            let hump = sin_ps(_mm256_mul_ps(pi, x));
+            acc = _mm256_fmadd_ps(hump, _mm256_loadu_ps(p.b_hump.as_ptr().add(8 * c)), acc);
+            let s = _mm256_loadu_ps(p.step_s.as_ptr().add(8 * c));
+            let t = _mm256_loadu_ps(p.step_t.as_ptr().add(8 * c));
+            let step = sigmoid_ps(_mm256_mul_ps(s, _mm256_sub_ps(x, t)));
+            acc = _mm256_fmadd_ps(step, _mm256_loadu_ps(p.b_step.as_ptr().add(8 * c)), acc);
+        }
+        let base = hsum(acc);
+
+        // inter: u q u^T column-wise — accumulate v = u q as eight
+        // vector lanes (no per-row horizontal sums), then dot with u
+        let mut v = [_mm256_setzero_ps(); NC];
+        for (k, &uk) in u.iter().enumerate() {
+            let ukb = _mm256_set1_ps(uk);
+            let qrow = p.q.as_ptr().add(k * D_PAD);
+            for c in 0..NC {
+                v[c] = _mm256_fmadd_ps(ukb, _mm256_loadu_ps(qrow.add(8 * c)), v[c]);
+            }
+        }
+        let mut iacc = _mm256_setzero_ps();
+        for c in 0..NC {
+            iacc = _mm256_fmadd_ps(uc[c], v[c], iacc);
+        }
+        let inter = hsum(iacc);
+
+        // bumps: squared distances via the expanded square, then the
+        // J exponentials eight at a time
+        let mut nacc = _mm256_setzero_ps();
+        for &x in uc.iter() {
+            nacc = _mm256_fmadd_ps(x, x, nacc);
+        }
+        let u_norm2 = hsum(nacc);
+        let mut d2 = [0.0f32; J];
+        for (j, slot) in d2.iter_mut().enumerate() {
+            let cp = p.centers.as_ptr().add(j * D_PAD);
+            let mut dacc = _mm256_setzero_ps();
+            for c in 0..NC {
+                dacc = _mm256_fmadd_ps(uc[c], _mm256_loadu_ps(cp.add(8 * c)), dacc);
+            }
+            *slot = u_norm2 + p.center_norm2[j] - 2.0 * hsum(dacc);
+        }
+        let mut bacc = _mm256_setzero_ps();
+        for jb in 0..(J / 8) {
+            let dd = _mm256_loadu_ps(d2.as_ptr().add(8 * jb));
+            let ir = _mm256_loadu_ps(p.inv_rho2.as_ptr().add(8 * jb));
+            let amp = _mm256_loadu_ps(p.amps.as_ptr().add(8 * jb));
+            let ex = exp_ps(neg(_mm256_mul_ps(dd, ir)));
+            bacc = _mm256_fmadd_ps(amp, ex, bacc);
+        }
+        let bumps = hsum(bacc);
+
+        // stacked cliff + gate direction projections
+        let mut proj = [0.0f32; RG];
+        for (r, slot) in proj.iter_mut().enumerate() {
+            let dp = p.dirs.as_ptr().add(r * D_PAD);
+            let mut pacc = _mm256_setzero_ps();
+            for c in 0..NC {
+                pacc = _mm256_fmadd_ps(uc[c], _mm256_loadu_ps(dp.add(8 * c)), pacc);
+            }
+            *slot = hsum(pacc);
+        }
+        // cliffs: R = 8 is exactly one vector of sigmoids
+        let pv = _mm256_loadu_ps(proj.as_ptr());
+        let tau = _mm256_loadu_ps(p.cliff_tau.as_ptr());
+        let kappa = _mm256_loadu_ps(p.cliff_kappa.as_ptr());
+        let gain = _mm256_loadu_ps(p.cliff_gain.as_ptr());
+        let sig = sigmoid_ps(_mm256_mul_ps(kappa, _mm256_sub_ps(pv, tau)));
+        let cliffs = hsum(_mm256_mul_ps(gain, sig));
+        // gate: G = 4 scalar factors — too narrow to vectorize, and the
+        // libm tail keeps this block bitwise-equal to the scalar path
+        let mut gate = 1.0f32;
+        for g in 0..G {
+            let floor = p.gate_floor[g];
+            gate *= floor
+                + (1.0 - floor) * sigmoid(p.gate_kappa[g] * (proj[R + g] - p.gate_tau[g]));
+        }
+
+        p.heads(base + inter + bumps + cliffs, gate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simd_spellings_parse_or_name_the_variable() {
+        assert_eq!(parse_native_simd("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(parse_native_simd(" AVX2 ").unwrap(), SimdMode::Avx2);
+        assert_eq!(parse_native_simd("scalar").unwrap(), SimdMode::Scalar);
+        for bad in ["avx512", "sse", "", "fast", "1"] {
+            let err = parse_native_simd(bad).unwrap_err().to_string();
+            assert!(err.contains("ACTS_NATIVE_SIMD"), "{bad}: {err}");
+            assert!(err.contains("auto, avx2, scalar"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn mode_spellings_round_trip() {
+        for mode in [SimdMode::Auto, SimdMode::Avx2, SimdMode::Scalar] {
+            assert_eq!(parse_native_simd(mode.as_str()).unwrap(), mode);
+        }
+        assert_eq!(SimdMode::default(), SimdMode::Auto);
+    }
+
+    #[test]
+    fn resolution_is_total_for_auto_and_scalar_and_honest_for_avx2() {
+        assert_eq!(resolve(SimdMode::Scalar).unwrap(), Dispatch::Scalar);
+        let auto = resolve(SimdMode::Auto).unwrap();
+        if avx2_available() {
+            assert_eq!(auto, Dispatch::Avx2);
+            assert_eq!(resolve(SimdMode::Avx2).unwrap(), Dispatch::Avx2);
+        } else {
+            assert_eq!(auto, Dispatch::Scalar);
+            let err = resolve(SimdMode::Avx2).unwrap_err().to_string();
+            assert!(err.contains("AVX2"), "{err}");
+        }
+    }
+
+    #[test]
+    fn dispatch_lanes_and_spellings() {
+        assert_eq!(Dispatch::Scalar.lanes(), 1);
+        assert_eq!(Dispatch::Avx2.lanes(), 8);
+        assert_eq!(Dispatch::Scalar.as_str(), "scalar");
+        assert_eq!(Dispatch::Avx2.as_str(), "avx2");
+    }
+
+    /// The vector kernel against the scalar loop on the golden
+    /// patterned inputs (the broad randomized property test lives in
+    /// the conformance integration suite).
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernel_matches_scalar_on_pattern_inputs() {
+        use crate::runtime::backend::ExecBackend;
+        use crate::runtime::native::NativeBackend;
+        if !avx2_available() {
+            eprintln!("SKIP avx2_kernel_matches_scalar: host has no AVX2+FMA");
+            return;
+        }
+        let scalar = NativeBackend::with_options(1, SimdMode::Scalar).unwrap();
+        let vector = NativeBackend::with_options(1, SimdMode::Avx2).unwrap();
+        let (configs, w, e, params) = crate::runtime::golden::pattern_call(16);
+        let rows: Vec<&[f32]> = configs.iter().map(|c| c.as_slice()).collect();
+        let ps = scalar.prepare(&params, &w, &e).unwrap();
+        let pv = vector.prepare(&params, &w, &e).unwrap();
+        let a = scalar.execute(ps.as_ref(), &rows).unwrap();
+        let b = vector.execute(pv.as_ref(), &rows).unwrap();
+        for (i, (x, y)) in a.perfs.iter().zip(&b.perfs).enumerate() {
+            let ttol = 1e-5 * (1.0 + x.throughput.abs());
+            let ltol = 1e-5 * (1.0 + x.latency.abs());
+            assert!(
+                (x.throughput - y.throughput).abs() < ttol,
+                "row {i}: scalar thr {} vs avx2 {}",
+                x.throughput,
+                y.throughput
+            );
+            assert!(
+                (x.latency - y.latency).abs() < ltol,
+                "row {i}: scalar lat {} vs avx2 {}",
+                x.latency,
+                y.latency
+            );
+        }
+    }
+}

@@ -232,6 +232,10 @@ impl Fleet {
                 // the engine-lifetime peak (0 under the barriered
                 // modes, which never overlap submitted rounds)
                 peak_inflight: after.peak_inflight,
+                // a construction-time property of the backend, not a
+                // delta — recorded so a cross-commit fleet diff can
+                // attribute numeric drift to a dispatch change
+                simd_width: after.simd_width,
             },
         }
     }
@@ -289,6 +293,9 @@ pub struct Coalescing {
     /// High-water mark of submitted-not-yet-absorbed rounds (engine
     /// lifetime; 0 under the barriered modes).
     pub peak_inflight: u64,
+    /// SIMD lane width of the engine's row evaluator (1 = scalar, 8 =
+    /// native AVX2) — a backend property, not a delta.
+    pub simd_width: u64,
 }
 
 /// Aggregate statistics over a fleet's completed cells.
@@ -468,6 +475,7 @@ impl FleetReport {
                         Json::Num(self.coalescing.flushes_by_timeout as f64),
                     ),
                     ("peak_inflight", Json::Num(self.coalescing.peak_inflight as f64)),
+                    ("simd_width", Json::Num(self.coalescing.simd_width as f64)),
                 ]),
             ),
             ("cells", Json::Arr(cells)),

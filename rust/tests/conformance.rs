@@ -1,0 +1,189 @@
+//! Integration: the backend conformance suite
+//! (`acts::runtime::conformance`) instantiated for every execution
+//! backend the repo ships — native-scalar, native-simd (when the host
+//! has AVX2+FMA), chaos-wrapping-native with a zero-fault plan (the
+//! wrapper must be transparent), and the PJRT backend (skip-loudly
+//! without compiled artifacts).
+//!
+//! Plus the SIMD numeric contracts that don't fit a single backend:
+//! the seeded scalar-vs-AVX2 property test (1e-5 relative agreement on
+//! randomized surfaces) and the pinned-scalar-dispatch golden test
+//! (checkpoint/resume bit-identity depends on a pinned path).
+
+use acts::runtime::conformance::{
+    self, check_golden_parity, check_pairwise_identity, run_suite, SuiteOptions,
+};
+use acts::runtime::simd::{self, SimdMode};
+use acts::runtime::{
+    ChaosBackend, ExecBackend, FaultPlan, NativeBackend, SurfaceParams, D_PAD, E_DIM, W_DIM,
+};
+use acts::util::rng::Rng64;
+
+fn testdata_golden() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("tests")
+        .join("testdata")
+        .join("golden_surface.txt")
+}
+
+fn golden_opts(exact_cost: bool) -> SuiteOptions {
+    SuiteOptions { golden: Some(testdata_golden()), exact_cost, ..SuiteOptions::default() }
+}
+
+#[test]
+fn native_scalar_conforms() {
+    let solo = NativeBackend::with_options(1, SimdMode::Scalar).unwrap();
+    run_suite("native-scalar", &solo, &golden_opts(true));
+    let threaded = NativeBackend::with_options(4, SimdMode::Scalar).unwrap();
+    check_pairwise_identity("native-scalar solo-vs-threaded", &solo, &threaded);
+}
+
+#[test]
+fn native_simd_conforms() {
+    if !simd::avx2_available() {
+        eprintln!("SKIP native_simd_conforms: host has no AVX2+FMA (scalar-only machine)");
+        return;
+    }
+    let solo = NativeBackend::with_options(1, SimdMode::Avx2).unwrap();
+    run_suite("native-simd", &solo, &golden_opts(true));
+    let threaded = NativeBackend::with_options(4, SimdMode::Avx2).unwrap();
+    check_pairwise_identity("native-simd solo-vs-threaded", &solo, &threaded);
+}
+
+/// A chaos wrapper with a fault-free plan must be indistinguishable
+/// from the bare backend — same conformance checklist, and bitwise
+/// pairwise identity against the unwrapped instance.
+#[test]
+fn chaos_over_native_conforms_when_quiet() {
+    let bare = NativeBackend::with_options(1, SimdMode::Scalar).unwrap();
+    let quiet = ChaosBackend::new(
+        Box::new(NativeBackend::with_options(1, SimdMode::Scalar).unwrap()),
+        FaultPlan::seeded(1), // seeded plan with no configured faults
+    );
+    run_suite("chaos(native-scalar)", &quiet, &golden_opts(true));
+    check_pairwise_identity("chaos-vs-bare native", &quiet, &bare);
+    assert_eq!(quiet.simd_width(), bare.simd_width(), "chaos must report the wrapped dispatch");
+}
+
+/// The PJRT backend runs the suite when the compiled artifacts exist;
+/// everywhere else this skips with a reason, never silently. The
+/// bitwise batch-invariance check is deliberately withheld here: the
+/// bucket planner may pad a batch into a different static shape, which
+/// promises tolerance-level (not bitwise) agreement across sizes.
+#[test]
+fn pjrt_conforms_or_skips_loudly() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let backend = match acts::runtime::pjrt::PjrtBackend::load(&dir) {
+        Ok(b) => b,
+        Err(err) => {
+            eprintln!("SKIP pjrt_conforms: {err} (run `make artifacts`)");
+            return;
+        }
+    };
+    let golden = dir.join("golden_surface.txt");
+    if golden.is_file() {
+        check_golden_parity("pjrt", &backend, &golden, 1e-3);
+    }
+    conformance::check_determinism("pjrt", &backend);
+    conformance::check_cost_accounting("pjrt", &backend, false);
+    conformance::check_foreign_prepared_rejection("pjrt", &backend);
+}
+
+/// Fill a block with seeded uniform values in `[lo, hi)`.
+fn fill(block: &mut [f32], rng: &mut Rng64, lo: f64, hi: f64) {
+    for x in block.iter_mut() {
+        *x = rng.range_f64(lo, hi) as f32;
+    }
+}
+
+/// One randomized-but-seeded surface binding with every block active,
+/// scaled so scores land in the heads' responsive range.
+fn random_binding(rng: &mut Rng64) -> (SurfaceParams, Vec<f32>, Vec<f32>) {
+    let mut p = SurfaceParams::zeros();
+    fill(&mut p.m, rng, -0.5, 0.5);
+    fill(&mut p.step_s, rng, -5.0, 5.0);
+    fill(&mut p.step_t, rng, 0.0, 1.0);
+    fill(&mut p.qs, rng, -0.1, 0.1);
+    fill(&mut p.centers, rng, 0.0, 1.0);
+    fill(&mut p.inv_rho2, rng, 0.1, 2.0);
+    fill(&mut p.amps_w, rng, -0.5, 0.5);
+    fill(&mut p.dirs, rng, -0.5, 0.5);
+    fill(&mut p.cliff_tau, rng, -0.5, 0.5);
+    fill(&mut p.cliff_kappa, rng, -5.0, 5.0);
+    fill(&mut p.cliff_gain_w, rng, -0.5, 0.5);
+    fill(&mut p.cliff_gain_e, rng, -0.5, 0.5);
+    fill(&mut p.gate_tau, rng, -0.5, 0.5);
+    fill(&mut p.gate_kappa, rng, -5.0, 5.0);
+    fill(&mut p.gate_floor_w, rng, -0.5, 0.5);
+    fill(&mut p.dep_w, rng, -0.5, 0.5);
+    p.consts = [
+        rng.range_f64(20.0, 80.0) as f32,
+        rng.range_f64(0.5, 2.0) as f32,
+        rng.range_f64(1.0, 10.0) as f32,
+        rng.range_f64(10.0, 100.0) as f32,
+    ];
+    let w: Vec<f32> = (0..W_DIM).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let e: Vec<f32> = (0..E_DIM).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    (p, w, e)
+}
+
+/// Property test: the scalar and AVX2 paths agree within 1e-5 relative
+/// tolerance on randomized seeded surfaces and rows. (Bitwise equality
+/// between the paths is explicitly NOT the contract — each path is
+/// individually bitwise stable, and the two agree numerically.)
+#[test]
+fn scalar_and_simd_agree_on_randomized_surfaces() {
+    if !simd::avx2_available() {
+        eprintln!("SKIP scalar_and_simd_agree: host has no AVX2+FMA");
+        return;
+    }
+    let scalar = NativeBackend::with_options(1, SimdMode::Scalar).unwrap();
+    let vector = NativeBackend::with_options(1, SimdMode::Avx2).unwrap();
+    let mut rng = Rng64::new(0xac75_0008);
+    for trial in 0..20 {
+        let (params, w, e) = random_binding(&mut rng);
+        let rows: Vec<Vec<f32>> = (0..32)
+            .map(|_| (0..D_PAD).map(|_| rng.range_f64(0.0, 1.0) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let ps = scalar.prepare(&params, &w, &e).unwrap();
+        let pv = vector.prepare(&params, &w, &e).unwrap();
+        let a = scalar.execute(ps.as_ref(), &refs).unwrap().perfs;
+        let b = vector.execute(pv.as_ref(), &refs).unwrap().perfs;
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            let ttol = 1e-5 * (1.0 + x.throughput.abs());
+            let ltol = 1e-5 * (1.0 + x.latency.abs());
+            assert!(
+                (x.throughput - y.throughput).abs() < ttol,
+                "trial {trial} row {i}: scalar thr {} vs avx2 {}",
+                x.throughput,
+                y.throughput
+            );
+            assert!(
+                (x.latency - y.latency).abs() < ltol,
+                "trial {trial} row {i}: scalar lat {} vs avx2 {}",
+                x.latency,
+                y.latency
+            );
+        }
+    }
+}
+
+/// Pinned-dispatch contract: a backend pinned to the scalar path (what
+/// `ACTS_NATIVE_SIMD=scalar` resolves to) reproduces the committed
+/// golden oracle and is bitwise stable across thread counts and runs —
+/// checkpoint/resume bit-identity depends on exactly this.
+#[test]
+fn pinned_scalar_dispatch_reproduces_the_committed_oracle() {
+    assert_eq!(
+        acts::runtime::simd::parse_native_simd("scalar").unwrap(),
+        SimdMode::Scalar,
+        "the env spelling must pin the scalar path"
+    );
+    let solo = NativeBackend::with_options(1, SimdMode::Scalar).unwrap();
+    check_golden_parity("pinned-scalar", &solo, &testdata_golden(), 1e-3);
+    conformance::check_determinism("pinned-scalar", &solo);
+    let threaded = NativeBackend::with_options(4, SimdMode::Scalar).unwrap();
+    check_pairwise_identity("pinned-scalar solo-vs-threaded", &solo, &threaded);
+}

@@ -305,7 +305,8 @@ fn initial_unit_spec_starts_from_that_configuration() {
 /// A lab whose engine runs the native evaluator behind a seeded
 /// chaos-injection wrapper.
 fn chaos_lab(plan: FaultPlan) -> Lab {
-    let chaos = ChaosBackend::new(Box::new(NativeBackend::new()), plan);
+    let native = NativeBackend::new().expect("native backend");
+    let chaos = ChaosBackend::new(Box::new(native), plan);
     Lab { engine: Arc::new(Engine::from_backend(Box::new(chaos))) }
 }
 

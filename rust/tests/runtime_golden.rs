@@ -88,7 +88,7 @@ fn check_golden_file(engine: &Engine, path: &std::path::Path) {
 /// runs everywhere, no artifacts, no skip.
 #[test]
 fn native_golden_outputs_match_python_reference() {
-    let engine = Engine::native();
+    let engine = Engine::native().expect("native engine");
     check_golden_file(&engine, &testdata_golden());
 }
 
@@ -103,7 +103,7 @@ fn pjrt_golden_outputs_match_python() {
 #[test]
 fn native_matches_pjrt_on_golden_inputs() {
     let Some(pjrt) = pjrt_engine_or_skip() else { return };
-    let native = Engine::native();
+    let native = Engine::native().expect("native engine");
     for b in [1usize, 16, 40] {
         let (configs, w, e, params) = golden::pattern_call(b);
         let a = pjrt.evaluate(&params, &w, &e, &configs).unwrap();
@@ -166,7 +166,7 @@ fn shapes_table_matches_aot_dump() {
 /// the PJRT variant below uses a float tolerance across buckets).
 #[test]
 fn native_batching_is_transparent_and_never_pads() {
-    let engine = Engine::native();
+    let engine = Engine::native().expect("native engine");
     let (configs, w, e, params) = golden::pattern_call(16);
     let prepared = engine.prepare(&params, &w, &e).unwrap();
     let all = engine.evaluate_prepared(&prepared, &configs).unwrap();
