@@ -33,7 +33,12 @@
 //!   scheduler, gated ≥1.3x streaming-over-pipelined, plus
 //!   in-flight concurrency scaling at 1/2/4/8 executor workers and
 //!   the drainer's flush-cause/peak-in-flight telemetry, all in the
-//!   json.
+//!   json;
+//! * the content-addressed experiment store: the same mixed 8-cell
+//!   fleet compiled through `Fleet` cold (store cleared, every cell
+//!   computes and writes back) vs warm (every cell served from disk
+//!   with zero engine work) — recorded as `store_warm_speedup` and
+//!   gated ≥10x warm-over-cold.
 //!
 //! Runs on whatever backend `Lab::new` resolves (PJRT with artifacts,
 //! the native CPU backend anywhere else), so the perf trajectory is
@@ -45,6 +50,7 @@ use acts::experiment::Lab;
 use acts::manipulator::{SimulationOpts, SystemManipulator, Target};
 use acts::report::Json;
 use acts::runtime::{golden, Engine, BUCKETS};
+use acts::scenario::{ExperimentStore, Fleet, ScenarioSpec};
 use acts::sut;
 use acts::tuner::{self, Scheduler, SchedulerMode, TuningConfig, TuningSession};
 use acts::workload::{DeploymentEnv, WorkloadSpec};
@@ -404,6 +410,78 @@ fn main() {
         }
     }
 
+    // the content-addressed experiment store: the same mixed 8-cell
+    // fleet (4 cells round 32, 4 round 4, seeds 70..78) compiled
+    // through Fleet with a store attached. Cold clears the store every
+    // iteration, so all 8 cells compute and write back; warm serves
+    // all 8 from disk — zero deploys, zero sessions, zero engine work.
+    // The cells are deterministic, so warm results are bit-identical
+    // (asserted per iteration) and the entire tuning cost collapses to
+    // 8 file reads.
+    {
+        let store_dir =
+            std::env::temp_dir().join(format!("acts-bench-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&store_dir);
+        let specs = || -> Vec<ScenarioSpec> {
+            (0..n_sessions)
+                .map(|s| {
+                    let seed = 70 + s;
+                    ScenarioSpec::from_names(
+                        "mysql",
+                        "zipfian-rw",
+                        "standalone",
+                        TuningConfig {
+                            budget: Budget::tests(sched_budget),
+                            seed,
+                            round_size: if seed % 2 == 0 { 32 } else { 4 },
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap()
+                })
+                .collect()
+        };
+        let run = |clear_first: bool| {
+            let store = ExperimentStore::open(&store_dir).unwrap();
+            if clear_first {
+                store.clear().unwrap();
+            }
+            Fleet::compile_with_options(
+                &lab,
+                specs(),
+                SchedulerMode::Pipelined { lanes: 4 },
+                None,
+                Some(store),
+            )
+            .unwrap()
+            .run()
+        };
+        let aggregate = (n_sessions * sched_budget) as f64;
+        b.bench_units(
+            format!("{n_sessions}-cell fleet cold (store cleared)"),
+            Some(aggregate),
+            || {
+                black_box(run(true));
+            },
+        );
+        // seed the store once, then measure pure warm lookups
+        let seeded = run(true);
+        assert_eq!(seeded.coalescing.store_misses, n_sessions, "seeding run must compute");
+        b.bench_units(
+            format!("{n_sessions}-cell fleet warm (all cells stored)"),
+            Some(aggregate),
+            || {
+                let report = black_box(run(false));
+                assert_eq!(
+                    report.coalescing.store_hits, n_sessions,
+                    "warm fleet must serve every cell from the store"
+                );
+                assert_eq!(report.coalescing.execute_calls, 0, "warm fleet must not execute");
+            },
+        );
+        let _ = std::fs::remove_dir_all(&store_dir);
+    }
+
     b.report();
 
     let stats = engine.stats();
@@ -474,6 +552,16 @@ fn main() {
     );
     println!("streaming speedup over pipelined: {streaming_speedup:.2}x (target >= 1.3x)");
 
+    // the store gate: the mixed 8-cell fleet warm (all cells served
+    // from disk) vs cold (store cleared, everything computes)
+    let store_cold = session_rate("fleet cold");
+    let store_warm = session_rate("fleet warm");
+    let store_warm_speedup = if store_cold > 0.0 { store_warm / store_cold } else { 0.0 };
+    println!(
+        "store fleet aggregate config-evals/s: cold {store_cold:.1}, warm {store_warm:.1}"
+    );
+    println!("store warm speedup over cold: {store_warm_speedup:.1}x (target >= 10x)");
+
     // machine-readable dump for cross-PR tracking
     let json = b.json(vec![
         ("platform", Json::Str(engine.platform())),
@@ -508,6 +596,7 @@ fn main() {
         ("streaming_flushes_by_size", Json::Num(streaming_flushes_by_size as f64)),
         ("streaming_flushes_by_timeout", Json::Num(streaming_flushes_by_timeout as f64)),
         ("streaming_peak_inflight", Json::Num(streaming_peak_inflight as f64)),
+        ("store_warm_speedup", Json::Num(store_warm_speedup)),
     ]);
     let out_path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_runtime_hotpath.json");
@@ -536,6 +625,10 @@ fn main() {
     assert!(
         streaming_speedup >= 1.3,
         "streaming speedup {streaming_speedup:.2}x over the pipelined scheduler below the 1.3x acceptance gate"
+    );
+    assert!(
+        store_warm_speedup >= 10.0,
+        "store warm speedup {store_warm_speedup:.2}x below the 10x acceptance gate"
     );
     // the SIMD gate only binds where the AVX2 path actually ran;
     // scalar-only hosts record dispatch=scalar and speedup=0 instead

@@ -80,6 +80,24 @@ impl fmt::Display for StopCause {
     }
 }
 
+impl StopCause {
+    /// Inverse of [`Display`](fmt::Display) — parses the exact strings
+    /// the reports emit (`budget:tests`, `failure-cap`, ...). Used by
+    /// the experiment store to round-trip stop causes through entry
+    /// files; unknown strings are `None` (the entry is treated as
+    /// corrupt), never a panic.
+    pub fn parse(s: &str) -> Option<StopCause> {
+        match s {
+            "budget:tests" => Some(StopCause::Exhausted(BudgetDim::Tests)),
+            "budget:simsec" => Some(StopCause::Exhausted(BudgetDim::SimSeconds)),
+            "budget:cost" => Some(StopCause::Exhausted(BudgetDim::CostUnits)),
+            "failure-cap" => Some(StopCause::FailureCap),
+            "quarantined" => Some(StopCause::Quarantined),
+            _ => None,
+        }
+    }
+}
+
 /// A composite resource limit: up to three dimensions, exhausted when
 /// ANY of them is. Build with the dimension constructors and the `and_*`
 /// combinators, or resolve a name via [`Budget::by_name`]. At least one
@@ -325,6 +343,21 @@ fn tests_that_fit(remaining: f64, per_test: f64) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stop_cause_parse_inverts_display() {
+        for cause in [
+            StopCause::Exhausted(BudgetDim::Tests),
+            StopCause::Exhausted(BudgetDim::SimSeconds),
+            StopCause::Exhausted(BudgetDim::CostUnits),
+            StopCause::FailureCap,
+            StopCause::Quarantined,
+        ] {
+            assert_eq!(StopCause::parse(&cause.to_string()), Some(cause));
+        }
+        assert_eq!(StopCause::parse("budget:wall-clock"), None);
+        assert_eq!(StopCause::parse(""), None);
+    }
 
     #[test]
     fn by_name_resolves_single_dimensions() {

@@ -5,6 +5,7 @@
 //!   tune   --sut S --workload W ...   run one tuning session
 //!   fleet  --suts a,b --workloads ... run a scenario matrix as one fleet
 //!   fleet-diff old.json new.json      diff two fleet/bench JSON dumps
+//!   store  <stats|gc|clear> ...       manage the experiment store
 //!   surface --sut S --x K --y K ...   dump a 2-knob grid sweep as CSV
 //!   experiment <fig1|mysql|table1|bottleneck|labor|fairness|coverage>
 //!   help
@@ -153,6 +154,7 @@ fn run(args: &Args) -> acts::Result<()> {
     tuner::sched_mode_from_env()?;
     acts::runtime::native::native_threads_from_env()?;
     acts::runtime::simd::native_simd_from_env()?;
+    scenario::store_dir_from_env()?;
     match args.command.as_str() {
         "" | "help" => {
             print!("{}", HELP);
@@ -162,6 +164,7 @@ fn run(args: &Args) -> acts::Result<()> {
         "tune" => cmd_tune(args),
         "fleet" => cmd_fleet(args),
         "fleet-diff" => cmd_fleet_diff(args),
+        "store" => cmd_store(args),
         "surface" => cmd_surface(args),
         "experiment" => cmd_experiment(args),
         other => {
@@ -384,13 +387,28 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
     );
     let specs = matrix.expand()?;
     let lab = fleet_lab(args, &base)?;
-    let fleet = match args.get_opt("checkpoint-dir") {
-        Some(dir) => {
-            println!("checkpointing rounds under {dir} (rerun with the same flags to resume)");
-            Fleet::compile_with_checkpoint(&lab, specs, mode, std::path::Path::new(dir))?
+    // the content-addressed experiment store: --no-store beats
+    // --store-dir beats ACTS_STORE_DIR beats no store at all
+    let store = if args.has("no-store") {
+        None
+    } else {
+        match args.get_opt("store-dir") {
+            Some(dir) => Some(scenario::ExperimentStore::open(std::path::Path::new(dir))?),
+            None => scenario::store_dir_from_env()?,
         }
-        None => Fleet::compile_with_mode(&lab, specs, mode)?,
     };
+    let store_dir = store.as_ref().map(|s| s.dir().display().to_string());
+    let checkpoint_dir = args.get_opt("checkpoint-dir");
+    if let Some(dir) = checkpoint_dir {
+        println!("checkpointing rounds under {dir} (rerun with the same flags to resume)");
+    }
+    let fleet = Fleet::compile_with_options(
+        &lab,
+        specs,
+        mode,
+        checkpoint_dir.map(std::path::Path::new),
+        store,
+    )?;
     let report = fleet.run();
 
     print!("{}", report.table().markdown());
@@ -430,6 +448,12 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         c.flushes_by_size, c.flushes_by_timeout, c.peak_inflight
     );
     println!("engine dispatch: {} (simd width {})", lab.engine.platform(), c.simd_width);
+    if let Some(dir) = store_dir {
+        println!(
+            "experiment store: {} hits / {} misses, {} bytes ({dir})",
+            c.store_hits, c.store_misses, c.store_bytes
+        );
+    }
     if let Some(path) = args.get_opt("json") {
         std::fs::write(path, report.json().to_string())
             .map_err(|e| acts::ActsError::io(path, e))?;
@@ -442,13 +466,11 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
 /// `BENCH_*.json`) dumps taken at different commits: per-cell
 /// best-throughput deltas, added/removed cells, regressions flagged
 /// (relative drop beyond `--tol`, or a cell flipping ok -> failed).
-/// Exit code 3 with `--fail-on-regression` when anything regressed.
+/// With `--store-dir <d>` the old side comes straight from the
+/// experiment store's entries (`acts fleet-diff new.json --store-dir
+/// d`) — no previous-run JSON artifact needed. Exit code 3 with
+/// `--fail-on-regression` when anything regressed.
 fn cmd_fleet_diff(args: &Args) -> acts::Result<()> {
-    let [old_path, new_path] = args.positional.as_slice() else {
-        return Err(acts::ActsError::InvalidArg(
-            "usage: acts fleet-diff <old.json> <new.json> [--tol 0.05] [--json out.json] [--fail-on-regression]".into(),
-        ));
-    };
     let tol: f64 = {
         let raw = args.get("tol", "0.05");
         let tol: f64 = raw.parse().map_err(|_| {
@@ -461,7 +483,26 @@ fn cmd_fleet_diff(args: &Args) -> acts::Result<()> {
         }
         tol
     };
-    let diff = scenario::diff_files(old_path, new_path, tol)?;
+    let diff = match (args.positional.as_slice(), args.get_opt("store-dir")) {
+        ([old_path, new_path], None) => scenario::diff_files(old_path, new_path, tol)?,
+        ([new_path], Some(dir)) => {
+            let store = scenario::ExperimentStore::open(std::path::Path::new(dir))?;
+            let old = store.as_fleet_dump()?;
+            let text = std::fs::read_to_string(new_path)
+                .map_err(|e| acts::ActsError::io(new_path, e))?;
+            let new = acts::report::Json::parse(&text).map_err(|e| {
+                acts::ActsError::InvalidArg(format!("{new_path}: not valid JSON: {e}"))
+            })?;
+            scenario::diff_dumps(&old, &new, tol)?
+        }
+        _ => {
+            return Err(acts::ActsError::InvalidArg(
+                "usage: acts fleet-diff <old.json> <new.json> | acts fleet-diff <new.json> \
+                 --store-dir <dir>  [--tol 0.05] [--json out.json] [--fail-on-regression]"
+                    .into(),
+            ))
+        }
+    };
     print!("{}", diff.table().markdown());
     let (best, worst) = diff.extremes();
     println!(
@@ -480,6 +521,73 @@ fn cmd_fleet_diff(args: &Args) -> acts::Result<()> {
     }
     if args.has("fail-on-regression") && diff.regressions() > 0 {
         std::process::exit(3);
+    }
+    Ok(())
+}
+
+/// `acts store [stats|gc|clear]` — manage a content-addressed
+/// experiment store: `stats` (the default) prints entry count and
+/// bytes (`--json <file>` for machine use), `gc --max-bytes <n>`
+/// evicts oldest-first until the store fits, `clear` empties it. The
+/// directory comes from `--store-dir`, else `ACTS_STORE_DIR`.
+fn cmd_store(args: &Args) -> acts::Result<()> {
+    let store = match args.get_opt("store-dir") {
+        Some(dir) => scenario::ExperimentStore::open(std::path::Path::new(dir))?,
+        None => scenario::store_dir_from_env()?.ok_or_else(|| {
+            acts::ActsError::InvalidArg(
+                "acts store needs a directory: pass --store-dir <d> or set ACTS_STORE_DIR"
+                    .into(),
+            )
+        })?,
+    };
+    let sub = args.positional.first().map(|s| s.as_str()).unwrap_or("stats");
+    match sub {
+        "stats" => {
+            let stats = store.stats()?;
+            println!(
+                "experiment store at {}: {} entries, {} bytes",
+                store.dir().display(),
+                stats.entries,
+                stats.bytes
+            );
+            if let Some(path) = args.get_opt("json") {
+                let json = acts::report::Json::obj(vec![
+                    ("dir", acts::report::Json::Str(store.dir().display().to_string())),
+                    ("entries", acts::report::Json::Num(stats.entries as f64)),
+                    ("bytes", acts::report::Json::Num(stats.bytes as f64)),
+                ]);
+                std::fs::write(path, json.to_string())
+                    .map_err(|e| acts::ActsError::io(path, e))?;
+                println!("wrote {path}");
+            }
+        }
+        "gc" => {
+            let raw = args.get_opt("max-bytes").ok_or_else(|| {
+                acts::ActsError::InvalidArg(
+                    "acts store gc needs --max-bytes <n> (the size to shrink the store to)"
+                        .into(),
+                )
+            })?;
+            let max_bytes: u64 = raw.parse().map_err(|_| {
+                acts::ActsError::InvalidArg(format!(
+                    "--max-bytes expects a byte count, got `{raw}`"
+                ))
+            })?;
+            let report = store.gc(max_bytes)?;
+            println!(
+                "experiment store gc: evicted {} entries ({} bytes), {} entries ({} bytes) remain",
+                report.evicted, report.freed_bytes, report.remaining_entries, report.remaining_bytes
+            );
+        }
+        "clear" => {
+            let removed = store.clear()?;
+            println!("experiment store cleared: {removed} entries removed");
+        }
+        other => {
+            return Err(acts::ActsError::InvalidArg(format!(
+                "unknown store subcommand `{other}` (stats|gc|clear)"
+            )))
+        }
     }
     Ok(())
 }
@@ -641,15 +749,31 @@ COMMANDS:
                                          transient faults on the native
                                          backend at probability f
                    --chaos-seed <n>      (1)            fault-plan seed
+                   --store-dir <d>       content-addressed experiment
+                                         store: cells already stored are
+                                         served from <d> with zero engine
+                                         work; completed cells write back
+                                         (default: ACTS_STORE_DIR)
+                   --no-store            ignore ACTS_STORE_DIR (cold-run
+                                         benchmarking)
                  deployments are registry names: standalone, arm-vm,
                  cluster-<n>, <deployment>-interference-<f>; workloads
                  include recorded traces (trace:hot-reads, ...); the
                  report names each cell's exhausted budget dimension
     fleet-diff   diff two fleet/bench JSON dumps across commits
                    acts fleet-diff old.json new.json
+                   acts fleet-diff new.json --store-dir <d>
+                                         old side read from the
+                                         experiment store's entries
                    --tol <f>             (0.05)  relative drop tolerated
                    --json <file>         dump the diff as JSON
                    --fail-on-regression  exit 3 if anything regressed
+    store        manage a content-addressed experiment store
+                 (--store-dir <d>, default ACTS_STORE_DIR):
+                   stats                 entry count and bytes
+                                         (--json <file> for machines)
+                   gc --max-bytes <n>    evict oldest-first to fit <n>
+                   clear                 remove every entry
     surface      dump a 2-knob grid sweep as CSV
                    --sut --workload --deployment --x <knob> --y <knob> --side <n>
                    --backend <b>
@@ -680,7 +804,14 @@ poisons only the rounds sharing that execute; a session poisoned 3
 rounds running is quarantined (`stopped by quarantined`) while its
 fleet-mates continue undisturbed.
 
+Experiment store: fleet cells are deterministic, so their outcomes are
+content-addressed — ACTS_STORE_DIR (or --store-dir) caches every
+completed cell's full record set on disk keyed by resolved spec +
+code epoch + backend identity; re-running a matrix serves stored cells
+bit-identically with zero engine work. Cells with custom payloads
+(closure optimizers, explicit starting units) bypass the store.
+
 Environment: malformed ACTS_BACKEND / ACTS_LANES / ACTS_SCHED_MODE /
-ACTS_NATIVE_THREADS / ACTS_NATIVE_SIMD values fail at startup with an
-error naming the variable and its accepted values.
+ACTS_NATIVE_THREADS / ACTS_NATIVE_SIMD / ACTS_STORE_DIR values fail at
+startup with an error naming the variable and its accepted values.
 ";

@@ -189,6 +189,19 @@ impl Json {
         }
     }
 
+    /// Unsigned-integer value, if this is a number that is a
+    /// non-negative integer exactly representable in an `f64`
+    /// (≤ 2^53). Counts and seeds round-trip through JSON losslessly
+    /// under this bound; anything else is `None`, not a truncation.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= 9_007_199_254_740_992.0 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
     /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
@@ -425,6 +438,18 @@ pub fn fmt_duration(secs: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn as_u64_accepts_exact_counts_only() {
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(9.0).as_u64(), Some(9));
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), Some(1 << 53));
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::Num(1e18).as_u64(), None);
+        assert_eq!(Json::Str("9".into()).as_u64(), None);
+    }
 
     #[test]
     fn markdown_table() {

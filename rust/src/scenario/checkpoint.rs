@@ -3,7 +3,9 @@
 //!
 //! # What gets recorded
 //!
-//! One JSONL file per fleet cell (`<dir>/<sanitized-label>.jsonl`),
+//! One JSONL file per fleet cell
+//! (`<dir>/<sanitized-label>-<label-hash>.jsonl` — the hash of the raw
+//! label keeps journals distinct even when sanitization collides),
 //! one line per **absorbed staged round**, appended at the round
 //! boundary by the scheduler's round observer
 //! ([`crate::tuner::Scheduler::set_round_observer`]):
@@ -127,9 +129,14 @@ impl CheckpointWriter {
         Ok(CheckpointWriter { dir })
     }
 
-    /// The journal path for a cell label.
+    /// The journal path for a cell label. The sanitized label keeps
+    /// the name readable; the appended FNV-1a hash of the *raw* label
+    /// keeps it unique — two labels differing only in sanitized-away
+    /// characters (`cell:x` vs `cell?x`) must never share a journal,
+    /// or resume would replay one cell's rounds into the other.
     pub fn log_path(&self, label: &str) -> PathBuf {
-        self.dir.join(format!("{}.jsonl", sanitize_label(label)))
+        let tag = crate::util::hash::fnv64(label.as_bytes()) as u32;
+        self.dir.join(format!("{}-{tag:08x}.jsonl", sanitize_label(label)))
     }
 
     /// Append one record to a cell's journal. Checkpointing is
@@ -267,6 +274,19 @@ mod tests {
         assert_eq!(sanitize_label("mysql/zipfian-rw/standalone/rrs/s1"),
             "mysql_zipfian-rw_standalone_rrs_s1");
         assert_eq!(sanitize_label("tests-5 (a?b)"), "tests-5__a_b_");
+    }
+
+    #[test]
+    fn sanitize_colliding_labels_get_distinct_journals() {
+        let dir = std::env::temp_dir()
+            .join(format!("acts-ckpt-collide-{}", std::process::id()));
+        let writer = CheckpointWriter::create(&dir).unwrap();
+        // both sanitize to `cell_x`; only the label hash separates them
+        assert_eq!(sanitize_label("cell:x"), sanitize_label("cell?x"));
+        assert_ne!(writer.log_path("cell:x"), writer.log_path("cell?x"));
+        // and identical labels must keep mapping to one stable journal
+        assert_eq!(writer.log_path("cell:x"), writer.log_path("cell:x"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! by `rust/tests/fleet.rs`.
 
 use super::checkpoint::{self, CheckpointWriter, RoundRecord};
+use super::store::{cell_key, CellKey, ExperimentStore};
 use super::{OptimizerSel, ScenarioSpec};
 use crate::error::{ActsError, Result};
 use crate::experiment::Lab;
@@ -40,6 +41,18 @@ struct CellMeta {
     seed: u64,
 }
 
+/// How one compiled cell will produce its outcome.
+enum CellState {
+    /// On the scheduler; `key` is present when the cell is keyable and
+    /// an experiment store should record the outcome on completion.
+    Live { key: Option<CellKey> },
+    /// Install failure at compile time — never reached the scheduler.
+    PreFailed(ActsError),
+    /// Served from the experiment store — never deployed, never
+    /// scheduled, zero engine work.
+    Hit(Box<TuningOutcome>),
+}
+
 /// A compiled fleet: ready scheduler sessions plus the cell metadata
 /// to demux their outcomes. Build with [`Fleet::compile`], drive with
 /// [`Fleet::run`].
@@ -52,11 +65,18 @@ struct CellMeta {
 /// same per-cell isolation as a failed baseline. Malformed specs
 /// (unknown optimizer, wrong-dimension units) still fail the compile.
 pub struct Fleet {
-    /// One entry per cell, in spec order: metadata plus the install
-    /// error for cells that never reached the scheduler.
-    cells: Vec<(CellMeta, Option<ActsError>)>,
+    /// One entry per cell, in spec order: metadata plus how the cell
+    /// will produce its outcome (scheduler, store hit, or pre-failure).
+    cells: Vec<(CellMeta, CellState)>,
     scheduler: Scheduler<'static, SimulatedSut>,
     engine: Arc<Engine>,
+    /// The experiment store, when one is attached
+    /// ([`Fleet::compile_with_options`]): hits were served at compile
+    /// time; misses write back when [`Fleet::run`] completes them.
+    store: Option<ExperimentStore>,
+    store_hits: u64,
+    store_misses: u64,
+    store_bytes: u64,
 }
 
 impl Fleet {
@@ -72,7 +92,7 @@ impl Fleet {
         specs: Vec<ScenarioSpec>,
         mode: SchedulerMode,
     ) -> Result<Fleet> {
-        Fleet::compile_inner(lab, specs, mode, None)
+        Fleet::compile_with_options(lab, specs, mode, None, None)
     }
 
     /// Compile with round-boundary checkpointing under `dir` (the
@@ -88,8 +108,30 @@ impl Fleet {
         mode: SchedulerMode,
         dir: &Path,
     ) -> Result<Fleet> {
-        let writer = Arc::new(CheckpointWriter::create(dir)?);
-        Fleet::compile_inner(lab, specs, mode, Some(writer))
+        Fleet::compile_with_options(lab, specs, mode, Some(dir), None)
+    }
+
+    /// Compile with every option: an explicit scheduler mode, optional
+    /// round-boundary checkpointing, and an optional content-addressed
+    /// [`ExperimentStore`]. With a store attached, keyable cells whose
+    /// entry exists are served **at compile time** — never deployed,
+    /// never scheduled, zero engine work — and keyable misses write
+    /// their outcome back when [`Fleet::run`] completes them.
+    /// Unkeyable cells (custom optimizer factory, explicit starting
+    /// unit) bypass the store with a stderr notice and are counted in
+    /// neither hits nor misses.
+    pub fn compile_with_options(
+        lab: &Lab,
+        specs: Vec<ScenarioSpec>,
+        mode: SchedulerMode,
+        checkpoint_dir: Option<&Path>,
+        store: Option<ExperimentStore>,
+    ) -> Result<Fleet> {
+        let writer = match checkpoint_dir {
+            Some(dir) => Some(Arc::new(CheckpointWriter::create(dir)?)),
+            None => None,
+        };
+        Fleet::compile_inner(lab, specs, mode, writer, store)
     }
 
     fn compile_inner(
@@ -97,12 +139,53 @@ impl Fleet {
         specs: Vec<ScenarioSpec>,
         mode: SchedulerMode,
         writer: Option<Arc<CheckpointWriter>>,
+        store: Option<ExperimentStore>,
     ) -> Result<Fleet> {
         let mut scheduler = Scheduler::with_mode(mode);
         let mut cells = Vec::with_capacity(specs.len());
         // live-slot labels, in scheduler.add order, for the observer
         let mut live_labels: Vec<String> = Vec::new();
+        // the backend identity every key must fold in, captured once:
+        // scalar and AVX2 (and chaos-wrapped) results must never alias
+        let platform = lab.engine.platform();
+        let simd_width = lab.engine.stats().simd_width;
+        let (mut store_hits, mut store_misses, mut store_bytes) = (0u64, 0u64, 0u64);
         for spec in specs {
+            // store lookup first: a hit needs no deployment, no
+            // session, no scheduler slot — the whole point
+            let key = match &store {
+                Some(store) => match cell_key(&spec, &platform, simd_width) {
+                    Some(key) => {
+                        if let Some((stored, bytes)) = store.load(&key) {
+                            store_hits += 1;
+                            store_bytes += bytes;
+                            let meta = CellMeta {
+                                label: spec.label.clone(),
+                                sut: spec.target.name().to_string(),
+                                workload: spec.workload.name.clone(),
+                                deployment: spec.deployment.name.clone(),
+                                budget: spec.tuning.budget.name(),
+                                optimizer: spec.tuning.optimizer.clone(),
+                                seed: spec.tuning.seed,
+                            };
+                            cells.push((meta, CellState::Hit(Box::new(stored.outcome))));
+                            continue;
+                        }
+                        store_misses += 1;
+                        Some(key)
+                    }
+                    None => {
+                        eprintln!(
+                            "acts: store: cell `{}` carries a custom payload (optimizer \
+                             closure or explicit starting unit) that no key can spell; \
+                             bypassing the experiment store for this cell",
+                            spec.label
+                        );
+                        None
+                    }
+                },
+                None => None,
+            };
             let mut sut = spec.deploy(lab);
             // the session first: a spec the registries cannot resolve
             // is a programming error and fails the whole compile
@@ -146,26 +229,29 @@ impl Fleet {
                 optimizer: tuning.optimizer,
                 seed: tuning.seed,
             };
-            if install_err.is_none() {
-                let mut session = session;
-                let mut sut = sut;
-                if let Some(writer) = &writer {
-                    // resume: replay this cell's journal (if any) before
-                    // handing the pair to the scheduler
-                    let records = checkpoint::load_log(&writer.log_path(&meta.label));
-                    if !records.is_empty() {
-                        checkpoint::replay_session(
-                            &mut session,
-                            &mut sut,
-                            &records,
-                            Scheduler::<SimulatedSut>::DEFAULT_QUARANTINE_AFTER,
-                        );
+            match install_err {
+                Some(e) => cells.push((meta, CellState::PreFailed(e))),
+                None => {
+                    let mut session = session;
+                    let mut sut = sut;
+                    if let Some(writer) = &writer {
+                        // resume: replay this cell's journal (if any) before
+                        // handing the pair to the scheduler
+                        let records = checkpoint::load_log(&writer.log_path(&meta.label));
+                        if !records.is_empty() {
+                            checkpoint::replay_session(
+                                &mut session,
+                                &mut sut,
+                                &records,
+                                Scheduler::<SimulatedSut>::DEFAULT_QUARANTINE_AFTER,
+                            );
+                        }
                     }
+                    live_labels.push(meta.label.clone());
+                    scheduler.add(session, sut);
+                    cells.push((meta, CellState::Live { key }));
                 }
-                live_labels.push(meta.label.clone());
-                scheduler.add(session, sut);
             }
-            cells.push((meta, install_err));
         }
         if let Some(writer) = writer {
             // journal every absorbed round; replayed rounds were
@@ -179,7 +265,25 @@ impl Fleet {
                 writer.append(&live_labels[slot], &record);
             });
         }
-        Ok(Fleet { cells, scheduler, engine: lab.engine.clone() })
+        Ok(Fleet {
+            cells,
+            scheduler,
+            engine: lab.engine.clone(),
+            store,
+            store_hits,
+            store_misses,
+            store_bytes,
+        })
+    }
+
+    /// Store hits served at compile time (0 without a store).
+    pub fn store_hits(&self) -> u64 {
+        self.store_hits
+    }
+
+    /// Keyable cells the store could not serve (0 without a store).
+    pub fn store_misses(&self) -> u64 {
+        self.store_misses
     }
 
     /// Number of compiled cells (pre-failed cells included).
@@ -192,19 +296,25 @@ impl Fleet {
     /// Per-cell fatal errors land in their cell; they do not abort the
     /// fleet.
     pub fn run(self) -> FleetReport {
-        let before = self.engine.stats();
-        let mut outcomes = self.scheduler.run().into_iter();
-        let after = self.engine.stats();
-        let cells = self
-            .cells
+        let Fleet { cells, scheduler, engine, store, store_hits, store_misses, mut store_bytes } =
+            self;
+        let before = engine.stats();
+        let mut outcomes = scheduler.run().into_iter();
+        let after = engine.stats();
+        let cells = cells
             .into_iter()
-            .map(|(m, install_err)| {
-                let outcome = match install_err {
+            .map(|(m, state)| {
+                let (outcome, key) = match state {
                     // pre-failed at compile: never reached the scheduler
-                    Some(e) => Err(e),
-                    None => outcomes.next().expect("one scheduler outcome per live cell"),
+                    CellState::PreFailed(e) => (Err(e), None),
+                    // served from the store at compile time
+                    CellState::Hit(o) => (Ok(*o), None),
+                    CellState::Live { key } => (
+                        outcomes.next().expect("one scheduler outcome per live cell"),
+                        key,
+                    ),
                 };
-                FleetCell {
+                let cell = FleetCell {
                     label: m.label,
                     sut: m.sut,
                     workload: m.workload,
@@ -213,7 +323,12 @@ impl Fleet {
                     budget: m.budget,
                     seed: m.seed,
                     outcome,
+                };
+                // write keyable misses back so the next fleet hits
+                if let (Some(store), Some(key)) = (&store, &key) {
+                    store_bytes += store.save(key, &cell);
                 }
+                cell
             })
             .collect();
         FleetReport {
@@ -236,6 +351,9 @@ impl Fleet {
                 // delta — recorded so a cross-commit fleet diff can
                 // attribute numeric drift to a dispatch change
                 simd_width: after.simd_width,
+                store_hits,
+                store_misses,
+                store_bytes,
             },
         }
     }
@@ -296,6 +414,15 @@ pub struct Coalescing {
     /// SIMD lane width of the engine's row evaluator (1 = scalar, 8 =
     /// native AVX2) — a backend property, not a delta.
     pub simd_width: u64,
+    /// Cells served from the experiment store without touching the
+    /// engine (0 when no store is attached) — attributes
+    /// `execute_calls == 0` runs to the cache, not a scheduling bug.
+    pub store_hits: u64,
+    /// Keyable cells the store could not serve (computed and written
+    /// back; 0 when no store is attached).
+    pub store_misses: u64,
+    /// Entry bytes read on hits plus written on misses.
+    pub store_bytes: u64,
 }
 
 /// Aggregate statistics over a fleet's completed cells.
@@ -476,6 +603,9 @@ impl FleetReport {
                     ),
                     ("peak_inflight", Json::Num(self.coalescing.peak_inflight as f64)),
                     ("simd_width", Json::Num(self.coalescing.simd_width as f64)),
+                    ("store_hits", Json::Num(self.coalescing.store_hits as f64)),
+                    ("store_misses", Json::Num(self.coalescing.store_misses as f64)),
+                    ("store_bytes", Json::Num(self.coalescing.store_bytes as f64)),
                 ]),
             ),
             ("cells", Json::Arr(cells)),

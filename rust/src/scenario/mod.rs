@@ -33,10 +33,12 @@
 pub mod checkpoint;
 pub mod diff;
 pub mod fleet;
+pub mod store;
 
 pub use checkpoint::{load_log, replay_session, CheckpointWriter, RoundRecord};
 pub use diff::{diff_dumps, diff_files, DiffKind, DiffReport, DiffRow};
 pub use fleet::{Fleet, FleetAggregate, FleetCell, FleetReport};
+pub use store::{cell_key, store_dir_from_env, CellKey, ExperimentStore, CODE_EPOCH};
 
 use crate::budget::Budget;
 use crate::error::{ActsError, Result};

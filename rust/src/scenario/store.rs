@@ -1,0 +1,802 @@
+//! The content-addressed experiment store — never compute a fleet
+//! cell twice.
+//!
+//! Fleet cells are hermetic and deterministic: a resolved
+//! [`ScenarioSpec`] + seeds + backend dispatch yields bit-identical
+//! records (the scheduler/lane/streaming/SIMD invariance guarantees,
+//! asserted end-to-end in `rust/tests/fleet.rs`). That makes a cell's
+//! outcome a pure function of its resolved inputs, so it can be cached
+//! by content address exactly the way a data-build pipeline caches
+//! compiled assets: hash the inputs, look the output up on disk.
+//!
+//! # The key
+//!
+//! [`cell_key`] hashes (128-bit FNV-1a, length-prefixed fields — see
+//! [`crate::util::hash`]) the *resolved* cell:
+//!
+//! | field | why it is in the key |
+//! |---|---|
+//! | [`CODE_EPOCH`] | numeric semantics of the stack (bump to invalidate) |
+//! | backend `platform()` + `simd_width` | scalar and AVX2 results must never alias |
+//! | target name | which SUT / stack |
+//! | workload name | registry identity of the bound workload |
+//! | deployment name | registry identity of the environment |
+//! | optimizer name | which registry optimizer proposed |
+//! | budget canonical name | the resource limit ([`crate::budget::Budget::name`]) |
+//! | round size | round granularity changes optimizer behaviour |
+//! | tuning seed + max consecutive failures | session policy |
+//! | sut seed | the manipulator's noise/failure streams |
+//! | all six [`SimulationOpts`] fields | the staging simulation itself |
+//!
+//! The cell **label** is deliberately *not* keyed: it is presentation,
+//! and two labels over the same resolved cell should share one entry.
+//! Workload/deployment names are assumed registry-canonical (that is
+//! how every fleet builds them); hand-built payloads reusing a
+//! registry name are the caller's foot-gun.
+//!
+//! # Unkeyable cells
+//!
+//! Cells carrying payloads a registry cannot spell — a
+//! [`ScenarioSpec::with_optimizer`] closure or a
+//! [`ScenarioSpec::with_initial_unit`] starting configuration — have
+//! no canonical form to hash. [`cell_key`] returns `None` for them and
+//! the fleet compiler **bypasses the store loudly** (a stderr line per
+//! cell) instead of letting them alias a registry cell.
+//!
+//! # CODE_EPOCH bump policy
+//!
+//! Bump [`CODE_EPOCH`] whenever a change alters *what numbers a cell
+//! produces*: surface math, optimizer proposal streams, rng layering,
+//! measurement model, budget charging. Pure performance work
+//! (scheduling, coalescing, SIMD — all proven bit-identical) does NOT
+//! bump it; that invariance is what makes the store sound. A bump
+//! orphans old entries (different key → miss) rather than corrupting
+//! anything; `acts store gc`/`clear` reclaims them.
+//!
+//! # On-disk format and crash safety
+//!
+//! One JSON file per key (`<dir>/<32-hex-key>.json`) holding the cell
+//! identity plus the full [`TuningOutcome`] — every record, ledger
+//! count and stop cause, f64s in Rust's shortest round-trip formatting
+//! so numbers survive the disk trip bit-exactly. Writes are atomic
+//! (unique tmp file + rename); a torn, truncated or otherwise corrupt
+//! entry is **treated as a miss with a warning, never a crash**, and
+//! the recomputed cell overwrites it.
+
+use super::fleet::FleetCell;
+use super::{OptimizerSel, ScenarioSpec};
+use crate::budget::StopCause;
+use crate::error::{ActsError, Result};
+use crate::manipulator::{Measurement, SimulationOpts};
+use crate::report::Json;
+use crate::tuner::{TestRecord, TuningOutcome};
+use crate::util::hash::Fnv128;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Version of the numeric semantics the store's entries were computed
+/// under. Part of every [`cell_key`]; see the module docs for the bump
+/// policy.
+pub const CODE_EPOCH: u32 = 1;
+
+/// On-disk entry format version (the file layout, not the numerics).
+const ENTRY_VERSION: u64 = 1;
+
+/// The environment variable naming the default store directory.
+pub const STORE_DIR_ENV: &str = "ACTS_STORE_DIR";
+
+/// A cell's 128-bit content address (see the module docs for what it
+/// covers). Renders as 32 lowercase hex chars — the entry's file stem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CellKey(u128);
+
+impl fmt::Display for CellKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+/// Content-address one scenario cell under a backend identity.
+/// `None` means the cell is **unkeyable** (custom optimizer factory or
+/// explicit starting unit) and must bypass the store.
+pub fn cell_key(spec: &ScenarioSpec, platform: &str, simd_width: u64) -> Option<CellKey> {
+    if spec.initial_unit.is_some() {
+        return None;
+    }
+    if matches!(spec.optimizer_sel(), OptimizerSel::Custom(_)) {
+        return None;
+    }
+    let mut h = Fnv128::new();
+    h.write_str("acts-cell-key");
+    h.write_u64(CODE_EPOCH as u64);
+    h.write_str(platform);
+    h.write_u64(simd_width);
+    h.write_str(spec.target.name());
+    h.write_str(&spec.workload.name);
+    h.write_str(&spec.deployment.name);
+    h.write_str(&spec.tuning.optimizer);
+    h.write_str(&spec.tuning.budget.name());
+    h.write_u64(spec.tuning.round_size as u64);
+    h.write_u64(spec.tuning.seed);
+    h.write_u64(spec.tuning.max_consecutive_failures as u64);
+    h.write_u64(spec.sut_seed);
+    // exhaustive destructure: a new simulation knob must either join
+    // the key or be waved off here explicitly
+    let SimulationOpts {
+        restart_s,
+        settle_s,
+        noise_sigma,
+        restart_failure_p,
+        test_failure_p,
+        base_error_rate,
+    } = &spec.sim;
+    for v in [restart_s, settle_s, noise_sigma, restart_failure_p, test_failure_p, base_error_rate]
+    {
+        h.write_f64(*v);
+    }
+    Some(CellKey(h.finish()))
+}
+
+/// Resolve the default store from [`STORE_DIR_ENV`]. `Ok(None)` when
+/// the variable is unset; a set-but-unusable value (empty, or a path
+/// that cannot be created/used as a directory) fails with an error
+/// naming the variable and the path — the same fail-fast contract as
+/// `ACTS_LANES` / `ACTS_BACKEND`.
+pub fn store_dir_from_env() -> Result<Option<ExperimentStore>> {
+    match std::env::var(STORE_DIR_ENV) {
+        Err(std::env::VarError::NotPresent) => Ok(None),
+        Err(std::env::VarError::NotUnicode(_)) => Err(ActsError::InvalidArg(format!(
+            "{STORE_DIR_ENV} is set to a non-unicode value (expected a directory path)"
+        ))),
+        Ok(raw) if raw.trim().is_empty() => Err(ActsError::InvalidArg(format!(
+            "{STORE_DIR_ENV} is set but empty (expected a directory path)"
+        ))),
+        Ok(raw) => ExperimentStore::open(Path::new(&raw)).map(Some).map_err(|e| {
+            ActsError::InvalidArg(format!("{STORE_DIR_ENV}={raw} is unusable: {e}"))
+        }),
+    }
+}
+
+/// One cell read back from the store: identity as stored plus the full
+/// outcome.
+pub struct StoredCell {
+    /// Report label the entry was stored under (presentation only —
+    /// not part of the key).
+    pub label: String,
+    /// Target registry name.
+    pub sut: String,
+    /// Workload name.
+    pub workload: String,
+    /// Deployment name.
+    pub deployment: String,
+    /// Optimizer name.
+    pub optimizer: String,
+    /// Canonical budget name.
+    pub budget: String,
+    /// Tuning seed.
+    pub seed: u64,
+    /// The cell's complete outcome, records included.
+    pub outcome: TuningOutcome,
+}
+
+/// Aggregate size of a store directory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    /// Entry files present.
+    pub entries: u64,
+    /// Their total size in bytes.
+    pub bytes: u64,
+}
+
+/// What `gc` did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GcReport {
+    /// Entries evicted (oldest first).
+    pub evicted: u64,
+    /// Bytes those entries occupied.
+    pub freed_bytes: u64,
+    /// Entries kept.
+    pub remaining_entries: u64,
+    /// Bytes they occupy.
+    pub remaining_bytes: u64,
+}
+
+/// The on-disk store: one directory, one JSON file per [`CellKey`].
+/// See the module docs for format and crash-safety semantics.
+pub struct ExperimentStore {
+    dir: PathBuf,
+}
+
+impl ExperimentStore {
+    /// Open (creating if needed) a store under `dir`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ExperimentStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| ActsError::io(dir.display().to_string(), e))?;
+        Ok(ExperimentStore { dir })
+    }
+
+    /// The store's directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The entry file for a key.
+    pub fn entry_path(&self, key: &CellKey) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Look a cell up. `None` is a miss: the entry is absent, or it is
+    /// torn/corrupt/foreign — the latter cases warn on stderr and the
+    /// cell recomputes (and overwrites the entry). Returns the stored
+    /// cell plus the entry's size in bytes.
+    pub fn load(&self, key: &CellKey) -> Option<(StoredCell, u64)> {
+        let path = self.entry_path(key);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(text) => text,
+            // absent = a plain miss, no noise
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return None,
+            Err(e) => {
+                eprintln!("acts: store: cannot read {} ({e}); treating as a miss", path.display());
+                return None;
+            }
+        };
+        match parse_entry(&text, key) {
+            Ok(cell) => Some((cell, text.len() as u64)),
+            Err(why) => {
+                eprintln!(
+                    "acts: store: corrupt entry {} ({why}); recomputing the cell",
+                    path.display()
+                );
+                None
+            }
+        }
+    }
+
+    /// Write a completed cell back, atomically (unique tmp + rename).
+    /// Only clean outcomes are stored: failed cells and quarantined
+    /// sessions reflect faults, not content, and must re-run next time.
+    /// Best-effort by design — an unwritable store must not kill the
+    /// fleet it accelerates, so IO errors warn on stderr and return 0.
+    /// Returns the bytes written.
+    pub fn save(&self, key: &CellKey, cell: &FleetCell) -> u64 {
+        let Ok(outcome) = &cell.outcome else { return 0 };
+        if outcome.stopped == StopCause::Quarantined {
+            return 0;
+        }
+        let text = entry_json(key, cell, outcome).to_string();
+        let path = self.entry_path(key);
+        let tmp = self.dir.join(format!("{key}.json.tmp-{}", std::process::id()));
+        let result = std::fs::write(&tmp, &text)
+            .and_then(|()| std::fs::rename(&tmp, &path));
+        match result {
+            Ok(()) => text.len() as u64,
+            Err(e) => {
+                eprintln!("acts: store: write to {} failed: {e}", path.display());
+                let _ = std::fs::remove_file(&tmp);
+                0
+            }
+        }
+    }
+
+    /// Every entry file, as `(path, bytes, mtime)`.
+    fn scan(&self) -> Result<Vec<(PathBuf, u64, std::time::SystemTime)>> {
+        let mut out = Vec::new();
+        let entries = std::fs::read_dir(&self.dir)
+            .map_err(|e| ActsError::io(self.dir.display().to_string(), e))?;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let Ok(meta) = entry.metadata() else { continue };
+            if !meta.is_file() {
+                continue;
+            }
+            let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            out.push((path, meta.len(), mtime));
+        }
+        // stable order: oldest first, path as the tiebreak
+        out.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        Ok(out)
+    }
+
+    /// Entry count and total bytes.
+    pub fn stats(&self) -> Result<StoreStats> {
+        let scanned = self.scan()?;
+        Ok(StoreStats {
+            entries: scanned.len() as u64,
+            bytes: scanned.iter().map(|(_, n, _)| n).sum(),
+        })
+    }
+
+    /// Evict oldest-first (by mtime) until the store fits
+    /// `max_bytes`. Safe to run any time: evicted cells simply
+    /// recompute (and re-store) on their next fleet.
+    pub fn gc(&self, max_bytes: u64) -> Result<GcReport> {
+        let scanned = self.scan()?;
+        let mut total: u64 = scanned.iter().map(|(_, n, _)| n).sum();
+        let mut report = GcReport::default();
+        for (path, bytes, _) in &scanned {
+            if total <= max_bytes {
+                break;
+            }
+            match std::fs::remove_file(path) {
+                Ok(()) => {
+                    total -= bytes;
+                    report.evicted += 1;
+                    report.freed_bytes += bytes;
+                }
+                Err(e) => {
+                    eprintln!("acts: store: gc cannot remove {} ({e})", path.display());
+                }
+            }
+        }
+        report.remaining_entries = scanned.len() as u64 - report.evicted;
+        report.remaining_bytes = total;
+        Ok(report)
+    }
+
+    /// Remove every entry (and any stranded tmp file). Returns how
+    /// many entries were removed.
+    pub fn clear(&self) -> Result<u64> {
+        let mut removed = 0u64;
+        let entries = std::fs::read_dir(&self.dir)
+            .map_err(|e| ActsError::io(self.dir.display().to_string(), e))?;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            let is_entry = name.ends_with(".json");
+            let is_tmp = name.contains(".json.tmp-");
+            if !is_entry && !is_tmp {
+                continue;
+            }
+            match std::fs::remove_file(&path) {
+                Ok(()) if is_entry => removed += 1,
+                Ok(()) => {}
+                Err(e) => {
+                    eprintln!("acts: store: clear cannot remove {} ({e})", path.display())
+                }
+            }
+        }
+        Ok(removed)
+    }
+
+    /// Synthesize a fleet-report-shaped dump (`{"cells":[...]}`) from
+    /// every readable entry, so `acts fleet-diff --store-dir` can diff
+    /// a live run against stored cells without the old run's JSON
+    /// artifact. Corrupt entries are skipped with a warning; when two
+    /// entries share a label (relabelled cells), the newest-mtime one
+    /// wins. Cells sort by label for a stable dump.
+    pub fn as_fleet_dump(&self) -> Result<Json> {
+        let mut by_label: Vec<(String, std::time::SystemTime, Json)> = Vec::new();
+        // scan() is oldest-first, so a later same-label push is newer
+        for (path, _, mtime) in self.scan()? {
+            let Ok(text) = std::fs::read_to_string(&path) else { continue };
+            let cell = match parse_entry_any_key(&text) {
+                Ok(cell) => cell,
+                Err(why) => {
+                    eprintln!("acts: store: skipping corrupt entry {} ({why})", path.display());
+                    continue;
+                }
+            };
+            let json = stored_cell_json(&cell);
+            match by_label.iter().position(|(l, _, _)| *l == cell.label) {
+                Some(i) if by_label[i].1 <= mtime => by_label[i] = (cell.label, mtime, json),
+                Some(_) => {}
+                None => by_label.push((cell.label, mtime, json)),
+            }
+        }
+        by_label.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(Json::obj(vec![(
+            "cells",
+            Json::Arr(by_label.into_iter().map(|(_, _, j)| j).collect()),
+        )]))
+    }
+}
+
+// --- entry (de)serialization -------------------------------------------
+
+/// A measurement as a fixed 9-slot number array (field order is part
+/// of the entry format).
+fn measurement_json(m: &Measurement) -> Json {
+    Json::nums(&[
+        m.throughput,
+        m.latency_ms,
+        m.p99_ms,
+        m.txns_per_s,
+        m.hits_per_s,
+        m.passed_txns as f64,
+        m.failed_txns as f64,
+        m.errors as f64,
+        m.duration_s,
+    ])
+}
+
+fn measurement_from(j: &Json) -> Option<Measurement> {
+    let xs = j.as_arr()?;
+    if xs.len() != 9 {
+        return None;
+    }
+    Some(Measurement {
+        throughput: xs[0].as_f64()?,
+        latency_ms: xs[1].as_f64()?,
+        p99_ms: xs[2].as_f64()?,
+        txns_per_s: xs[3].as_f64()?,
+        hits_per_s: xs[4].as_f64()?,
+        passed_txns: xs[5].as_u64()?,
+        failed_txns: xs[6].as_u64()?,
+        errors: xs[7].as_u64()?,
+        duration_s: xs[8].as_f64()?,
+    })
+}
+
+fn unit_from(j: &Json) -> Option<Vec<f64>> {
+    j.as_arr()?.iter().map(Json::as_f64).collect()
+}
+
+/// The full entry document for one completed cell.
+fn entry_json(key: &CellKey, cell: &FleetCell, outcome: &TuningOutcome) -> Json {
+    let records: Vec<Json> = outcome
+        .records
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("test_no", Json::Num(r.test_no as f64)),
+                ("unit", Json::nums(&r.unit)),
+                ("m", measurement_json(&r.measurement)),
+                ("best_so_far", Json::Num(r.best_so_far)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("version", Json::Num(ENTRY_VERSION as f64)),
+        ("key", Json::Str(key.to_string())),
+        ("epoch", Json::Num(CODE_EPOCH as f64)),
+        ("label", Json::Str(cell.label.clone())),
+        ("sut", Json::Str(cell.sut.clone())),
+        ("workload", Json::Str(cell.workload.clone())),
+        ("deployment", Json::Str(cell.deployment.clone())),
+        ("optimizer", Json::Str(cell.optimizer.clone())),
+        ("budget", Json::Str(cell.budget.clone())),
+        ("seed", Json::Num(cell.seed as f64)),
+        (
+            "outcome",
+            Json::obj(vec![
+                ("baseline", measurement_json(&outcome.baseline)),
+                ("best_unit", Json::nums(&outcome.best_unit)),
+                ("best", measurement_json(&outcome.best)),
+                ("improvement", Json::Num(outcome.improvement)),
+                ("tests_used", Json::Num(outcome.tests_used as f64)),
+                ("failures", Json::Num(outcome.failures as f64)),
+                ("sim_seconds", Json::Num(outcome.sim_seconds)),
+                ("stopped", Json::Str(outcome.stopped.to_string())),
+                ("records", Json::Arr(records)),
+            ]),
+        ),
+    ])
+}
+
+/// Parse an entry, requiring it to be stored under `key` (a mismatch
+/// means a hand-renamed or foreign file — a miss, not a crash).
+fn parse_entry(text: &str, key: &CellKey) -> std::result::Result<StoredCell, String> {
+    let (cell, stored_key) = parse_entry_inner(text)?;
+    if stored_key != key.to_string() {
+        return Err(format!("entry key `{stored_key}` does not match its filename"));
+    }
+    Ok(cell)
+}
+
+/// Parse an entry without a key expectation (the `as_fleet_dump` scan).
+fn parse_entry_any_key(text: &str) -> std::result::Result<StoredCell, String> {
+    parse_entry_inner(text).map(|(cell, _)| cell)
+}
+
+fn parse_entry_inner(text: &str) -> std::result::Result<(StoredCell, String), String> {
+    let j = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let version = j.get("version").and_then(Json::as_u64).ok_or("missing version")?;
+    if version != ENTRY_VERSION {
+        return Err(format!("unsupported entry version {version}"));
+    }
+    let field = |k: &str| -> std::result::Result<String, String> {
+        j.get(k).and_then(Json::as_str).map(str::to_string).ok_or(format!("missing `{k}`"))
+    };
+    let key = field("key")?;
+    let o = j.get("outcome").ok_or("missing `outcome`")?;
+    let records_json = o.get("records").and_then(Json::as_arr).ok_or("missing `records`")?;
+    let mut records = Vec::with_capacity(records_json.len());
+    for r in records_json {
+        records.push(TestRecord {
+            test_no: r.get("test_no").and_then(Json::as_u64).ok_or("bad record test_no")?,
+            unit: r.get("unit").and_then(unit_from).ok_or("bad record unit")?,
+            measurement: r.get("m").and_then(measurement_from).ok_or("bad record measurement")?,
+            best_so_far: r
+                .get("best_so_far")
+                .and_then(Json::as_f64)
+                .ok_or("bad record best_so_far")?,
+        });
+    }
+    let stopped_raw = o.get("stopped").and_then(Json::as_str).ok_or("missing `stopped`")?;
+    let outcome = TuningOutcome {
+        records,
+        baseline: o.get("baseline").and_then(measurement_from).ok_or("bad baseline")?,
+        best_unit: o.get("best_unit").and_then(unit_from).ok_or("bad best_unit")?,
+        best: o.get("best").and_then(measurement_from).ok_or("bad best")?,
+        improvement: o.get("improvement").and_then(Json::as_f64).ok_or("bad improvement")?,
+        tests_used: o.get("tests_used").and_then(Json::as_u64).ok_or("bad tests_used")?,
+        failures: o.get("failures").and_then(Json::as_u64).ok_or("bad failures")?,
+        sim_seconds: o.get("sim_seconds").and_then(Json::as_f64).ok_or("bad sim_seconds")?,
+        stopped: StopCause::parse(stopped_raw)
+            .ok_or_else(|| format!("unknown stop cause `{stopped_raw}`"))?,
+    };
+    Ok((
+        StoredCell {
+            label: field("label")?,
+            sut: field("sut")?,
+            workload: field("workload")?,
+            deployment: field("deployment")?,
+            optimizer: field("optimizer")?,
+            budget: field("budget")?,
+            seed: j.get("seed").and_then(Json::as_u64).ok_or("missing `seed`")?,
+            outcome,
+        },
+        key,
+    ))
+}
+
+/// One stored cell in the `FleetReport::json` cell shape (what
+/// `fleet-diff` reads).
+fn stored_cell_json(cell: &StoredCell) -> Json {
+    let o = &cell.outcome;
+    Json::obj(vec![
+        ("label", Json::Str(cell.label.clone())),
+        ("sut", Json::Str(cell.sut.clone())),
+        ("workload", Json::Str(cell.workload.clone())),
+        ("deployment", Json::Str(cell.deployment.clone())),
+        ("optimizer", Json::Str(cell.optimizer.clone())),
+        ("budget", Json::Str(cell.budget.clone())),
+        ("seed", Json::Num(cell.seed as f64)),
+        ("ok", Json::Bool(true)),
+        ("baseline", Json::Num(o.baseline.throughput)),
+        ("best", Json::Num(o.best.throughput)),
+        ("improvement", Json::Num(o.improvement)),
+        ("speedup", Json::Num(o.speedup())),
+        ("tests_used", Json::Num(o.tests_used as f64)),
+        ("failures", Json::Num(o.failures as f64)),
+        ("sim_seconds", Json::Num(o.sim_seconds)),
+        ("stopped", Json::Str(o.stopped.to_string())),
+        ("best_curve", Json::nums(&o.best_curve())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::budget::{Budget, BudgetDim};
+    use crate::tuner::TuningConfig;
+
+    fn spec(seed: u64) -> ScenarioSpec {
+        ScenarioSpec::from_names(
+            "mysql",
+            "zipfian-rw",
+            "standalone",
+            TuningConfig { budget: Budget::tests(9), seed, round_size: 4, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn keys_are_deterministic_and_field_sensitive() {
+        let base = cell_key(&spec(1), "native-cpu", 1).unwrap();
+        assert_eq!(cell_key(&spec(1), "native-cpu", 1).unwrap(), base);
+        // every keyed axis must move the key
+        assert_ne!(cell_key(&spec(2), "native-cpu", 1).unwrap(), base);
+        assert_ne!(cell_key(&spec(1), "native-cpu (avx2)", 1).unwrap(), base);
+        assert_ne!(cell_key(&spec(1), "native-cpu", 8).unwrap(), base);
+        let mut other = spec(1);
+        other.tuning.optimizer = "gp".into();
+        assert_ne!(cell_key(&other, "native-cpu", 1).unwrap(), base);
+        let mut other = spec(1);
+        other.tuning.budget = Budget::tests(10);
+        assert_ne!(cell_key(&other, "native-cpu", 1).unwrap(), base);
+        let mut other = spec(1);
+        other.tuning.round_size = 8;
+        assert_ne!(cell_key(&other, "native-cpu", 1).unwrap(), base);
+        let mut other = spec(1);
+        other.sut_seed = 99;
+        assert_ne!(cell_key(&other, "native-cpu", 1).unwrap(), base);
+        let mut other = spec(1);
+        other.sim.noise_sigma += 0.001;
+        assert_ne!(cell_key(&other, "native-cpu", 1).unwrap(), base);
+        // the label is presentation, not content
+        let relabelled = spec(1).with_label("same cell, different name");
+        assert_eq!(cell_key(&relabelled, "native-cpu", 1).unwrap(), base);
+    }
+
+    #[test]
+    fn custom_payload_cells_are_unkeyable() {
+        let with_unit = spec(1).with_initial_unit(vec![0.5; 4]);
+        assert!(cell_key(&with_unit, "native-cpu", 1).is_none());
+        let with_factory =
+            spec(1).with_optimizer(|dim| crate::optimizer::by_name("rrs", dim).unwrap());
+        assert!(cell_key(&with_factory, "native-cpu", 1).is_none());
+    }
+
+    fn fake_measurement(x: f64) -> Measurement {
+        Measurement {
+            throughput: x,
+            latency_ms: 1.25 + x,
+            p99_ms: 9.5,
+            txns_per_s: x / 8.0,
+            hits_per_s: x,
+            passed_txns: 12345,
+            failed_txns: 7,
+            errors: 2,
+            duration_s: 60.0,
+        }
+    }
+
+    fn fake_cell(label: &str) -> FleetCell {
+        let records = vec![
+            TestRecord {
+                test_no: 1,
+                unit: vec![0.1, 0.30000000000000004],
+                measurement: fake_measurement(1234.5678901234567),
+                best_so_far: 1234.5678901234567,
+            },
+            TestRecord {
+                test_no: 2,
+                unit: vec![0.9, 0.125],
+                measurement: fake_measurement(2000.25),
+                best_so_far: 2000.25,
+            },
+        ];
+        FleetCell {
+            label: label.into(),
+            sut: "mysql".into(),
+            workload: "zipfian-rw".into(),
+            deployment: "standalone".into(),
+            optimizer: "rrs".into(),
+            budget: "tests-9".into(),
+            seed: 11,
+            outcome: Ok(TuningOutcome {
+                baseline: records[0].measurement,
+                best_unit: records[1].unit.clone(),
+                best: records[1].measurement,
+                improvement: 0.6203079,
+                tests_used: 9,
+                failures: 1,
+                sim_seconds: 432.1098765,
+                stopped: StopCause::Exhausted(BudgetDim::Tests),
+                records,
+            }),
+        }
+    }
+
+    fn tmp_store(tag: &str) -> ExperimentStore {
+        let dir =
+            std::env::temp_dir().join(format!("acts-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        ExperimentStore::open(&dir).unwrap()
+    }
+
+    #[test]
+    fn entries_round_trip_bit_exactly() {
+        let store = tmp_store("roundtrip");
+        let key = cell_key(&spec(11), "native-cpu", 1).unwrap();
+        let cell = fake_cell("mysql/zipfian-rw/standalone/rrs/s11");
+        let bytes = store.save(&key, &cell);
+        assert!(bytes > 0);
+        let (loaded, loaded_bytes) = store.load(&key).expect("entry must load");
+        assert_eq!(loaded_bytes, bytes);
+        let original = cell.outcome.as_ref().unwrap();
+        assert_eq!(loaded.label, cell.label);
+        assert_eq!(loaded.seed, cell.seed);
+        assert_eq!(loaded.outcome.records, original.records, "records must be bit-exact");
+        assert_eq!(loaded.outcome.baseline, original.baseline);
+        assert_eq!(loaded.outcome.best_unit, original.best_unit);
+        assert_eq!(loaded.outcome.best, original.best);
+        assert_eq!(loaded.outcome.improvement, original.improvement);
+        assert_eq!(loaded.outcome.tests_used, original.tests_used);
+        assert_eq!(loaded.outcome.failures, original.failures);
+        assert_eq!(loaded.outcome.sim_seconds, original.sim_seconds);
+        assert_eq!(loaded.outcome.stopped, original.stopped);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn corrupt_and_foreign_entries_are_misses() {
+        let store = tmp_store("corrupt");
+        let key = cell_key(&spec(11), "native-cpu", 1).unwrap();
+        let cell = fake_cell("cell");
+        assert!(store.save(&key, &cell) > 0);
+        // truncate: a torn write must be a miss, not a crash
+        let text = std::fs::read_to_string(store.entry_path(&key)).unwrap();
+        std::fs::write(store.entry_path(&key), &text[..text.len() / 2]).unwrap();
+        assert!(store.load(&key).is_none());
+        // a foreign entry renamed onto this key must not alias
+        assert!(store.save(&key, &cell) > 0);
+        let other = cell_key(&spec(12), "native-cpu", 1).unwrap();
+        std::fs::copy(store.entry_path(&key), store.entry_path(&other)).unwrap();
+        assert!(store.load(&other).is_none(), "key mismatch must be a miss");
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn failed_and_quarantined_cells_are_never_stored() {
+        let store = tmp_store("nofail");
+        let key = cell_key(&spec(11), "native-cpu", 1).unwrap();
+        let mut failed = fake_cell("cell");
+        failed.outcome = Err(ActsError::TestFailed("dead baseline".into()));
+        assert_eq!(store.save(&key, &failed), 0);
+        let mut quarantined = fake_cell("cell");
+        if let Ok(o) = &mut quarantined.outcome {
+            o.stopped = StopCause::Quarantined;
+        }
+        assert_eq!(store.save(&key, &quarantined), 0);
+        assert_eq!(store.stats().unwrap().entries, 0);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn gc_evicts_oldest_first_and_clear_empties() {
+        let store = tmp_store("gc");
+        let keys: Vec<CellKey> =
+            (0..4).map(|s| cell_key(&spec(s), "native-cpu", 1).unwrap()).collect();
+        for key in &keys {
+            assert!(store.save(key, &fake_cell(&format!("cell-{key}"))) > 0);
+            // distinct mtimes so eviction order is well-defined
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let stats = store.stats().unwrap();
+        assert_eq!(stats.entries, 4);
+        // keep roughly half: the two oldest entries must go
+        let report = store.gc(stats.bytes / 2).unwrap();
+        assert!(report.evicted >= 2, "evicted {}", report.evicted);
+        assert!(report.remaining_bytes <= stats.bytes / 2);
+        assert_eq!(report.evicted + report.remaining_entries, 4);
+        assert!(!store.entry_path(&keys[0]).exists(), "oldest entry must be evicted first");
+        assert!(store.entry_path(&keys[3]).exists(), "newest entry must survive");
+        // clear removes the rest
+        assert_eq!(store.clear().unwrap(), report.remaining_entries);
+        assert_eq!(store.stats().unwrap().entries, 0);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn fleet_dump_synthesizes_diffable_cells() {
+        let store = tmp_store("dump");
+        let key_a = cell_key(&spec(1), "native-cpu", 1).unwrap();
+        let key_b = cell_key(&spec(2), "native-cpu", 1).unwrap();
+        store.save(&key_a, &fake_cell("cell/a"));
+        store.save(&key_b, &fake_cell("cell/b"));
+        let dump = store.as_fleet_dump().unwrap();
+        let cells = dump.get("cells").and_then(Json::as_arr).unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].get("label").and_then(Json::as_str), Some("cell/a"));
+        assert_eq!(cells[0].get("ok").and_then(Json::as_bool), Some(true));
+        assert!(cells[0].get("best").and_then(Json::as_f64).unwrap() > 0.0);
+        // the differ must recognise the shape as a fleet dump
+        let diff = super::super::diff::diff_dumps(&dump, &dump, 0.05).unwrap();
+        assert_eq!(diff.regressions(), 0);
+        assert_eq!(diff.rows.len(), 2);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn store_dir_env_is_validated() {
+        // serialized in one test: env vars are process-global
+        std::env::remove_var(STORE_DIR_ENV);
+        assert!(store_dir_from_env().unwrap().is_none());
+        std::env::set_var(STORE_DIR_ENV, "  ");
+        let err = store_dir_from_env().unwrap_err().to_string();
+        assert!(err.contains(STORE_DIR_ENV), "{err}");
+        let dir =
+            std::env::temp_dir().join(format!("acts-store-env-{}", std::process::id()));
+        std::env::set_var(STORE_DIR_ENV, &dir);
+        let store = store_dir_from_env().unwrap().expect("env store must resolve");
+        assert_eq!(store.dir(), dir.as_path());
+        std::env::remove_var(STORE_DIR_ENV);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

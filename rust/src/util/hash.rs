@@ -1,0 +1,158 @@
+//! Self-contained FNV-1a hashing (the offline crate set has no
+//! xxhash/siphash), in two widths:
+//!
+//! * [`Fnv64`] / [`fnv64`] — the classic 64-bit variant, used for
+//!   short file-name disambiguators (checkpoint journal names);
+//! * [`Fnv128`] — the 128-bit variant over `u128`, used for
+//!   content-addressed cell keys ([`crate::scenario::store`]), where
+//!   collision probability must stay negligible across millions of
+//!   stored cells.
+//!
+//! Both are the standard FNV-1a parameters. The structured `write_*`
+//! helpers length-prefix every variable-width field, so two different
+//! field sequences can never concatenate to the same byte stream
+//! (`"ab" + "c"` vs `"a" + "bc"` hash differently). Floats hash their
+//! IEEE-754 bit patterns (`to_bits`), keeping the key exact where the
+//! stored results themselves are bit-exact.
+
+/// 64-bit FNV-1a offset basis.
+const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// 64-bit FNV-1a prime.
+const FNV64_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// 128-bit FNV-1a offset basis.
+const FNV128_OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+/// 128-bit FNV-1a prime.
+const FNV128_PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+
+/// Streaming 64-bit FNV-1a hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    /// Fresh hasher at the offset basis.
+    pub fn new() -> Fnv64 {
+        Fnv64 { state: FNV64_OFFSET }
+    }
+
+    /// Fold raw bytes into the state.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV64_PRIME);
+        }
+    }
+
+    /// The current hash value.
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot 64-bit FNV-1a over a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Streaming 128-bit FNV-1a hasher with length-prefixed structured
+/// writes (see the module docs).
+#[derive(Clone, Debug)]
+pub struct Fnv128 {
+    state: u128,
+}
+
+impl Default for Fnv128 {
+    fn default() -> Self {
+        Fnv128::new()
+    }
+}
+
+impl Fnv128 {
+    /// Fresh hasher at the offset basis.
+    pub fn new() -> Fnv128 {
+        Fnv128 { state: FNV128_OFFSET }
+    }
+
+    /// Fold raw bytes into the state.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(FNV128_PRIME);
+        }
+    }
+
+    /// Fold a string, length-prefixed so adjacent fields cannot alias.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    /// Fold a `u64` (little-endian bytes, fixed width).
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    /// Fold an `f64` by its IEEE-754 bit pattern (exact, no rounding;
+    /// note `0.0` and `-0.0` therefore hash differently).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    /// The current hash value.
+    pub fn finish(&self) -> u128 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv64_matches_reference_vectors() {
+        // published FNV-1a 64 test vectors
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv128_empty_is_the_offset_basis() {
+        assert_eq!(Fnv128::new().finish(), FNV128_OFFSET);
+    }
+
+    #[test]
+    fn length_prefix_prevents_field_concatenation_aliasing() {
+        let mut a = Fnv128::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Fnv128::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn structured_writes_are_deterministic_and_sensitive() {
+        let key = |seed: u64, name: &str, x: f64| {
+            let mut h = Fnv128::new();
+            h.write_u64(seed);
+            h.write_str(name);
+            h.write_f64(x);
+            h.finish()
+        };
+        assert_eq!(key(1, "rrs", 0.5), key(1, "rrs", 0.5));
+        assert_ne!(key(1, "rrs", 0.5), key(2, "rrs", 0.5));
+        assert_ne!(key(1, "rrs", 0.5), key(1, "gp", 0.5));
+        assert_ne!(key(1, "rrs", 0.5), key(1, "rrs", 0.5000000001));
+    }
+}

@@ -1,11 +1,15 @@
-//! In-repo utility substrates: PRNG stack and statistics.
+//! In-repo utility substrates: PRNG stack, hashing and statistics.
 //!
 //! The offline crate set ships only `rand_core`, so the generators
-//! themselves ([`rng`]) are implemented here; [`stats`] provides the
-//! streaming/percentile statistics the measurement pipeline needs.
+//! themselves ([`rng`]) are implemented here; [`hash`] is the
+//! self-contained FNV-1a hasher behind the content-addressed
+//! experiment store; [`stats`] provides the streaming/percentile
+//! statistics the measurement pipeline needs.
 
+pub mod hash;
 pub mod rng;
 pub mod stats;
 
+pub use hash::{fnv64, Fnv128, Fnv64};
 pub use rng::Rng64;
 pub use stats::{percentile, Summary, Welford};

@@ -559,3 +559,55 @@ fn checkpoint_resume_replays_to_bit_identical_records() {
 
     let _ = std::fs::remove_dir_all(&tmp);
 }
+
+#[test]
+fn checkpoint_journals_survive_sanitize_colliding_labels() {
+    // regression: `cell:x` and `cell?x` both sanitize to `cell_x`; the
+    // journal filename's label hash must keep them apart, or resume
+    // would replay one cell's rounds into the other
+    let specs = || -> Vec<ScenarioSpec> {
+        let cfg = |seed: u64| TuningConfig {
+            budget: Budget::tests(BUDGET),
+            round_size: ROUND,
+            seed,
+            ..Default::default()
+        };
+        vec![
+            ScenarioSpec::from_names("mysql", "zipfian-rw", "standalone", cfg(61))
+                .unwrap()
+                .with_label("cell:x"),
+            ScenarioSpec::from_names("mysql", "zipfian-rw", "standalone", cfg(62))
+                .unwrap()
+                .with_label("cell?x"),
+        ]
+    };
+    let lab = native_lab();
+    let mode = SchedulerMode::Pipelined { lanes: 2 };
+    let dir = std::env::temp_dir().join(format!("acts-fleet-collide-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let reference = Fleet::compile_with_mode(&lab, specs(), mode).unwrap().run();
+    let journalled = Fleet::compile_with_checkpoint(&lab, specs(), mode, &dir).unwrap().run();
+    // two labels, two journals — before the fix both cells shared one
+    let journals = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().path().extension().and_then(|x| x.to_str()) == Some("jsonl")
+        })
+        .count();
+    assert_eq!(journals, 2, "colliding labels must get distinct journals");
+
+    // resume from the full journals: pure replay, bit-identical cells
+    let replayed = Fleet::compile_with_checkpoint(&lab, specs(), mode, &dir).unwrap().run();
+    for report in [&journalled, &replayed] {
+        for (cell, want) in report.cells.iter().zip(&reference.cells) {
+            assert_eq!(
+                cell.outcome.as_ref().unwrap().records,
+                want.outcome.as_ref().unwrap().records,
+                "{} diverged",
+                cell.label
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

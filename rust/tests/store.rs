@@ -1,0 +1,235 @@
+//! Integration: the content-addressed experiment store end-to-end.
+//!
+//! The headline guarantee: a warm fleet (every cell stored) is
+//! **bit-identical** to the cold fleet that populated the store —
+//! per-cell records, stop causes and ledger counts — while issuing
+//! ZERO engine work. Pinned to the native backend like the fleet
+//! invariance suite, since the guarantee is about replaying exact
+//! numbers.
+
+use acts::budget::Budget;
+use acts::experiment::Lab;
+use acts::manipulator::SimulationOpts;
+use acts::runtime::BackendKind;
+use acts::scenario::{cell_key, ExperimentStore, Fleet, FleetReport, Matrix, ScenarioSpec};
+use acts::tuner::{SchedulerMode, TuningConfig};
+use std::path::{Path, PathBuf};
+
+const BUDGET: u64 = 9; // baseline + two rounds of 4
+const ROUND: usize = 4;
+
+fn native_lab() -> Lab {
+    Lab::with_backend(BackendKind::Native).expect("native backend")
+}
+
+fn base_config() -> TuningConfig {
+    TuningConfig { budget: Budget::tests(BUDGET), round_size: ROUND, ..Default::default() }
+}
+
+/// The 8-cell mixed matrix the CI smoke also runs.
+fn mixed_matrix() -> Matrix {
+    Matrix {
+        suts: vec!["mysql".into(), "tomcat".into()],
+        workloads: vec!["uniform-read".into(), "zipfian-rw".into()],
+        deployments: vec!["standalone".into()],
+        optimizers: vec!["rrs".into()],
+        budgets: vec![],
+        seeds: vec![21, 22],
+        base: base_config(),
+        sim: SimulationOpts::default(),
+    }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("acts-store-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Compile-and-run `specs` against the store at `dir` (each run opens
+/// its own handle; the store is plain files, not a daemon).
+fn run_with_store(lab: &Lab, specs: Vec<ScenarioSpec>, dir: &Path) -> FleetReport {
+    let store = ExperimentStore::open(dir).unwrap();
+    Fleet::compile_with_options(lab, specs, SchedulerMode::default(), None, Some(store))
+        .unwrap()
+        .run()
+}
+
+#[test]
+fn warm_fleet_is_bit_identical_with_zero_engine_work() {
+    let lab = native_lab();
+    let dir = fresh_dir("warm");
+
+    let cold = run_with_store(&lab, mixed_matrix().expand().unwrap(), &dir);
+    assert_eq!(cold.cells.len(), 8);
+    assert_eq!(cold.coalescing.store_hits, 0);
+    assert_eq!(cold.coalescing.store_misses, 8);
+    assert!(cold.coalescing.store_bytes > 0, "misses must write back");
+    assert!(cold.coalescing.execute_calls > 0, "the cold run must compute");
+
+    let warm = run_with_store(&lab, mixed_matrix().expand().unwrap(), &dir);
+    assert_eq!(warm.coalescing.store_hits, 8, "every cell must be served from the store");
+    assert_eq!(warm.coalescing.store_misses, 0);
+    assert_eq!(warm.coalescing.execute_calls, 0, "a warm fleet must issue zero executes");
+    assert_eq!(warm.coalescing.requests, 0, "a warm fleet must issue zero requests");
+
+    for (c, w) in cold.cells.iter().zip(&warm.cells) {
+        assert_eq!(c.label, w.label);
+        let cold_out = c.outcome.as_ref().unwrap_or_else(|e| panic!("{}: {e}", c.label));
+        let warm_out = w.outcome.as_ref().unwrap_or_else(|e| panic!("{}: {e}", w.label));
+        assert_eq!(cold_out.records, warm_out.records, "{}: records diverged", c.label);
+        assert_eq!(cold_out.baseline, warm_out.baseline, "{}", c.label);
+        assert_eq!(cold_out.best_unit, warm_out.best_unit, "{}", c.label);
+        assert_eq!(cold_out.best, warm_out.best, "{}", c.label);
+        assert_eq!(cold_out.improvement, warm_out.improvement, "{}", c.label);
+        assert_eq!(cold_out.tests_used, warm_out.tests_used, "{}", c.label);
+        assert_eq!(cold_out.failures, warm_out.failures, "{}", c.label);
+        assert_eq!(cold_out.sim_seconds, warm_out.sim_seconds, "{}", c.label);
+        assert_eq!(cold_out.stopped, warm_out.stopped, "{}", c.label);
+    }
+    // and the aggregates (derived from the same outcomes) agree
+    let (ca, wa) = (cold.aggregate(), warm.aggregate());
+    assert_eq!(ca.tests_total, wa.tests_total);
+    assert_eq!(ca.best_throughput, wa.best_throughput);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_entry_recomputes_and_heals() {
+    let lab = native_lab();
+    let dir = fresh_dir("corrupt");
+    let cold = run_with_store(&lab, mixed_matrix().expand().unwrap(), &dir);
+
+    // corrupt exactly one cell's entry (truncate: a torn write)
+    let store = ExperimentStore::open(&dir).unwrap();
+    let victim = mixed_matrix().expand().unwrap().remove(0);
+    let key = cell_key(&victim, &lab.engine.platform(), lab.engine.stats().simd_width)
+        .expect("registry cells are keyable");
+    let path = store.entry_path(&key);
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 3]).unwrap();
+
+    // the warm run treats it as a miss, recomputes it bit-identically
+    // and writes the entry back
+    let healed = run_with_store(&lab, mixed_matrix().expand().unwrap(), &dir);
+    assert_eq!(healed.coalescing.store_hits, 7);
+    assert_eq!(healed.coalescing.store_misses, 1);
+    assert!(healed.coalescing.execute_calls > 0, "the corrupt cell must recompute");
+    let cold_victim = cold.cells.iter().find(|c| c.label == victim.label).unwrap();
+    let healed_victim = healed.cells.iter().find(|c| c.label == victim.label).unwrap();
+    assert_eq!(
+        cold_victim.outcome.as_ref().unwrap().records,
+        healed_victim.outcome.as_ref().unwrap().records,
+        "recomputed cell must match the original"
+    );
+
+    // healed: the next run hits everything again
+    let warm = run_with_store(&lab, mixed_matrix().expand().unwrap(), &dir);
+    assert_eq!(warm.coalescing.store_hits, 8);
+    assert_eq!(warm.coalescing.execute_calls, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn backend_identity_separates_keys() {
+    // scalar and AVX2 dispatch must never share an entry: same spec,
+    // different platform/simd identity -> different content address
+    let spec = || {
+        ScenarioSpec::from_names("mysql", "zipfian-rw", "standalone", base_config()).unwrap()
+    };
+    let scalar = cell_key(&spec(), "native-cpu", 1).unwrap();
+    let avx2 = cell_key(&spec(), "native-cpu (avx2+fma)", 8).unwrap();
+    assert_ne!(scalar, avx2);
+    // and the live engine's identity keys deterministically
+    let lab = native_lab();
+    let (platform, width) = (lab.engine.platform(), lab.engine.stats().simd_width);
+    assert_eq!(
+        cell_key(&spec(), &platform, width).unwrap(),
+        cell_key(&spec(), &platform, width).unwrap()
+    );
+}
+
+#[test]
+fn unkeyable_cells_bypass_the_store() {
+    let lab = native_lab();
+    let dir = fresh_dir("unkeyable");
+    let space = acts::sut::mysql().space;
+    let default_unit = space.encode(&space.default_config());
+    let specs = || -> Vec<ScenarioSpec> {
+        let keyable =
+            ScenarioSpec::from_names("mysql", "zipfian-rw", "standalone", base_config()).unwrap();
+        // an explicit starting unit has no canonical form to hash
+        let unkeyable =
+            ScenarioSpec::from_names("mysql", "uniform-read", "standalone", base_config())
+                .unwrap()
+                .with_sim(SimulationOpts::ideal())
+                .with_initial_unit(default_unit.clone())
+                .with_label("unkeyable: explicit starting unit");
+        vec![keyable, unkeyable]
+    };
+
+    let cold = run_with_store(&lab, specs(), &dir);
+    // the unkeyable cell is counted in neither hits nor misses
+    assert_eq!(cold.coalescing.store_hits, 0);
+    assert_eq!(cold.coalescing.store_misses, 1);
+    assert_eq!(ExperimentStore::open(&dir).unwrap().stats().unwrap().entries, 1);
+
+    let warm = run_with_store(&lab, specs(), &dir);
+    assert_eq!(warm.coalescing.store_hits, 1);
+    assert_eq!(warm.coalescing.store_misses, 0);
+    assert!(
+        warm.coalescing.execute_calls > 0,
+        "the unkeyable cell must execute on every run"
+    );
+    // both cells completed both times, identically
+    for (c, w) in cold.cells.iter().zip(&warm.cells) {
+        assert_eq!(
+            c.outcome.as_ref().unwrap().records,
+            w.outcome.as_ref().unwrap().records,
+            "{}",
+            c.label
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_evicts_oldest_first_and_the_next_run_heals() {
+    let lab = native_lab();
+    let dir = fresh_dir("gc");
+    let spec = |seed: u64| {
+        ScenarioSpec::from_names(
+            "mysql",
+            "zipfian-rw",
+            "standalone",
+            TuningConfig { seed, ..base_config() },
+        )
+        .unwrap()
+    };
+    // populate one cell at a time so entry mtimes are ordered
+    for seed in 1..=4 {
+        let report = run_with_store(&lab, vec![spec(seed)], &dir);
+        assert_eq!(report.coalescing.store_misses, 1);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    let store = ExperimentStore::open(&dir).unwrap();
+    let stats = store.stats().unwrap();
+    assert_eq!(stats.entries, 4);
+
+    let gc = store.gc(stats.bytes / 2).unwrap();
+    assert!(gc.evicted >= 2, "evicted {}", gc.evicted);
+    assert_eq!(gc.evicted + gc.remaining_entries, 4);
+    assert!(gc.remaining_bytes <= stats.bytes / 2);
+    let (platform, width) = (lab.engine.platform(), lab.engine.stats().simd_width);
+    let entry = |seed: u64| store.entry_path(&cell_key(&spec(seed), &platform, width).unwrap());
+    assert!(!entry(1).exists(), "oldest entry must be evicted first");
+    assert!(entry(4).exists(), "newest entry must survive");
+
+    // a re-run over all four cells survives the eviction: survivors
+    // hit, evicted cells recompute and re-store
+    let report = run_with_store(&lab, (1..=4).map(spec).collect(), &dir);
+    assert_eq!(report.coalescing.store_hits, gc.remaining_entries);
+    assert_eq!(report.coalescing.store_misses, gc.evicted);
+    assert_eq!(store.stats().unwrap().entries, 4, "evicted cells must re-store");
+    let _ = std::fs::remove_dir_all(&dir);
+}
