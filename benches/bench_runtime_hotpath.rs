@@ -34,6 +34,12 @@
 //!   in-flight concurrency scaling at 1/2/4/8 executor workers and
 //!   the drainer's flush-cause/peak-in-flight telemetry, all in the
 //!   json;
+//! * the staging worker pool: a GP-heavy 8-session fleet (the O(n³)
+//!   Cholesky fit and O(n²)-per-candidate EI scoring run during
+//!   staging) at stage-workers 1/2/4/8 — records are bit-identical at
+//!   any worker count (tested), so this measures pure staging
+//!   parallelism, recorded as `staging_speedup_vs_serial` and gated
+//!   ≥1.5x at 4 workers;
 //! * the content-addressed experiment store: the same mixed 8-cell
 //!   fleet compiled through `Fleet` cold (store cleared, every cell
 //!   computes and writes back) vs warm (every cell served from disk
@@ -374,6 +380,42 @@ fn main() {
             );
         }
 
+        // the staging worker pool on a GP-heavy fleet: 8 gp sessions,
+        // whose staging cost (the surrogate's O(n³) Cholesky fit plus
+        // O(n²)-per-candidate EI scoring over a 128-candidate pool)
+        // dwarfs the native execute, at stage-workers 1/2/4/8.
+        // Sequential mode so the execute path is identical across rows
+        // and the only variable is where staging runs; 1 worker stages
+        // inline on the scheduler thread (the historical serial
+        // behaviour) and is the speedup denominator.
+        let gp_cfg = |seed: u64| TuningConfig {
+            budget: Budget::tests(sched_budget),
+            seed,
+            round_size: 16,
+            optimizer: "gp".into(),
+            ..Default::default()
+        };
+        let schedule_gp = |workers: usize| {
+            let mut scheduler = Scheduler::with_mode(SchedulerMode::Sequential);
+            scheduler.set_stage_workers(workers);
+            for s in 0..n_sessions {
+                let sut = deploy(70 + s);
+                let session =
+                    TuningSession::from_registry(sut.space().clone(), &gp_cfg(70 + s)).unwrap();
+                scheduler.add(session, sut);
+            }
+            scheduler.run()
+        };
+        for w in [1usize, 2, 4, 8] {
+            b.bench_units(
+                format!("{n_sessions} gp sessions staged ({w} stage workers)"),
+                Some(aggregate),
+                || {
+                    black_box(schedule_gp(w));
+                },
+            );
+        }
+
         // one instrumented streaming run for the drainer telemetry:
         // flush-cause counters are engine deltas around this run; peak
         // in-flight is a lifetime high-water gauge, so it covers the
@@ -552,6 +594,23 @@ fn main() {
     );
     println!("streaming speedup over pipelined: {streaming_speedup:.2}x (target >= 1.3x)");
 
+    // the staging-pool gate: the GP-heavy fleet with its staging
+    // dispatched to 4 workers vs staged inline (1 worker = the serial
+    // scheduler thread, the pre-pool behaviour). Backend-independent:
+    // the parallelised work is tuner-side math, not engine dispatch.
+    let stage_w1 = session_rate("gp sessions staged (1 stage workers)");
+    let stage_w2 = session_rate("gp sessions staged (2 stage workers)");
+    let stage_w4 = session_rate("gp sessions staged (4 stage workers)");
+    let stage_w8 = session_rate("gp sessions staged (8 stage workers)");
+    let staging_speedup_vs_serial = if stage_w1 > 0.0 { stage_w4 / stage_w1 } else { 0.0 };
+    println!(
+        "gp-fleet aggregate config-evals/s: {stage_w1:.1} / {stage_w2:.1} / {stage_w4:.1} / \
+         {stage_w8:.1} at 1/2/4/8 stage workers"
+    );
+    println!(
+        "staging speedup over serial at 4 workers: {staging_speedup_vs_serial:.2}x (target >= 1.5x)"
+    );
+
     // the store gate: the mixed 8-cell fleet warm (all cells served
     // from disk) vs cold (store cleared, everything computes)
     let store_cold = session_rate("fleet cold");
@@ -596,6 +655,15 @@ fn main() {
         ("streaming_flushes_by_size", Json::Num(streaming_flushes_by_size as f64)),
         ("streaming_flushes_by_timeout", Json::Num(streaming_flushes_by_timeout as f64)),
         ("streaming_peak_inflight", Json::Num(streaming_peak_inflight as f64)),
+        ("staging_speedup_vs_serial", Json::Num(staging_speedup_vs_serial)),
+        (
+            "staging_workers2_speedup_vs_serial",
+            Json::Num(if stage_w1 > 0.0 { stage_w2 / stage_w1 } else { 0.0 }),
+        ),
+        (
+            "staging_workers8_speedup_vs_serial",
+            Json::Num(if stage_w1 > 0.0 { stage_w8 / stage_w1 } else { 0.0 }),
+        ),
         ("store_warm_speedup", Json::Num(store_warm_speedup)),
     ]);
     let out_path =
@@ -629,6 +697,10 @@ fn main() {
     assert!(
         store_warm_speedup >= 10.0,
         "store warm speedup {store_warm_speedup:.2}x below the 10x acceptance gate"
+    );
+    assert!(
+        staging_speedup_vs_serial >= 1.5,
+        "staging speedup {staging_speedup_vs_serial:.2}x at 4 workers below the 1.5x acceptance gate"
     );
     // the SIMD gate only binds where the AVX2 path actually ran;
     // scalar-only hosts record dispatch=scalar and speedup=0 instead

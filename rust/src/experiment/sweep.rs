@@ -93,12 +93,14 @@ pub fn run_seeds(
     seeds: &[u64],
 ) -> Result<SeedSweep> {
     let mode = SchedulerMode::default();
-    run_seeds_with_mode(lab, target, workload, deployment, opts, cfg, seeds, mode)
+    let stage_workers = crate::tuner::default_stage_workers();
+    run_seeds_with_mode(lab, target, workload, deployment, opts, cfg, seeds, mode, stage_workers)
 }
 
-/// As [`run_seeds`], with an explicit [`SchedulerMode`] (`acts tune
-/// --sessions N --sched-mode streaming` arrives here); per-seed records
-/// are mode-invariant, only the engine's call pattern changes.
+/// As [`run_seeds`], with an explicit [`SchedulerMode`] and staging
+/// worker count (`acts tune --sessions N --sched-mode streaming
+/// --stage-workers 4` arrives here); per-seed records are invariant to
+/// both knobs, only where staging and executes run changes.
 #[allow(clippy::too_many_arguments)]
 pub fn run_seeds_with_mode(
     lab: &Lab,
@@ -109,6 +111,7 @@ pub fn run_seeds_with_mode(
     cfg: &TuningConfig,
     seeds: &[u64],
     mode: SchedulerMode,
+    stage_workers: usize,
 ) -> Result<SeedSweep> {
     let specs: Vec<ScenarioSpec> = seeds
         .iter()
@@ -118,7 +121,9 @@ pub fn run_seeds_with_mode(
                 .with_sim(opts.clone())
         })
         .collect();
-    let report = Fleet::compile_with_mode(lab, specs, mode)?.run();
+    let mut fleet = Fleet::compile_with_mode(lab, specs, mode)?;
+    fleet.set_stage_workers(stage_workers);
+    let report = fleet.run();
     let mut paired = Vec::with_capacity(seeds.len());
     for (&seed, cell) in seeds.iter().zip(report.cells) {
         paired.push((seed, cell.outcome?));

@@ -63,6 +63,12 @@ fn lanes_arg(args: &Args) -> usize {
     args.get_usize("lanes", tuner::default_lanes()).max(1)
 }
 
+/// Resolve the `--stage-workers` flag (default: `ACTS_STAGE_WORKERS`,
+/// then 1 — inline staging on the scheduler thread).
+fn stage_workers_arg(args: &Args) -> usize {
+    args.get_usize("stage-workers", tuner::default_stage_workers()).max(1)
+}
+
 /// Resolve the `--sched-mode` flag (default: `ACTS_SCHED_MODE`, then
 /// the N-lane pipeline at the resolved lane count). The flag accepts
 /// the same spellings as the environment variable.
@@ -152,6 +158,7 @@ fn run(args: &Args) -> acts::Result<()> {
     BackendKind::from_env()?;
     tuner::lanes_from_env()?;
     tuner::sched_mode_from_env()?;
+    tuner::stage_workers_from_env()?;
     acts::runtime::native::native_threads_from_env()?;
     acts::runtime::simd::native_simd_from_env()?;
     scenario::store_dir_from_env()?;
@@ -286,6 +293,7 @@ fn cmd_tune(args: &Args) -> acts::Result<()> {
             &cfg,
             &seeds,
             mode,
+            stage_workers_arg(args),
         )?;
         let after = lab.engine.stats();
         print!(
@@ -374,8 +382,9 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         sim: SimulationOpts::default(),
     };
     let mode = sched_mode_arg(args, lanes)?;
+    let stage_workers = stage_workers_arg(args);
     println!(
-        "fleet: {} cells ({} suts x {} workloads x {} deployments x {} optimizers x {} budgets x {} seeds), {}",
+        "fleet: {} cells ({} suts x {} workloads x {} deployments x {} optimizers x {} budgets x {} seeds), {}, {} stage worker{}",
         matrix.cells(),
         matrix.suts.len(),
         matrix.workloads.len(),
@@ -383,7 +392,9 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         matrix.optimizers.len(),
         matrix.budgets.len().max(1),
         matrix.seeds.len(),
-        mode.describe()
+        mode.describe(),
+        stage_workers,
+        if stage_workers == 1 { "" } else { "s" }
     );
     let specs = matrix.expand()?;
     let lab = fleet_lab(args, &base)?;
@@ -402,13 +413,14 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
     if let Some(dir) = checkpoint_dir {
         println!("checkpointing rounds under {dir} (rerun with the same flags to resume)");
     }
-    let fleet = Fleet::compile_with_options(
+    let mut fleet = Fleet::compile_with_options(
         &lab,
         specs,
         mode,
         checkpoint_dir.map(std::path::Path::new),
         store,
     )?;
+    fleet.set_stage_workers(stage_workers);
     let report = fleet.run();
 
     print!("{}", report.table().markdown());
@@ -448,6 +460,10 @@ fn cmd_fleet(args: &Args) -> acts::Result<()> {
         c.flushes_by_size, c.flushes_by_timeout, c.peak_inflight
     );
     println!("engine dispatch: {} (simd width {})", lab.engine.platform(), c.simd_width);
+    println!(
+        "engine staging: {:.3}s stage, {:.3}s absorb, peak {} concurrent",
+        c.stage_seconds, c.absorb_seconds, c.peak_staging_concurrency
+    );
     if let Some(dir) = store_dir {
         println!(
             "experiment store: {} hits / {} misses, {} bytes ({dir})",
@@ -715,6 +731,8 @@ COMMANDS:
                    --sched-mode <m>   (ACTS_SCHED_MODE|pipelined)
                                       sequential | pipelined |
                                       pipelined:<lanes> | streaming
+                   --stage-workers <n> (ACTS_STAGE_WORKERS|1) staging
+                                      worker pool size (with --sessions)
                    --curve            print per-test progress
                    --config           print the best configuration found
     fleet        expand a scenario matrix (cartesian axes) and run every
@@ -734,6 +752,8 @@ COMMANDS:
                    --sched-mode <m>      (ACTS_SCHED_MODE|pipelined)
                                          sequential | pipelined |
                                          pipelined:<lanes> | streaming
+                   --stage-workers <n>   (ACTS_STAGE_WORKERS|1) staging
+                                         worker pool size
                    --backend <b>         (auto)
                    --json <file>         dump the fleet report as JSON
                    --checkpoint-dir <d>  journal every round to <d>; rerun
@@ -799,7 +819,11 @@ for any lane count. `--sched-mode streaming` (or ACTS_SCHED_MODE)
 replaces the lane barrier with a continuously-draining submission
 queue: staged rounds flush to the engine on batch-size-or-timeout and
 every session resubmits the instant its round absorbs — same
-per-session records, more executes in flight. A panicking execute
+per-session records, more executes in flight. Staging itself
+(ask/tell, including the GP surrogate's fit and candidate scoring)
+runs on a worker pool in every mode — --stage-workers /
+ACTS_STAGE_WORKERS, default 1 (inline) — and per-session records are
+bit-identical at any worker count. A panicking execute
 poisons only the rounds sharing that execute; a session poisoned 3
 rounds running is quarantined (`stopped by quarantined`) while its
 fleet-mates continue undisturbed.
@@ -812,6 +836,7 @@ bit-identically with zero engine work. Cells with custom payloads
 (closure optimizers, explicit starting units) bypass the store.
 
 Environment: malformed ACTS_BACKEND / ACTS_LANES / ACTS_SCHED_MODE /
-ACTS_NATIVE_THREADS / ACTS_NATIVE_SIMD / ACTS_STORE_DIR values fail at
-startup with an error naming the variable and its accepted values.
+ACTS_STAGE_WORKERS / ACTS_NATIVE_THREADS / ACTS_NATIVE_SIMD /
+ACTS_STORE_DIR values fail at startup with an error naming the
+variable and its accepted values.
 ";

@@ -167,7 +167,13 @@ pub struct EngineRequest {
 /// configuration, restart the SUT so it takes effect, run the workload,
 /// read the measurement. Implementations own a simulated (or real)
 /// clock so resource accounting in *time* works as well as in tests.
-pub trait SystemManipulator {
+///
+/// `Send` is a trait obligation: the scheduler's staging worker pool
+/// moves each session's manipulator to a staging thread for the
+/// duration of a stage pass (see `tuner::scheduler`), so a manipulator
+/// must be transferable across threads. Both shipped implementations
+/// ([`SimulatedSut`], the tuner's test `FakeSut`) are plain data.
+pub trait SystemManipulator: Send {
     /// The configuration space being manipulated.
     fn space(&self) -> &ConfigSpace;
 

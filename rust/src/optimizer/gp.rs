@@ -10,6 +10,24 @@
 //! variance from the observed spread), Cholesky factorisation for the
 //! posterior, and Expected Improvement maximised over an LHS candidate
 //! set plus local perturbations of the incumbent.
+//!
+//! # Candidate scoring is batched and (optionally) parallel
+//!
+//! Scoring a candidate against a fit costs an O(n²) triangular solve,
+//! and a round scores a 128–256-candidate pool — so the pool is scored
+//! through [`GpSurrogate::posterior_batch`], which computes the whole
+//! K* block at once and runs ONE blocked forward solve across every
+//! candidate (same O(m·n²) flop count, but the L factor streams
+//! through cache once per pool instead of once per candidate). Per
+//! candidate the floating-point op sequence is *identical* to the
+//! scalar [`GpSurrogate::posterior`] — asserted bitwise by a unit test
+//! — so batching never moves a proposal. On top of that, pools large
+//! enough to matter are scored by a scoped thread team (contiguous
+//! chunks, joined in chunk order), which is bitwise deterministic at
+//! any worker count because each candidate's computation reads only
+//! the shared fit and its own column. The worker count resolves
+//! automatically from the pool's work size; tests and benches can pin
+//! it with [`GpSurrogate::set_score_workers`].
 
 use super::{BestTracker, Observation, Optimizer};
 use crate::sampling::{LhsSampler, Sampler};
@@ -27,6 +45,9 @@ pub struct GpSurrogate {
     candidates: usize,
     /// Cap on the training set (sliding window keeps the best + recent).
     max_train: usize,
+    /// Pinned EI-scoring worker count; `None` resolves automatically
+    /// from the pool's work size (see the module docs).
+    score_workers: Option<usize>,
     best: BestTracker,
 }
 
@@ -41,8 +62,32 @@ impl GpSurrogate {
             init_n: (2 * dim).clamp(8, 24),
             candidates: 128,
             max_train: 160,
+            score_workers: None,
             best: BestTracker::default(),
         }
+    }
+
+    /// Pin the EI-scoring worker count (1 = always serial). Scoring is
+    /// bitwise deterministic at any worker count, so this is a pure
+    /// performance knob — the default (`None`) engages threads only
+    /// when the pool's solve work is large enough to pay for them.
+    pub fn set_score_workers(&mut self, workers: usize) {
+        self.score_workers = Some(workers.max(1));
+    }
+
+    /// Resolve the scoring worker count for an `m`-candidate pool.
+    fn auto_score_workers(&self, m: usize) -> usize {
+        if let Some(w) = self.score_workers {
+            return w;
+        }
+        let n = self.train_len();
+        // spawning a thread team costs ~tens of microseconds; engage it
+        // only when the blocked solve (m candidates × n² triangular
+        // rows) clearly dwarfs that
+        if m * n * n < (1 << 17) {
+            return 1;
+        }
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
     }
 
     fn kernel(&self, a: &[f64], b: &[f64], ls2: f64, sf2: f64) -> f64 {
@@ -93,12 +138,117 @@ impl GpSurrogate {
         (mean, var.sqrt())
     }
 
+    /// Posterior (mean, std) for every candidate in `qs` under one fit:
+    /// the whole K* block is built candidate-major, the means reuse it,
+    /// and ONE blocked forward solve (row of L outer, candidates inner)
+    /// replaces `qs.len()` independent [`Cholesky::solve_lower`] calls.
+    /// Per candidate the op sequence — kernel order, `k·α` dot order,
+    /// the `s -= l·z` subtraction order inside the solve, the variance
+    /// sum — is exactly the scalar [`GpSurrogate::posterior`]'s, so the
+    /// results are bitwise identical to scoring one at a time
+    /// (unit-tested).
+    fn posterior_batch(&self, qs: &[Vec<f64>], fit: &GpFit) -> Vec<(f64, f64)> {
+        let n = self.train_len();
+        let m = qs.len();
+        if m == 0 {
+            return Vec::new();
+        }
+        let train = self.train_xs();
+        // K* candidate-major: ks[c*n + k] = kernel(q_c, x_k)
+        let mut ks = vec![0.0f64; m * n];
+        for (c, q) in qs.iter().enumerate() {
+            let row = &mut ks[c * n..(c + 1) * n];
+            for (k, x) in train.iter().enumerate() {
+                row[k] = self.kernel(q, x, fit.ls2, fit.sf2);
+            }
+        }
+        // blocked forward solve L z_c = k*_c for all candidates at
+        // once, z train-major (zs[i*m + c]) so the inner loop is a
+        // contiguous axpy over candidates
+        let l = &fit.chol.l;
+        let mut zs = vec![0.0f64; n * m];
+        let mut s = vec![0.0f64; m];
+        for i in 0..n {
+            for c in 0..m {
+                s[c] = ks[c * n + i];
+            }
+            for k in 0..i {
+                let lik = l[i * n + k];
+                let zk = &zs[k * m..(k + 1) * m];
+                for (sv, &zv) in s.iter_mut().zip(zk) {
+                    *sv -= lik * zv;
+                }
+            }
+            let lii = l[i * n + i];
+            for c in 0..m {
+                zs[i * m + c] = s[c] / lii;
+            }
+        }
+        let mut out = Vec::with_capacity(m);
+        for c in 0..m {
+            let row = &ks[c * n..(c + 1) * n];
+            let mean = fit.y_mean + row.iter().zip(&fit.alpha).map(|(k, a)| k * a).sum::<f64>();
+            let ssq = (0..n).map(|i| zs[i * m + c] * zs[i * m + c]).sum::<f64>();
+            let var = (fit.sf2 - ssq).max(1e-12);
+            out.push((mean, var.sqrt()));
+        }
+        out
+    }
+
+    /// EI-score a candidate pool under one fit, optionally across a
+    /// scoped thread team. Candidates are split into contiguous chunks
+    /// (one per worker), each chunk runs [`GpSurrogate::posterior_batch`]
+    /// independently, and the chunks are joined in order — so the
+    /// returned `(EI, candidate)` pairs are in input order and bitwise
+    /// identical at any worker count (each candidate's computation
+    /// reads only the shared fit and its own column of the solve).
+    fn score_candidates_with(
+        &self,
+        cands: Vec<Vec<f64>>,
+        fit: &GpFit,
+        f_best: f64,
+        workers: usize,
+    ) -> Vec<(f64, Vec<f64>)> {
+        let m = cands.len();
+        let posts: Vec<(f64, f64)> = if m < 2 {
+            // a scalar solve per candidate — same op sequence as the
+            // batch path, and too small to be worth blocking
+            cands.iter().map(|c| self.posterior(c, fit)).collect()
+        } else if workers <= 1 {
+            self.posterior_batch(&cands, fit)
+        } else {
+            let chunk = m.div_ceil(workers.min(m));
+            let mut posts = Vec::with_capacity(m);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = cands
+                    .chunks(chunk)
+                    .map(|part| scope.spawn(move || self.posterior_batch(part, fit)))
+                    .collect();
+                for h in handles {
+                    posts.extend(h.join().expect("gp scoring worker panicked"));
+                }
+            });
+            posts
+        };
+        posts
+            .into_iter()
+            .zip(cands)
+            .map(|((mean, std), c)| (expected_improvement(mean, std, f_best), c))
+            .collect()
+    }
+
     /// Candidate pool for EI maximisation: an LHS design plus local
-    /// perturbations of the incumbent.
+    /// perturbations of the incumbent. The perturbation count scales
+    /// with the *actual* pool size (`pool / 4`), not the configured
+    /// default — `ask_batch` widens the pool to `candidates.max(2 *
+    /// need)` for big rounds, and pinning perturbations to
+    /// `self.candidates / 4` shrank local density exactly when rounds
+    /// grew. (Deliberate behaviour change for wide rounds; the
+    /// experiment store's `CODE_EPOCH` was bumped with it.)
     fn candidate_pool(&self, rng: &mut Rng64, pool: usize) -> Vec<Vec<f64>> {
         let mut cands = LhsSampler.sample(pool, self.dim, rng);
         if let Some(b) = self.best.get() {
-            for _ in 0..self.candidates / 4 {
+            for _ in 0..pool / 4 {
                 cands.push(
                     b.unit
                         .iter()
@@ -296,17 +446,19 @@ impl Optimizer for GpSurrogate {
         let fit = self.fit();
         let cands = self.candidate_pool(rng, self.candidates);
         let f_best = self.best.get().map(|b| b.value).unwrap_or(f64::NEG_INFINITY);
-        let mut best_cand = cands[0].clone();
+        let workers = self.auto_score_workers(cands.len());
+        let mut scored = self.score_candidates_with(cands, &fit, f_best, workers);
+        // strict-greater argmax in index order — the exact selection
+        // rule of the historical serial loop
         let mut best_ei = f64::NEG_INFINITY;
-        for c in cands {
-            let (m, s) = self.posterior(&c, &fit);
-            let ei = expected_improvement(m, s, f_best);
-            if ei > best_ei {
-                best_ei = ei;
-                best_cand = c;
+        let mut best_idx = 0;
+        for (i, (ei, _)) in scored.iter().enumerate() {
+            if *ei > best_ei {
+                best_ei = *ei;
+                best_idx = i;
             }
         }
-        best_cand
+        scored.swap_remove(best_idx).1
     }
 
     /// Native round proposal: the init design is served first; past it,
@@ -342,14 +494,9 @@ impl Optimizer for GpSurrogate {
         let f_best = self.best.get().map(|b| b.value).unwrap_or(f64::NEG_INFINITY);
         // the LHS part of the pool alone covers `need`, so the round
         // can never run short
-        let scored: Vec<(f64, Vec<f64>)> = self
-            .candidate_pool(rng, self.candidates.max(2 * need))
-            .into_iter()
-            .map(|c| {
-                let (m, s) = self.posterior(&c, &fit);
-                (expected_improvement(m, s, f_best), c)
-            })
-            .collect();
+        let cands = self.candidate_pool(rng, self.candidates.max(2 * need));
+        let workers = self.auto_score_workers(cands.len());
+        let scored = self.score_candidates_with(cands, &fit, f_best, workers);
         // a round's picks cannot inform each other (no tells mid-round),
         // so bare top-EI clusters around one basin; the local
         // penalisation spreads the round across basins instead (it
@@ -488,6 +635,98 @@ mod tests {
                 assert!(d2 > 1e-8, "round proposals {i} and {j} coincide");
             }
         }
+    }
+
+    #[test]
+    fn batched_posterior_is_bit_identical_to_scalar() {
+        // train past the init design so the fit is non-trivial, then
+        // check every candidate's batched (mean, std) against the
+        // scalar posterior — bitwise, not approximately: the blocked
+        // solve must preserve the exact FP op sequence per candidate
+        let f = |u: &[f64]| 1.0 - u.iter().map(|x| (x - 0.35) * (x - 0.35)).sum::<f64>();
+        let mut rng = Rng64::new(11);
+        let mut gp = GpSurrogate::new(4);
+        for _ in 0..4 {
+            let round = gp.ask_batch(&mut rng, 8);
+            for u in &round {
+                gp.tell(u, f(u));
+            }
+        }
+        let fit = gp.fit();
+        let pool = gp.candidate_pool(&mut rng, 192);
+        let batch = gp.posterior_batch(&pool, &fit);
+        assert_eq!(batch.len(), pool.len());
+        for (i, q) in pool.iter().enumerate() {
+            let (m, s) = gp.posterior(q, &fit);
+            assert_eq!(m.to_bits(), batch[i].0.to_bits(), "mean diverges at candidate {i}");
+            assert_eq!(s.to_bits(), batch[i].1.to_bits(), "std diverges at candidate {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_scoring_is_bit_identical_to_serial() {
+        let f = |u: &[f64]| 1.0 - u.iter().map(|x| (x - 0.35) * (x - 0.35)).sum::<f64>();
+        let mut rng = Rng64::new(13);
+        let mut gp = GpSurrogate::new(5);
+        for _ in 0..5 {
+            let round = gp.ask_batch(&mut rng, 8);
+            for u in &round {
+                gp.tell(u, f(u));
+            }
+        }
+        let fit = gp.fit();
+        let pool = gp.candidate_pool(&mut rng, 256);
+        let f_best = gp.best.get().expect("trained").value;
+        let serial = gp.score_candidates_with(pool.clone(), &fit, f_best, 1);
+        for workers in [2usize, 3, 4, 8] {
+            let par = gp.score_candidates_with(pool.clone(), &fit, f_best, workers);
+            assert_eq!(par.len(), serial.len());
+            for (i, (s, p)) in serial.iter().zip(&par).enumerate() {
+                assert_eq!(
+                    s.0.to_bits(),
+                    p.0.to_bits(),
+                    "EI diverges at candidate {i} with {workers} workers"
+                );
+                assert_eq!(s.1, p.1, "candidate order diverges at {i} with {workers} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_score_workers_do_not_move_proposals() {
+        // whole-trajectory form of the invariant: two GPs fed identical
+        // observations, one pinned serial and one pinned to 8 scoring
+        // workers, must propose identical rounds forever
+        let f = |u: &[f64]| 1.0 - u.iter().map(|x| (x - 0.6) * (x - 0.6)).sum::<f64>();
+        let mut rng_a = Rng64::new(21);
+        let mut rng_b = Rng64::new(21);
+        let mut a = GpSurrogate::new(3);
+        let mut b = GpSurrogate::new(3);
+        a.set_score_workers(1);
+        b.set_score_workers(8);
+        for _ in 0..6 {
+            let ra = a.ask_batch(&mut rng_a, 8);
+            let rb = b.ask_batch(&mut rng_b, 8);
+            assert_eq!(ra, rb, "a scoring-worker count moved a proposal");
+            for u in &ra {
+                a.tell(u, f(u));
+                b.tell(u, f(u));
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_pool_perturbations_scale_with_pool_size() {
+        // regression for the pinned `self.candidates / 4` bug: a pool
+        // widened past the configured default must widen its incumbent
+        // perturbations proportionally, not keep the default's count
+        let mut gp = GpSurrogate::new(2);
+        gp.tell(&[0.5, 0.5], 1.0);
+        let mut rng = Rng64::new(7);
+        let narrow = gp.candidate_pool(&mut rng, 128);
+        assert_eq!(narrow.len(), 128 + 128 / 4);
+        let wide = gp.candidate_pool(&mut rng, 512);
+        assert_eq!(wide.len(), 512 + 512 / 4);
     }
 
     #[test]

@@ -142,6 +142,7 @@ impl Fleet {
         store: Option<ExperimentStore>,
     ) -> Result<Fleet> {
         let mut scheduler = Scheduler::with_mode(mode);
+        scheduler.set_stage_workers(crate::tuner::default_stage_workers());
         let mut cells = Vec::with_capacity(specs.len());
         // live-slot labels, in scheduler.add order, for the observer
         let mut live_labels: Vec<String> = Vec::new();
@@ -276,6 +277,15 @@ impl Fleet {
         })
     }
 
+    /// Override the staging worker count for this fleet's scheduler
+    /// (`acts fleet --stage-workers`; compile seeds it from
+    /// `ACTS_STAGE_WORKERS` / [`crate::tuner::default_stage_workers`]).
+    /// Staging concurrency never changes records — only where ask/tell
+    /// runs — so this is purely a throughput knob.
+    pub fn set_stage_workers(&mut self, workers: usize) {
+        self.scheduler.set_stage_workers(workers);
+    }
+
     /// Store hits served at compile time (0 without a store).
     pub fn store_hits(&self) -> u64 {
         self.store_hits
@@ -299,6 +309,9 @@ impl Fleet {
         let Fleet { cells, scheduler, engine, store, store_hits, store_misses, mut store_bytes } =
             self;
         let before = engine.stats();
+        // the scheduler is consumed by run(): keep a handle on its
+        // staging telemetry for the coalescing block below
+        let staging = scheduler.staging_stats();
         let mut outcomes = scheduler.run().into_iter();
         let after = engine.stats();
         let cells = cells
@@ -354,6 +367,9 @@ impl Fleet {
                 store_hits,
                 store_misses,
                 store_bytes,
+                stage_seconds: staging.stage_seconds(),
+                absorb_seconds: staging.absorb_seconds(),
+                peak_staging_concurrency: staging.peak_staging_concurrency(),
             },
         }
     }
@@ -423,6 +439,16 @@ pub struct Coalescing {
     pub store_misses: u64,
     /// Entry bytes read on hits plus written on misses.
     pub store_bytes: u64,
+    /// Wall seconds spent in stage passes — `ask_batch` +
+    /// `stage_tests` across the staging worker pool (see
+    /// [`crate::tuner::StagingStats`]).
+    pub stage_seconds: f64,
+    /// Wall seconds spent demuxing executed rounds back into their
+    /// sessions on the scheduler thread.
+    pub absorb_seconds: f64,
+    /// Lifetime peak number of staging chunks dispatched concurrently
+    /// (1 = every stage pass ran inline on the scheduler thread).
+    pub peak_staging_concurrency: u64,
 }
 
 /// Aggregate statistics over a fleet's completed cells.
@@ -606,6 +632,12 @@ impl FleetReport {
                     ("store_hits", Json::Num(self.coalescing.store_hits as f64)),
                     ("store_misses", Json::Num(self.coalescing.store_misses as f64)),
                     ("store_bytes", Json::Num(self.coalescing.store_bytes as f64)),
+                    ("stage_seconds", Json::Num(self.coalescing.stage_seconds)),
+                    ("absorb_seconds", Json::Num(self.coalescing.absorb_seconds)),
+                    (
+                        "peak_staging_concurrency",
+                        Json::Num(self.coalescing.peak_staging_concurrency as f64),
+                    ),
                 ]),
             ),
             ("cells", Json::Arr(cells)),

@@ -77,7 +77,12 @@ use std::path::{Path, PathBuf};
 /// Version of the numeric semantics the store's entries were computed
 /// under. Part of every [`cell_key`]; see the module docs for the bump
 /// policy.
-pub const CODE_EPOCH: u32 = 1;
+///
+/// Epoch 2: `GpSurrogate::candidate_pool` now scales its
+/// incumbent-perturbation count with the actual pool size instead of
+/// pinning it to the configured default — GP proposal streams change
+/// for rounds wider than the base candidate count.
+pub const CODE_EPOCH: u32 = 2;
 
 /// On-disk entry format version (the file layout, not the numerics).
 const ENTRY_VERSION: u64 = 1;

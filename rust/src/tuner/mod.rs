@@ -25,6 +25,15 @@
 //!   manipulator and **coalescing** every session's pending rows into
 //!   shared bucket executes — 8 sessions of round size 32 fill one
 //!   256-bucket engine call instead of eight partial-width calls.
+//!   Staging itself — `ask_batch` plus `stage_tests`, including the GP
+//!   surrogate's Cholesky fit and EI scoring — runs on a **staging
+//!   worker pool** ([`Scheduler::set_stage_workers`],
+//!   `ACTS_STAGE_WORKERS`) shared by all three scheduler modes:
+//!   sessions are staged concurrently and joined in deterministic
+//!   per-session order, so records are bit-identical at any worker
+//!   count (each session owns its rng, optimizer and ledger, and no
+//!   cross-session state is read during staging — prop-tested below
+//!   like the lane-count invariant).
 //!
 //! # Cross-session batching semantics
 //!
@@ -60,8 +69,9 @@ pub mod scheduler;
 pub mod session;
 
 pub use scheduler::{
-    default_lanes, lanes_from_env, parse_lanes, parse_sched_mode, sched_mode_from_env,
-    RoundEvent, Scheduler, SchedulerMode,
+    default_lanes, default_stage_workers, lanes_from_env, parse_lanes, parse_sched_mode,
+    parse_stage_workers, sched_mode_from_env, stage_workers_from_env, RoundEvent, Scheduler,
+    SchedulerMode, StagingStats,
 };
 pub use session::{ProposedTest, Round, TuningSession};
 
@@ -1209,6 +1219,165 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // --- staging worker pool ----------------------------------------
+
+    /// The staging-pool acceptance criterion, as a property test:
+    /// heterogeneous 8-session fleets (random budgets, optimizers,
+    /// round sizes, dims and failure patterns) produce per-session
+    /// records bit-identical across stage-workers {1, 2, 4, 8} in all
+    /// three scheduler modes — and identical to the serial sequential
+    /// scheduler. Staging workers only move *where* ask/tell runs;
+    /// each session owns its rng, optimizer and ledger, so nothing a
+    /// worker computes can depend on fleet-mates.
+    #[test]
+    fn records_are_bit_identical_across_stage_worker_counts() {
+        use crate::testkit::prop;
+        let optimizers = ["rrs", "random", "lhs-screen", "gp"];
+        prop::check(3, 0x57A6E, |g| {
+            struct Case {
+                cfg: TuningConfig,
+                dim: usize,
+                fail_every: Option<u64>,
+            }
+            let cases: Vec<Case> = (0..8usize)
+                .map(|i| Case {
+                    cfg: TuningConfig {
+                        budget: Budget::tests(5 + g.below(25)),
+                        optimizer: (*g.choose(&optimizers)).into(),
+                        seed: 3000 + g.below(1_000_000),
+                        round_size: *g.choose(&[1usize, 3, 8, 16]),
+                        ..Default::default()
+                    },
+                    dim: 3 + (i % 4),
+                    // >= 2 so the baseline (call 1) always completes
+                    fail_every: g.bool(0.3).then(|| 2 + g.below(4)),
+                })
+                .collect();
+            let build = |mode: SchedulerMode, stage_workers: usize| {
+                let mut scheduler = Scheduler::with_mode(mode);
+                scheduler.set_stage_workers(stage_workers);
+                for c in &cases {
+                    let mut sut = FakeSut::new(c.dim);
+                    sut.fail_every = c.fail_every;
+                    let session =
+                        TuningSession::from_registry(sut.space().clone(), &c.cfg).unwrap();
+                    scheduler.add(session, sut);
+                }
+                scheduler.run()
+            };
+            let serial = build(SchedulerMode::Sequential, 1);
+            let modes = [
+                SchedulerMode::Sequential,
+                SchedulerMode::Pipelined { lanes: 2 },
+                SchedulerMode::streaming(),
+            ];
+            for mode in modes {
+                for workers in [1usize, 2, 4, 8] {
+                    let pooled = build(mode, workers);
+                    for (i, (ser, par)) in serial.iter().zip(&pooled).enumerate() {
+                        let ser = ser.as_ref().expect("baseline always completes");
+                        let par = par.as_ref().expect("baseline always completes");
+                        if ser.records != par.records
+                            || ser.tests_used != par.tests_used
+                            || ser.failures != par.failures
+                            || ser.best_unit != par.best_unit
+                            || ser.sim_seconds != par.sim_seconds
+                            || ser.stopped != par.stopped
+                        {
+                            return Err(format!(
+                                "mode={mode:?} stage_workers={workers}: session {i} diverged"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// A session whose optimizer panics during staging (inside
+    /// `ask_batch`, i.e. on a staging worker) is contained: it halts
+    /// with an error naming the staging panic, while fleet-mates —
+    /// staged on the same worker pool — finish bit-identical to
+    /// running each alone, in every scheduler mode.
+    #[test]
+    fn staging_panic_is_contained_to_its_session() {
+        use crate::optimizer::Observation;
+        use crate::util::rng::Rng64;
+
+        /// Proposes midpoints until the fuse burns, then panics inside
+        /// `ask_batch`.
+        struct PanicAfter {
+            dim: usize,
+            rounds_left: u32,
+        }
+        impl Optimizer for PanicAfter {
+            fn name(&self) -> &'static str {
+                "panic-after"
+            }
+            fn ask(&mut self, _rng: &mut Rng64) -> Vec<f64> {
+                vec![0.5; self.dim]
+            }
+            fn tell(&mut self, _unit: &[f64], _value: f64) {}
+            fn ask_batch(&mut self, _rng: &mut Rng64, n: usize) -> Vec<Vec<f64>> {
+                if self.rounds_left == 0 {
+                    panic!("injected staging panic");
+                }
+                self.rounds_left -= 1;
+                (0..n).map(|_| vec![0.5; self.dim]).collect()
+            }
+            fn best(&self) -> Option<&Observation> {
+                None
+            }
+        }
+
+        let healthy_cfg = |i: u64| TuningConfig {
+            budget: Budget::tests(20),
+            seed: 10 + i,
+            round_size: 4,
+            ..Default::default()
+        };
+        let solo: Vec<TuningOutcome> = (0..3u64)
+            .map(|i| {
+                let mut sut = FakeSut::new(3);
+                tune_batched(&mut sut, &healthy_cfg(i)).unwrap()
+            })
+            .collect();
+
+        for mode in [
+            SchedulerMode::Sequential,
+            SchedulerMode::Pipelined { lanes: 2 },
+            SchedulerMode::streaming(),
+        ] {
+            let mut scheduler = Scheduler::with_mode(mode);
+            scheduler.set_stage_workers(4);
+            for i in 0..3u64 {
+                let sut = FakeSut::new(3);
+                let session =
+                    TuningSession::from_registry(sut.space().clone(), &healthy_cfg(i)).unwrap();
+                scheduler.add(session, sut);
+            }
+            // slot 3: the optimizer blows up staging its third round
+            let sut = FakeSut::new(3);
+            let cfg =
+                TuningConfig { budget: Budget::tests(20), round_size: 4, ..Default::default() };
+            let opt = PanicAfter { dim: 3, rounds_left: 2 };
+            let session = TuningSession::new(sut.space().clone(), Box::new(opt), cfg);
+            scheduler.add(session, sut);
+
+            let outcomes = scheduler.run();
+            let err = outcomes[3].as_ref().expect_err("panicking session must fail");
+            assert!(
+                err.to_string().contains("panicked during staging"),
+                "mode {mode:?}: unexpected error: {err}"
+            );
+            for (i, solo_out) in solo.iter().enumerate() {
+                let out = outcomes[i].as_ref().unwrap();
+                assert_outcomes_identical(solo_out, out, &format!("mode {mode:?} session {i}"));
+            }
+        }
     }
 
     // --- streaming --------------------------------------------------

@@ -74,8 +74,9 @@
 //! depth's high-water mark in
 //! [`crate::runtime::EngineStats::peak_inflight`].
 //!
-//! Staging and absorbing still happen on the scheduler thread
-//! (sessions are not `Send`), and every session still runs its strict
+//! Absorbing executed rounds stays on the scheduler thread, staging
+//! runs on the staging worker pool (next section), and every session
+//! still runs its strict
 //! stage → execute → absorb → restage cycle, so per-session records
 //! remain **bit-identical** to the sequential scheduler for any flush
 //! knobs or worker count (tested, including a property test over the
@@ -89,6 +90,39 @@
 //! streaks, quarantine — but chaos fault *indices* depend on
 //! cross-thread submission order, so chaos runs under streaming assert
 //! containment and completion, not bit-equality.
+//!
+//! # The staging worker pool
+//!
+//! Staging itself — `ask_batch` (the optimizer's proposal work: an
+//! O(n³) Cholesky fit plus a pool of O(n²) EI solves per round for the
+//! GP surrogate) followed by [`SystemManipulator::stage_tests`] — was
+//! historically serial on the scheduler thread in all three modes, and
+//! became the fleet's wall once executes overlapped and rows went
+//! SIMD-wide. Every mode now dispatches each stage pass across
+//! `min(stage_workers, group size)` scoped worker threads
+//! ([`Scheduler::set_stage_workers`], `ACTS_STAGE_WORKERS` /
+//! `acts fleet --stage-workers`, default 1 = the historical inline
+//! path): the group's slots are split into contiguous chunks, each
+//! worker stages its chunk's sessions — baselines, rounds that fully
+//! resolve during staging, and staging errors absorb right on the
+//! worker — and the chunks are joined in slot order.
+//!
+//! Bit-identity across worker counts is by construction, not by luck:
+//! a session's staging reads and writes only its own slot (rng,
+//! optimizer, ledger, manipulator — the reason
+//! [`SystemManipulator`] is `Send`), no cross-slot state exists, and
+//! the join order is deterministic — so records are identical across
+//! stage-workers 1/2/4/8 in all three modes (property-tested like the
+//! lane-count invariant). Two things stay on the scheduler thread:
+//! round-observer events (the observer is a plain `FnMut`; events a
+//! worker's pass would have fired — fully-resolved rounds — are
+//! replayed in slot order after the join) and `absorb_pool` for
+//! executed rounds. A panic during a session's staging (say, an
+//! optimizer dying inside `ask_batch`) is fenced per slot: that
+//! session halts fatally ([`TuningSession::fail`]) while its
+//! fleet-mates continue bit-identically (tested). Stage/absorb wall
+//! time and the pool's peak dispatch width land in [`StagingStats`]
+//! ([`Scheduler::staging_stats`]) and flow into the fleet JSON.
 //!
 //! The scheduler also feeds each session's budget ledger
 //! ([`crate::budget`]): [`Scheduler::add`] installs the manipulator's
@@ -140,6 +174,7 @@ use crate::error::ActsError;
 use crate::manipulator::{EngineRequest, StagedRound, SystemManipulator};
 use crate::runtime::engine::{group_by_key, EvalRequest, Perf};
 use crate::runtime::shapes::D_PAD;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -163,6 +198,25 @@ struct PooledRound {
 }
 
 type Pool = Vec<PooledRound>;
+
+/// What one slot's stage pass produced, reported from a staging worker
+/// back to the scheduler thread (see `stage_group`).
+enum SlotPass {
+    /// Nothing to do: the slot is dead or its session just finished.
+    Ended,
+    /// The pass did work that absorbed on the worker — a baseline
+    /// attempt, a staging error, or a staging panic that failed the
+    /// session.
+    Worked,
+    /// A staged round fully resolved during staging and absorbed on
+    /// the worker; the scheduler thread still owes the observer its
+    /// `RoundEvent::Executed(&[])` event (deferred — the observer is a
+    /// plain `FnMut` and never leaves the scheduler thread).
+    ResolvedEmpty,
+    /// A staged round with pending rows, validated and ready to pool
+    /// for a (possibly shared) engine execute.
+    Pooled(PooledRound),
+}
 
 /// How one pooled round's execute went wrong, when it did.
 #[derive(Clone, Debug)]
@@ -221,6 +275,87 @@ pub fn lanes_from_env() -> crate::Result<Option<usize>> {
 /// clear error before any scheduler is built.
 pub fn default_lanes() -> usize {
     lanes_from_env().ok().flatten().unwrap_or(2)
+}
+
+/// Parse an `ACTS_STAGE_WORKERS` spelling: an integer >= 1 (1 = stage
+/// inline on the scheduler thread, the historical behaviour).
+/// Unit-testable without mutating the process environment.
+pub fn parse_stage_workers(value: &str) -> crate::Result<usize> {
+    value.trim().parse::<usize>().ok().filter(|&n| n >= 1).ok_or_else(|| {
+        ActsError::InvalidArg(format!(
+            "ACTS_STAGE_WORKERS=`{value}` is not a valid staging worker count \
+             (accepted: an integer >= 1)"
+        ))
+    })
+}
+
+/// Resolve the `ACTS_STAGE_WORKERS` environment variable: `None` when
+/// unset, a startup error when set to something unusable — a typo must
+/// not silently stage at a different concurrency.
+pub fn stage_workers_from_env() -> crate::Result<Option<usize>> {
+    match std::env::var("ACTS_STAGE_WORKERS") {
+        Ok(v) => parse_stage_workers(&v).map(Some),
+        Err(_) => Ok(None),
+    }
+}
+
+/// Default staging worker count: the `ACTS_STAGE_WORKERS` environment
+/// variable, else 1 (inline staging). Like [`default_lanes`] this has
+/// no error channel — an unusable value falls back to 1 here, and the
+/// CLI validates the variable at startup ([`stage_workers_from_env`])
+/// so a typo is rejected with a clear error before any scheduler is
+/// built.
+pub fn default_stage_workers() -> usize {
+    stage_workers_from_env().ok().flatten().unwrap_or(1)
+}
+
+/// Staging-pool telemetry, kept `EngineStats`-style as shared atomic
+/// counters so the fleet layer can read them after the scheduler is
+/// consumed by [`Scheduler::run`] (clone the [`Arc`] via
+/// [`Scheduler::staging_stats`] first). Stage time covers the whole
+/// stage pass — including baselines and rounds absorbed *on* a staging
+/// worker — while absorb time covers the scheduler-thread demux of
+/// executed rounds (`absorb_pool`).
+#[derive(Debug, Default)]
+pub struct StagingStats {
+    /// Wall nanoseconds spent inside stage passes (scheduler-thread
+    /// dispatch + join, workers included).
+    stage_nanos: AtomicU64,
+    /// Wall nanoseconds spent demuxing executed rounds back into their
+    /// sessions on the scheduler thread.
+    absorb_nanos: AtomicU64,
+    /// Lifetime high-water mark of concurrently dispatched staging
+    /// chunks (1 = every pass ran inline).
+    peak_staging: AtomicU64,
+}
+
+impl StagingStats {
+    /// Seconds spent staging (see the struct docs for what's counted).
+    pub fn stage_seconds(&self) -> f64 {
+        self.stage_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Seconds spent absorbing executed rounds on the scheduler thread.
+    pub fn absorb_seconds(&self) -> f64 {
+        self.absorb_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Lifetime peak number of staging chunks dispatched concurrently.
+    pub fn peak_staging_concurrency(&self) -> u64 {
+        self.peak_staging.load(Ordering::Relaxed)
+    }
+
+    fn add_stage_nanos(&self, nanos: u64) {
+        self.stage_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    fn add_absorb_nanos(&self, nanos: u64) {
+        self.absorb_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    fn note_staging_concurrency(&self, width: u64) {
+        self.peak_staging.fetch_max(width, Ordering::Relaxed);
+    }
 }
 
 /// Parse an `ACTS_SCHED_MODE` / `--sched-mode` spelling: `sequential`,
@@ -340,8 +475,14 @@ pub struct Scheduler<'a, M: SystemManipulator> {
     mode: SchedulerMode,
     /// Consecutive poisoned rounds before a session is quarantined.
     quarantine_after: u32,
+    /// Staging worker pool width shared by every mode (see the module
+    /// docs); 1 stages inline on the scheduler thread.
+    stage_workers: usize,
+    /// Staging telemetry, shared so callers can keep reading it after
+    /// [`Scheduler::run`] consumes the scheduler.
+    staging: Arc<StagingStats>,
     /// Round-boundary hook (checkpointing); runs on the scheduler
-    /// thread in both modes.
+    /// thread in every mode.
     observer: Option<RoundObserver<'a>>,
 }
 
@@ -351,6 +492,8 @@ impl<'a, M: SystemManipulator> Default for Scheduler<'a, M> {
             slots: Vec::new(),
             mode: SchedulerMode::default(),
             quarantine_after: Self::DEFAULT_QUARANTINE_AFTER,
+            stage_workers: default_stage_workers(),
+            staging: Arc::new(StagingStats::default()),
             observer: None,
         }
     }
@@ -375,6 +518,27 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
     /// (clamped to >= 1).
     pub fn set_quarantine_after(&mut self, rounds: u32) {
         self.quarantine_after = rounds.max(1);
+    }
+
+    /// Set the staging worker pool width (clamped to >= 1; 1 stages
+    /// inline on the scheduler thread). Purely a performance knob:
+    /// per-session records are bit-identical at any width in every
+    /// mode (see the module docs; property-tested).
+    pub fn set_stage_workers(&mut self, workers: usize) {
+        self.stage_workers = workers.max(1);
+    }
+
+    /// The configured staging worker pool width.
+    pub fn stage_workers(&self) -> usize {
+        self.stage_workers
+    }
+
+    /// A handle to the scheduler's staging telemetry. Clone it before
+    /// [`Scheduler::run`] (which consumes the scheduler); the counters
+    /// keep updating while the run progresses and are final once `run`
+    /// returns.
+    pub fn staging_stats(&self) -> Arc<StagingStats> {
+        Arc::clone(&self.staging)
     }
 
     /// Install a round-boundary observer: called with the slot index
@@ -549,9 +713,10 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
     /// coalesced batches to `workers` execute workers on
     /// size-or-timeout; and each completed round's session absorbs and
     /// restages immediately, independent of every other session.
-    /// Staging and absorbing stay on this thread (sessions are not
-    /// `Send`), so observer/checkpoint and containment semantics match
-    /// the barriered modes. Degenerates to
+    /// Absorbing stays on this thread and staging is dispatched
+    /// through the staging worker pool (grouped per completion batch),
+    /// so observer/checkpoint and containment semantics match the
+    /// barriered modes. Degenerates to
     /// [`Scheduler::run_sequential`] below two sessions (nothing to
     /// overlap with).
     pub fn run_streaming(
@@ -671,25 +836,24 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
         // absorb completions as they land and resubmit just those
         // sessions — each session's own stage → execute → absorb →
         // restage cycle stays strict, so its records match a solo run.
+        // Staging runs grouped through the worker pool; submission
+        // stays in slot order, exactly the serial sequence.
         let mut in_flight = 0usize;
-        for i in 0..self.slots.len() {
-            if let Some(round) = self.stage_slot_until_pending(i) {
-                in_flight += 1;
-                note_round_inflight(&round, in_flight);
-                sub_tx.send(round).expect("stream drainer died");
-            }
+        let all: Vec<usize> = (0..self.slots.len()).collect();
+        for round in self.stage_until_pending_group(&all).into_iter().flatten() {
+            in_flight += 1;
+            note_round_inflight(&round, in_flight);
+            sub_tx.send(round).expect("stream drainer died");
         }
         while in_flight > 0 {
             let (pool, results) = res_rx.recv().expect("execute worker died");
             in_flight -= pool.len();
             let owners: Vec<usize> = pool.iter().map(|r| r.slot).collect();
             self.absorb_pool(pool, results);
-            for i in owners {
-                if let Some(round) = self.stage_slot_until_pending(i) {
-                    in_flight += 1;
-                    note_round_inflight(&round, in_flight);
-                    sub_tx.send(round).expect("stream drainer died");
-                }
+            for round in self.stage_until_pending_group(&owners).into_iter().flatten() {
+                in_flight += 1;
+                note_round_inflight(&round, in_flight);
+                sub_tx.send(round).expect("stream drainer died");
             }
         }
 
@@ -701,117 +865,230 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
         self.into_outcomes()
     }
 
-    /// Re-poll one slot until it either pools a round with pending rows
-    /// (returned for submission) or has nothing left to do — baselines
-    /// and rounds that fully resolve during staging absorb inline, just
-    /// as they do in the barriered modes.
-    fn stage_slot_until_pending(&mut self, i: usize) -> Option<PooledRound> {
-        loop {
-            let (mut pool, did_work) = self.stage_group(&[i]);
-            if let Some(round) = pool.pop() {
-                return Some(round);
+    /// Stage every listed slot until each either pools a round with
+    /// pending rows or has nothing left to do — the streaming driver's
+    /// stage pass. Baselines and rounds that fully resolve during
+    /// staging absorb inline on the staging worker, just as they do in
+    /// the barriered modes; their deferred observer events replay here
+    /// in slot order after the join. Returns one optional pooled round
+    /// per listed slot, in `indices` order (the caller submits in that
+    /// order, preserving the serial submission sequence).
+    fn stage_until_pending_group(&mut self, indices: &[usize]) -> Vec<Option<PooledRound>> {
+        let t0 = Instant::now();
+        let passes = self.parallel_stage(indices, |i, slot| {
+            let mut empty_rounds = 0usize;
+            loop {
+                match Self::stage_slot(i, slot) {
+                    SlotPass::Ended => return (empty_rounds, None),
+                    SlotPass::Worked => {}
+                    SlotPass::ResolvedEmpty => empty_rounds += 1,
+                    SlotPass::Pooled(round) => return (empty_rounds, Some(round)),
+                }
             }
-            if !did_work {
-                return None;
+        });
+        let mut rounds = Vec::with_capacity(passes.len());
+        for (&i, (empty_rounds, round)) in indices.iter().zip(passes) {
+            for _ in 0..empty_rounds {
+                if let Some(obs) = self.observer.as_mut() {
+                    obs(i, RoundEvent::Executed(&[]));
+                }
             }
+            rounds.push(round);
         }
+        self.staging.add_stage_nanos(t0.elapsed().as_nanos() as u64);
+        rounds
     }
 
-    /// Poll and stage every listed slot: baselines run inline, staged
-    /// rounds that fully resolve during staging absorb immediately, and
-    /// rounds with pending rows are validated and pooled for a (shared)
-    /// engine execute. Returns the pool and whether any session did
-    /// work this pass.
+    /// Poll and stage every listed slot — one pass each, dispatched
+    /// across the staging worker pool: baselines run on the workers,
+    /// staged rounds that fully resolve during staging absorb there
+    /// immediately (their observer events replay here in slot order),
+    /// and rounds with pending rows are validated and pooled for a
+    /// (shared) engine execute. Returns the pool (in slot order) and
+    /// whether any session did work this pass.
     fn stage_group(&mut self, indices: &[usize]) -> (Pool, bool) {
+        let t0 = Instant::now();
+        let passes = self.parallel_stage(indices, Self::stage_slot);
         let mut did_work = false;
         let mut pool: Pool = Vec::new();
-        for &i in indices {
-            let slot = &mut self.slots[i];
-            if !slot.live {
-                continue;
-            }
-            match slot.session.next_round() {
-                Round::Done => slot.live = false,
-                Round::Baseline => {
+        for (&i, pass) in indices.iter().zip(passes) {
+            match pass {
+                SlotPass::Ended => {}
+                SlotPass::Worked => did_work = true,
+                SlotPass::ResolvedEmpty => {
                     did_work = true;
-                    let unit = slot.sut.current_unit().to_vec();
-                    // baselines run on the scheduler thread, so a
-                    // panicking execute here must be fenced per session
-                    // or it would tear down the whole fleet
-                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        slot.sut.run_test()
-                    }))
-                    .unwrap_or_else(|_| {
-                        Err(ActsError::Xla("execute panicked during the baseline".into()))
-                    });
-                    // clock first: a failed attempt's exhaustion check
-                    // inside absorb_baseline must see the time this
-                    // very attempt consumed, not one attempt stale
-                    slot.session.observe_sim_seconds(slot.sut.sim_seconds());
-                    slot.session.absorb_baseline(&unit, outcome);
+                    if let Some(obs) = self.observer.as_mut() {
+                        obs(i, RoundEvent::Executed(&[]));
+                    }
                 }
-                Round::Staged(tests) => {
+                SlotPass::Pooled(round) => {
                     did_work = true;
-                    let units: Vec<Vec<f64>> = tests.into_iter().map(|t| t.unit).collect();
-                    let staged = slot.sut.stage_tests(&units);
-                    let pending = staged.pending_units();
-                    if pending.is_empty() {
-                        // every row resolved during staging (default
-                        // manipulators, or a round of pure failures)
-                        let results =
-                            staged.resolve_pending_with(|| unreachable!("no pending rows"));
-                        if let Some(obs) = self.observer.as_mut() {
-                            obs(i, RoundEvent::Executed(&[]));
+                    pool.push(round);
+                }
+            }
+        }
+        self.staging.add_stage_nanos(t0.elapsed().as_nanos() as u64);
+        (pool, did_work)
+    }
+
+    /// Dispatch `f` over the listed slots — disjoint `&mut` borrows,
+    /// one call per slot — across `min(stage_workers, indices.len())`
+    /// scoped staging workers (contiguous chunks, joined in chunk
+    /// order), or inline when the pool has width 1. Results come back
+    /// in `indices` order either way. `f` must touch only the slot it
+    /// is handed; that isolation (plus the deterministic join) is what
+    /// makes the worker count invisible in the records.
+    fn parallel_stage<R, F>(&mut self, indices: &[usize], f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, &mut Slot<'a, M>) -> R + Sync,
+    {
+        let workers = self.stage_workers.min(indices.len()).max(1);
+        if workers <= 1 {
+            self.staging.note_staging_concurrency(1);
+            let slots = &mut self.slots;
+            return indices.iter().map(|&i| f(i, &mut slots[i])).collect();
+        }
+        // split the group's slots out as disjoint &mut borrows, in
+        // `indices` order (a group never repeats a slot)
+        let mut by_slot: Vec<Option<&mut Slot<'a, M>>> = self.slots.iter_mut().map(Some).collect();
+        let mut work: Vec<(usize, &mut Slot<'a, M>)> = indices
+            .iter()
+            .map(|&i| (i, by_slot[i].take().expect("stage group repeats a slot")))
+            .collect();
+        let chunk = work.len().div_ceil(workers);
+        self.staging.note_staging_concurrency(work.len().div_ceil(chunk) as u64);
+        let f = &f;
+        let mut results: Vec<R> = Vec::with_capacity(work.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = work
+                .chunks_mut(chunk)
+                .enumerate()
+                .map(|(w, part)| {
+                    std::thread::Builder::new()
+                        .name(format!("acts-stage-{w}"))
+                        .spawn_scoped(scope, move || {
+                            part.iter_mut().map(|(i, slot)| f(*i, slot)).collect::<Vec<R>>()
+                        })
+                        .expect("spawn a staging worker")
+                })
+                .collect();
+            for handle in handles {
+                results.extend(handle.join().expect("staging worker panicked"));
+            }
+        });
+        results
+    }
+
+    /// One stage pass for one slot, fenced against panics — the
+    /// per-slot unit of work the staging pool dispatches. A panic that
+    /// escapes the session's staging (optimizer `ask_batch`,
+    /// manipulator `stage_tests`) halts JUST this session:
+    /// [`TuningSession::fail`] records the fatal error for
+    /// `into_outcome`, the slot goes dead, and fleet-mates never notice
+    /// (tested).
+    fn stage_slot(i: usize, slot: &mut Slot<'a, M>) -> SlotPass {
+        let pass = {
+            let fenced = &mut *slot;
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                Self::stage_slot_unfenced(i, fenced)
+            }))
+        };
+        pass.unwrap_or_else(|_| {
+            slot.session
+                .fail(ActsError::Xla("optimizer or manipulator panicked during staging".into()));
+            slot.live = false;
+            SlotPass::Worked
+        })
+    }
+
+    /// The actual per-slot stage pass (see `stage_slot` for the fence).
+    fn stage_slot_unfenced(i: usize, slot: &mut Slot<'a, M>) -> SlotPass {
+        if !slot.live {
+            return SlotPass::Ended;
+        }
+        match slot.session.next_round() {
+            Round::Done => {
+                slot.live = false;
+                SlotPass::Ended
+            }
+            Round::Baseline => {
+                let unit = slot.sut.current_unit().to_vec();
+                // a panicking execute during the baseline keeps its own
+                // fence (distinct from the outer staging fence): the
+                // attempt charges budget and retries within the failure
+                // cap instead of failing the session outright
+                let outcome =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| slot.sut.run_test()))
+                        .unwrap_or_else(|_| {
+                            Err(ActsError::Xla("execute panicked during the baseline".into()))
+                        });
+                // clock first: a failed attempt's exhaustion check
+                // inside absorb_baseline must see the time this very
+                // attempt consumed, not one attempt stale
+                slot.session.observe_sim_seconds(slot.sut.sim_seconds());
+                slot.session.absorb_baseline(&unit, outcome);
+                SlotPass::Worked
+            }
+            Round::Staged(tests) => {
+                let units: Vec<Vec<f64>> = tests.into_iter().map(|t| t.unit).collect();
+                let staged = slot.sut.stage_tests(&units);
+                let pending = staged.pending_units();
+                if pending.is_empty() {
+                    // every row resolved during staging (default
+                    // manipulators, or a round of pure failures)
+                    let results = staged.resolve_pending_with(|| unreachable!("no pending rows"));
+                    slot.session.absorb(results);
+                    slot.session.observe_sim_seconds(slot.sut.sim_seconds());
+                    SlotPass::ResolvedEmpty
+                } else {
+                    match slot.sut.engine_requests(&pending) {
+                        // malformed rows would fail the whole shared
+                        // execute at the engine: validate per session
+                        // so a bad manipulator only kills its own round
+                        Some(Ok(requests))
+                            if requests.iter().any(|r| {
+                                r.configs.len() != pending.len()
+                                    || r.configs.iter().any(|c| c.len() != D_PAD)
+                            }) =>
+                        {
+                            let results = staged.resolve_pending_with(|| {
+                                ActsError::InvalidArg(
+                                    "manipulator built malformed engine requests".into(),
+                                )
+                            });
+                            slot.session.absorb(results);
+                            slot.session.observe_sim_seconds(slot.sut.sim_seconds());
+                            SlotPass::Worked
                         }
-                        slot.session.absorb(results);
-                        slot.session.observe_sim_seconds(slot.sut.sim_seconds());
-                    } else {
-                        match slot.sut.engine_requests(&pending) {
-                            // malformed rows would fail the whole shared
-                            // execute at the engine: validate per session
-                            // so a bad manipulator only kills its own round
-                            Some(Ok(requests))
-                                if requests.iter().any(|r| {
-                                    r.configs.len() != pending.len()
-                                        || r.configs.iter().any(|c| c.len() != D_PAD)
-                                }) =>
-                            {
-                                let results = staged.resolve_pending_with(|| {
-                                    ActsError::InvalidArg(
-                                        "manipulator built malformed engine requests".into(),
-                                    )
-                                });
-                                slot.session.absorb(results);
-                                slot.session.observe_sim_seconds(slot.sut.sim_seconds());
-                            }
-                            Some(Ok(requests)) => {
-                                pool.push(PooledRound { slot: i, staged, requests })
-                            }
-                            Some(Err(e)) => {
-                                let msg = format!("batched evaluation failed: {e}");
-                                let results =
-                                    staged.resolve_pending_with(|| ActsError::Xla(msg.clone()));
-                                slot.session.absorb(results);
-                                slot.session.observe_sim_seconds(slot.sut.sim_seconds());
-                            }
-                            None => {
-                                // stage_tests left rows pending but there
-                                // is no engine path: contract violation
-                                let results = staged.resolve_pending_with(|| {
-                                    ActsError::InvalidArg(
-                                        "manipulator staged pending rows without an engine path"
-                                            .into(),
-                                    )
-                                });
-                                slot.session.absorb(results);
-                                slot.session.observe_sim_seconds(slot.sut.sim_seconds());
-                            }
+                        Some(Ok(requests)) => {
+                            SlotPass::Pooled(PooledRound { slot: i, staged, requests })
+                        }
+                        Some(Err(e)) => {
+                            let msg = format!("batched evaluation failed: {e}");
+                            let results =
+                                staged.resolve_pending_with(|| ActsError::Xla(msg.clone()));
+                            slot.session.absorb(results);
+                            slot.session.observe_sim_seconds(slot.sut.sim_seconds());
+                            SlotPass::Worked
+                        }
+                        None => {
+                            // stage_tests left rows pending but there
+                            // is no engine path: contract violation
+                            let results = staged.resolve_pending_with(|| {
+                                ActsError::InvalidArg(
+                                    "manipulator staged pending rows without an engine path"
+                                        .into(),
+                                )
+                            });
+                            slot.session.absorb(results);
+                            slot.session.observe_sim_seconds(slot.sut.sim_seconds());
+                            SlotPass::Worked
                         }
                     }
                 }
             }
         }
-        (pool, did_work)
     }
 
     /// Demultiplex executed results and absorb them, in pool (= slot)
@@ -821,6 +1098,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
     /// the streak and are journalled to the observer before the
     /// manipulator consumes them.
     fn absorb_pool(&mut self, pool: Pool, results: PoolResults) {
+        let t0 = Instant::now();
         let (mut member_perfs, failed) = results;
         for (pi, round) in pool.into_iter().enumerate() {
             let slot = &mut self.slots[round.slot];
@@ -854,6 +1132,7 @@ impl<'a, M: SystemManipulator> Scheduler<'a, M> {
             }
             slot.session.observe_sim_seconds(slot.sut.sim_seconds());
         }
+        self.staging.add_absorb_nanos(t0.elapsed().as_nanos() as u64);
     }
 
     /// Consume the scheduler into per-session outcomes, in insertion
@@ -1009,7 +1288,10 @@ fn execute_pool_with(pool: &Pool, overlapped: bool) -> PoolResults {
 
 #[cfg(test)]
 mod tests {
-    use super::{default_lanes, parse_lanes, parse_sched_mode, partition_by_cost_n, SchedulerMode};
+    use super::{
+        default_lanes, default_stage_workers, parse_lanes, parse_sched_mode, parse_stage_workers,
+        partition_by_cost_n, SchedulerMode, StagingStats,
+    };
 
     fn load(costs: &[f64], group: &[usize]) -> f64 {
         group.iter().map(|&i| costs[i]).sum()
@@ -1111,6 +1393,42 @@ mod tests {
             assert!(err.contains("ACTS_LANES"), "{bad}: {err}");
             assert!(err.contains("integer >= 1"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn stage_worker_spellings_parse_or_name_the_variable() {
+        assert_eq!(parse_stage_workers("4").unwrap(), 4);
+        assert_eq!(parse_stage_workers(" 1 ").unwrap(), 1);
+        for bad in ["0", "-2", "four", "", "2.5"] {
+            let err = parse_stage_workers(bad).unwrap_err().to_string();
+            assert!(err.contains("ACTS_STAGE_WORKERS"), "{bad}: {err}");
+            assert!(err.contains("integer >= 1"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn default_stage_worker_count_is_inline() {
+        // ACTS_STAGE_WORKERS is unset in the test environment
+        if std::env::var("ACTS_STAGE_WORKERS").is_err() {
+            assert_eq!(default_stage_workers(), 1);
+        }
+    }
+
+    #[test]
+    fn staging_stats_accumulate_and_track_the_peak() {
+        let stats = StagingStats::default();
+        assert_eq!(stats.stage_seconds(), 0.0);
+        assert_eq!(stats.absorb_seconds(), 0.0);
+        assert_eq!(stats.peak_staging_concurrency(), 0);
+        stats.add_stage_nanos(1_500_000_000);
+        stats.add_stage_nanos(500_000_000);
+        stats.add_absorb_nanos(250_000_000);
+        stats.note_staging_concurrency(1);
+        stats.note_staging_concurrency(4);
+        stats.note_staging_concurrency(2);
+        assert!((stats.stage_seconds() - 2.0).abs() < 1e-9);
+        assert!((stats.absorb_seconds() - 0.25).abs() < 1e-9);
+        assert_eq!(stats.peak_staging_concurrency(), 4, "peak is a high-water mark");
     }
 
     #[test]

@@ -361,6 +361,18 @@ impl<'a> TuningSession<'a> {
         self.state = State::Halted;
     }
 
+    /// Halt the session with a fatal error on the scheduler's behalf,
+    /// discarding any round in flight. Used when staging itself dies —
+    /// e.g. an optimizer panics inside `ask_batch` on a staging worker
+    /// — so the fault stays contained to this session: the error is
+    /// surfaced by [`TuningSession::into_outcome`], and fleet-mates are
+    /// untouched. The in-flight round is dropped un-absorbed because
+    /// its proposals were never executed (nothing was charged).
+    pub fn fail(&mut self, e: ActsError) {
+        self.in_flight = None;
+        self.halt(e);
+    }
+
     /// Consume the session into its outcome. `sim_seconds` is the
     /// manipulator's clock (the session never holds the manipulator).
     /// Returns the fatal error if one halted the session.

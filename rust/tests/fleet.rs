@@ -109,6 +109,9 @@ fn fleet_report_json_is_well_formed() {
     assert!(json.contains("\"aggregate\""), "{json}");
     assert!(json.contains("\"cells_ok\":2"), "{json}");
     assert!(json.contains("\"coalescing\""), "{json}");
+    assert!(json.contains("\"stage_seconds\""), "{json}");
+    assert!(json.contains("\"absorb_seconds\""), "{json}");
+    assert!(json.contains("\"peak_staging_concurrency\""), "{json}");
     assert!(json.contains("\"label\":\"mysql/zipfian-rw/standalone/rrs/s1\""), "{json}");
     assert!(json.contains("\"best_curve\""), "{json}");
     assert_eq!(json.matches('{').count(), json.matches('}').count());
@@ -231,6 +234,58 @@ fn fleet_cells_are_lane_invariant_on_the_real_surface() {
         assert_eq!(a.tests_used, b.tests_used);
         assert_eq!(a.sim_seconds, b.sim_seconds);
         assert_eq!(a.stopped, b.stopped);
+    }
+}
+
+#[test]
+fn fleet_cells_are_stage_worker_invariant_on_the_real_surface() {
+    // the staging-pool guarantee through the whole scenario layer on
+    // the native backend: the same mixed matrix at stage-workers
+    // 1/2/4/8, in every scheduler mode, must produce per-cell records
+    // bit-identical to the serial (1-worker sequential) reference —
+    // staging workers move where ask/tell runs, never what it computes
+    let lab = native_lab();
+    let matrix = Matrix {
+        suts: vec!["mysql".into(), "tomcat".into()],
+        optimizers: vec!["rrs".into(), "gp".into()],
+        seeds: vec![21, 22],
+        base: TuningConfig { budget: Budget::tests(9), round_size: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let run = |mode: SchedulerMode, workers: usize| {
+        let mut fleet = Fleet::compile_with_mode(&lab, matrix.expand().unwrap(), mode).unwrap();
+        fleet.set_stage_workers(workers);
+        fleet.run()
+    };
+    let reference = run(SchedulerMode::Sequential, 1);
+    assert_eq!(reference.coalescing.peak_staging_concurrency, 1, "1 worker must stage inline");
+    for mode in [
+        SchedulerMode::Sequential,
+        SchedulerMode::Pipelined { lanes: 2 },
+        SchedulerMode::streaming(),
+    ] {
+        for workers in [1usize, 2, 4, 8] {
+            let report = run(mode, workers);
+            if workers >= 2 {
+                assert!(
+                    report.coalescing.peak_staging_concurrency >= 2,
+                    "{mode:?}/{workers}: staging never went concurrent (peak {})",
+                    report.coalescing.peak_staging_concurrency
+                );
+            }
+            for (a, b) in reference.cells.iter().zip(&report.cells) {
+                assert_eq!(a.label, b.label);
+                let label = &a.label;
+                let (a, b) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+                assert_eq!(
+                    a.records, b.records,
+                    "{mode:?}/{workers}: stage workers changed {label}'s records"
+                );
+                assert_eq!(a.tests_used, b.tests_used, "{mode:?}/{workers}: {label}");
+                assert_eq!(a.sim_seconds, b.sim_seconds, "{mode:?}/{workers}: {label}");
+                assert_eq!(a.stopped, b.stopped, "{mode:?}/{workers}: {label}");
+            }
+        }
     }
 }
 
